@@ -1,0 +1,78 @@
+//! Data-science pipeline (§8.6, Table 3): load CSV → train → predict.
+//!
+//!     cargo run --release --example data_science [-- --rows 100000]
+//!
+//! Compares the "Python stack" shape (serial CSV parse + single-thread
+//! Newton) against NumS (parallel byte-range CSV reader + distributed
+//! Newton with automatic partitioning) on a synthetic HIGGS-like dataset.
+
+use anyhow::Result;
+use nums::prelude::*;
+use nums::util::cli::Args;
+use nums::util::fmt::human_secs;
+use nums::util::Stopwatch;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let rows = args.usize_or("rows", 100_000);
+    let steps = args.usize_or("steps", 6);
+    let path = std::env::temp_dir().join("nums_higgs_example.csv");
+    println!("generating HIGGS-like CSV: {rows} rows x 28 features ...");
+    nums::io::higgs::generate_csv(&path, rows, 0x4163)?;
+    let fsize = std::fs::metadata(&path)?.len();
+    println!("file: {:.1} MiB", fsize as f64 / (1 << 20) as f64);
+
+    // ---- serial baseline (Pandas + sklearn stand-in) ----
+    let sw = Stopwatch::start();
+    let dense = nums::io::csv::read_csv_serial(&path)?;
+    let t_load_serial = sw.secs();
+    let (x_dense, y_dense) = nums::io::higgs::split_label(&dense);
+    let sw = Stopwatch::start();
+    let serial = nums::glm::newton_fit_serial(&x_dense, &y_dense, steps, 1e-8)?;
+    let t_train_serial = sw.secs();
+    let sw = Stopwatch::start();
+    let acc_serial = nums::glm::serial::accuracy_serial(&x_dense, &y_dense, &serial.beta)?;
+    let t_pred_serial = sw.secs();
+
+    // ---- NumS pipeline ----
+    let mut sess = Session::new(SessionConfig::real_small(1, 8)); // one fat node
+    let sw = Stopwatch::start();
+    let (raw, nrows, ncols) = nums::io::csv::read_csv_parallel(&mut sess, &path, 8)?;
+    let t_load = sw.secs();
+    // split label column on the driver (cheap) and scatter row-wise
+    let dense2 = sess.fetch(&raw)?;
+    let (x2, y2) = nums::io::higgs::split_label(&dense2);
+    let q = 8;
+    let x = sess.scatter2(&x2, &[q, 1]);
+    let y = sess.scatter2(&y2, &[q, 1]);
+    let sw = Stopwatch::start();
+    let fit = nums::glm::newton_fit(&mut sess, &x, &y, steps, 1e-8)?;
+    let t_train = sw.secs();
+    let sw = Stopwatch::start();
+    let acc = nums::glm::accuracy(&mut sess, &x, &y, &fit.beta)?;
+    let t_pred = sw.secs();
+
+    println!("\nTable-3 shape ({} rows x {} cols):", nrows, ncols);
+    println!("{:<14} {:>10} {:>10} {:>10} {:>10}", "stack", "load", "train", "predict", "total");
+    println!(
+        "{:<14} {:>10} {:>10} {:>10} {:>10}",
+        "serial(py-ish)",
+        human_secs(t_load_serial),
+        human_secs(t_train_serial),
+        human_secs(t_pred_serial),
+        human_secs(t_load_serial + t_train_serial + t_pred_serial)
+    );
+    println!(
+        "{:<14} {:>10} {:>10} {:>10} {:>10}",
+        "NumS",
+        human_secs(t_load),
+        human_secs(t_train),
+        human_secs(t_pred),
+        human_secs(t_load + t_train + t_pred)
+    );
+    println!("accuracy: serial {acc_serial:.4} vs NumS {acc:.4}");
+    let err = sess.fetch(&fit.beta)?.max_abs_diff(&serial.beta);
+    println!("beta max |diff| = {err:.3e} (same optimum)");
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

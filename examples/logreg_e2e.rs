@@ -1,0 +1,87 @@
+//! END-TO-END driver (the full-system validation run, recorded in
+//! EXPERIMENTS.md):
+//!
+//!     cargo run --release --example logreg_e2e [-- --n 32768 --d 32 --steps 10]
+//!
+//! Full-system logistic regression on a real synthetic workload:
+//! 1. sample the paper's bimodal-Gaussian classification data (§8.5) into
+//!    row blocks shaped exactly like the AOT `newton_block_4096x32`
+//!    artifact, so the hot path runs through PJRT;
+//! 2. fit with distributed Newton through LSHS on a 4-node simulated
+//!    cluster (real block numerics, real per-node byte counters);
+//! 3. log the loss curve, accuracy, per-node loads;
+//! 4. repeat with the Ray-default (bottom-up) scheduler and report the
+//!    LSHS ablation — the §8.5 "2x net, 4x mem, 10x time" shape.
+
+use anyhow::Result;
+use nums::api::Policy;
+use nums::prelude::*;
+use nums::util::cli::Args;
+use nums::util::fmt::{human_bytes, human_secs};
+
+fn fit_with(policy: Policy, n: usize, d: usize, q: usize, steps: usize) -> Result<(f64, u64)> {
+    let label = format!("{policy:?}");
+    let cfg = SessionConfig::real_small(4, 4)
+        .with_policy(policy)
+        .with_seed(0xE2E);
+    let mut sess = Session::new(cfg);
+    let (x, y) = nums::glm::classification_data(&mut sess, n, d, q, 0xDA7A);
+
+    let t0 = std::time::Instant::now();
+    let res = nums::glm::newton_fit(&mut sess, &x, &y, steps, 1e-10)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n=== policy: {label} ===");
+    println!("loss curve:");
+    for (i, l) in res.losses.iter().enumerate() {
+        println!("  step {i:2}  loss {l:14.6}  ||g|| {:.3e}", res.grad_norms[i]);
+    }
+    let acc = nums::glm::accuracy(&mut sess, &x, &y, &res.beta)?;
+    let snap = sess.stores.snapshot();
+    println!("accuracy           : {acc:.4}");
+    println!("iterations         : {}", res.iters);
+    println!("wall time          : {}", human_secs(wall));
+    println!("modeled cluster t  : {}", human_secs(res.sim_secs()));
+    println!("inter-node traffic : {}", human_bytes(res.transfer_bytes() as f64));
+    println!("per-node (peak mem | net in | net out):");
+    for (node, (_, peak, nin, nout)) in snap.iter().enumerate() {
+        println!(
+            "  node {node}: {:>12} | {:>12} | {:>12}",
+            human_bytes(*peak as f64),
+            human_bytes(*nin as f64),
+            human_bytes(*nout as f64)
+        );
+    }
+    let (pjrt, native) = sess.backend.counters();
+    println!("kernels            : {pjrt} PJRT, {native} native");
+    let peak = snap.iter().map(|s| s.1).max().unwrap_or(0);
+    let _ = peak;
+    Ok((res.sim_secs(), res.transfer_bytes()))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let d = args.usize_or("d", 32);
+    let q = args.usize_or("q", 8);
+    let n = args.usize_or("n", q * 4096); // 4096-row blocks hit the AOT artifact
+    let steps = args.usize_or("steps", 10);
+    println!("end-to-end logistic regression: n={n} d={d} blocks={q} steps={steps}");
+
+    let (t_lshs, b_lshs) = fit_with(Policy::Lshs, n, d, q, steps)?;
+    let (t_bu, b_bu) = fit_with(Policy::BottomUp, n, d, q, steps)?;
+
+    println!("\n=== LSHS ablation (Fig. 15 shape) ===");
+    println!(
+        "modeled time : LSHS {} vs bottom-up {}  ({:.1}x)",
+        human_secs(t_lshs),
+        human_secs(t_bu),
+        t_bu / t_lshs.max(1e-12)
+    );
+    println!(
+        "net traffic  : LSHS {} vs bottom-up {}  ({:.1}x)",
+        human_bytes(b_lshs as f64),
+        human_bytes(b_bu as f64),
+        b_bu as f64 / (b_lshs as f64).max(1.0)
+    );
+    Ok(())
+}

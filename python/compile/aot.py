@@ -1,0 +1,134 @@
+"""AOT lowering: Pallas/JAX kernels -> HLO *text* artifacts for the Rust runtime.
+
+The interchange format is HLO TEXT, not ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids, which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser on the Rust side (``HloModuleProto::from_text_file``)
+reassigns ids and round-trips cleanly.  See /opt/xla-example/load_hlo.
+
+Outputs (in --out, default ../artifacts):
+  <key>.hlo.txt      one module per (kernel, shape) spec, lowered with
+                     return_tuple=True (Rust unwraps with to_tupleN)
+  manifest.tsv       name, dims, file, n_outputs, input shapes, output shapes
+
+Usage: cd python && python -m compile.aot --out ../artifacts [--only k1,k2]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import kernels, model, specs  # noqa: E402
+
+DTYPE = jnp.float64
+
+
+def _s(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), DTYPE)
+
+
+def _tupled(fn):
+    """Wrap so the lowered module always returns a tuple (Rust unwraps)."""
+
+    def wrapped(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+
+    return wrapped
+
+
+# builder: dims -> (callable, [input ShapeDtypeStructs])
+BUILDERS = {
+    "add": lambda d: (kernels.add, [_s(*d), _s(*d)]),
+    "sub": lambda d: (kernels.sub, [_s(*d), _s(*d)]),
+    "mul": lambda d: (kernels.mul, [_s(*d), _s(*d)]),
+    "div": lambda d: (kernels.div, [_s(*d), _s(*d)]),
+    "neg": lambda d: (kernels.neg, [_s(*d)]),
+    "sigmoid": lambda d: (kernels.sigmoid, [_s(*d)]),
+    "matmul": lambda d: (kernels.matmul, [_s(d[0], d[1]), _s(d[1], d[2])]),
+    "matmul_nt": lambda d: (kernels.matmul_nt, [_s(d[0], d[1]), _s(d[2], d[1])]),
+    "gram": lambda d: (kernels.gram, [_s(d[0], d[1]), _s(d[0], d[2])]),
+    "sum_axis0": lambda d: (kernels.sum_axis0, [_s(*d)]),
+    "sum_axis1": lambda d: (kernels.sum_axis1, [_s(*d)]),
+    "sum_all": lambda d: (kernels.sum_all, [_s(*d)]),
+    "glm_mu": lambda d: (kernels.glm_mu, [_s(d[0], d[1]), _s(d[1], 1)]),
+    "glm_grad": lambda d: (kernels.glm_grad, [_s(d[0], d[1]), _s(d[0], 1), _s(d[0], 1)]),
+    "glm_hess": lambda d: (kernels.glm_hess, [_s(d[0], d[1]), _s(d[0], 1)]),
+    "logloss": lambda d: (kernels.logloss, [_s(d[0], 1), _s(d[0], 1)]),
+    "newton_block": lambda d: (model.newton_block, [_s(d[0], d[1]), _s(d[0], 1), _s(d[1], 1)]),
+    "lbfgs_block": lambda d: (model.lbfgs_block, [_s(d[0], d[1]), _s(d[0], 1), _s(d[1], 1)]),
+    "predict_block": lambda d: (model.predict_block, [_s(d[0], d[1]), _s(d[1], 1)]),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(name, dims):
+    fn, in_shapes = BUILDERS[name](dims)
+    lowered = jax.jit(_tupled(fn)).lower(*in_shapes)
+    out_avals = lowered.out_info
+    out_shapes = [tuple(int(x) for x in o.shape) for o in jax.tree_util.tree_leaves(out_avals)]
+    in_dims = [tuple(int(x) for x in s.shape) for s in in_shapes]
+    return to_hlo_text(lowered), in_dims, out_shapes
+
+
+def fmt_shapes(shapes) -> str:
+    return ";".join("x".join(str(d) for d in s) for s in shapes)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default="", help="comma-separated kernel names to lower")
+    args = ap.parse_args()
+    only = set(filter(None, args.only.split(",")))
+
+    os.makedirs(args.out, exist_ok=True)
+    rows = []
+    for name, dims, n_out in specs.SPECS:
+        if only and name not in only:
+            continue
+        key = specs.key(name, dims)
+        fname = f"{key}.hlo.txt"
+        text, in_dims, out_shapes = lower_spec(name, dims)
+        assert len(out_shapes) == n_out, (
+            f"{key}: spec says {n_out} outputs, lowering produced {len(out_shapes)}"
+        )
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        rows.append(
+            "\t".join(
+                [
+                    name,
+                    "x".join(str(d) for d in dims),
+                    fname,
+                    str(n_out),
+                    fmt_shapes(in_dims),
+                    fmt_shapes(out_shapes),
+                ]
+            )
+        )
+        print(f"  lowered {key:28s} -> {fname} ({len(text)} chars)", file=sys.stderr)
+
+    manifest = os.path.join(args.out, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("# name\tdims\tfile\tn_outputs\tinput_shapes\toutput_shapes\n")
+        f.write("\n".join(rows) + "\n")
+    print(f"wrote {len(rows)} artifacts + {manifest}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

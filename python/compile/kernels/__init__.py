@@ -1,0 +1,26 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Every kernel here is the per-block compute hot-spot of the NumS
+reproduction: the Rust coordinator (L3) schedules *blocks* of distributed
+arrays onto simulated cluster nodes, and each block-level task executes one
+of these kernels through the PJRT runtime, using HLO artifacts lowered by
+``compile.aot``.
+
+All kernels run under ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO ops
+that any backend (including the Rust-side PJRT CPU client) can run.  Tiling
+choices (128-aligned tiles, VMEM-resident accumulators) still reflect the
+TPU mapping documented in DESIGN.md §Hardware-Adaptation.
+
+Blocks are f64 to match the Rust coordinator's block storage.
+"""
+
+import jax
+
+# Must happen before any tracing; the whole stack is f64.
+jax.config.update("jax_enable_x64", True)
+
+from .matmul import matmul, matmul_nt, gram  # noqa: E402,F401
+from .ew import add, sub, mul, div, neg, sigmoid  # noqa: E402,F401
+from .reduce import sum_axis0, sum_axis1, sum_all  # noqa: E402,F401
+from .glm import glm_mu, glm_grad, glm_hess, logloss  # noqa: E402,F401

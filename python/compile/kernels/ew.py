@@ -1,0 +1,62 @@
+"""Element-wise Pallas kernels.
+
+These are the block-level bodies of the paper's unary / binary element-wise
+GraphArray operations (Table 1, Fig. 5a/5b).  LSHS schedules them with zero
+communication (App. A.1); the compute itself is a trivially tiled VPU map.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _tile
+
+
+def _ew2(fn):
+    def kernel(x_ref, y_ref, o_ref):
+        o_ref[...] = fn(x_ref[...], y_ref[...])
+
+    def call(x, y, *, bm: int = 256, bn: int = 256):
+        assert x.shape == y.shape, f"ew shape mismatch {x.shape} vs {y.shape}"
+        m, n = x.shape
+        bm_, bn_ = _tile(m, bm), _tile(n, bn)
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+            grid=(m // bm_, n // bn_),
+            in_specs=[
+                pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+                pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+            ],
+            out_specs=pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+            interpret=True,
+        )(x, y)
+
+    return call
+
+
+def _ew1(fn):
+    def kernel(x_ref, o_ref):
+        o_ref[...] = fn(x_ref[...])
+
+    def call(x, *, bm: int = 256, bn: int = 256):
+        m, n = x.shape
+        bm_, bn_ = _tile(m, bm), _tile(n, bn)
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+            grid=(m // bm_, n // bn_),
+            in_specs=[pl.BlockSpec((bm_, bn_), lambda i, j: (i, j))],
+            out_specs=pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+            interpret=True,
+        )(x)
+
+    return call
+
+
+add = _ew2(jnp.add)
+sub = _ew2(jnp.subtract)
+mul = _ew2(jnp.multiply)
+div = _ew2(jnp.divide)
+neg = _ew1(jnp.negative)
+sigmoid = _ew1(lambda v: 1.0 / (1.0 + jnp.exp(-v)))

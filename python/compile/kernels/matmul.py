@@ -1,0 +1,120 @@
+"""Tiled Pallas matmul kernels: the block-level BLAS substrate.
+
+The paper's per-worker compute is a single-threaded BLAS call on a dense
+block.  On the TPU-shaped L1 we express that call as a Pallas kernel whose
+``BlockSpec`` grid streams (bm, bk) x (bk, bn) tiles HBM->VMEM and
+accumulates in the output tile, i.e. the MXU-systolic mapping of a blocked
+GEMM.  Three variants cover the paper's §8.1 microbenchmarks:
+
+* ``matmul``     C = A @ B            (square DGEMM, Fig. 10)
+* ``matmul_nt``  C = A @ B^T          (block-wise outer product, App. A.4)
+* ``gram``       C = A^T @ B          (block-wise inner product, App. A.3 —
+                                       the Hessian hot-spot of §6)
+
+Transpose never materializes: it is fused into the contraction, which is
+exactly the paper's "transpose is executed lazily by fusing with the next
+operation" rule (§6).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= target (>=1)."""
+    t = min(n, target)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def _mm_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ y_ref[...]
+
+
+def matmul(x, y, *, bm: int = 128, bk: int = 128, bn: int = 128):
+    """C[m,n] = A[m,k] @ B[k,n] as a tiled Pallas kernel."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {y.shape}"
+    bm, bk, bn = _tile(m, bm), _tile(k, bk), _tile(n, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, h: (i, h)),
+            pl.BlockSpec((bk, bn), lambda i, j, h: (h, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, h: (i, j)),
+        interpret=True,
+    )(x, y)
+
+
+def _mm_nt_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ y_ref[...].T
+
+
+def matmul_nt(x, y, *, bm: int = 128, bk: int = 128, bn: int = 128):
+    """C[m,n] = A[m,k] @ B[n,k]^T — fused-transpose outer-product block."""
+    m, k = x.shape
+    n, k2 = y.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {y.shape}^T"
+    bm, bk, bn = _tile(m, bm), _tile(k, bk), _tile(n, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_nt_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, h: (i, h)),
+            pl.BlockSpec((bn, bk), lambda i, j, h: (j, h)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, h: (i, j)),
+        interpret=True,
+    )(x, y)
+
+
+def _gram_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...].T @ y_ref[...]
+
+
+def gram(x, y, *, bm: int = 128, bk: int = 512, bn: int = 128):
+    """C[m,n] = A[k,m]^T @ B[k,n] — fused-transpose inner-product block.
+
+    This is the most expensive operation of the GLM Hessian (§6 / App. A.3):
+    the reduction dimension k is the tall axis, so it is the grid's innermost
+    loop and the (m, n) output tile stays resident in VMEM.
+    """
+    k, m = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {x.shape}^T @ {y.shape}"
+    bm, bk, bn = _tile(m, bm), _tile(k, bk), _tile(n, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gram_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, h: (h, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, h: (h, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, h: (i, j)),
+        interpret=True,
+    )(x, y)

@@ -1,0 +1,80 @@
+"""Axis-reduction Pallas kernels.
+
+Block bodies of the paper's ``ReduceAxis(add, X, axis)`` vertex (Fig. 5c):
+each block reduces locally, then the Rust coordinator sums the per-block
+outputs with a locality-paired ``Reduce`` tree (§4) using the ``add`` kernel.
+Outputs keep a 2-D shape ((1, n), (m, 1), (1, 1)) so that reduce trees reuse
+the same block layout everywhere.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _tile
+
+
+def _sum0_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...], axis=0, keepdims=True)
+
+
+def sum_axis0(x, *, bm: int = 256, bn: int = 256):
+    """(m, n) -> (1, n), summing over rows."""
+    m, n = x.shape
+    bm_, bn_ = _tile(m, bm), _tile(n, bn)
+    return pl.pallas_call(
+        _sum0_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, n), x.dtype),
+        grid=(n // bn_, m // bm_),
+        in_specs=[pl.BlockSpec((bm_, bn_), lambda j, i: (i, j))],
+        out_specs=pl.BlockSpec((1, bn_), lambda j, i: (0, j)),
+        interpret=True,
+    )(x)
+
+
+def _sum1_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...], axis=1, keepdims=True)
+
+
+def sum_axis1(x, *, bm: int = 256, bn: int = 256):
+    """(m, n) -> (m, 1), summing over columns."""
+    m, n = x.shape
+    bm_, bn_ = _tile(m, bm), _tile(n, bn)
+    return pl.pallas_call(
+        _sum1_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, 1), x.dtype),
+        grid=(m // bm_, n // bn_),
+        in_specs=[pl.BlockSpec((bm_, bn_), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm_, 1), lambda i, j: (i, 0)),
+        interpret=True,
+    )(x)
+
+
+def _sumall_kernel(x_ref, o_ref):
+    @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...], keepdims=True)
+
+
+def sum_all(x, *, bm: int = 256, bn: int = 256):
+    """(m, n) -> (1, 1), full reduction."""
+    m, n = x.shape
+    bm_, bn_ = _tile(m, bm), _tile(n, bn)
+    return pl.pallas_call(
+        _sumall_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, 1), x.dtype),
+        grid=(m // bm_, n // bn_),
+        in_specs=[pl.BlockSpec((bm_, bn_), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        interpret=True,
+    )(x)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for every Pallas kernel.
+
+This module is the correctness contract of L1: ``pytest python/tests``
+asserts ``assert_allclose(kernel(x), ref.kernel(x))`` over hypothesis-swept
+shapes and dtypes.  Nothing here is ever lowered into artifacts.
+"""
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def matmul(x, y):
+    return x @ y
+
+
+def matmul_nt(x, y):
+    return x @ y.T
+
+
+def gram(x, y):
+    return x.T @ y
+
+
+def add(x, y):
+    return x + y
+
+
+def sub(x, y):
+    return x - y
+
+
+def mul(x, y):
+    return x * y
+
+
+def div(x, y):
+    return x / y
+
+
+def neg(x):
+    return -x
+
+
+def sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def sum_axis0(x):
+    return jnp.sum(x, axis=0, keepdims=True)
+
+
+def sum_axis1(x):
+    return jnp.sum(x, axis=1, keepdims=True)
+
+
+def sum_all(x):
+    return jnp.sum(x, keepdims=True).reshape(1, 1)
+
+
+def glm_mu(x, beta):
+    return sigmoid(x @ beta)
+
+
+def glm_grad(x, mu, y):
+    return x.T @ (mu - y)
+
+
+def glm_hess(x, mu):
+    return x.T @ ((mu * (1.0 - mu)) * x)
+
+
+def logloss(mu, y):
+    mu = jnp.clip(mu, _EPS, 1.0 - _EPS)
+    return (-jnp.sum(y * jnp.log(mu) + (1.0 - y) * jnp.log(1.0 - mu))).reshape(1, 1)
+
+
+def newton_block(x, y, beta):
+    """Composed per-block Newton contribution (the L2 fusion)."""
+    mu = glm_mu(x, beta)
+    return glm_grad(x, mu, y), glm_hess(x, mu), logloss(mu, y)

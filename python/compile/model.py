@@ -1,0 +1,82 @@
+"""Layer-2 JAX compute graphs.
+
+NumS's "model" is the generalized linear model of §6: the per-block pieces
+of a Newton iteration, composed from the L1 Pallas kernels so that one RFC
+(one PJRT execution on the Rust side) covers what would otherwise be three
+to five block-level tasks.  This is exactly the "operator fusion" the
+paper's §9 lists as future work for reducing RFC overhead — here it is a
+first-class artifact.
+
+Everything in this module is lowered ONCE by ``compile.aot`` to HLO text;
+Python never runs on the request path.
+"""
+
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+
+def newton_block(x, y, beta):
+    """Fused per-block Newton contribution.
+
+    Inputs:  X[m,d] block, y[m,1] block, beta[d,1] (broadcast by L3).
+    Outputs: (g[d,1], H[d,d], loss[1,1]) — the block's additive
+    contributions, reduced across blocks by the coordinator's locality-aware
+    Reduce tree.
+    """
+    mu = kernels.glm_mu(x, beta)
+    g = kernels.glm_grad(x, mu, y)
+    h = kernels.glm_hess(x, mu)
+    loss = kernels.logloss(mu, y)
+    return g, h, loss
+
+
+def lbfgs_block(x, y, beta):
+    """Fused per-block gradient + loss for first-order optimizers (§8.5).
+
+    L-BFGS (the Spark MLlib comparison) needs only (g, loss) per block.
+    """
+    mu = kernels.glm_mu(x, beta)
+    g = kernels.glm_grad(x, mu, y)
+    loss = kernels.logloss(mu, y)
+    return g, loss
+
+
+def predict_block(x, beta):
+    """Per-block prediction: class probabilities, thresholded by the caller."""
+    return kernels.glm_mu(x, beta)
+
+
+def newton_block_ref(x, y, beta):
+    """Pure-jnp oracle of ``newton_block`` (used by pytest only)."""
+    return ref.newton_block(x, y, beta)
+
+
+def lbfgs_block_ref(x, y, beta):
+    mu = ref.glm_mu(x, beta)
+    return ref.glm_grad(x, mu, y), ref.logloss(mu, y)
+
+
+def logistic_loss_ref(x, y, beta):
+    """Whole-dataset reference loss, for convergence tests."""
+    mu = ref.glm_mu(x, beta)
+    return float(ref.logloss(mu, y)[0, 0])
+
+
+def newton_solve_ref(x, y, steps: int = 10, eps: float = 1e-8):
+    """Dense single-node Newton reference (Algorithm 2), for tests.
+
+    Mirrors the Rust coordinator's distributed loop: same updates, same
+    convergence test, no regularizer.
+    """
+    n, d = x.shape
+    beta = jnp.zeros((d, 1), dtype=x.dtype)
+    losses = []
+    for _ in range(steps):
+        g, h, loss = ref.newton_block(x, y, beta)
+        losses.append(float(loss[0, 0]))
+        beta = beta - jnp.linalg.solve(h + 1e-10 * jnp.eye(d, dtype=x.dtype), g)
+        if float(jnp.linalg.norm(g)) <= eps:
+            break
+    return beta, losses

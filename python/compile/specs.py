@@ -1,0 +1,74 @@
+"""Canonical AOT kernel/shape manifest — single source of truth.
+
+HLO is shape-monomorphic, so the Rust runtime can only run (kernel, shape)
+pairs that were lowered at build time.  This list is mirrored by
+``rust/src/kernels/shapes.rs``; the Rust `NativeBackend` covers everything
+else.  Keep the two in sync: `python/tests/test_specs.py` and the Rust test
+`kernels::shapes::tests` both parse this file's emitted manifest.
+
+Spec format: (name, dims, n_outputs) where ``dims`` parameterizes the
+builder in ``aot.BUILDERS``:
+
+* ew / neg / sigmoid:      (m, n)          1 in/2 in -> (m, n)
+* matmul:                  (m, k, n)       A[m,k] @ B[k,n]
+* matmul_nt:               (m, k, n)       A[m,k] @ B[n,k]^T
+* gram:                    (k, m, n)       A[k,m]^T @ B[k,n]
+* sum_axis0 / sum_axis1 / sum_all: (m, n)
+* glm_mu:                  (m, d)          + beta[d,1]
+* glm_grad / glm_hess / logloss:   (m, d)
+* newton_block / lbfgs_block:      (m, d)  fused L2 composites
+"""
+
+# GLM block geometries used by the e2e example, tests and benches.
+GLM_SHAPES = [(512, 8), (2048, 16), (4096, 32)]
+
+# Square DGEMM block sizes (Fig. 10 scaled) + a rectangular case.
+MM_SHAPES = [(64, 64, 64), (128, 128, 128), (256, 256, 256)]
+
+SPECS = []
+
+
+def _add(name, dims, n_out=1):
+    SPECS.append((name, tuple(int(d) for d in dims), n_out))
+
+
+# --- element-wise (reduce-tree `add` shapes included) ---
+for shape in [(256, 256), (64, 64)]:
+    for op in ("add", "sub", "mul", "div", "neg", "sigmoid"):
+        _add(op, shape)
+# reduce-tree shapes for GLM outputs: g[d,1], H[d,d], loss[1,1], mu[m,1]
+for d in (8, 16, 32):
+    _add("add", (d, 1))
+    _add("add", (d, d))
+for m in (512, 2048, 4096):
+    _add("add", (m, 1))
+_add("add", (1, 1))
+
+# --- contractions ---
+for dims in MM_SHAPES:
+    _add("matmul", dims)
+    _add("matmul_nt", dims)
+_add("gram", (2048, 16, 16))
+_add("gram", (4096, 32, 32))
+_add("gram", (2048, 16, 1))   # X^T c matvec (gradient shape)
+_add("gram", (4096, 32, 1))
+_add("matmul", (256, 256, 1))  # matvec X @ y (Fig. 9)
+
+# --- reductions ---
+_add("sum_axis0", (256, 256))
+_add("sum_axis1", (256, 256))
+_add("sum_all", (256, 256))
+
+# --- GLM fused kernels + L2 composites ---
+for m, d in GLM_SHAPES:
+    _add("glm_mu", (m, d))
+    _add("glm_grad", (m, d))
+    _add("glm_hess", (m, d))
+    _add("logloss", (m, d))
+    _add("newton_block", (m, d), n_out=3)
+    _add("lbfgs_block", (m, d), n_out=2)
+    _add("predict_block", (m, d))
+
+
+def key(name, dims) -> str:
+    return f"{name}_{'x'.join(str(d) for d in dims)}"

@@ -1,0 +1,9 @@
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from hypothesis import settings
+
+# Pallas interpret mode is slow; keep example counts modest but meaningful.
+settings.register_profile("nums", max_examples=20, deadline=None)
+settings.load_profile("nums")

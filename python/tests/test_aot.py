@@ -1,0 +1,69 @@
+"""AOT pipeline: specs lower to parseable HLO text, manifest is consistent."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, specs
+
+
+def test_every_spec_has_builder():
+    for name, dims, _ in specs.SPECS:
+        assert name in aot.BUILDERS, name
+
+
+def test_spec_keys_unique():
+    keys = [specs.key(n, d) for n, d, _ in specs.SPECS]
+    assert len(keys) == len(set(keys))
+
+
+@pytest.mark.parametrize(
+    "name,dims,n_out",
+    [
+        ("add", (64, 64), 1),
+        ("matmul", (64, 64, 64), 1),
+        ("gram", (2048, 16, 16), 1),
+        ("newton_block", (512, 8), 3),
+        ("lbfgs_block", (512, 8), 2),
+    ],
+)
+def test_lower_one(name, dims, n_out):
+    text, in_dims, out_shapes = aot.lower_spec(name, dims)
+    assert text.startswith("HloModule")
+    assert "f64" in text
+    assert len(out_shapes) == n_out
+    # GLM fused blocks: X, y, beta inputs
+    if name == "newton_block":
+        assert in_dims == [(512, 8), (512, 1), (8, 1)]
+        assert out_shapes == [(8, 1), (8, 8), (1, 1)]
+
+
+def test_aot_main_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--only", "neg,sum_all"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=300,
+    )
+    assert r.returncode == 0, r.stderr
+    manifest = (out / "manifest.tsv").read_text().strip().splitlines()
+    rows = [l for l in manifest if not l.startswith("#")]
+    want = [s for s in specs.SPECS if s[0] in ("neg", "sum_all")]
+    assert len(rows) == len(want)
+    for row in rows:
+        name, dims, fname, n_out, in_shapes, out_shapes = row.split("\t")
+        assert (out / fname).exists()
+        assert (out / fname).read_text().startswith("HloModule")
+        assert int(n_out) == len(out_shapes.split(";"))
+
+
+def test_manifest_dims_parse_roundtrip():
+    for name, dims, n_out in specs.SPECS:
+        s = "x".join(str(d) for d in dims)
+        assert tuple(int(t) for t in s.split("x")) == dims

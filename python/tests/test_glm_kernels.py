@@ -1,0 +1,116 @@
+"""Fused GLM kernels (L1) and the composed newton/lbfgs blocks (L2) vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import kernels, model
+from compile.kernels import ref
+
+M = st.integers(min_value=2, max_value=300)
+D = st.integers(min_value=1, max_value=24)
+DTYPES = st.sampled_from([jnp.float32, jnp.float64])
+
+
+def _tol(dtype):
+    return dict(rtol=3e-4, atol=3e-5) if dtype == jnp.float32 else dict(rtol=1e-9, atol=1e-11)
+
+
+def _data(m, d, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, d)), dtype=dtype)
+    y = jnp.asarray(rng.integers(0, 2, (m, 1)), dtype=dtype)
+    beta = jnp.asarray(0.1 * rng.standard_normal((d, 1)), dtype=dtype)
+    return x, y, beta
+
+
+@given(m=M, d=D, dtype=DTYPES, seed=st.integers(0, 2**31))
+def test_glm_mu(m, d, dtype, seed):
+    x, _, beta = _data(m, d, dtype, seed)
+    got = kernels.glm_mu(x, beta)
+    want = ref.glm_mu(x, beta)
+    assert got.shape == (m, 1)
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+    assert bool(jnp.all((got > 0) & (got < 1)))
+
+
+@given(m=M, d=D, dtype=DTYPES, seed=st.integers(0, 2**31))
+def test_glm_grad(m, d, dtype, seed):
+    x, y, beta = _data(m, d, dtype, seed)
+    mu = ref.glm_mu(x, beta)
+    np.testing.assert_allclose(
+        kernels.glm_grad(x, mu, y), ref.glm_grad(x, mu, y), **_tol(dtype)
+    )
+
+
+@given(m=M, d=D, dtype=DTYPES, seed=st.integers(0, 2**31))
+def test_glm_hess(m, d, dtype, seed):
+    x, _, beta = _data(m, d, dtype, seed)
+    mu = ref.glm_mu(x, beta)
+    got = kernels.glm_hess(x, mu)
+    want = ref.glm_hess(x, mu)
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+    # Hessian of a convex objective: symmetric PSD.
+    np.testing.assert_allclose(got, got.T, **_tol(dtype))
+    eig = np.linalg.eigvalsh(np.asarray(want, dtype=np.float64))
+    assert eig.min() >= -1e-6
+
+
+@given(m=M, d=D, dtype=DTYPES, seed=st.integers(0, 2**31))
+def test_logloss(m, d, dtype, seed):
+    x, y, beta = _data(m, d, dtype, seed)
+    mu = ref.glm_mu(x, beta)
+    got = kernels.logloss(mu, y)
+    want = ref.logloss(mu, y)
+    assert got.shape == (1, 1)
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+    assert float(got[0, 0]) >= 0.0
+
+
+@given(m=M, d=D, seed=st.integers(0, 2**31))
+def test_newton_block_composed(m, d, seed):
+    x, y, beta = _data(m, d, jnp.float64, seed)
+    g, h, loss = model.newton_block(x, y, beta)
+    g2, h2, loss2 = model.newton_block_ref(x, y, beta)
+    np.testing.assert_allclose(g, g2, rtol=1e-9, atol=1e-11)
+    np.testing.assert_allclose(h, h2, rtol=1e-9, atol=1e-11)
+    np.testing.assert_allclose(loss, loss2, rtol=1e-9, atol=1e-11)
+
+
+@given(m=M, d=D, seed=st.integers(0, 2**31))
+def test_lbfgs_block_composed(m, d, seed):
+    x, y, beta = _data(m, d, jnp.float64, seed)
+    g, loss = model.lbfgs_block(x, y, beta)
+    g2, loss2 = model.lbfgs_block_ref(x, y, beta)
+    np.testing.assert_allclose(g, g2, rtol=1e-9, atol=1e-11)
+    np.testing.assert_allclose(loss, loss2, rtol=1e-9, atol=1e-11)
+
+
+def test_blockwise_additivity():
+    """g/H/loss of a stacked dataset == sum of per-block contributions.
+
+    This is the invariant the Rust coordinator's Reduce tree relies on.
+    """
+    rng = np.random.default_rng(0)
+    d = 6
+    xs = [jnp.asarray(rng.standard_normal((m, d))) for m in (32, 48, 80)]
+    ys = [jnp.asarray(rng.integers(0, 2, (m, 1)), dtype=jnp.float64) for m in (32, 48, 80)]
+    beta = jnp.asarray(0.05 * rng.standard_normal((d, 1)))
+    x_full, y_full = jnp.concatenate(xs), jnp.concatenate(ys)
+    g_full, h_full, l_full = model.newton_block_ref(x_full, y_full, beta)
+    parts = [model.newton_block(x, y, beta) for x, y in zip(xs, ys)]
+    g_sum = sum(p[0] for p in parts)
+    h_sum = sum(p[1] for p in parts)
+    l_sum = sum(p[2] for p in parts)
+    np.testing.assert_allclose(g_sum, g_full, rtol=1e-9)
+    np.testing.assert_allclose(h_sum, h_full, rtol=1e-9)
+    np.testing.assert_allclose(l_sum, l_full, rtol=1e-9)
+
+
+@pytest.mark.parametrize("bm", [16, 64, 256, 512])
+def test_glm_tile_invariance(bm):
+    x, y, beta = _data(256, 8, jnp.float64, 3)
+    mu = ref.glm_mu(x, beta)
+    np.testing.assert_allclose(kernels.glm_grad(x, mu, y, bm=bm), ref.glm_grad(x, mu, y), rtol=1e-10)
+    np.testing.assert_allclose(kernels.glm_hess(x, mu, bm=bm), ref.glm_hess(x, mu), rtol=1e-10)

@@ -1,0 +1,74 @@
+"""L2 model-level behaviour: Newton convergence on separable synthetic data."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def _bimodal(n, d, seed=0):
+    """The paper's §8.5 synthetic classification data (bimodal Gaussian)."""
+    rng = np.random.default_rng(seed)
+    n_neg = int(0.75 * n)
+    n_pos = n - n_neg
+    x_neg = rng.normal(10.0, np.sqrt(2.0), (n_neg, d))
+    x_pos = rng.normal(30.0, np.sqrt(4.0), (n_pos, d))
+    x = np.concatenate([x_neg, x_pos])
+    y = np.concatenate([np.zeros((n_neg, 1)), np.ones((n_pos, 1))])
+    perm = rng.permutation(n)
+    # standardize: keeps Newton well-conditioned, same as the Rust driver
+    x = (x - x.mean(0)) / x.std(0)
+    return jnp.asarray(x[perm]), jnp.asarray(y[perm])
+
+
+def test_newton_loss_decreases():
+    x, y = _bimodal(512, 8)
+    _, losses = model.newton_solve_ref(x, y, steps=8)
+    assert len(losses) >= 3
+    assert losses[-1] < losses[0] * 0.1, losses
+
+
+def test_newton_reaches_high_accuracy():
+    x, y = _bimodal(1024, 4, seed=1)
+    beta, _ = model.newton_solve_ref(x, y, steps=12)
+    mu = ref.glm_mu(x, beta)
+    acc = float(jnp.mean(((mu > 0.5).astype(jnp.float64) == y)))
+    assert acc > 0.97, acc
+
+
+def test_gradient_matches_finite_difference():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((64, 5)))
+    y = jnp.asarray(rng.integers(0, 2, (64, 1)), dtype=jnp.float64)
+    beta = jnp.asarray(0.1 * rng.standard_normal((5, 1)))
+    g, _, _ = ref.newton_block(x, y, beta)
+    eps = 1e-6
+    for i in range(5):
+        e = jnp.zeros((5, 1)).at[i, 0].set(eps)
+        lp = model.logistic_loss_ref(x, y, beta + e)
+        lm = model.logistic_loss_ref(x, y, beta - e)
+        fd = (lp - lm) / (2 * eps)
+        np.testing.assert_allclose(float(g[i, 0]), fd, rtol=1e-4, atol=1e-6)
+
+
+def test_hessian_matches_finite_difference_of_gradient():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((64, 4)))
+    y = jnp.asarray(rng.integers(0, 2, (64, 1)), dtype=jnp.float64)
+    beta = jnp.asarray(0.1 * rng.standard_normal((4, 1)))
+    _, h, _ = ref.newton_block(x, y, beta)
+    eps = 1e-6
+    for i in range(4):
+        e = jnp.zeros((4, 1)).at[i, 0].set(eps)
+        gp, _, _ = ref.newton_block(x, y, beta + e)
+        gm, _, _ = ref.newton_block(x, y, beta - e)
+        fd_col = (gp - gm) / (2 * eps)
+        np.testing.assert_allclose(np.asarray(h[:, i : i + 1]), np.asarray(fd_col), rtol=1e-4, atol=1e-6)
+
+
+def test_predict_block_matches_mu():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((128, 8)))
+    beta = jnp.asarray(0.2 * rng.standard_normal((8, 1)))
+    np.testing.assert_allclose(model.predict_block(x, beta), ref.glm_mu(x, beta), rtol=1e-10)

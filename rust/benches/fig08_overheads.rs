@@ -1,0 +1,94 @@
+//! Fig. 8 — control overhead (γ) and RFC overhead.
+//!
+//! (a) Control overhead: modeled + measured driver-side cost of allocating
+//!     a 1024-dim vector as p blocks on a 16-node/1024-worker cluster —
+//!     the γ·p dispatch term dominates as p grows (paper Fig. 8a).
+//! (b) RFC overhead: `-x` on one block, PJRT execution (object-store write
+//!     included) vs a direct native call (the NumPy baseline) — the R(n)
+//!     constant of Fig. 8b.
+
+use nums::bench::harness::print_series;
+use nums::prelude::*;
+use nums::util::Stopwatch;
+
+fn fig8a() {
+    let net = NetParams::paper_testbed();
+    let mut xs = Vec::new();
+    let mut modeled = Vec::new();
+    let mut sched_wall = Vec::new();
+    for p in [4usize, 16, 64, 256, 1024] {
+        let cfg = nums::api::SessionConfig::paper_sim(16, 64);
+        let mut sess = nums::api::Session::new(cfg);
+        let x = sess.zeros(&[1024, 1], &[p.min(1024), 1]);
+        // dispatch-only workload: one unary op per block
+        let sw = Stopwatch::start();
+        let (_, rep) = nums::api::ops::neg(&mut sess, &x).unwrap();
+        let wall = sw.secs();
+        xs.push(format!("{p}"));
+        modeled.push(rep.sim.dispatch_time.max(net.gamma * p as f64));
+        sched_wall.push(wall);
+    }
+    print_series(
+        "Fig 8a: control overhead — allocate 1024-dim vector as p blocks (16 nodes, 1024 workers)",
+        "blocks",
+        &xs,
+        &[
+            ("modeled dispatch gamma*p [s]".into(), modeled),
+            ("measured driver wall [s]".into(), sched_wall),
+        ],
+    );
+}
+
+fn fig8b() {
+    let backend_pjrt = Backend::pjrt(nums::runtime::Manifest::default_dir()).ok();
+    let mut xs = Vec::new();
+    let mut pjrt_t = Vec::new();
+    let mut native_t = Vec::new();
+    let mut rng = Rng::seed_from_u64(8);
+    for n in [64usize, 256] {
+        let mut v = vec![0.0; n * n];
+        rng.fill_normal(&mut v);
+        let x = Block::from_vec(&[n, n], v);
+        let trials = 50;
+        // native "NumPy" call
+        let sw = Stopwatch::start();
+        for _ in 0..trials {
+            nums::runtime::native::execute(&Kernel::Neg, &[&x]).unwrap();
+        }
+        native_t.push(sw.secs() / trials as f64);
+        // PJRT RFC (literal copies model the object-store round trip)
+        if let Some(b) = &backend_pjrt {
+            b.execute(&Kernel::Neg, &[&x]).unwrap(); // warmup compile
+            let sw = Stopwatch::start();
+            for _ in 0..trials {
+                b.execute(&Kernel::Neg, &[&x]).unwrap();
+            }
+            pjrt_t.push(sw.secs() / trials as f64);
+        } else {
+            pjrt_t.push(f64::NAN);
+        }
+        xs.push(format!("{n}x{n}"));
+    }
+    print_series(
+        "Fig 8b: RFC overhead — neg(x) per call (runtime+store vs direct native)",
+        "block",
+        &xs,
+        &[
+            ("PJRT RFC [s]".into(), pjrt_t.clone()),
+            ("native direct [s]".into(), native_t.clone()),
+            (
+                "overhead [s]".into(),
+                pjrt_t
+                    .iter()
+                    .zip(&native_t)
+                    .map(|(a, b)| a - b)
+                    .collect(),
+            ),
+        ],
+    );
+}
+
+fn main() {
+    fig8a();
+    fig8b();
+}

@@ -1,0 +1,115 @@
+//! Fig. 9 — microbenchmark ablation: {X+Y, X@y, Xᵀ@y, Xᵀ@Y, X@Yᵀ, sum}
+//! across systems {Ray+LSHS, Ray w/o LSHS, Dask+LSHS, Dask w/o LSHS
+//! (≈ Dask Arrays)} and partition counts, on paper-shape arrays over a
+//! 16-node × 32-worker modeled cluster.
+//!
+//! Expected shape (paper §8.1): LSHS flat & fast everywhere; the Dask-like
+//! round-robin competitive only when partitions divide the worker count;
+//! Ray-without-LSHS concentrated and slow.
+
+use nums::api::{ops, Policy, RunReport, Session, SessionConfig};
+use nums::bench::harness::print_series;
+use nums::prelude::*;
+
+type OpFn = fn(&mut Session, &DistArray, &DistArray) -> anyhow::Result<(DistArray, RunReport)>;
+
+fn xty(s: &mut Session, x: &DistArray, y: &DistArray) -> anyhow::Result<(DistArray, RunReport)> {
+    ops::matmul(s, &x.t(), y)
+}
+fn xyt(s: &mut Session, x: &DistArray, y: &DistArray) -> anyhow::Result<(DistArray, RunReport)> {
+    ops::matmul(s, x, &y.t())
+}
+fn add(s: &mut Session, x: &DistArray, y: &DistArray) -> anyhow::Result<(DistArray, RunReport)> {
+    ops::add(s, x, y)
+}
+fn sum0(s: &mut Session, x: &DistArray, _y: &DistArray) -> anyhow::Result<(DistArray, RunReport)> {
+    ops::sum_axis(s, x, 0)
+}
+
+fn systems() -> Vec<(&'static str, Policy, SystemMode)> {
+    vec![
+        ("Ray+LSHS", Policy::Lshs, SystemMode::Ray),
+        ("Ray w/o LSHS", Policy::BottomUp, SystemMode::Ray),
+        ("Dask+LSHS", Policy::Lshs, SystemMode::Dask),
+        ("Dask RR (DaskArrays)", Policy::RoundRobin, SystemMode::Dask),
+    ]
+}
+
+/// Run `op` on [rows, d] operands partitioned into q row blocks.
+fn run_case(
+    policy: Policy,
+    mode: SystemMode,
+    rows: usize,
+    d: usize,
+    q: usize,
+    op: OpFn,
+) -> f64 {
+    let cfg = SessionConfig::paper_sim(16, 32)
+        .with_policy(policy)
+        .with_mode(mode);
+    let mut sess = Session::new(cfg);
+    let x = sess.zeros(&[rows, d], &[q, 1]);
+    let y = sess.zeros(&[rows, d], &[q, 1]);
+    let (_, rep) = op(&mut sess, &x, &y).unwrap();
+    rep.sim.makespan
+}
+
+/// X @ y: y is a [d,1] single-block vector.
+fn run_matvec(policy: Policy, mode: SystemMode, rows: usize, d: usize, q: usize) -> f64 {
+    let cfg = SessionConfig::paper_sim(16, 32)
+        .with_policy(policy)
+        .with_mode(mode);
+    let mut sess = Session::new(cfg);
+    let x = sess.zeros(&[rows, d], &[q, 1]);
+    let y = sess.zeros(&[d, 1], &[1, 1]);
+    let (_, rep) = ops::matmul(&mut sess, &x, &y).unwrap();
+    rep.sim.makespan
+}
+
+/// Xᵀ @ y with y partitioned like X's rows.
+fn run_tn_vec(policy: Policy, mode: SystemMode, rows: usize, d: usize, q: usize) -> f64 {
+    let cfg = SessionConfig::paper_sim(16, 32)
+        .with_policy(policy)
+        .with_mode(mode);
+    let mut sess = Session::new(cfg);
+    let x = sess.zeros(&[rows, d], &[q, 1]);
+    let y = sess.zeros(&[rows, 1], &[q, 1]);
+    let (_, rep) = ops::matmul(&mut sess, &x.t(), &y).unwrap();
+    rep.sim.makespan
+}
+
+fn series(title: &str, f: impl Fn(Policy, SystemMode, usize) -> f64, parts: &[usize]) {
+    let xs: Vec<String> = parts.iter().map(|p| p.to_string()).collect();
+    let rows: Vec<(String, Vec<f64>)> = systems()
+        .into_iter()
+        .map(|(name, policy, mode)| {
+            (
+                name.to_string(),
+                parts
+                    .iter()
+                    .map(|&q| f(policy.clone(), mode, q))
+                    .collect(),
+            )
+        })
+        .collect();
+    print_series(title, "partitions", &xs, &rows);
+}
+
+fn main() {
+    // 64 GB-shape operands (2^27 x 64 f64) — modeled time, phantom blocks.
+    let rows = 1usize << 27;
+    let d = 64usize;
+    let parts: Vec<usize> = vec![16, 32, 48, 64, 96, 128];
+
+    series("Fig 9: X + Y [modeled s]", |p, m, q| run_case(p, m, rows, d, q, add), &parts);
+    series("Fig 9: X @ y [modeled s]", |p, m, q| run_matvec(p, m, rows, d, q), &parts);
+    series("Fig 9: Xᵀ @ y [modeled s]", |p, m, q| run_tn_vec(p, m, rows, d, q), &parts);
+    series("Fig 9: Xᵀ @ Y [modeled s]", |p, m, q| run_case(p, m, rows, d, q, xty), &parts);
+    // outer product: smaller rows so the n x n output stays sane
+    series(
+        "Fig 9: X @ Yᵀ [modeled s] (2^18 x 2048 operands)",
+        |p, m, q| run_case(p, m, 1 << 18, 2048, q, xyt),
+        &parts,
+    );
+    series("Fig 9: sum(X, 0) [modeled s]", |p, m, q| run_case(p, m, rows, d, q, sum0), &parts);
+}

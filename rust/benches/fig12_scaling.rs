@@ -1,0 +1,69 @@
+//! Fig. 12 — weak scaling, 1→16 nodes:
+//! (a) indirect QR, 64 GB per node: near-perfect scaling;
+//! (b) logistic regression (one Newton iteration per measurement), with
+//!     the paper's slowdown at 16 nodes from inter-node reductions over
+//!     the 20 Gbps network.
+
+use nums::api::{Session, SessionConfig};
+use nums::bench::harness::print_series;
+use nums::glm::data::classification_data;
+use nums::glm::newton_fit;
+use nums::linalg::tsqr::indirect_tsqr;
+
+fn main() {
+    let nodes_axis = [1usize, 2, 4, 8, 16];
+    let d = 256usize;
+
+    // ---- (a) indirect QR, 64 GB per node ----
+    let mut xs = Vec::new();
+    let mut qr_t = Vec::new();
+    let mut qr_eff = Vec::new();
+    for &nodes in &nodes_axis {
+        let rows = (64e9 * nodes as f64 / (d as f64 * 8.0)) as usize;
+        let q = 32 * nodes; // 2 GB blocks
+        let mut sess = Session::new(SessionConfig::paper_sim(nodes, 32));
+        let x = sess.zeros(&[rows, d], &[q, 1]);
+        let res = indirect_tsqr(&mut sess, &x).unwrap();
+        xs.push(format!("{nodes}"));
+        qr_t.push(res.report.sim.makespan);
+        qr_eff.push(qr_t[0] / res.report.sim.makespan);
+    }
+    print_series(
+        "Fig 12a: indirect QR weak scaling (64 GB/node)",
+        "nodes",
+        &xs,
+        &[
+            ("time [modeled s]".into(), qr_t),
+            ("efficiency t1/tk".into(), qr_eff),
+        ],
+    );
+
+    // ---- (b) logistic regression weak scaling ----
+    let mut lr_t = Vec::new();
+    let mut lr_tflops = Vec::new();
+    for &nodes in &nodes_axis {
+        let rows = ((1u64 << 21) * nodes as u64) as usize;
+        let q = 8 * nodes;
+        let mut sess = Session::new(SessionConfig::paper_sim(nodes, 32));
+        let (x, y) = classification_data(&mut sess, rows, d, q, 12);
+        let res = newton_fit(&mut sess, &x, &y, 1, 0.0).unwrap();
+        let t = res.sim_secs();
+        lr_t.push(t);
+        // Newton iteration flops ≈ n d (d + 4)
+        let flops = rows as f64 * d as f64 * (d as f64 + 4.0);
+        lr_tflops.push(flops / t / 1e12);
+    }
+    print_series(
+        "Fig 12b: logistic regression weak scaling (1 Newton iter)",
+        "nodes",
+        &xs,
+        &[
+            ("time [modeled s]".into(), lr_t.clone()),
+            ("TFLOP/s".into(), lr_tflops),
+        ],
+    );
+    println!(
+        "16-node slowdown vs perfect: {:.2}x (paper sees degradation at 16 nodes, Fig. 12b)",
+        lr_t[4] / lr_t[0]
+    );
+}

@@ -1,0 +1,99 @@
+//! Fig. 13 — tensor algebra on 16 nodes × 32 workers:
+//! (a) MTTKRP (einsum ijk,jf,kf->if, F=100), NumS fused terms + LSHS vs
+//!     the Dask-Arrays pairwise einsum (materializes the F×-larger
+//!     intermediate) under round-robin scheduling — the paper's 20× gap
+//!     at 4 TB;
+//! (b) tensor double contraction — roughly a tie (no node grid helps, §8.4).
+
+use nums::api::{ops, Policy, Session, SessionConfig};
+use nums::bench::harness::print_series;
+use nums::prelude::*;
+
+fn cube_side(bytes: f64) -> usize {
+    (bytes / 8.0).powf(1.0 / 3.0) as usize
+}
+
+fn main() {
+    let f = 100usize;
+    let sizes_gb = [8usize, 64, 512, 4096]; // up to 4 TB (Fig. 13 x-axis)
+
+    // ---- (a) MTTKRP ----
+    let mut xs = Vec::new();
+    let mut nums_t = Vec::new();
+    let mut dask_t = Vec::new();
+    for &gb in &sizes_gb {
+        let side = cube_side(gb as f64 * 1e9);
+        xs.push(format!("{gb}GB"));
+
+        // NumS: fused MTTKRP terms, 16x1x1 node grid, partitioned along i/j/k
+        let cfg = SessionConfig::paper_sim(16, 32)
+            .with_node_grid(NodeGrid::new(&[16, 1, 1]));
+        let mut sess = Session::new(cfg);
+        let x = sess.zeros(&[side, side, side], &[16, 4, 4]);
+        let b = sess.zeros(&[side, f], &[4, 1]);
+        let c = sess.zeros(&[side, f], &[4, 1]);
+        let (_, rep) = ops::mttkrp(&mut sess, &x, &b, &c).unwrap();
+        nums_t.push(rep.sim.makespan);
+
+        // Dask Arrays: pairwise einsum (materializing) + round-robin
+        let cfg = SessionConfig::paper_sim(16, 32)
+            .with_policy(Policy::RoundRobin)
+            .with_mode(SystemMode::Dask);
+        let mut sess = Session::new(cfg);
+        let x = sess.zeros(&[side, side, side], &[16, 4, 4]);
+        let b = sess.zeros(&[side, f], &[4, 1]);
+        let c = sess.zeros(&[side, f], &[4, 1]);
+        let mut g = Graph::new();
+        build::mttkrp_naive(&mut g, &x, &b, &c);
+        let (_, rep) = sess.run(&mut g).unwrap();
+        dask_t.push(rep.sim.makespan);
+    }
+    print_series(
+        "Fig 13a: MTTKRP, F=100 [modeled s]",
+        "X size",
+        &xs,
+        &[
+            ("NumS (fused + LSHS)".into(), nums_t.clone()),
+            ("Dask Arrays (pairwise einsum)".into(), dask_t.clone()),
+        ],
+    );
+    println!(
+        "speedup at 4 TB: {:.1}x (paper: ~20x, Dask excluded from their figure)",
+        dask_t.last().unwrap() / nums_t.last().unwrap()
+    );
+
+    // ---- (b) double contraction ----
+    let mut xs = Vec::new();
+    let mut nums_t = Vec::new();
+    let mut dask_t = Vec::new();
+    for &gb in &sizes_gb[..3] {
+        let side = cube_side(gb as f64 * 1e9);
+        xs.push(format!("{gb}GB"));
+        // paper's best: 1x16x1 node grid, balanced j/k partitioning
+        let cfg = SessionConfig::paper_sim(16, 32)
+            .with_node_grid(NodeGrid::new(&[1, 16, 1]));
+        let mut sess = Session::new(cfg);
+        let x = sess.zeros(&[side, side, side], &[2, 16, 2]);
+        let y = sess.zeros(&[side, side, f], &[16, 2, 1]);
+        let (_, rep) = ops::tensordot(&mut sess, &x, &y).unwrap();
+        nums_t.push(rep.sim.makespan);
+
+        let cfg = SessionConfig::paper_sim(16, 32)
+            .with_policy(Policy::RoundRobin)
+            .with_mode(SystemMode::Dask);
+        let mut sess = Session::new(cfg);
+        let x = sess.zeros(&[side, side, side], &[2, 16, 2]);
+        let y = sess.zeros(&[side, side, f], &[16, 2, 1]);
+        let (_, rep) = ops::tensordot(&mut sess, &x, &y).unwrap();
+        dask_t.push(rep.sim.makespan);
+    }
+    print_series(
+        "Fig 13b: double contraction [modeled s] (paper: NumS ≈ Dask)",
+        "X size",
+        &xs,
+        &[
+            ("NumS (LSHS, 1x16x1)".into(), nums_t),
+            ("Dask Arrays".into(), dask_t),
+        ],
+    );
+}

@@ -1,0 +1,97 @@
+//! Fig. 14 — logistic regression fitting time on 16 nodes, size sweep:
+//! (a) Newton: NumS (LSHS, tree-reduced fused blocks) vs Dask ML
+//!     (driver-side aggregation) vs NumS-without-LSHS;
+//! (b) L-BFGS (10 steps, history 10): NumS vs Spark MLlib (static
+//!     schedule, heavier per-task overhead).
+
+use nums::api::{Policy, Session, SessionConfig};
+use nums::bench::harness::print_series;
+use nums::glm::data::classification_data;
+use nums::glm::{lbfgs_fit, newton_fit, newton_fit_driver_agg};
+use nums::prelude::*;
+
+fn main() {
+    let d = 256usize;
+    let sizes_gb = [64usize, 128, 256, 512, 1024];
+    let steps = 2; // per-iteration cost is the comparison; keep runs fast
+
+    // ---- (a) Newton ----
+    let mut xs = Vec::new();
+    let (mut nums_t, mut dask_t, mut nolshs_t) = (Vec::new(), Vec::new(), Vec::new());
+    for &gb in &sizes_gb {
+        let rows = (gb as f64 * 1e9 / (d as f64 * 8.0)) as usize;
+        let q = (gb / 2).max(16); // 2 GB blocks (§8.5)
+        xs.push(format!("{gb}GB"));
+
+        let mut sess = Session::new(SessionConfig::paper_sim(16, 32));
+        let (x, y) = classification_data(&mut sess, rows, d, q, 1);
+        nums_t.push(newton_fit(&mut sess, &x, &y, steps, 0.0).unwrap().sim_secs());
+
+        let mut sess = Session::new(SessionConfig::paper_sim(16, 32));
+        let (x, y) = classification_data(&mut sess, rows, d, q, 1);
+        dask_t.push(
+            newton_fit_driver_agg(&mut sess, &x, &y, steps)
+                .unwrap()
+                .sim_secs(),
+        );
+
+        let mut sess =
+            Session::new(SessionConfig::paper_sim(16, 32).with_policy(Policy::BottomUp));
+        let (x, y) = classification_data(&mut sess, rows, d, q, 1);
+        nolshs_t.push(newton_fit(&mut sess, &x, &y, steps, 0.0).unwrap().sim_secs());
+    }
+    print_series(
+        "Fig 14a: logistic regression, Newton [modeled s]",
+        "size",
+        &xs,
+        &[
+            ("NumS (LSHS)".into(), nums_t.clone()),
+            ("Dask ML (driver agg)".into(), dask_t.clone()),
+            ("NumS w/o LSHS".into(), nolshs_t),
+        ],
+    );
+    println!(
+        "NumS vs Dask-ML at 1 TB: {:.2}x (paper: ~2x)",
+        dask_t.last().unwrap() / nums_t.last().unwrap()
+    );
+
+    // ---- (b) L-BFGS ----
+    let mut xs = Vec::new();
+    let (mut nums_t, mut spark_t) = (Vec::new(), Vec::new());
+    for &gb in &sizes_gb {
+        let rows = (gb as f64 * 1e9 / (d as f64 * 8.0)) as usize;
+        let q = (gb / 2).max(16);
+        xs.push(format!("{gb}GB"));
+
+        let mut sess = Session::new(SessionConfig::paper_sim(16, 32));
+        let (x, y) = classification_data(&mut sess, rows, d, q, 2);
+        nums_t.push(lbfgs_fit(&mut sess, &x, &y, 10, 10, 0.0).unwrap().sim_secs());
+
+        // Spark: same static algorithm, heavier task overhead, no γ
+        let mut cfg = SessionConfig::paper_sim(16, 32);
+        cfg.net = NetParams {
+            gamma: 2e-4, // JVM task-launch latency >= Ray dispatch
+            ..NetParams::paper_testbed()
+        };
+        cfg.compute = ComputeParams {
+            task_overhead: 2e-3,
+            ..ComputeParams::paper_testbed()
+        };
+        let mut sess = Session::new(cfg);
+        let (x, y) = classification_data(&mut sess, rows, d, q, 2);
+        spark_t.push(lbfgs_fit(&mut sess, &x, &y, 10, 10, 0.0).unwrap().sim_secs());
+    }
+    print_series(
+        "Fig 14b: logistic regression, L-BFGS 10 steps [modeled s]",
+        "size",
+        &xs,
+        &[
+            ("NumS (LSHS)".into(), nums_t.clone()),
+            ("Spark MLlib".into(), spark_t.clone()),
+        ],
+    );
+    println!(
+        "NumS vs Spark at 1 TB: {:.2}x (paper: up to 2x)",
+        spark_t.last().unwrap() / nums_t.last().unwrap()
+    );
+}

@@ -1,0 +1,74 @@
+//! Fig. 15 + §8.5 summary — per-node memory & network-in traces over one
+//! Newton iteration of a 128 GB logistic regression problem on 16 nodes,
+//! LSHS vs Ray-without-LSHS. Dumps plot-ready TSV traces to target/ and
+//! prints the paper's headline ratios (network 2×, memory 4×, time 10×).
+
+use nums::api::{Policy, Session, SessionConfig};
+use nums::glm::data::classification_data;
+use nums::glm::newton_fit;
+use nums::metrics::{summarize_trace, trace_to_tsv};
+use nums::util::fmt::{human_bytes, human_secs};
+
+struct Outcome {
+    time: f64,
+    max_net: f64,
+    max_mem: f64,
+    balance: f64,
+}
+
+fn run(policy: Policy, label: &str) -> Outcome {
+    let d = 256usize;
+    let gb = 128usize;
+    let rows = (gb as f64 * 1e9 / (d as f64 * 8.0)) as usize;
+    let q = 64; // 2 GB blocks
+    let mut cfg = SessionConfig::paper_sim(16, 32).with_policy(policy);
+    cfg.record_trace = true;
+    let mut sess = Session::new(cfg);
+    let (x, y) = classification_data(&mut sess, rows, d, q, 15);
+    let res = newton_fit(&mut sess, &x, &y, 1, 0.0).unwrap();
+    let rep = &res.reports[0];
+    let summary = summarize_trace(&rep.sim.events, 16);
+
+    // dump the trace for plotting
+    let path = format!("target/fig15_{label}.tsv");
+    std::fs::write(&path, trace_to_tsv(&rep.sim.events)).ok();
+
+    println!("\n=== {label} ===");
+    println!("modeled iteration time : {}", human_secs(res.sim_secs()));
+    println!("max node peak memory   : {}", human_bytes(summary.max_peak_mem as f64));
+    println!("mean node peak memory  : {}", human_bytes(summary.mean_peak_mem));
+    println!("max node net-in        : {}", human_bytes(summary.max_net_in as f64));
+    println!("memory balance ratio   : {:.2} (1.0 = perfectly clustered curves)", summary.mem_balance_ratio);
+    println!("trace written          : {path}");
+    Outcome {
+        time: res.sim_secs(),
+        max_net: summary.max_net_in as f64,
+        max_mem: summary.max_peak_mem as f64,
+        balance: summary.mem_balance_ratio,
+    }
+}
+
+fn main() {
+    let lshs = run(Policy::Lshs, "lshs");
+    let nolshs = run(Policy::BottomUp, "no_lshs");
+
+    println!("\n=== §8.5 headline ratios (no-LSHS / LSHS) ===");
+    println!(
+        "network load : {} vs {} (paper: 2x; here LSHS moves ~nothing because data is \
+         pre-resident, so we report absolutes)",
+        nums::util::fmt::human_bytes(nolshs.max_net),
+        nums::util::fmt::human_bytes(lshs.max_net),
+    );
+    println!(
+        "memory       : {:.1}x   (paper: 4x)",
+        nolshs.max_mem / lshs.max_mem.max(1.0)
+    );
+    println!(
+        "exec time    : {:.1}x   (paper: 10x)",
+        nolshs.time / lshs.time.max(1e-12)
+    );
+    println!(
+        "balance      : LSHS {:.2} vs no-LSHS {:.2} (lower = denser clustering)",
+        lshs.balance, nolshs.balance
+    );
+}

@@ -1,0 +1,9 @@
+//! User-facing NumPy-like API: the [`Session`] driver and expression
+//! helpers that build and immediately run graphs ("computed on
+//! assignment", §6).
+
+pub mod ops;
+pub mod session;
+
+pub use ops::*;
+pub use session::{ExecMode, Policy, RunReport, Session, SessionConfig};

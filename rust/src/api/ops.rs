@@ -1,0 +1,93 @@
+//! Expression helpers: build a graph for one array expression and run it
+//! immediately (§6's "expressions are computed upon assignment").
+
+use anyhow::Result;
+
+use crate::graph::{build, DistArray, Graph};
+use crate::runtime::kernel::{BinOp, Kernel};
+
+use super::session::{RunReport, Session};
+
+fn run_one(sess: &mut Session, graph: &mut Graph) -> Result<(DistArray, RunReport)> {
+    let (mut outs, rep) = sess.run(graph)?;
+    Ok((outs.remove(0), rep))
+}
+
+/// `-X`
+pub fn neg(sess: &mut Session, a: &DistArray) -> Result<(DistArray, RunReport)> {
+    let mut g = Graph::new();
+    build::unary(&mut g, a, Kernel::Neg);
+    run_one(sess, &mut g)
+}
+
+/// `sigmoid(X)` (used by GLM tests)
+pub fn sigmoid(sess: &mut Session, a: &DistArray) -> Result<(DistArray, RunReport)> {
+    let mut g = Graph::new();
+    build::unary(&mut g, a, Kernel::Sigmoid);
+    run_one(sess, &mut g)
+}
+
+/// `X + Y`
+pub fn add(sess: &mut Session, a: &DistArray, b: &DistArray) -> Result<(DistArray, RunReport)> {
+    let mut g = Graph::new();
+    build::binary_ew(&mut g, a, b, BinOp::Add);
+    run_one(sess, &mut g)
+}
+
+/// `X - Y`
+pub fn sub(sess: &mut Session, a: &DistArray, b: &DistArray) -> Result<(DistArray, RunReport)> {
+    let mut g = Graph::new();
+    build::binary_ew(&mut g, a, b, BinOp::Sub);
+    run_one(sess, &mut g)
+}
+
+/// `X * Y` (element-wise)
+pub fn mul(sess: &mut Session, a: &DistArray, b: &DistArray) -> Result<(DistArray, RunReport)> {
+    let mut g = Graph::new();
+    build::binary_ew(&mut g, a, b, BinOp::Mul);
+    run_one(sess, &mut g)
+}
+
+/// `X @ Y` with lazy-transpose fusion (accepts `.t()` views).
+pub fn matmul(sess: &mut Session, a: &DistArray, b: &DistArray) -> Result<(DistArray, RunReport)> {
+    let mut g = Graph::new();
+    build::matmul(&mut g, a, b);
+    run_one(sess, &mut g)
+}
+
+/// `sum(X, axis)`
+pub fn sum_axis(sess: &mut Session, a: &DistArray, axis: usize) -> Result<(DistArray, RunReport)> {
+    let mut g = Graph::new();
+    build::sum_axis(&mut g, a, axis);
+    run_one(sess, &mut g)
+}
+
+/// `sum(X)` (full reduction to 1×1)
+pub fn sum_all(sess: &mut Session, a: &DistArray) -> Result<(DistArray, RunReport)> {
+    let mut g = Graph::new();
+    build::sum_all(&mut g, a);
+    run_one(sess, &mut g)
+}
+
+/// `einsum("ijk,jf,kf->if", X, B, C)` — MTTKRP (§8.4).
+pub fn mttkrp(
+    sess: &mut Session,
+    x: &DistArray,
+    b: &DistArray,
+    c: &DistArray,
+) -> Result<(DistArray, RunReport)> {
+    let mut g = Graph::new();
+    build::mttkrp(&mut g, x, b, c);
+    run_one(sess, &mut g)
+}
+
+/// `tensordot(X, Y, axes=2)` over (j, k) — double contraction (§8.4).
+pub fn tensordot(
+    sess: &mut Session,
+    x: &DistArray,
+    y: &DistArray,
+) -> Result<(DistArray, RunReport)> {
+    let mut g = Graph::new();
+    build::tensordot_jk(&mut g, x, y);
+    run_one(sess, &mut g)
+}

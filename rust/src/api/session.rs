@@ -1,0 +1,408 @@
+//! `Session` — the NumS driver process (§3).
+//!
+//! A session owns the simulated cluster (topology + load state + object
+//! stores), a scheduling policy, and a kernel backend. Creation ops
+//! execute immediately with the policy's data layout (§4); expression
+//! graphs are scheduled by the policy and executed either for real
+//! (threaded, PJRT/native kernels, actual bytes) or in modeled time
+//! (discrete-event, phantom blocks) — or both.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::exec::{Plan, RealExecutor, RealReport, SimExecutor, SimReport};
+use crate::graph::{DistArray, Graph};
+use crate::grid::{softmax_grid, ArrayGrid, NodeGrid};
+use crate::net::model::{ComputeParams, NetParams, SystemMode};
+use crate::runtime::Backend;
+use crate::scheduler::baselines::{BottomUp, RandomPlace, RoundRobin};
+use crate::scheduler::{ClusterState, Lshs, Scheduler, Topology};
+use crate::store::{Block, IdGen, ObjectId, StoreSet};
+use crate::util::rng::Rng;
+
+/// Scheduling policy selector (the ablation axis of Fig. 9/15).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Policy {
+    Lshs,
+    RoundRobin,
+    BottomUp,
+    Random,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "lshs" => Policy::Lshs,
+            "round-robin" | "rr" => Policy::RoundRobin,
+            "bottom-up" | "ray-default" => Policy::BottomUp,
+            "random" => Policy::Random,
+            other => return Err(anyhow!("unknown policy {other:?}")),
+        })
+    }
+}
+
+/// Execution mode: real blocks + kernels, or modeled time only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    Real,
+    Sim,
+}
+
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    pub nodes: usize,
+    pub workers_per_node: usize,
+    pub node_grid: Option<NodeGrid>,
+    pub mode: SystemMode,
+    pub exec: ExecMode,
+    pub policy: Policy,
+    pub net: NetParams,
+    pub compute: ComputeParams,
+    pub seed: u64,
+    /// Record Fig. 15 trace events in sim reports.
+    pub record_trace: bool,
+}
+
+impl SessionConfig {
+    /// Small real-execution cluster (tests, examples).
+    pub fn real_small(nodes: usize, workers_per_node: usize) -> Self {
+        Self {
+            nodes,
+            workers_per_node,
+            node_grid: None,
+            mode: SystemMode::Ray,
+            exec: ExecMode::Real,
+            policy: Policy::Lshs,
+            net: NetParams::localhost(),
+            compute: ComputeParams::paper_testbed(),
+            seed: 0xC0FFEE,
+            record_trace: false,
+        }
+    }
+
+    /// The paper's 16-node × 32-worker testbed, simulated (§8).
+    pub fn paper_sim(nodes: usize, workers_per_node: usize) -> Self {
+        Self {
+            nodes,
+            workers_per_node,
+            node_grid: None,
+            mode: SystemMode::Ray,
+            exec: ExecMode::Sim,
+            policy: Policy::Lshs,
+            net: NetParams::paper_testbed(),
+            compute: ComputeParams::paper_testbed(),
+            seed: 0xC0FFEE,
+            record_trace: false,
+        }
+    }
+
+    pub fn with_policy(mut self, p: Policy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    pub fn with_mode(mut self, m: SystemMode) -> Self {
+        self.mode = m;
+        self
+    }
+
+    pub fn with_node_grid(mut self, g: NodeGrid) -> Self {
+        self.node_grid = Some(g);
+        self
+    }
+
+    pub fn with_seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Outcome of one `run()` (one scheduled expression graph).
+#[derive(Debug, Default)]
+pub struct RunReport {
+    pub tasks: usize,
+    pub transfers: usize,
+    pub transfer_bytes: u64,
+    pub sim: SimReport,
+    pub real: Option<RealReport>,
+    /// Scheduling wall time (the γ-side cost LSHS itself adds).
+    pub schedule_secs: f64,
+}
+
+pub struct Session {
+    pub cfg: SessionConfig,
+    pub topo: Topology,
+    scheduler: Box<dyn Scheduler + Send>,
+    pub state: ClusterState,
+    ids: IdGen,
+    pub stores: StoreSet,
+    pub backend: Arc<Backend>,
+    data_rng: Rng,
+    /// Every materialized object: (target, bytes) — seeds sim-exec runs.
+    objects: Vec<(ObjectId, usize, u64)>,
+    /// Cumulative reports.
+    pub total_tasks: usize,
+    pub total_transfer_bytes: u64,
+    pub total_sim_makespan: f64,
+}
+
+impl Session {
+    pub fn new(cfg: SessionConfig) -> Self {
+        Self::with_backend(cfg, Arc::new(Backend::auto()))
+    }
+
+    pub fn with_backend(cfg: SessionConfig, backend: Arc<Backend>) -> Self {
+        let topo = Topology::new(cfg.nodes, cfg.workers_per_node, cfg.mode);
+        let node_grid = cfg
+            .node_grid
+            .clone()
+            .unwrap_or_else(|| NodeGrid::linear(cfg.nodes));
+        let scheduler: Box<dyn Scheduler + Send> = match cfg.policy {
+            Policy::Lshs => Box::new(Lshs::new(node_grid, topo.clone(), cfg.seed)),
+            Policy::RoundRobin => Box::new(RoundRobin::new()),
+            Policy::BottomUp => Box::new(BottomUp::new()),
+            Policy::Random => Box::new(RandomPlace::new(cfg.seed)),
+        };
+        Session {
+            topo: topo.clone(),
+            state: ClusterState::new(topo.clone()),
+            ids: IdGen::default(),
+            stores: StoreSet::new(topo.nodes),
+            backend,
+            data_rng: Rng::seed_from_u64(cfg.seed ^ 0xDA7A),
+            objects: Vec::new(),
+            total_tasks: 0,
+            total_transfer_bytes: 0,
+            total_sim_makespan: 0.0,
+            scheduler,
+            cfg,
+        }
+    }
+
+    pub fn policy_name(&self) -> String {
+        self.scheduler.name()
+    }
+
+    // ------------------------------------------------------------ creation
+
+    /// Automatic partitioning `p^{σ(shape)}` (§4).
+    pub fn auto_grid(&self, shape: &[usize]) -> Vec<usize> {
+        softmax_grid(shape, self.topo.total_workers())
+    }
+
+    /// Create an array from a per-block generator function.
+    pub fn create_with(
+        &mut self,
+        shape: &[usize],
+        grid: &[usize],
+        mut gen: impl FnMut(&mut Rng, &[usize], &[usize]) -> Vec<f64>,
+    ) -> DistArray {
+        let g = ArrayGrid::new(shape, grid);
+        let targets = self.scheduler.place_creation(&g, &mut self.state);
+        let mut blocks = Vec::with_capacity(g.num_blocks());
+        for (f, coords) in g.iter_coords().enumerate() {
+            let obj = self.ids.next();
+            let bshape = g.block_shape(&coords);
+            let elems = g.block_elems(&coords);
+            self.state.register(obj, elems as f64, targets[f]);
+            self.objects.push((obj, targets[f], elems * 8));
+            if self.cfg.exec == ExecMode::Real {
+                let mut rng = Rng::seed_from_u64(self.cfg.seed ^ obj.wrapping_mul(0x9E3779B97F4A7C15));
+                let data = gen(&mut rng, &bshape, &coords);
+                assert_eq!(data.len() as u64, elems);
+                self.stores.put(
+                    self.topo.node_of(targets[f]),
+                    obj,
+                    Arc::new(Block::from_vec(&bshape, data)),
+                );
+            }
+            blocks.push(obj);
+        }
+        let _ = &mut self.data_rng;
+        DistArray::new(g, blocks, targets)
+    }
+
+    pub fn zeros(&mut self, shape: &[usize], grid: &[usize]) -> DistArray {
+        self.create_with(shape, grid, |_, bs, _| {
+            vec![0.0; bs.iter().product::<usize>()]
+        })
+    }
+
+    pub fn full(&mut self, shape: &[usize], grid: &[usize], v: f64) -> DistArray {
+        self.create_with(shape, grid, move |_, bs, _| {
+            vec![v; bs.iter().product::<usize>()]
+        })
+    }
+
+    pub fn ones(&mut self, shape: &[usize], grid: &[usize]) -> DistArray {
+        self.full(shape, grid, 1.0)
+    }
+
+    /// Standard-normal random array (per-block deterministic seeding).
+    pub fn randn(&mut self, shape: &[usize], grid: &[usize]) -> DistArray {
+        self.create_with(shape, grid, |rng, bs, _| {
+            let mut v = vec![0.0; bs.iter().product::<usize>()];
+            rng.fill_normal(&mut v);
+            v
+        })
+    }
+
+    /// Scatter a dense host matrix into a distributed array (2-D).
+    pub fn scatter2(&mut self, data: &Block, grid: &[usize]) -> DistArray {
+        assert_eq!(data.ndim(), 2);
+        let shape = data.shape.clone();
+        let g = ArrayGrid::new(&shape, grid);
+        let src = data.clone();
+        self.create_with(&shape, grid, move |_, bs, coords| {
+            let r0 = g.block_offset(0, coords[0]);
+            let c0 = g.block_offset(1, coords[1]);
+            let mut out = Vec::with_capacity(bs[0] * bs[1]);
+            for i in 0..bs[0] {
+                for j in 0..bs[1] {
+                    out.push(src.at2(r0 + i, c0 + j));
+                }
+            }
+            out
+        })
+    }
+
+    // ----------------------------------------------------------- execution
+
+    /// Schedule and execute an expression graph; returns one materialized
+    /// [`DistArray`] per graph output plus the run report.
+    pub fn run(&mut self, graph: &mut Graph) -> Result<(Vec<DistArray>, RunReport)> {
+        let sw = crate::util::Stopwatch::start();
+        let mut plan = Plan::new();
+        self.scheduler
+            .schedule(graph, &mut self.state, &self.ids, &mut plan);
+        let schedule_secs = sw.secs();
+
+        // modeled execution (always: it is cheap and feeds the figures)
+        let mut sim_exec = SimExecutor::new(self.topo.clone(), self.cfg.net, self.cfg.compute);
+        sim_exec.record_trace = self.cfg.record_trace;
+        let sim = sim_exec.run(&plan, &self.objects);
+
+        // real execution
+        let real = if self.cfg.exec == ExecMode::Real {
+            let exec = RealExecutor::new(self.topo.clone(), Arc::clone(&self.backend));
+            Some(exec.run(&plan, &self.stores)?)
+        } else {
+            None
+        };
+
+        // register new outputs as resident objects for subsequent runs
+        for task in &plan.tasks {
+            for (obj, shape) in &task.outputs {
+                let bytes: u64 = shape.iter().map(|&d| d as u64).product::<u64>() * 8;
+                self.objects.push((*obj, task.target, bytes));
+            }
+        }
+
+        // materialize outputs
+        let outs: Vec<DistArray> = graph
+            .outputs
+            .iter()
+            .map(|o| {
+                let blocks: Vec<ObjectId> =
+                    o.roots.iter().map(|&r| graph.resolve(r)).collect();
+                let targets: Vec<usize> = blocks
+                    .iter()
+                    .map(|&b| {
+                        self.state
+                            .locations_of(b)
+                            .first()
+                            .copied()
+                            .unwrap_or(0)
+                    })
+                    .collect();
+                DistArray::new(o.grid.clone(), blocks, targets)
+            })
+            .collect();
+
+        self.total_tasks += plan.len();
+        self.total_transfer_bytes += plan.transfer_bytes();
+        self.total_sim_makespan += sim.makespan;
+
+        Ok((
+            outs,
+            RunReport {
+                tasks: plan.len(),
+                transfers: plan.transfer_count(),
+                transfer_bytes: plan.transfer_bytes(),
+                sim,
+                real,
+                schedule_secs,
+            },
+        ))
+    }
+
+    /// Gather a distributed array into a dense host block (real mode).
+    pub fn fetch(&self, a: &DistArray) -> Result<Block> {
+        if self.cfg.exec != ExecMode::Real {
+            return Err(anyhow!("fetch() requires ExecMode::Real"));
+        }
+        let shape = &a.grid.shape;
+        let n: usize = shape.iter().product();
+        let mut out = vec![0.0; n];
+        // generic n-d assembly via per-axis offsets
+        for coords in a.grid.iter_coords() {
+            let obj = a.obj_at(&coords);
+            let block = self
+                .stores
+                .fetch(obj)
+                .ok_or_else(|| anyhow!("block {obj} not found in any store"))?;
+            let bshape = &block.shape;
+            let offsets: Vec<usize> = (0..shape.len())
+                .map(|ax| a.grid.block_offset(ax, coords[ax]))
+                .collect();
+            // iterate block elements row-major
+            let belems: usize = bshape.iter().product();
+            let mut idx = vec![0usize; bshape.len()];
+            for flat in 0..belems {
+                // global flat index
+                let mut gflat = 0usize;
+                for ax in 0..shape.len() {
+                    gflat = gflat * shape[ax] + (offsets[ax] + idx[ax]);
+                }
+                out[gflat] = block.buf()[flat];
+                // increment odometer
+                for ax in (0..bshape.len()).rev() {
+                    idx[ax] += 1;
+                    if idx[ax] < bshape[ax] {
+                        break;
+                    }
+                    idx[ax] = 0;
+                }
+            }
+        }
+        Ok(Block::from_vec(shape, out))
+    }
+
+    /// Fetch a single scalar (1x1 arrays: losses, norms).
+    pub fn fetch_scalar(&self, a: &DistArray) -> Result<f64> {
+        let b = self.fetch(a)?;
+        if b.elems() != 1 {
+            return Err(anyhow!("fetch_scalar on array with {} elems", b.elems()));
+        }
+        Ok(b.buf()[0])
+    }
+
+    /// Seed the session with an externally-built block (tests, CSV reader).
+    pub fn adopt_block(&mut self, block: Block, target: usize) -> ObjectId {
+        let obj = self.ids.next();
+        self.state
+            .register(obj, block.elems() as f64, target);
+        self.objects.push((obj, target, block.bytes()));
+        if self.cfg.exec == ExecMode::Real {
+            self.stores
+                .put(self.topo.node_of(target), obj, Arc::new(block));
+        }
+        DistArray::new(
+            ArrayGrid::new(&[1], &[1]),
+            vec![obj],
+            vec![target],
+        );
+        obj
+    }
+}

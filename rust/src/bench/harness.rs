@@ -1,0 +1,123 @@
+//! Tiny timing harness used by `rust/benches/*` (`harness = false`).
+//!
+//! Follows the paper's measurement protocol (§8): repeat each trial,
+//! drop the best and worst, report the trimmed mean. `NUMS_BENCH_FAST=1`
+//! shrinks repetitions for CI-style smoke runs.
+
+use crate::util::fmt::{human_secs, render_table};
+use crate::util::stats::Summary;
+use crate::util::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn paper_mean(&self) -> f64 {
+        Summary::paper_mean(&self.samples)
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::from_samples(&self.samples)
+    }
+}
+
+pub struct Bench {
+    pub title: String,
+    pub trials: usize,
+    pub measurements: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(title: &str) -> Self {
+        let fast = std::env::var("NUMS_BENCH_FAST").ok().as_deref() == Some("1");
+        Self {
+            title: title.to_string(),
+            trials: if fast { 3 } else { 7 },
+            measurements: Vec::new(),
+        }
+    }
+
+    /// Time `f` for `self.trials` trials (plus one warmup).
+    pub fn time(&mut self, name: &str, mut f: impl FnMut()) -> f64 {
+        f(); // warmup
+        let mut samples = Vec::with_capacity(self.trials);
+        for _ in 0..self.trials {
+            let sw = Stopwatch::start();
+            f();
+            samples.push(sw.secs());
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            samples,
+        };
+        let mean = m.paper_mean();
+        self.measurements.push(m);
+        mean
+    }
+
+    /// Record an externally-computed value (modeled seconds, bytes, ...).
+    pub fn record(&mut self, name: &str, value: f64) {
+        self.measurements.push(Measurement {
+            name: name.to_string(),
+            samples: vec![value],
+        });
+    }
+
+    /// Render all measurements as a table.
+    pub fn report(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .measurements
+            .iter()
+            .map(|m| {
+                let s = m.summary();
+                vec![
+                    m.name.clone(),
+                    human_secs(m.paper_mean()),
+                    human_secs(s.min),
+                    human_secs(s.max),
+                    format!("{}", s.n),
+                ]
+            })
+            .collect();
+        format!(
+            "## {}\n{}",
+            self.title,
+            render_table(&["case", "mean(trim)", "min", "max", "n"], &rows)
+        )
+    }
+}
+
+/// Print a paper-style series table: label column + one column per point.
+pub fn print_series(title: &str, x_label: &str, xs: &[String], rows: &[(String, Vec<f64>)]) {
+    println!("## {title}");
+    let mut header = vec![x_label];
+    let xrefs: Vec<&str> = xs.iter().map(|s| s.as_str()).collect();
+    header.extend(xrefs);
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(name, vals)| {
+            let mut r = vec![name.clone()];
+            r.extend(vals.iter().map(|v| format!("{v:.4}")));
+            r
+        })
+        .collect();
+    println!("{}", render_table(&header, &table_rows));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_collects_trials() {
+        let mut b = Bench::new("t");
+        b.trials = 3;
+        let mean = b.time("noop", || {});
+        assert!(mean >= 0.0);
+        assert_eq!(b.measurements[0].samples.len(), 3);
+        assert!(b.report().contains("noop"));
+    }
+}

@@ -1,0 +1,6 @@
+//! Benchmark harness (criterion is unavailable offline) and the workload
+//! drivers that regenerate every table and figure of §8.
+
+pub mod harness;
+
+pub use harness::{Bench, Measurement};

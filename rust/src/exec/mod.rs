@@ -1,0 +1,11 @@
+//! Plan execution: the discrete-event simulated executor (paper-scale,
+//! modeled time) and the real threaded executor (actual numerics via the
+//! kernel backends).
+
+pub mod real_exec;
+pub mod sim_exec;
+pub mod task;
+
+pub use real_exec::{RealExecutor, RealReport};
+pub use sim_exec::{SimExecutor, SimReport, TraceEvent};
+pub use task::{Plan, Task, Transfer};

@@ -1,0 +1,508 @@
+//! Discrete-event simulated execution (the paper-scale executor).
+//!
+//! Replays a [`Plan`] against the α–β–γ model of §7: the driver dispatches
+//! one RFC per γ; each node has `r` worker slots; each node's NIC has one
+//! inbound and one outbound channel (bytes can be sent and received in
+//! parallel, matching App. A's assumption); inter-node transfers cost
+//! `C(n)`, Dask intra-node worker-to-worker `D(n)`, and every Ray task pays
+//! the object-store write `R(out)` plus a fixed RFC overhead (Fig. 8b).
+//!
+//! Blocks are phantom: this executor runs terabyte-shaped workloads (§8's
+//! grids) in milliseconds of wall time while producing modeled seconds,
+//! per-node load traces (Fig. 15) and byte counters.
+
+use std::collections::HashMap;
+
+use crate::net::model::{ComputeParams, NetParams, SystemMode};
+use crate::store::ObjectId;
+
+use super::task::Plan;
+use crate::scheduler::Topology;
+
+/// One sampled point of a node's load over modeled time (Fig. 15 traces).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub t: f64,
+    pub node: usize,
+    /// Cumulative resident bytes on the node after this event.
+    pub mem_bytes: u64,
+    /// Cumulative bytes received.
+    pub net_in_bytes: u64,
+    /// Cumulative bytes sent.
+    pub net_out_bytes: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    /// Modeled end-to-end execution time (seconds).
+    pub makespan: f64,
+    /// Driver dispatch serialization time = γ · #tasks.
+    pub dispatch_time: f64,
+    /// Per-node resident bytes at the end of the plan (intermediates that
+    /// were last consumed mid-plan are GC'd, like Ray/Dask refcounting).
+    pub mem_bytes: Vec<u64>,
+    /// Per-node high-water mark.
+    pub peak_mem_bytes: Vec<u64>,
+    /// Per-node cumulative NIC traffic.
+    pub net_in_bytes: Vec<u64>,
+    pub net_out_bytes: Vec<u64>,
+    /// Per-node busy (compute) seconds.
+    pub busy: Vec<f64>,
+    /// Inter-node transfers performed.
+    pub transfers: usize,
+    /// Total bytes moved between nodes.
+    pub transfer_bytes: u64,
+    /// Bytes that overflowed node object stores onto disk.
+    pub spilled_bytes: u64,
+    /// Modeled seconds lost to spilling.
+    pub spill_secs: f64,
+    /// Load trace for Fig. 15.
+    pub events: Vec<TraceEvent>,
+    pub tasks: usize,
+}
+
+impl SimReport {
+    pub fn max_mem_bytes(&self) -> u64 {
+        self.peak_mem_bytes
+            .iter()
+            .chain(self.mem_bytes.iter())
+            .copied()
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn max_net_in_bytes(&self) -> u64 {
+        self.net_in_bytes.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Load-imbalance ratio: max node peak mem / mean node peak mem.
+    pub fn mem_imbalance(&self) -> f64 {
+        let peaks = if self.peak_mem_bytes.is_empty() {
+            &self.mem_bytes
+        } else {
+            &self.peak_mem_bytes
+        };
+        let mean = peaks.iter().sum::<u64>() as f64 / peaks.len().max(1) as f64;
+        self.max_mem_bytes() as f64 / mean.max(1.0)
+    }
+}
+
+pub struct SimExecutor {
+    pub topo: Topology,
+    pub net: NetParams,
+    pub compute: ComputeParams,
+    /// Record Fig. 15-style trace events (costs memory on huge plans).
+    pub record_trace: bool,
+}
+
+impl SimExecutor {
+    pub fn new(topo: Topology, net: NetParams, compute: ComputeParams) -> Self {
+        Self {
+            topo,
+            net,
+            compute,
+            record_trace: false,
+        }
+    }
+
+    /// Disk-time penalty for adding `bytes` to a store: the portion beyond
+    /// capacity pays disk bandwidth (object spilling, §8.1/§8.4).
+    ///
+    /// Ray mode: one shared-memory store per node (capacity
+    /// `mem_capacity`). Dask mode: workers are separate processes with
+    /// per-worker heaps (`mem_capacity / r` each) — the §2/§3 asymmetry
+    /// that makes Dask spill long before a Ray node would.
+    fn spill_penalty(&self, rep: &mut SimReport, mem_target: &mut [f64], target: usize, bytes: u64) -> f64 {
+        let cap = match self.topo.mode {
+            SystemMode::Ray => self.compute.mem_capacity,
+            SystemMode::Dask => self.compute.mem_capacity / self.topo.workers_per_node as f64,
+        };
+        if cap.is_infinite() {
+            return 0.0;
+        }
+        let before = mem_target[target];
+        let after = before + bytes as f64;
+        mem_target[target] = after;
+        let overflow = (after - cap).max(0.0) - (before - cap).max(0.0);
+        if overflow <= 0.0 {
+            return 0.0;
+        }
+        rep.spilled_bytes += overflow as u64;
+        let secs = overflow / self.compute.disk_rate;
+        rep.spill_secs += secs;
+        secs
+    }
+
+    /// Disk read-back time for a task whose inputs live on an over-capacity
+    /// store: the spilled fraction of the input bytes must come off disk.
+    fn spill_readback(&self, rep: &mut SimReport, mem_target: &[f64], task: &super::task::Task) -> f64 {
+        let cap = match self.topo.mode {
+            SystemMode::Ray => self.compute.mem_capacity,
+            SystemMode::Dask => self.compute.mem_capacity / self.topo.workers_per_node as f64,
+        };
+        if cap.is_infinite() {
+            return 0.0;
+        }
+        let resident = mem_target[task.target];
+        if resident <= cap {
+            return 0.0;
+        }
+        let ratio = ((resident - cap) / resident).clamp(0.0, 1.0);
+        let in_bytes: f64 = task
+            .in_shapes
+            .iter()
+            .map(|s| s.iter().map(|&d| d as f64).product::<f64>() * 8.0)
+            .sum();
+        let secs = in_bytes * ratio / self.compute.disk_rate;
+        rep.spill_secs += secs;
+        secs
+    }
+
+    /// Simulate the plan. `initial` lists pre-resident objects:
+    /// (object, target, bytes) from creation ops.
+    pub fn run(&self, plan: &Plan, initial: &[(ObjectId, usize, u64)]) -> SimReport {
+        let k = self.topo.nodes;
+        let r = self.topo.workers_per_node;
+        let mut rep = SimReport {
+            mem_bytes: vec![0; k],
+            peak_mem_bytes: vec![0; k],
+            net_in_bytes: vec![0; k],
+            net_out_bytes: vec![0; k],
+            busy: vec![0.0; k],
+            tasks: plan.len(),
+            ..Default::default()
+        };
+
+        // plan-local GC: an object produced by this plan whose last use is
+        // also in this plan is released after that use (Ray/Dask reference
+        // counting frees expression temporaries; named outputs survive).
+        let mut produced_at: HashMap<ObjectId, usize> = HashMap::new();
+        let mut last_use: HashMap<ObjectId, usize> = HashMap::new();
+        for (idx, t) in plan.tasks.iter().enumerate() {
+            for (obj, _) in &t.outputs {
+                produced_at.insert(*obj, idx);
+            }
+            for obj in &t.inputs {
+                last_use.insert(*obj, idx);
+            }
+        }
+        // obj -> placement targets holding a copy (for release accounting)
+        let mut holdings: HashMap<ObjectId, Vec<usize>> = HashMap::new();
+
+        // worker slots: Ray mode -> any of r slots per node; Dask mode ->
+        // the task's worker is fixed by its target.
+        let mut slot_free: Vec<Vec<f64>> = vec![vec![0.0; r]; k];
+        let mut nic_in_free = vec![0.0; k];
+        let mut nic_out_free = vec![0.0; k];
+        // one spill disk per node, serialized like the NICs
+        let mut disk_free = vec![0.0f64; k];
+        // object -> ready time per node
+        let mut ready: HashMap<ObjectId, HashMap<usize, f64>> = HashMap::new();
+        // object -> bytes
+        let mut size: HashMap<ObjectId, u64> = HashMap::new();
+        // resident bytes per placement target (per-worker heaps in Dask
+        // mode; == per-node in Ray mode) for the spilling model
+        let mut mem_target = vec![0.0f64; self.topo.targets()];
+
+        for &(obj, target, bytes) in initial {
+            let node = self.topo.node_of(target);
+            ready.entry(obj).or_default().insert(node, 0.0);
+            size.insert(obj, bytes);
+            rep.mem_bytes[node] += bytes;
+            rep.peak_mem_bytes[node] = rep.peak_mem_bytes[node].max(rep.mem_bytes[node]);
+            mem_target[target] += bytes as f64;
+            holdings.entry(obj).or_default().push(target);
+        }
+        if self.record_trace {
+            for node in 0..k {
+                rep.events.push(TraceEvent {
+                    t: 0.0,
+                    node,
+                    mem_bytes: rep.mem_bytes[node],
+                    net_in_bytes: 0,
+                    net_out_bytes: 0,
+                });
+            }
+        }
+
+        let mut clock_dispatch = 0.0;
+        for (task_idx, task) in plan.tasks.iter().enumerate() {
+            clock_dispatch += self.net.gamma;
+            let dst_node = self.topo.node_of(task.target);
+
+            // --- satisfy inputs ---
+            let mut deps_ready = 0.0f64;
+            for tr in &task.transfers {
+                let src_node = self.topo.node_of(tr.src);
+                let bytes = tr.elems * 8;
+                // App. A caching assumption: a block crosses into a node at
+                // most once; later consumers on the same node read the
+                // object-store copy.
+                if let Some(&t_cached) = ready.get(&tr.obj).and_then(|m| m.get(&dst_node)) {
+                    deps_ready = deps_ready.max(t_cached);
+                    continue;
+                }
+                let src_ready = ready
+                    .get(&tr.obj)
+                    .and_then(|m| m.get(&src_node))
+                    .copied()
+                    .unwrap_or(0.0);
+                let arrive = if src_node == dst_node {
+                    // Dask worker-to-worker on the same node: D(n), no NIC
+                    let t = src_ready + self.net.intra_dask.time(bytes);
+                    rep.transfers += 1;
+                    t
+                } else {
+                    let start = src_ready
+                        .max(nic_out_free[src_node])
+                        .max(nic_in_free[dst_node]);
+                    let mut end = start + self.net.inter.time(bytes);
+                    nic_out_free[src_node] = end;
+                    nic_in_free[dst_node] = end;
+                    let spill = self.spill_penalty(&mut rep, &mut mem_target, task.target, bytes);
+                    if spill > 0.0 {
+                        let ds = disk_free[dst_node].max(start);
+                        disk_free[dst_node] = ds + spill;
+                        end = end.max(ds + spill);
+                    }
+                    rep.net_out_bytes[src_node] += bytes;
+                    rep.net_in_bytes[dst_node] += bytes;
+                    rep.mem_bytes[dst_node] += bytes;
+                    rep.peak_mem_bytes[dst_node] =
+                        rep.peak_mem_bytes[dst_node].max(rep.mem_bytes[dst_node]);
+                    holdings.entry(tr.obj).or_default().push(task.target);
+                    rep.transfers += 1;
+                    rep.transfer_bytes += bytes;
+                    if self.record_trace {
+                        rep.events.push(TraceEvent {
+                            t: end,
+                            node: dst_node,
+                            mem_bytes: rep.mem_bytes[dst_node],
+                            net_in_bytes: rep.net_in_bytes[dst_node],
+                            net_out_bytes: rep.net_out_bytes[dst_node],
+                        });
+                        rep.events.push(TraceEvent {
+                            t: end,
+                            node: src_node,
+                            mem_bytes: rep.mem_bytes[src_node],
+                            net_in_bytes: rep.net_in_bytes[src_node],
+                            net_out_bytes: rep.net_out_bytes[src_node],
+                        });
+                    }
+                    end
+                };
+                ready.entry(tr.obj).or_default().insert(dst_node, arrive);
+                deps_ready = deps_ready.max(arrive);
+            }
+            // local inputs: ready when produced on this node
+            for &obj in &task.inputs {
+                if let Some(t) = ready.get(&obj).and_then(|m| m.get(&dst_node)) {
+                    deps_ready = deps_ready.max(*t);
+                }
+            }
+
+            // --- pick a worker slot ---
+            let slot = match self.topo.mode {
+                SystemMode::Ray => {
+                    // least-loaded slot on the node (local scheduler's job)
+                    let mut best = 0;
+                    for s in 1..r {
+                        if slot_free[dst_node][s] < slot_free[dst_node][best] {
+                            best = s;
+                        }
+                    }
+                    best
+                }
+                SystemMode::Dask => self.topo.worker_of(task.target).unwrap(),
+            };
+
+            let start = clock_dispatch.max(deps_ready).max(slot_free[dst_node][slot]);
+            let compute = if task.kernel.is_contraction() {
+                task.flops() / self.compute.flops
+            } else {
+                task.ew_elems() / self.compute.ew_rate
+            };
+            let out_bytes = task.out_elems() * 8;
+            // RFC overhead + object-store write of the outputs (R(n))
+            let overhead = self.compute.task_overhead
+                + match self.topo.mode {
+                    SystemMode::Ray => self.net.intra_ray.time(out_bytes),
+                    SystemMode::Dask => 0.0,
+                };
+            let mut end = start + compute + overhead;
+            // object spilling: store overflow (outputs) plus read-back of
+            // inputs resident on an over-capacity store, serialized on the
+            // node's disk
+            let mut spill = self.spill_penalty(&mut rep, &mut mem_target, task.target, out_bytes);
+            spill += self.spill_readback(&mut rep, &mem_target, task);
+            if spill > 0.0 {
+                let ds = disk_free[dst_node].max(start);
+                disk_free[dst_node] = ds + spill;
+                end = end.max(ds + spill);
+            }
+            slot_free[dst_node][slot] = end;
+            rep.busy[dst_node] += compute + overhead;
+            rep.mem_bytes[dst_node] += out_bytes;
+            rep.peak_mem_bytes[dst_node] =
+                rep.peak_mem_bytes[dst_node].max(rep.mem_bytes[dst_node]);
+            for (obj, shape) in &task.outputs {
+                let bytes: u64 = shape.iter().map(|&d| d as u64).product::<u64>() * 8;
+                ready.entry(*obj).or_default().insert(dst_node, end);
+                size.insert(*obj, bytes);
+                holdings.entry(*obj).or_default().push(task.target);
+            }
+            // GC: release plan-local temporaries after their last use
+            for &obj in &task.inputs {
+                if last_use.get(&obj) == Some(&task_idx) && produced_at.contains_key(&obj) {
+                    let bytes = size.get(&obj).copied().unwrap_or(0);
+                    if let Some(targets) = holdings.remove(&obj) {
+                        for t in targets {
+                            let node = self.topo.node_of(t);
+                            mem_target[t] = (mem_target[t] - bytes as f64).max(0.0);
+                            rep.mem_bytes[node] = rep.mem_bytes[node].saturating_sub(bytes);
+                        }
+                    }
+                }
+            }
+            if self.record_trace {
+                rep.events.push(TraceEvent {
+                    t: end,
+                    node: dst_node,
+                    mem_bytes: rep.mem_bytes[dst_node],
+                    net_in_bytes: rep.net_in_bytes[dst_node],
+                    net_out_bytes: rep.net_out_bytes[dst_node],
+                });
+            }
+            rep.makespan = rep.makespan.max(end);
+        }
+        rep.dispatch_time = clock_dispatch;
+        rep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::task::{Task, Transfer};
+    use crate::runtime::kernel::{BinOp, Kernel};
+
+    fn topo(k: usize, r: usize) -> Topology {
+        Topology::new(k, r, SystemMode::Ray)
+    }
+
+    fn ew_task(target: usize, inputs: Vec<ObjectId>, out: ObjectId, transfers: Vec<Transfer>) -> Task {
+        Task {
+            kernel: Kernel::Ew(BinOp::Add),
+            in_shapes: vec![vec![100, 100]; inputs.len()],
+            inputs,
+            outputs: vec![(out, vec![100, 100])],
+            target,
+            transfers,
+        }
+    }
+
+    #[test]
+    fn gamma_serializes_dispatch() {
+        let net = NetParams {
+            gamma: 1.0,
+            ..NetParams::paper_testbed()
+        };
+        let ex = SimExecutor::new(topo(2, 2), net, ComputeParams::paper_testbed());
+        let plan = Plan {
+            tasks: (0..4)
+                .map(|i| ew_task(i % 2, vec![i as u64], 100 + i as u64, vec![]))
+                .collect(),
+        };
+        let initial: Vec<(ObjectId, usize, u64)> =
+            (0..4).map(|i| (i as u64, (i % 2) as usize, 80_000)).collect();
+        let rep = ex.run(&plan, &initial);
+        // 4 tasks * γ=1s dispatch dominates
+        assert!(rep.makespan >= 4.0, "makespan {}", rep.makespan);
+        assert!((rep.dispatch_time - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfers_occupy_nics_and_count_bytes() {
+        let ex = SimExecutor::new(
+            topo(2, 1),
+            NetParams::paper_testbed(),
+            ComputeParams::paper_testbed(),
+        );
+        let t = ew_task(
+            1,
+            vec![0, 1],
+            100,
+            vec![Transfer {
+                obj: 0,
+                src: 0,
+                elems: 10_000,
+            }],
+        );
+        let rep = ex.run(
+            &Plan { tasks: vec![t] },
+            &[(0, 0, 80_000), (1, 1, 80_000)],
+        );
+        assert_eq!(rep.transfers, 1);
+        assert_eq!(rep.transfer_bytes, 80_000);
+        assert_eq!(rep.net_out_bytes[0], 80_000);
+        assert_eq!(rep.net_in_bytes[1], 80_000);
+        // transfer time must appear in the makespan
+        let c = NetParams::paper_testbed().inter.time(80_000);
+        assert!(rep.makespan >= c);
+    }
+
+    #[test]
+    fn parallel_nodes_beat_one_node() {
+        let ex = SimExecutor::new(
+            topo(4, 1),
+            NetParams::mpi_testbed(), // γ=0 so compute dominates
+            ComputeParams::paper_testbed(),
+        );
+        let mk_plan = |spread: bool| Plan {
+            tasks: (0..8)
+                .map(|i| {
+                    let target = if spread { i % 4 } else { 0 };
+                    Task {
+                        kernel: Kernel::Matmul,
+                        inputs: vec![i as u64, 100 + i as u64],
+                        in_shapes: vec![vec![512, 512], vec![512, 512]],
+                        outputs: vec![(200 + i as u64, vec![512, 512])],
+                        target,
+                        transfers: vec![],
+                    }
+                })
+                .collect(),
+        };
+        let initial: Vec<_> = (0..8)
+            .flat_map(|i| {
+                let t = i % 4;
+                vec![(i as u64, t, 1u64 << 21), (100 + i as u64, t, 1u64 << 21)]
+            })
+            .collect();
+        let spread = ex.run(&mk_plan(true), &initial);
+        let initial0: Vec<_> = initial.iter().map(|&(o, _, b)| (o, 0, b)).collect();
+        let piled = ex.run(&mk_plan(false), &initial0);
+        assert!(
+            spread.makespan * 2.0 < piled.makespan,
+            "spread {} vs piled {}",
+            spread.makespan,
+            piled.makespan
+        );
+    }
+
+    #[test]
+    fn trace_events_recorded_when_enabled() {
+        let mut ex = SimExecutor::new(
+            topo(2, 1),
+            NetParams::paper_testbed(),
+            ComputeParams::paper_testbed(),
+        );
+        ex.record_trace = true;
+        let plan = Plan {
+            tasks: vec![ew_task(0, vec![0], 10, vec![])],
+        };
+        let rep = ex.run(&plan, &[(0, 0, 800)]);
+        assert!(rep.events.len() >= 3); // 2 initial + 1 task
+        assert!(rep.events.iter().all(|e| e.t >= 0.0));
+    }
+}

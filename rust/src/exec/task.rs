@@ -1,0 +1,91 @@
+//! Scheduled block-level tasks and plans.
+//!
+//! A [`Plan`] is the output of a scheduler walk over a [`crate::graph::Graph`]:
+//! a topologically-ordered task sequence with concrete placements and the
+//! transfer decisions the scheduler's cluster-state model committed to.
+//! Both executors (simulated and real) replay the same plan, so ablations
+//! vary exactly one thing: the scheduling policy.
+
+use crate::runtime::kernel::Kernel;
+use crate::store::ObjectId;
+
+/// One data movement committed by the scheduler: `obj` from `src` target
+/// to the task's target.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Transfer {
+    pub obj: ObjectId,
+    pub src: usize,
+    pub elems: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub kernel: Kernel,
+    pub inputs: Vec<ObjectId>,
+    pub in_shapes: Vec<Vec<usize>>,
+    /// (object, shape) per kernel output.
+    pub outputs: Vec<(ObjectId, Vec<usize>)>,
+    /// Placement target (node in Ray mode, worker in Dask mode).
+    pub target: usize,
+    /// Inputs that were not resident on `target` when scheduled.
+    pub transfers: Vec<Transfer>,
+}
+
+impl Task {
+    pub fn out_elems(&self) -> u64 {
+        self.outputs
+            .iter()
+            .map(|(_, s)| s.iter().map(|&d| d as u64).product::<u64>())
+            .sum()
+    }
+
+    pub fn flops(&self) -> f64 {
+        self.kernel.flops(&self.in_shapes)
+    }
+
+    pub fn ew_elems(&self) -> f64 {
+        self.kernel.ew_elems(&self.in_shapes)
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Plan {
+    pub tasks: Vec<Task>,
+}
+
+impl Plan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Total bytes moved between distinct targets.
+    pub fn transfer_bytes(&self) -> u64 {
+        self.tasks
+            .iter()
+            .flat_map(|t| &t.transfers)
+            .map(|tr| tr.elems * 8)
+            .sum()
+    }
+
+    /// Number of inter-target transfers.
+    pub fn transfer_count(&self) -> usize {
+        self.tasks.iter().map(|t| t.transfers.len()).sum()
+    }
+
+    /// Tasks per target histogram (for load-balance assertions).
+    pub fn tasks_per_target(&self, n_targets: usize) -> Vec<usize> {
+        let mut h = vec![0; n_targets];
+        for t in &self.tasks {
+            h[t.target] += 1;
+        }
+        h
+    }
+}

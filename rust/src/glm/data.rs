@@ -1,0 +1,152 @@
+//! Synthetic classification data (§8.5).
+//!
+//! The paper's logistic-regression benchmarks draw from a bimodal
+//! Gaussian: 75% negatives at mean 10 (var 2), 25% positives at mean 30
+//! (var 4), 256-dimensional. Rows are generated *position-deterministically*
+//! (value = f(seed, global row, col)) so that the X and y arrays agree on
+//! class labels regardless of block partitioning or scheduling policy, and
+//! so any two sessions with the same seed see identical data.
+//!
+//! Features are standardized with the mixture's analytic moments
+//! (mean 15, std √77.5) to keep Newton well-conditioned — mirroring
+//! `python/tests/test_model.py`.
+
+use crate::api::Session;
+use crate::graph::DistArray;
+use crate::grid::ArrayGrid;
+use crate::util::rng::Rng;
+
+pub const NEG_MEAN: f64 = 10.0;
+pub const NEG_STD: f64 = std::f64::consts::SQRT_2; // var 2
+pub const POS_MEAN: f64 = 30.0;
+pub const POS_STD: f64 = 2.0; // var 4
+pub const POS_FRAC: f64 = 0.25;
+
+/// Analytic mixture moments used for standardization.
+pub const MIX_MEAN: f64 = 0.75 * NEG_MEAN + 0.25 * POS_MEAN; // 15
+pub fn mix_std() -> f64 {
+    let e2 = 0.75 * (NEG_STD * NEG_STD + NEG_MEAN * NEG_MEAN)
+        + 0.25 * (POS_STD * POS_STD + POS_MEAN * POS_MEAN);
+    (e2 - MIX_MEAN * MIX_MEAN).sqrt() // sqrt(77.5)
+}
+
+/// Class of global row `r` under `seed` (deterministic).
+pub fn row_class(seed: u64, row: usize) -> bool {
+    let mut rng = Rng::seed_from_u64(seed ^ (row as u64).wrapping_mul(0xA076_1D64_78BD_642F));
+    rng.bool(POS_FRAC)
+}
+
+/// Feature value for (row, col).
+pub fn feature(seed: u64, row: usize, col: usize) -> f64 {
+    let pos = row_class(seed, row);
+    let mut rng = Rng::seed_from_u64(
+        seed ^ (row as u64).wrapping_mul(0xE703_7ED1_A0B4_28DB)
+            ^ (col as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    let raw = if pos {
+        rng.normal_ms(POS_MEAN, POS_STD)
+    } else {
+        rng.normal_ms(NEG_MEAN, NEG_STD)
+    };
+    (raw - MIX_MEAN) / mix_std()
+}
+
+/// Create the distributed design matrix X [n, d] (row-partitioned into
+/// `q` blocks) and target y [n, 1].
+pub fn classification_data(
+    sess: &mut Session,
+    n: usize,
+    d: usize,
+    q: usize,
+    seed: u64,
+) -> (DistArray, DistArray) {
+    let xgrid = ArrayGrid::new(&[n, d], &[q, 1]);
+    let xg = xgrid.clone();
+    let x = sess.create_with(&[n, d], &[q, 1], move |_, bs, coords| {
+        let r0 = xg.block_offset(0, coords[0]);
+        let mut out = Vec::with_capacity(bs[0] * bs[1]);
+        for i in 0..bs[0] {
+            for j in 0..bs[1] {
+                out.push(feature(seed, r0 + i, j));
+            }
+        }
+        out
+    });
+    let yg = xgrid;
+    let y = sess.create_with(&[n, 1], &[q, 1], move |_, bs, coords| {
+        let r0 = yg.block_offset(0, coords[0]);
+        (0..bs[0])
+            .map(|i| if row_class(seed, r0 + i) { 1.0 } else { 0.0 })
+            .collect()
+    });
+    (x, y)
+}
+
+/// Dense (single-block) version for the serial baselines (Fig. 16).
+pub fn classification_dense(n: usize, d: usize, seed: u64) -> (crate::store::Block, crate::store::Block) {
+    let mut xv = Vec::with_capacity(n * d);
+    let mut yv = Vec::with_capacity(n);
+    for r in 0..n {
+        for c in 0..d {
+            xv.push(feature(seed, r, c));
+        }
+        yv.push(if row_class(seed, r) { 1.0 } else { 0.0 });
+    }
+    (
+        crate::store::Block::from_vec(&[n, d], xv),
+        crate::store::Block::from_vec(&[n, 1], yv),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{ExecMode, SessionConfig};
+
+    #[test]
+    fn class_balance_roughly_quarter() {
+        let pos = (0..10_000).filter(|&r| row_class(7, r)).count();
+        let frac = pos as f64 / 10_000.0;
+        assert!((frac - 0.25).abs() < 0.02, "{frac}");
+    }
+
+    #[test]
+    fn features_standardized() {
+        let n = 20_000;
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for r in 0..n {
+            let v = feature(3, r, 0);
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn partitioning_invariant() {
+        // same seed, different block counts -> identical dense data
+        let mut s1 = crate::api::Session::new(SessionConfig::real_small(2, 2));
+        let mut s2 = crate::api::Session::new(SessionConfig::real_small(2, 2));
+        let (x1, y1) = classification_data(&mut s1, 64, 4, 2, 99);
+        let (x2, y2) = classification_data(&mut s2, 64, 4, 8, 99);
+        assert_eq!(s1.cfg.exec, ExecMode::Real);
+        let d1 = s1.fetch(&x1).unwrap();
+        let d2 = s2.fetch(&x2).unwrap();
+        assert!(d1.max_abs_diff(&d2) < 1e-15);
+        let l1 = s1.fetch(&y1).unwrap();
+        let l2 = s2.fetch(&y2).unwrap();
+        assert!(l1.max_abs_diff(&l2) < 1e-15);
+    }
+
+    #[test]
+    fn dense_matches_distributed() {
+        let mut s = crate::api::Session::new(SessionConfig::real_small(2, 2));
+        let (x, _) = classification_data(&mut s, 32, 3, 4, 5);
+        let (xd, _) = classification_dense(32, 3, 5);
+        assert!(s.fetch(&x).unwrap().max_abs_diff(&xd) < 1e-15);
+    }
+}

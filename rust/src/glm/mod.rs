@@ -1,0 +1,16 @@
+//! Generalized linear models (§6, §8.5, §8.6): distributed Newton and
+//! L-BFGS for logistic regression, the Dask-ML-style driver-aggregation
+//! baseline, the serial single-node baseline, and the synthetic bimodal
+//! Gaussian data generator.
+
+pub mod data;
+pub mod driver_agg;
+pub mod lbfgs;
+pub mod newton;
+pub mod serial;
+
+pub use data::classification_data;
+pub use driver_agg::newton_fit_driver_agg;
+pub use lbfgs::lbfgs_fit;
+pub use newton::{accuracy, newton_fit};
+pub use serial::newton_fit_serial;

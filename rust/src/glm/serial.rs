@@ -1,0 +1,97 @@
+//! Single-node serial Newton baseline (the "NumPy/scikit-learn stack" of
+//! §8.6, Fig. 16 / Table 3).
+//!
+//! Runs Algorithm 2 on dense host blocks with the same native kernels the
+//! distributed workers use, but on one thread with no partitioning, no
+//! scheduler, and no RFC overhead. At small data this wins (the paper's
+//! "5× slower at small scales" side of Fig. 16); at large data the
+//! distributed version's parallelism dominates.
+
+use anyhow::Result;
+
+use crate::linalg::dense;
+use crate::runtime::{native, Kernel};
+use crate::store::Block;
+use crate::util::Stopwatch;
+
+pub struct SerialResult {
+    pub beta: Block,
+    pub losses: Vec<f64>,
+    pub iters: usize,
+    pub wall_secs: f64,
+}
+
+/// Dense Newton fit on a single node.
+pub fn newton_fit_serial(x: &Block, y: &Block, steps: usize, tol: f64) -> Result<SerialResult> {
+    let sw = Stopwatch::start();
+    let d = x.cols();
+    let mut beta = Block::zeros(&[d, 1]);
+    let mut losses = Vec::new();
+    let mut iters = 0;
+    for _ in 0..steps {
+        iters += 1;
+        let outs = native::execute(&Kernel::NewtonBlock, &[x, y, &beta])?;
+        let (g, h, loss) = (&outs[0], &outs[1], &outs[2]);
+        losses.push(loss.buf()[0]);
+        let gnorm: f64 = g.buf().iter().map(|v| v * v).sum::<f64>().sqrt();
+        if gnorm <= tol {
+            break;
+        }
+        let dir = dense::solve_spd(h, g, 1e-10);
+        for i in 0..d {
+            let v = beta.at2(i, 0) - dir.at2(i, 0);
+            beta.set2(i, 0, v);
+        }
+    }
+    Ok(SerialResult {
+        beta,
+        losses,
+        iters,
+        wall_secs: sw.secs(),
+    })
+}
+
+/// Serial prediction accuracy.
+pub fn accuracy_serial(x: &Block, y: &Block, beta: &Block) -> Result<f64> {
+    let mu = native::execute(&Kernel::GlmMu, &[x, beta])?.remove(0);
+    let n = mu.elems() as usize;
+    let correct = mu
+        .buf()
+        .iter()
+        .zip(y.buf())
+        .filter(|(&m, &t)| ((m > 0.5) as u8 as f64) == t)
+        .count();
+    Ok(correct as f64 / n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glm::data::classification_dense;
+
+    #[test]
+    fn serial_newton_converges() {
+        let (x, y) = classification_dense(512, 4, 77);
+        let res = newton_fit_serial(&x, &y, 10, 1e-8).unwrap();
+        assert!(res.losses.last().unwrap() < &(res.losses[0] * 0.1));
+        assert!(accuracy_serial(&x, &y, &res.beta).unwrap() > 0.97);
+    }
+
+    #[test]
+    fn serial_matches_distributed_math() {
+        use crate::api::{Session, SessionConfig};
+        use crate::glm::data::classification_data;
+        use crate::glm::newton::newton_fit;
+        let (xd, yd) = classification_dense(256, 4, 13);
+        let serial = newton_fit_serial(&xd, &yd, 4, 0.0).unwrap();
+
+        let mut sess = Session::new(SessionConfig::real_small(2, 2));
+        let (x, y) = classification_data(&mut sess, 256, 4, 4, 13);
+        let dist = newton_fit(&mut sess, &x, &y, 4, 0.0).unwrap();
+        let beta_dist = sess.fetch(&dist.beta).unwrap();
+        assert!(
+            serial.beta.max_abs_diff(&beta_dist) < 1e-8,
+            "serial vs distributed beta"
+        );
+    }
+}

@@ -1,0 +1,469 @@
+//! Induced-subgraph builders (Fig. 5): expand array-level operations over
+//! [`DistArray`]s into block-level vertices in a [`Graph`].
+//!
+//! All contractions share one pattern — per output block, a set of product
+//! terms over the contracted grid axes plus an n-ary `Reduce` — which is
+//! the paper's "recursive" structure (§4, Algorithm 3). Lazy transposes
+//! are fused here: `Xᵀ @ Y` lowers to `Gram` block kernels and `X @ Yᵀ` to
+//! `MatmulNT`, never materializing a transposed block.
+
+use crate::grid::ArrayGrid;
+use crate::runtime::kernel::{BinOp, Kernel};
+
+use super::dist::DistArray;
+use super::graph::Graph;
+use super::vertex::Ref;
+
+/// Element-wise unary operation (Fig. 5a): one op per block.
+pub fn unary(g: &mut Graph, a: &DistArray, kernel: Kernel) -> usize {
+    assert!(!a.transposed, "unary over transposed view: materialize first");
+    assert_eq!(kernel.n_outputs(), 1);
+    let roots: Vec<Ref> = a
+        .grid
+        .iter_coords()
+        .map(|c| {
+            let leaf = g.leaf(a.obj_at(&c), &a.grid.block_shape(&c));
+            (g.op(kernel.clone(), vec![(leaf, 0)]), 0)
+        })
+        .collect();
+    g.add_output(a.grid.clone(), roots)
+}
+
+/// Element-wise binary operation (Fig. 5b): grids must match block-for-block.
+pub fn binary_ew(g: &mut Graph, a: &DistArray, b: &DistArray, op: BinOp) -> usize {
+    assert!(!a.transposed && !b.transposed, "ew over transposed views");
+    assert_eq!(a.grid, b.grid, "X+Y requires equal shape and grid (§4)");
+    let roots: Vec<Ref> = a
+        .grid
+        .iter_coords()
+        .map(|c| {
+            let shape = a.grid.block_shape(&c);
+            let la = g.leaf(a.obj_at(&c), &shape);
+            let lb = g.leaf(b.obj_at(&c), &shape);
+            (g.op(Kernel::Ew(op), vec![(la, 0), (lb, 0)]), 0)
+        })
+        .collect();
+    g.add_output(a.grid.clone(), roots)
+}
+
+/// sum(X, axis) for matrices (Fig. 5c): `ReduceAxis` per block, then a
+/// `Reduce(add, ...)` tree along the reduced axis.
+pub fn sum_axis(g: &mut Graph, a: &DistArray, axis: usize) -> usize {
+    assert!(!a.transposed);
+    assert_eq!(a.grid.ndim(), 2, "sum_axis builder is 2-D; see sum_all");
+    assert!(axis < 2);
+    let kernel = if axis == 0 { Kernel::SumAxis0 } else { Kernel::SumAxis1 };
+    let out_grid = a.grid.reduce_axis(axis);
+    let mut roots = Vec::with_capacity(out_grid.num_blocks());
+    for oc in out_grid.iter_coords() {
+        // all input blocks along `axis` contributing to this output block
+        let terms: Vec<Ref> = (0..a.grid.grid[axis])
+            .map(|b| {
+                let mut ic = oc.clone();
+                ic[axis] = b;
+                let leaf = g.leaf(a.obj_at(&ic), &a.grid.block_shape(&ic));
+                (g.op(kernel.clone(), vec![(leaf, 0)]), 0)
+            })
+            .collect();
+        roots.push(reduce_or_single(g, terms));
+    }
+    g.add_output(out_grid, roots)
+}
+
+/// Full reduction sum(X) -> 1x1.
+pub fn sum_all(g: &mut Graph, a: &DistArray) -> usize {
+    assert!(!a.transposed);
+    assert_eq!(a.grid.ndim(), 2);
+    let terms: Vec<Ref> = a
+        .grid
+        .iter_coords()
+        .map(|c| {
+            let leaf = g.leaf(a.obj_at(&c), &a.grid.block_shape(&c));
+            (g.op(Kernel::SumAll, vec![(leaf, 0)]), 0)
+        })
+        .collect();
+    let root = reduce_or_single(g, terms);
+    g.add_output(ArrayGrid::new(&[1, 1], &[1, 1]), vec![root])
+}
+
+/// Matrix multiplication with lazy-transpose fusion (Fig. 5e / §6):
+/// * `A @ B`   -> per-output-block `Matmul` terms reduced over the inner grid
+/// * `Aᵀ @ B`  -> `Gram` terms reduced over the (stored) row grid
+/// * `A @ Bᵀ`  -> `MatmulNT` terms reduced over the (stored) column grid
+pub fn matmul(g: &mut Graph, a: &DistArray, b: &DistArray) -> usize {
+    assert_eq!(a.grid.ndim(), 2);
+    assert_eq!(b.grid.ndim(), 2);
+    match (a.transposed, b.transposed) {
+        (false, false) => matmul_nn(g, a, b),
+        (true, false) => matmul_tn(g, a, b),
+        (false, true) => matmul_nt(g, a, b),
+        (true, true) => panic!("Aᵀ @ Bᵀ unsupported: rewrite as (B @ A)ᵀ"),
+    }
+}
+
+fn matmul_nn(g: &mut Graph, a: &DistArray, b: &DistArray) -> usize {
+    assert_eq!(a.grid.shape[1], b.grid.shape[0], "A@B inner dims");
+    assert_eq!(a.grid.grid[1], b.grid.grid[0], "A@B inner grids must match");
+    let (gm, gk) = (a.grid.grid[0], a.grid.grid[1]);
+    let gn = b.grid.grid[1];
+    let out_grid = ArrayGrid::new(&[a.grid.shape[0], b.grid.shape[1]], &[gm, gn]);
+    let mut roots = Vec::with_capacity(gm * gn);
+    for i in 0..gm {
+        for j in 0..gn {
+            let terms: Vec<Ref> = (0..gk)
+                .map(|h| {
+                    let la = g.leaf(a.obj_at(&[i, h]), &a.grid.block_shape(&[i, h]));
+                    let lb = g.leaf(b.obj_at(&[h, j]), &b.grid.block_shape(&[h, j]));
+                    (g.op(Kernel::Matmul, vec![(la, 0), (lb, 0)]), 0)
+                })
+                .collect();
+            roots.push(reduce_or_single(g, terms));
+        }
+    }
+    g.add_output(out_grid, roots)
+}
+
+/// Aᵀ @ B with A stored `[q, m]` over grid (gq, gm): the block-wise inner
+/// product (App. A.3) — the GLM Hessian/gradient hot-spot.
+fn matmul_tn(g: &mut Graph, a: &DistArray, b: &DistArray) -> usize {
+    assert_eq!(a.grid.shape[0], b.grid.shape[0], "Aᵀ@B contracted dims");
+    assert_eq!(a.grid.grid[0], b.grid.grid[0], "Aᵀ@B row grids must match");
+    let (gq, gm) = (a.grid.grid[0], a.grid.grid[1]);
+    let gn = b.grid.grid[1];
+    let out_grid = ArrayGrid::new(&[a.grid.shape[1], b.grid.shape[1]], &[gm, gn]);
+    let mut roots = Vec::with_capacity(gm * gn);
+    for i in 0..gm {
+        for j in 0..gn {
+            let terms: Vec<Ref> = (0..gq)
+                .map(|q| {
+                    let la = g.leaf(a.obj_at(&[q, i]), &a.grid.block_shape(&[q, i]));
+                    let lb = g.leaf(b.obj_at(&[q, j]), &b.grid.block_shape(&[q, j]));
+                    (g.op(Kernel::Gram, vec![(la, 0), (lb, 0)]), 0)
+                })
+                .collect();
+            roots.push(reduce_or_single(g, terms));
+        }
+    }
+    g.add_output(out_grid, roots)
+}
+
+/// A @ Bᵀ with B stored `[n, c]`: the block-wise outer product (App. A.4).
+fn matmul_nt(g: &mut Graph, a: &DistArray, b: &DistArray) -> usize {
+    assert_eq!(a.grid.shape[1], b.grid.shape[1], "A@Bᵀ contracted dims");
+    assert_eq!(a.grid.grid[1], b.grid.grid[1], "A@Bᵀ column grids must match");
+    let (gm, gc) = (a.grid.grid[0], a.grid.grid[1]);
+    let gn = b.grid.grid[0];
+    let out_grid = ArrayGrid::new(&[a.grid.shape[0], b.grid.shape[0]], &[gm, gn]);
+    let mut roots = Vec::with_capacity(gm * gn);
+    for i in 0..gm {
+        for j in 0..gn {
+            let terms: Vec<Ref> = (0..gc)
+                .map(|c| {
+                    let la = g.leaf(a.obj_at(&[i, c]), &a.grid.block_shape(&[i, c]));
+                    let lb = g.leaf(b.obj_at(&[j, c]), &b.grid.block_shape(&[j, c]));
+                    (g.op(Kernel::MatmulNT, vec![(la, 0), (lb, 0)]), 0)
+                })
+                .collect();
+            roots.push(reduce_or_single(g, terms));
+        }
+    }
+    g.add_output(out_grid, roots)
+}
+
+/// Fused Newton iteration (§6): one `newton_block` task per row block of X,
+/// then Reduce trees for g, H and loss. Returns (g, H, loss) output ids.
+pub fn glm_newton(
+    g: &mut Graph,
+    x: &DistArray,
+    y: &DistArray,
+    beta: &DistArray,
+) -> (usize, usize, usize) {
+    let (blocks, d) = glm_block_terms(g, x, y, Some(beta), Kernel::NewtonBlock);
+    let grad_terms: Vec<Ref> = blocks.iter().map(|&v| (v, 0)).collect();
+    let hess_terms: Vec<Ref> = blocks.iter().map(|&v| (v, 1)).collect();
+    let loss_terms: Vec<Ref> = blocks.iter().map(|&v| (v, 2)).collect();
+    let gr = reduce_or_single(g, grad_terms);
+    let hr = reduce_or_single(g, hess_terms);
+    let lr = reduce_or_single(g, loss_terms);
+    let gid = g.add_output(ArrayGrid::new(&[d, 1], &[1, 1]), vec![gr]);
+    let hid = g.add_output(ArrayGrid::new(&[d, d], &[1, 1]), vec![hr]);
+    let lid = g.add_output(ArrayGrid::new(&[1, 1], &[1, 1]), vec![lr]);
+    (gid, hid, lid)
+}
+
+/// Fused L-BFGS step inputs: (gradient, loss) per §8.5.
+pub fn glm_lbfgs(g: &mut Graph, x: &DistArray, y: &DistArray, beta: &DistArray) -> (usize, usize) {
+    let (blocks, d) = glm_block_terms(g, x, y, Some(beta), Kernel::LbfgsBlock);
+    let grad_terms: Vec<Ref> = blocks.iter().map(|&v| (v, 0)).collect();
+    let loss_terms: Vec<Ref> = blocks.iter().map(|&v| (v, 1)).collect();
+    let gr = reduce_or_single(g, grad_terms);
+    let lr = reduce_or_single(g, loss_terms);
+    let gid = g.add_output(ArrayGrid::new(&[d, 1], &[1, 1]), vec![gr]);
+    let lid = g.add_output(ArrayGrid::new(&[1, 1], &[1, 1]), vec![lr]);
+    (gid, lid)
+}
+
+/// Per-block prediction mu = sigmoid(X beta): row-partitioned output.
+pub fn glm_predict(g: &mut Graph, x: &DistArray, beta: &DistArray) -> usize {
+    assert!(!x.transposed);
+    let (gq, _) = (x.grid.grid[0], x.grid.grid[1]);
+    assert_eq!(x.grid.grid[1], 1, "GLM X must be row-partitioned (q x 1)");
+    let beta_shape = beta.grid.block_shape(&[0, 0]);
+    let out_grid = ArrayGrid::new(&[x.grid.shape[0], 1], &[gq, 1]);
+    let mut roots = Vec::with_capacity(gq);
+    for i in 0..gq {
+        let xs = x.grid.block_shape(&[i, 0]);
+        let lx = g.leaf(x.obj_at(&[i, 0]), &xs);
+        let lb = g.leaf(beta.single_obj(), &beta_shape);
+        roots.push((g.op(Kernel::PredictBlock, vec![(lx, 0), (lb, 0)]), 0));
+    }
+    g.add_output(out_grid, roots)
+}
+
+fn glm_block_terms(
+    g: &mut Graph,
+    x: &DistArray,
+    y: &DistArray,
+    beta: Option<&DistArray>,
+    kernel: Kernel,
+) -> (Vec<usize>, usize) {
+    assert!(!x.transposed && !y.transposed);
+    assert_eq!(x.grid.grid[1], 1, "GLM X must be row-partitioned (q x 1)");
+    assert_eq!(y.grid.grid[0], x.grid.grid[0], "y must partition like X rows");
+    let d = x.grid.shape[1];
+    let beta = beta.expect("beta required");
+    let beta_shape = beta.grid.block_shape(&[0, 0]);
+    let blocks: Vec<usize> = (0..x.grid.grid[0])
+        .map(|i| {
+            let xs = x.grid.block_shape(&[i, 0]);
+            let ys = y.grid.block_shape(&[i, 0]);
+            let lx = g.leaf(x.obj_at(&[i, 0]), &xs);
+            let ly = g.leaf(y.obj_at(&[i, 0]), &ys);
+            let lb = g.leaf(beta.single_obj(), &beta_shape);
+            g.op(kernel.clone(), vec![(lx, 0), (ly, 0), (lb, 0)])
+        })
+        .collect();
+    (blocks, d)
+}
+
+/// MTTKRP `einsum("ijk,jf,kf->if", X, B, C)` (§8.4): per output row-block,
+/// product terms over the (j, k) grid plus a Reduce tree.
+pub fn mttkrp(g: &mut Graph, x: &DistArray, bm: &DistArray, cm: &DistArray) -> usize {
+    assert_eq!(x.grid.ndim(), 3);
+    let (gi, gj, gk) = (x.grid.grid[0], x.grid.grid[1], x.grid.grid[2]);
+    assert_eq!(bm.grid.grid[0], gj, "B row grid must match X's j grid");
+    assert_eq!(cm.grid.grid[0], gk, "C row grid must match X's k grid");
+    assert_eq!(bm.grid.grid[1], 1, "factor matrices are column-unpartitioned");
+    assert_eq!(cm.grid.grid[1], 1);
+    let f = bm.grid.shape[1];
+    let out_grid = ArrayGrid::new(&[x.grid.shape[0], f], &[gi, 1]);
+    let mut roots = Vec::with_capacity(gi);
+    for i in 0..gi {
+        let mut terms: Vec<Ref> = Vec::with_capacity(gj * gk);
+        for j in 0..gj {
+            for k in 0..gk {
+                let xc = [i, j, k];
+                let lx = g.leaf(x.obj_at(&xc), &x.grid.block_shape(&xc));
+                let lb = g.leaf(bm.obj_at(&[j, 0]), &bm.grid.block_shape(&[j, 0]));
+                let lc = g.leaf(cm.obj_at(&[k, 0]), &cm.grid.block_shape(&[k, 0]));
+                terms.push((
+                    g.op(Kernel::MttkrpTerm, vec![(lx, 0), (lb, 0), (lc, 0)]),
+                    0,
+                ));
+            }
+        }
+        roots.push(reduce_or_single(g, terms));
+    }
+    g.add_output(out_grid, roots)
+}
+
+/// MTTKRP the way a pairwise-contracting einsum does it (the Dask-Arrays
+/// behaviour of Fig. 13a): stage 1 materializes `W[i,k,f] = Σ_j X·B` — an
+/// intermediate F× larger than the X slabs — then stage 2 contracts with
+/// C. Used as the materializing baseline in `benches/fig13_tensor.rs`.
+pub fn mttkrp_naive(g: &mut Graph, x: &DistArray, bm: &DistArray, cm: &DistArray) -> usize {
+    assert_eq!(x.grid.ndim(), 3);
+    let (gi, gj, gk) = (x.grid.grid[0], x.grid.grid[1], x.grid.grid[2]);
+    assert_eq!(bm.grid.grid[0], gj);
+    assert_eq!(cm.grid.grid[0], gk);
+    let f = bm.grid.shape[1];
+    let out_grid = ArrayGrid::new(&[x.grid.shape[0], f], &[gi, 1]);
+    let mut roots = Vec::with_capacity(gi);
+    for i in 0..gi {
+        // stage 1: W[i][k] = Σ_j X[i,j,k] · B[j]   (materialized!)
+        let mut w_refs: Vec<Ref> = Vec::with_capacity(gk);
+        for k in 0..gk {
+            let terms: Vec<Ref> = (0..gj)
+                .map(|j| {
+                    let xc = [i, j, k];
+                    let lx = g.leaf(x.obj_at(&xc), &x.grid.block_shape(&xc));
+                    let lb = g.leaf(bm.obj_at(&[j, 0]), &bm.grid.block_shape(&[j, 0]));
+                    (g.op(Kernel::EinsumXB, vec![(lx, 0), (lb, 0)]), 0)
+                })
+                .collect();
+            w_refs.push(reduce_or_single(g, terms));
+        }
+        // stage 2: out[i] = Σ_k W[i][k] · C[k]
+        let terms: Vec<Ref> = w_refs
+            .into_iter()
+            .enumerate()
+            .map(|(k, w)| {
+                let lc = g.leaf(cm.obj_at(&[k, 0]), &cm.grid.block_shape(&[k, 0]));
+                (g.op(Kernel::EinsumWC, vec![w, (lc, 0)]), 0)
+            })
+            .collect();
+        roots.push(reduce_or_single(g, terms));
+    }
+    g.add_output(out_grid, roots)
+}
+
+/// Tensor double contraction `tensordot(X, Y, axes=2)` over (j, k) (§8.4).
+pub fn tensordot_jk(g: &mut Graph, x: &DistArray, y: &DistArray) -> usize {
+    assert_eq!(x.grid.ndim(), 3);
+    assert_eq!(y.grid.ndim(), 3);
+    let (gi, gj, gk) = (x.grid.grid[0], x.grid.grid[1], x.grid.grid[2]);
+    assert_eq!(y.grid.grid[0], gj, "Y j-grid");
+    assert_eq!(y.grid.grid[1], gk, "Y k-grid");
+    let gf = y.grid.grid[2];
+    let out_grid = ArrayGrid::new(&[x.grid.shape[0], y.grid.shape[2]], &[gi, gf]);
+    let mut roots = Vec::with_capacity(gi * gf);
+    for i in 0..gi {
+        for fb in 0..gf {
+            let mut terms: Vec<Ref> = Vec::with_capacity(gj * gk);
+            for j in 0..gj {
+                for k in 0..gk {
+                    let xc = [i, j, k];
+                    let yc = [j, k, fb];
+                    let lx = g.leaf(x.obj_at(&xc), &x.grid.block_shape(&xc));
+                    let ly = g.leaf(y.obj_at(&yc), &y.grid.block_shape(&yc));
+                    terms.push((g.op(Kernel::TensordotJK, vec![(lx, 0), (ly, 0)]), 0));
+                }
+            }
+            roots.push(reduce_or_single(g, terms));
+        }
+    }
+    g.add_output(out_grid, roots)
+}
+
+/// Serial left-fold reduction pinned to one target — models driver-side
+/// aggregation (the Dask-ML baseline of §8.5): every add runs on `target`
+/// and every operand is pulled there, with no locality pairing.
+pub fn reduce_chain_pinned(g: &mut Graph, terms: Vec<Ref>, target: usize) -> Ref {
+    assert!(!terms.is_empty());
+    let mut acc = terms[0];
+    for &t in &terms[1..] {
+        let v = g.op(Kernel::Ew(BinOp::Add), vec![acc, t]);
+        g.set_constraint(v, target);
+        acc = (v, 0);
+    }
+    acc
+}
+
+/// Wrap terms in a Reduce when there is more than one.
+fn reduce_or_single(g: &mut Graph, terms: Vec<Ref>) -> Ref {
+    assert!(!terms.is_empty());
+    if terms.len() == 1 {
+        terms[0]
+    } else {
+        (g.reduce(BinOp::Add, terms), 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::ArrayGrid;
+
+    fn dist(shape: &[usize], grid: &[usize], first_obj: u64) -> DistArray {
+        let g = ArrayGrid::new(shape, grid);
+        let n = g.num_blocks();
+        DistArray::new(
+            g,
+            (first_obj..first_obj + n as u64).collect(),
+            vec![0; n],
+        )
+    }
+
+    #[test]
+    fn ew_graph_shape() {
+        let a = dist(&[8, 8], &[2, 2], 0);
+        let b = dist(&[8, 8], &[2, 2], 10);
+        let mut g = Graph::new();
+        let out = binary_ew(&mut g, &a, &b, BinOp::Add);
+        assert_eq!(g.outputs[out].roots.len(), 4);
+        assert_eq!(g.total_tasks(), 4);
+        assert_eq!(g.frontier().len(), 4);
+    }
+
+    #[test]
+    fn matmul_graph_structure() {
+        // 2x2 grids -> 4 output blocks, each = reduce of 2 matmuls (Fig. 6)
+        let a = dist(&[8, 8], &[2, 2], 0);
+        let b = dist(&[8, 8], &[2, 2], 10);
+        let mut g = Graph::new();
+        let out = matmul(&mut g, &a, &b);
+        assert_eq!(g.outputs[out].roots.len(), 4);
+        // 8 matmuls + 4 reduces of arity 2 = 8 + 4 tasks
+        assert_eq!(g.total_tasks(), 12);
+    }
+
+    #[test]
+    fn gram_fuses_transpose() {
+        let x = dist(&[100, 4], &[4, 1], 0);
+        let y = dist(&[100, 6], &[4, 1], 10);
+        let mut g = Graph::new();
+        let out = matmul(&mut g, &x.t(), &y);
+        let oref = &g.outputs[out];
+        assert_eq!(oref.grid.shape, vec![4, 6]);
+        assert_eq!(oref.grid.num_blocks(), 1);
+        // 4 gram ops + 3 reduce-adds
+        assert_eq!(g.total_tasks(), 7);
+    }
+
+    #[test]
+    fn outer_product_no_reduce_when_inner_unpartitioned() {
+        let x = dist(&[8, 4], &[2, 1], 0);
+        let y = dist(&[8, 4], &[2, 1], 10);
+        let mut g = Graph::new();
+        let out = matmul(&mut g, &x, &y.t());
+        let oref = &g.outputs[out];
+        assert_eq!(oref.grid.shape, vec![8, 8]);
+        assert_eq!(oref.grid.num_blocks(), 4);
+        assert_eq!(g.total_tasks(), 4); // no reduces
+    }
+
+    #[test]
+    fn newton_builder_outputs() {
+        let x = dist(&[100, 4], &[4, 1], 0);
+        let y = dist(&[100, 1], &[4, 1], 10);
+        let beta = dist(&[4, 1], &[1, 1], 20);
+        let mut g = Graph::new();
+        let (gi, hi, li) = glm_newton(&mut g, &x, &y, &beta);
+        assert_eq!(g.outputs[gi].grid.shape, vec![4, 1]);
+        assert_eq!(g.outputs[hi].grid.shape, vec![4, 4]);
+        assert_eq!(g.outputs[li].grid.shape, vec![1, 1]);
+        // 4 newton blocks + 3 reduce trees of (4-1) adds
+        assert_eq!(g.total_tasks(), 4 + 3 * 3);
+    }
+
+    #[test]
+    fn mttkrp_term_count() {
+        let x = dist(&[8, 8, 8], &[2, 2, 2], 0);
+        let b = dist(&[8, 5], &[2, 1], 100);
+        let c = dist(&[8, 5], &[2, 1], 200);
+        let mut g = Graph::new();
+        let out = mttkrp(&mut g, &x, &b, &c);
+        assert_eq!(g.outputs[out].roots.len(), 2);
+        // per output row-block: 4 terms + 3 adds
+        assert_eq!(g.total_tasks(), 2 * (4 + 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "equal shape and grid")]
+    fn ew_grid_mismatch_panics() {
+        let a = dist(&[8, 8], &[2, 2], 0);
+        let b = dist(&[8, 8], &[4, 1], 10);
+        let mut g = Graph::new();
+        binary_ew(&mut g, &a, &b, BinOp::Add);
+    }
+}

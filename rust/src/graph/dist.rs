@@ -1,0 +1,109 @@
+//! Materialized distributed arrays: grid + per-block objects + placements.
+//!
+//! A [`DistArray`] is the post-execution form of a GraphArray: every block
+//! is an object resident on some placement target. Creation operations
+//! (`zeros`, `random`, `read_csv`) produce these eagerly (§4: "creation and
+//! manipulation operations execute immediately"); numerical expressions
+//! build a [`super::Graph`] over their blocks and execute lazily.
+
+use crate::grid::ArrayGrid;
+use crate::store::ObjectId;
+
+#[derive(Clone, Debug)]
+pub struct DistArray {
+    pub grid: ArrayGrid,
+    /// Block object ids in row-major grid order.
+    pub blocks: Vec<ObjectId>,
+    /// Placement target per block (node id in Ray mode, worker id in Dask
+    /// mode) — the scheduler's notion of where the block's primary copy is.
+    pub targets: Vec<usize>,
+    /// Lazy transpose (2-D only): the blocks are stored untransposed; the
+    /// flag is fused into the consuming contraction (§6).
+    pub transposed: bool,
+}
+
+impl DistArray {
+    pub fn new(grid: ArrayGrid, blocks: Vec<ObjectId>, targets: Vec<usize>) -> Self {
+        assert_eq!(grid.num_blocks(), blocks.len());
+        assert_eq!(blocks.len(), targets.len());
+        Self {
+            grid,
+            blocks,
+            targets,
+            transposed: false,
+        }
+    }
+
+    /// Semantic shape (accounting for lazy transpose).
+    pub fn shape(&self) -> Vec<usize> {
+        if self.transposed {
+            assert_eq!(self.grid.ndim(), 2, "lazy transpose is 2-D only");
+            vec![self.grid.shape[1], self.grid.shape[0]]
+        } else {
+            self.grid.shape.clone()
+        }
+    }
+
+    /// Lazily transposed view (no data movement).
+    pub fn t(&self) -> DistArray {
+        assert_eq!(self.grid.ndim(), 2, "transpose needs a matrix");
+        let mut out = self.clone();
+        out.transposed = !out.transposed;
+        out
+    }
+
+    pub fn obj_at(&self, coords: &[usize]) -> ObjectId {
+        self.blocks[self.grid.flat_of(coords)]
+    }
+
+    pub fn target_at(&self, coords: &[usize]) -> usize {
+        self.targets[self.grid.flat_of(coords)]
+    }
+
+    /// Single-block arrays (β, g, H in §6).
+    pub fn single_obj(&self) -> ObjectId {
+        assert_eq!(self.blocks.len(), 1, "single_obj on multi-block array");
+        self.blocks[0]
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn num_elems(&self) -> u64 {
+        self.grid.num_elems()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.num_elems() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arr() -> DistArray {
+        let grid = ArrayGrid::new(&[8, 4], &[2, 1]);
+        DistArray::new(grid, vec![100, 101], vec![0, 1])
+    }
+
+    #[test]
+    fn transpose_is_lazy_and_involutive() {
+        let a = arr();
+        assert_eq!(a.shape(), vec![8, 4]);
+        let t = a.t();
+        assert!(t.transposed);
+        assert_eq!(t.shape(), vec![4, 8]);
+        assert_eq!(t.blocks, a.blocks); // no data movement
+        assert_eq!(t.t().shape(), vec![8, 4]);
+    }
+
+    #[test]
+    fn indexing() {
+        let a = arr();
+        assert_eq!(a.obj_at(&[1, 0]), 101);
+        assert_eq!(a.target_at(&[0, 0]), 0);
+        assert_eq!(a.bytes(), 8 * 4 * 8);
+    }
+}

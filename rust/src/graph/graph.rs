@@ -1,0 +1,180 @@
+//! The computation graph arena and its frontier (§5).
+//!
+//! One [`Graph`] holds the vertices induced by an array expression; each
+//! output GraphArray is a grid of root references into the arena. A vertex
+//! is *on the frontier* when all of its children are leaves (for `Reduce`,
+//! when at least two children are leaves — the scheduler peels operand
+//! pairs off incrementally, which is how the paper's n-ary Reduce emits
+//! n-1 binary ops).
+
+use crate::grid::ArrayGrid;
+use crate::runtime::kernel::{BinOp, Kernel};
+use crate::store::ObjectId;
+
+use super::vertex::{Ref, Vertex, VertexId};
+
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub vertices: Vec<Vertex>,
+    /// Output arrays: grid + per-block root reference.
+    pub outputs: Vec<GraphArrayRef>,
+}
+
+/// One output array of a graph: the grid plus, for each block in row-major
+/// order, the root (vertex, output index).
+#[derive(Clone, Debug)]
+pub struct GraphArrayRef {
+    pub grid: ArrayGrid,
+    pub roots: Vec<Ref>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn leaf(&mut self, obj: ObjectId, shape: &[usize]) -> VertexId {
+        self.push(Vertex::single_leaf(obj, shape))
+    }
+
+    pub fn op(&mut self, kernel: Kernel, children: Vec<Ref>) -> VertexId {
+        self.push(Vertex::Op {
+            kernel,
+            children,
+            constraint: None,
+        })
+    }
+
+    pub fn reduce(&mut self, op: BinOp, children: Vec<Ref>) -> VertexId {
+        assert!(children.len() >= 2, "reduce needs >= 2 operands");
+        self.push(Vertex::Reduce {
+            op,
+            children,
+            constraint: None,
+        })
+    }
+
+    pub fn push(&mut self, v: Vertex) -> VertexId {
+        self.vertices.push(v);
+        self.vertices.len() - 1
+    }
+
+    pub fn set_constraint(&mut self, v: VertexId, target: usize) {
+        match &mut self.vertices[v] {
+            Vertex::Op { constraint, .. } | Vertex::Reduce { constraint, .. } => {
+                *constraint = Some(target)
+            }
+            Vertex::Leaf { .. } => {}
+        }
+    }
+
+    /// Register an output array; single-output roots use index 0.
+    pub fn add_output(&mut self, grid: ArrayGrid, roots: Vec<Ref>) -> usize {
+        assert_eq!(grid.num_blocks(), roots.len(), "root count != block count");
+        self.outputs.push(GraphArrayRef { grid, roots });
+        self.outputs.len() - 1
+    }
+
+    pub fn is_leaf(&self, v: VertexId) -> bool {
+        self.vertices[v].is_leaf()
+    }
+
+    /// Resolve a reference to its object (after scheduling).
+    pub fn resolve(&self, r: Ref) -> ObjectId {
+        self.vertices[r.0].obj(r.1)
+    }
+
+    pub fn ref_shape(&self, r: Ref) -> &[usize] {
+        self.vertices[r.0].shape(r.1)
+    }
+
+    /// Frontier vertices: ops whose children are all leaves; reduces with
+    /// >= 2 leaf children.
+    pub fn frontier(&self) -> Vec<VertexId> {
+        self.vertices
+            .iter()
+            .enumerate()
+            .filter_map(|(id, v)| match v {
+                Vertex::Leaf { .. } => None,
+                Vertex::Op { children, .. } => children
+                    .iter()
+                    .all(|&(c, _)| self.is_leaf(c))
+                    .then_some(id),
+                Vertex::Reduce { children, .. } => {
+                    (children.iter().filter(|&&(c, _)| self.is_leaf(c)).count() >= 2)
+                        .then_some(id)
+                }
+            })
+            .collect()
+    }
+
+    /// Whether every vertex has been resolved to a leaf.
+    pub fn done(&self) -> bool {
+        self.vertices.iter().all(|v| v.is_leaf())
+    }
+
+    /// Count non-leaf vertices remaining.
+    pub fn remaining_ops(&self) -> usize {
+        self.vertices.iter().filter(|v| !v.is_leaf()).count()
+    }
+
+    /// Total binary tasks the graph will expand to (Reduce of n = n-1).
+    pub fn total_tasks(&self) -> usize {
+        self.vertices
+            .iter()
+            .map(|v| match v {
+                Vertex::Leaf { .. } => 0,
+                Vertex::Op { .. } => 1,
+                Vertex::Reduce { children, .. } => children.len() - 1,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::kernel::Kernel;
+
+    #[test]
+    fn frontier_rules() {
+        let mut g = Graph::new();
+        let a = g.leaf(0, &[2, 2]);
+        let b = g.leaf(1, &[2, 2]);
+        let c = g.op(Kernel::Matmul, vec![(a, 0), (b, 0)]);
+        let d = g.op(Kernel::Neg, vec![(c, 0)]); // child is an op -> not frontier
+        assert_eq!(g.frontier(), vec![c]);
+        assert!(!g.is_leaf(d));
+    }
+
+    #[test]
+    fn reduce_frontier_needs_two_leaves() {
+        let mut g = Graph::new();
+        let a = g.leaf(0, &[2, 2]);
+        let b = g.leaf(1, &[2, 2]);
+        let op = g.op(Kernel::Neg, vec![(b, 0)]);
+        let r = g.reduce(BinOp::Add, vec![(a, 0), (op, 0)]);
+        // only one leaf child -> reduce not on frontier yet
+        assert_eq!(g.frontier(), vec![op]);
+        let _ = r;
+    }
+
+    #[test]
+    fn task_counting() {
+        let mut g = Graph::new();
+        let l: Vec<Ref> = (0..4).map(|i| (g.leaf(i, &[2, 2]), 0)).collect();
+        let _r = g.reduce(BinOp::Add, l);
+        assert_eq!(g.total_tasks(), 3); // n-1 binary adds
+    }
+
+    #[test]
+    fn resolve_multi_output_leaf() {
+        let mut g = Graph::new();
+        let v = g.push(Vertex::Leaf {
+            objs: vec![10, 11],
+            shapes: vec![vec![4, 1], vec![4, 4]],
+        });
+        assert_eq!(g.resolve((v, 1)), 11);
+        assert_eq!(g.ref_shape((v, 0)), &[4, 1]);
+    }
+}

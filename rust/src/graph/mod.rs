@@ -1,0 +1,12 @@
+//! GraphArrays (§4): distributed-array metadata, computation-graph arena,
+//! and the induced-subgraph builders of Fig. 5.
+
+pub mod build;
+pub mod dist;
+#[allow(clippy::module_inception)]
+pub mod graph;
+pub mod vertex;
+
+pub use dist::DistArray;
+pub use graph::{Graph, GraphArrayRef};
+pub use vertex::{Ref, Vertex, VertexId};

@@ -1,0 +1,79 @@
+//! Vertices of a computation graph (§4, Fig. 5).
+//!
+//! * `Leaf` — materialized (or already-scheduled) block object(s). Fused
+//!   kernels (e.g. `newton_block`) produce several objects from one task,
+//!   so a leaf carries one object per output and edges reference
+//!   `(vertex, output_index)`.
+//! * `Op` — a block-level kernel over child references (fixed arity).
+//! * `Reduce` — the n-ary `Reduce(add, ...)` vertex: the scheduler pairs
+//!   operands by locality and emits n-1 binary tasks (§4).
+
+use crate::runtime::kernel::{BinOp, Kernel};
+use crate::store::ObjectId;
+
+pub type VertexId = usize;
+
+/// An edge: which output of which vertex.
+pub type Ref = (VertexId, usize);
+
+#[derive(Clone, Debug)]
+pub enum Vertex {
+    Leaf {
+        objs: Vec<ObjectId>,
+        shapes: Vec<Vec<usize>>,
+    },
+    Op {
+        kernel: Kernel,
+        children: Vec<Ref>,
+        /// Pin the op to a placement target (hierarchical-layout rule for
+        /// the final op of each output subgraph, §5).
+        constraint: Option<usize>,
+    },
+    Reduce {
+        op: BinOp,
+        children: Vec<Ref>,
+        constraint: Option<usize>,
+    },
+}
+
+impl Vertex {
+    pub fn single_leaf(obj: ObjectId, shape: &[usize]) -> Self {
+        Vertex::Leaf {
+            objs: vec![obj],
+            shapes: vec![shape.to_vec()],
+        }
+    }
+
+    pub fn is_leaf(&self) -> bool {
+        matches!(self, Vertex::Leaf { .. })
+    }
+
+    pub fn children(&self) -> &[Ref] {
+        match self {
+            Vertex::Leaf { .. } => &[],
+            Vertex::Op { children, .. } | Vertex::Reduce { children, .. } => children,
+        }
+    }
+
+    pub fn constraint(&self) -> Option<usize> {
+        match self {
+            Vertex::Leaf { .. } => None,
+            Vertex::Op { constraint, .. } | Vertex::Reduce { constraint, .. } => *constraint,
+        }
+    }
+
+    /// Object for output `idx`; panics if not a leaf.
+    pub fn obj(&self, idx: usize) -> ObjectId {
+        match self {
+            Vertex::Leaf { objs, .. } => objs[idx],
+            _ => panic!("obj() on non-leaf"),
+        }
+    }
+
+    pub fn shape(&self, idx: usize) -> &[usize] {
+        match self {
+            Vertex::Leaf { shapes, .. } => &shapes[idx],
+            _ => panic!("shape() on non-leaf"),
+        }
+    }
+}

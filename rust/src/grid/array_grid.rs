@@ -1,0 +1,218 @@
+//! Logical block partitioning of dense n-dimensional arrays (§4).
+//!
+//! An [`ArrayGrid`] is the paper's *array grid*: `shape` gives the global
+//! dimensions and `grid` the number of blocks along each axis. Block `b`
+//! along an axis of extent `s` split into `g` blocks has extent
+//! `ceil(s/g)` for the first `s % g` blocks when the split is uneven
+//! (NumS uses near-even splits; our tests pin the exact rule).
+
+use std::fmt;
+
+/// Multi-dimensional block coordinates.
+pub type Coords = Vec<usize>;
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ArrayGrid {
+    /// Global array dimensions.
+    pub shape: Vec<usize>,
+    /// Blocks along each axis (same rank as `shape`).
+    pub grid: Vec<usize>,
+}
+
+impl ArrayGrid {
+    pub fn new(shape: &[usize], grid: &[usize]) -> Self {
+        assert_eq!(
+            shape.len(),
+            grid.len(),
+            "shape rank {} != grid rank {}",
+            shape.len(),
+            grid.len()
+        );
+        for (axis, (&s, &g)) in shape.iter().zip(grid).enumerate() {
+            assert!(g >= 1, "axis {axis}: grid must be >= 1");
+            assert!(
+                g <= s.max(1),
+                "axis {axis}: more blocks ({g}) than elements ({s})"
+            );
+        }
+        Self {
+            shape: shape.to_vec(),
+            grid: grid.to_vec(),
+        }
+    }
+
+    /// Rank of the array.
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total number of blocks.
+    pub fn num_blocks(&self) -> usize {
+        self.grid.iter().product()
+    }
+
+    /// Total number of elements.
+    pub fn num_elems(&self) -> u64 {
+        self.shape.iter().map(|&s| s as u64).product()
+    }
+
+    /// Extent of block `b` along `axis`: near-even split where the first
+    /// `shape % grid` blocks get one extra element.
+    pub fn block_extent(&self, axis: usize, b: usize) -> usize {
+        let s = self.shape[axis];
+        let g = self.grid[axis];
+        assert!(b < g, "block {b} out of range on axis {axis} (grid {g})");
+        let base = s / g;
+        let rem = s % g;
+        if b < rem {
+            base + 1
+        } else {
+            base
+        }
+    }
+
+    /// Offset of block `b` along `axis` in global element coordinates.
+    pub fn block_offset(&self, axis: usize, b: usize) -> usize {
+        let s = self.shape[axis];
+        let g = self.grid[axis];
+        let base = s / g;
+        let rem = s % g;
+        if b < rem {
+            (base + 1) * b
+        } else {
+            base * b + rem
+        }
+    }
+
+    /// Shape of the block at `coords`.
+    pub fn block_shape(&self, coords: &[usize]) -> Vec<usize> {
+        assert_eq!(coords.len(), self.ndim());
+        coords
+            .iter()
+            .enumerate()
+            .map(|(axis, &b)| self.block_extent(axis, b))
+            .collect()
+    }
+
+    /// Element count of the block at `coords`.
+    pub fn block_elems(&self, coords: &[usize]) -> u64 {
+        self.block_shape(coords).iter().map(|&s| s as u64).product()
+    }
+
+    /// Convert a flat block index (row-major over the grid) to coordinates.
+    pub fn coords_of(&self, mut flat: usize) -> Coords {
+        assert!(flat < self.num_blocks());
+        let mut coords = vec![0; self.ndim()];
+        for axis in (0..self.ndim()).rev() {
+            coords[axis] = flat % self.grid[axis];
+            flat /= self.grid[axis];
+        }
+        coords
+    }
+
+    /// Convert block coordinates to a flat row-major index.
+    pub fn flat_of(&self, coords: &[usize]) -> usize {
+        assert_eq!(coords.len(), self.ndim());
+        let mut flat = 0;
+        for (axis, &c) in coords.iter().enumerate() {
+            assert!(c < self.grid[axis], "coord {c} out of grid on axis {axis}");
+            flat = flat * self.grid[axis] + c;
+        }
+        flat
+    }
+
+    /// Iterate all block coordinates in row-major order.
+    pub fn iter_coords(&self) -> impl Iterator<Item = Coords> + '_ {
+        (0..self.num_blocks()).map(|f| self.coords_of(f))
+    }
+
+    /// Grid for the result of reducing along `axis` (the axis collapses to
+    /// a single block of extent 1, matching the kernels' keepdims outputs).
+    pub fn reduce_axis(&self, axis: usize) -> ArrayGrid {
+        assert!(axis < self.ndim());
+        let mut shape = self.shape.clone();
+        let mut grid = self.grid.clone();
+        shape[axis] = 1;
+        grid[axis] = 1;
+        ArrayGrid::new(&shape, &grid)
+    }
+
+    /// Whether this grid evenly divides the array (no remainder blocks).
+    pub fn is_even(&self) -> bool {
+        self.shape
+            .iter()
+            .zip(&self.grid)
+            .all(|(&s, &g)| s % g == 0)
+    }
+}
+
+impl fmt::Display for ArrayGrid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ArrayGrid(shape={:?}, grid={:?})", self.shape, self.grid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_256_4x4() {
+        // §4: A = random((256,256),(4,4)) -> 16 blocks of 64x64.
+        let g = ArrayGrid::new(&[256, 256], &[4, 4]);
+        assert_eq!(g.num_blocks(), 16);
+        for c in g.iter_coords() {
+            assert_eq!(g.block_shape(&c), vec![64, 64]);
+        }
+    }
+
+    #[test]
+    fn uneven_split_first_blocks_bigger() {
+        let g = ArrayGrid::new(&[10], &[3]);
+        assert_eq!(
+            (0..3).map(|b| g.block_extent(0, b)).collect::<Vec<_>>(),
+            vec![4, 3, 3]
+        );
+        assert_eq!(
+            (0..3).map(|b| g.block_offset(0, b)).collect::<Vec<_>>(),
+            vec![0, 4, 7]
+        );
+    }
+
+    #[test]
+    fn extents_tile_exactly() {
+        for (s, g) in [(17, 4), (100, 7), (64, 64), (5, 1)] {
+            let a = ArrayGrid::new(&[s], &[g]);
+            let total: usize = (0..g).map(|b| a.block_extent(0, b)).sum();
+            assert_eq!(total, s);
+            // offsets are cumulative extents
+            let mut off = 0;
+            for b in 0..g {
+                assert_eq!(a.block_offset(0, b), off);
+                off += a.block_extent(0, b);
+            }
+        }
+    }
+
+    #[test]
+    fn flat_coords_roundtrip() {
+        let g = ArrayGrid::new(&[30, 20, 10], &[3, 2, 5]);
+        for f in 0..g.num_blocks() {
+            assert_eq!(g.flat_of(&g.coords_of(f)), f);
+        }
+    }
+
+    #[test]
+    fn reduce_axis_grid() {
+        let g = ArrayGrid::new(&[256, 128], &[4, 2]);
+        let r = g.reduce_axis(0);
+        assert_eq!(r.shape, vec![1, 128]);
+        assert_eq!(r.grid, vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "more blocks")]
+    fn rejects_overpartitioning() {
+        ArrayGrid::new(&[4], &[5]);
+    }
+}

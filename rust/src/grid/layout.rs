@@ -1,0 +1,184 @@
+//! Hierarchical data layout (§4) and automatic partitioning.
+//!
+//! Creation operations map logical blocks to physical placements in two
+//! levels: node via the [`NodeGrid`] cyclic rule, then worker round-robin
+//! within each node. Along matching axes, operands with equal shape/grid
+//! co-locate block-for-block, which is what buys zero-communication
+//! element-wise operations (App. A.1).
+//!
+//! When the user gives no grid, NumS partitions `p^{σ(shape)}` using the
+//! softmax of the array's dimensions (§4): tall-skinny arrays split along
+//! the tall axis, square arrays split evenly.
+
+use super::array_grid::ArrayGrid;
+use super::node_grid::NodeGrid;
+use crate::util::stats::softmax;
+
+/// A physical placement: node id plus worker index within the node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Placement {
+    pub node: usize,
+    pub worker: usize,
+}
+
+/// Hierarchical layout engine for one cluster shape.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub node_grid: NodeGrid,
+    /// Workers per node (`r` in the paper).
+    pub workers_per_node: usize,
+}
+
+impl Layout {
+    pub fn new(node_grid: NodeGrid, workers_per_node: usize) -> Self {
+        assert!(workers_per_node >= 1);
+        Self {
+            node_grid,
+            workers_per_node,
+        }
+    }
+
+    /// Node for a block (the cyclic §4 rule).
+    pub fn node_of(&self, block_coords: &[usize]) -> usize {
+        self.node_grid.place(block_coords)
+    }
+
+    /// Full placement for every block of `grid`, round-robining workers
+    /// within each node in row-major block order (Fig. 4a).
+    pub fn place_all(&self, grid: &ArrayGrid) -> Vec<Placement> {
+        let mut next_worker = vec![0usize; self.node_grid.num_nodes()];
+        grid.iter_coords()
+            .map(|c| {
+                let node = self.node_of(&c);
+                let worker = next_worker[node] % self.workers_per_node;
+                next_worker[node] += 1;
+                Placement { node, worker }
+            })
+            .collect()
+    }
+
+    /// Placement of a single block, consistent with `place_all` ordering.
+    pub fn place_block(&self, grid: &ArrayGrid, coords: &[usize]) -> Placement {
+        let flat = grid.flat_of(coords);
+        let node = self.node_of(coords);
+        // worker index = how many earlier blocks landed on the same node
+        let mut earlier = 0;
+        for f in 0..flat {
+            if self.node_of(&grid.coords_of(f)) == node {
+                earlier += 1;
+            }
+        }
+        Placement {
+            node,
+            worker: earlier % self.workers_per_node,
+        }
+    }
+}
+
+/// Automatic partitioning `p^{σ(shape)}` (§4): factor the worker count `p`
+/// into the array's rank weighted by the softmax of its dimensions, then
+/// repair rounding so the block count is ≥1 per axis, ≤ the axis extent,
+/// and the total ≤ p (never more blocks than workers along the softmax
+/// weighting; callers can always over-partition explicitly).
+pub fn softmax_grid(shape: &[usize], p: usize) -> Vec<usize> {
+    assert!(!shape.is_empty());
+    let p = p.max(1);
+    let sm = softmax(&shape.iter().map(|&s| s as f64).collect::<Vec<_>>());
+    let pf = p as f64;
+    let mut grid: Vec<usize> = sm
+        .iter()
+        .zip(shape)
+        .map(|(&w, &s)| (pf.powf(w).round() as usize).clamp(1, s.max(1)))
+        .collect();
+    // Repair: shrink the largest axis while the product exceeds p.
+    loop {
+        let prod: usize = grid.iter().product();
+        if prod <= p {
+            break;
+        }
+        let (argmax, _) = grid
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &g)| g)
+            .expect("nonempty");
+        if grid[argmax] == 1 {
+            break;
+        }
+        grid[argmax] -= 1;
+    }
+    grid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_grid_square_matrix() {
+        // §4 example: p=16 workers, square-ish shape -> (4,4)-ish split.
+        let g = softmax_grid(&[256, 256], 16);
+        assert_eq!(g, vec![4, 4]);
+    }
+
+    #[test]
+    fn softmax_grid_tall_skinny() {
+        // tall-skinny: all weight on the tall axis.
+        let g = softmax_grid(&[31_250_000, 256], 16);
+        assert_eq!(g, vec![16, 1]);
+    }
+
+    #[test]
+    fn softmax_grid_paper_3d_example() {
+        // §4: p=16, near-balanced first two dims of a 3-d array -> (4,4,1).
+        let g = softmax_grid(&[256, 256, 4], 16);
+        assert_eq!(g, vec![4, 4, 1]);
+    }
+
+    #[test]
+    fn softmax_grid_never_exceeds_extent() {
+        let g = softmax_grid(&[3, 1_000_000], 64);
+        assert!(g[0] <= 3);
+        assert!(g.iter().product::<usize>() <= 64);
+    }
+
+    #[test]
+    fn place_all_round_robins_workers() {
+        // Fig. 4a: 4x4 blocks on a 2x2 node grid with 4 workers/node.
+        let layout = Layout::new(NodeGrid::new(&[2, 2]), 4);
+        let grid = ArrayGrid::new(&[256, 256], &[4, 4]);
+        let placements = layout.place_all(&grid);
+        assert_eq!(placements.len(), 16);
+        // each node receives exactly 4 blocks, workers 0..4 each once
+        for node in 0..4 {
+            let mut workers: Vec<usize> = placements
+                .iter()
+                .filter(|p| p.node == node)
+                .map(|p| p.worker)
+                .collect();
+            workers.sort_unstable();
+            assert_eq!(workers, vec![0, 1, 2, 3], "node {node}");
+        }
+        // Fig. 4 worked example: A_{2,3} -> node 1, worker 3.
+        let p23 = placements[grid.flat_of(&[2, 3])];
+        assert_eq!(p23.node, 1);
+        assert_eq!(p23.worker, 3);
+    }
+
+    #[test]
+    fn place_block_matches_place_all() {
+        let layout = Layout::new(NodeGrid::new(&[2, 2]), 3);
+        let grid = ArrayGrid::new(&[90, 90], &[5, 4]);
+        let all = layout.place_all(&grid);
+        for (f, c) in grid.iter_coords().enumerate() {
+            assert_eq!(layout.place_block(&grid, &c), all[f]);
+        }
+    }
+
+    #[test]
+    fn equal_grids_colocate() {
+        // The zero-communication invariant for element-wise ops (App. A.1).
+        let layout = Layout::new(NodeGrid::new(&[4, 1]), 8);
+        let g = ArrayGrid::new(&[1024, 64], &[16, 1]);
+        assert_eq!(layout.place_all(&g), layout.place_all(&g));
+    }
+}

@@ -1,0 +1,9 @@
+//! Array grids, node grids, and the hierarchical data layout (§4).
+
+pub mod array_grid;
+pub mod layout;
+pub mod node_grid;
+
+pub use array_grid::{ArrayGrid, Coords};
+pub use layout::{softmax_grid, Layout, Placement};
+pub use node_grid::NodeGrid;

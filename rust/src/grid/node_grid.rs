@@ -1,0 +1,131 @@
+//! Node grids and the hierarchical block→node mapping of §4.
+//!
+//! A [`NodeGrid`] is the user-defined multi-dimensional coordinate space
+//! for cluster nodes (e.g. `2×2` for 4 nodes, `16×1×1` for MTTKRP). The
+//! paper's placement rule for a 2-D grid `g1×g2` is
+//! `ℓ = (i % g1)·g2 + j % g2`; we generalize to n dimensions by reducing
+//! each block coordinate modulo the grid and flattening row-major.
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct NodeGrid {
+    pub dims: Vec<usize>,
+}
+
+impl NodeGrid {
+    pub fn new(dims: &[usize]) -> Self {
+        assert!(!dims.is_empty(), "node grid needs >= 1 dim");
+        assert!(dims.iter().all(|&d| d >= 1));
+        Self { dims: dims.to_vec() }
+    }
+
+    /// Total number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Map block coordinates to a node id (the paper's cyclic rule).
+    /// Block coordinate ranks above the grid rank are folded into the last
+    /// grid axis; missing trailing coordinates are treated as 0 — this lets
+    /// one node grid serve operand arrays of different rank (e.g. X (q×1)
+    /// and β (1×1) on an r×1 grid, §6).
+    pub fn place(&self, block_coords: &[usize]) -> usize {
+        let g = self.dims.len();
+        let mut node = 0;
+        for (axis, &dim) in self.dims.iter().enumerate() {
+            let mut c = block_coords.get(axis).copied().unwrap_or(0);
+            if axis == g - 1 {
+                // fold any extra block-coordinate rank into the last axis
+                for (extra_axis, &extra) in block_coords.iter().enumerate().skip(g) {
+                    let _ = extra_axis;
+                    c = c.wrapping_add(extra);
+                }
+            }
+            node = node * dim + (c % dim);
+        }
+        node
+    }
+
+    /// Node-grid coordinates of a node id (row-major inverse).
+    pub fn coords_of(&self, mut node: usize) -> Vec<usize> {
+        assert!(node < self.num_nodes());
+        let mut out = vec![0; self.dims.len()];
+        for axis in (0..self.dims.len()).rev() {
+            out[axis] = node % self.dims[axis];
+            node /= self.dims[axis];
+        }
+        out
+    }
+
+    /// A 1-D grid over `k` nodes (the default when the user gives none).
+    pub fn linear(k: usize) -> Self {
+        Self::new(&[k])
+    }
+
+    /// Near-square 2-D factoring of `k` (used by DGEMM benches).
+    pub fn square_ish(k: usize) -> Self {
+        let mut a = (k as f64).sqrt() as usize;
+        while a > 1 && k % a != 0 {
+            a -= 1;
+        }
+        Self::new(&[a.max(1), k / a.max(1)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_formula_2x2() {
+        // §4: for grid g1×g2, A_{i,j} goes to node (i%g1)*g2 + j%g2.
+        let g = NodeGrid::new(&[2, 2]);
+        let expect = |i: usize, j: usize| (i % 2) * 2 + (j % 2);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(g.place(&[i, j]), expect(i, j), "({i},{j})");
+            }
+        }
+        // Fig. 4: A_{2,3} -> node 1 (coords (0,1)).
+        assert_eq!(g.place(&[2, 3]), 1);
+    }
+
+    #[test]
+    fn rank_mismatch_tolerated() {
+        let g = NodeGrid::new(&[4, 1]);
+        // 1-D block coords on a 2-D grid: trailing treated as 0.
+        assert_eq!(g.place(&[3]), 3 * 1);
+        // 3-D block coords on a 2-D grid: extra rank folds into last axis.
+        let g2 = NodeGrid::new(&[2, 2]);
+        assert!(g2.place(&[1, 1, 5]) < 4);
+    }
+
+    #[test]
+    fn square_ish_factors() {
+        assert_eq!(NodeGrid::square_ish(16).dims, vec![4, 4]);
+        assert_eq!(NodeGrid::square_ish(8).dims, vec![2, 4]);
+        assert_eq!(NodeGrid::square_ish(1).dims, vec![1, 1]);
+        assert_eq!(NodeGrid::square_ish(7).dims, vec![1, 7]);
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let g = NodeGrid::new(&[2, 3, 4]);
+        for n in 0..g.num_nodes() {
+            let c = g.coords_of(n);
+            assert_eq!(g.place(&c), n);
+        }
+    }
+
+    #[test]
+    fn balanced_over_nodes_when_grid_divides() {
+        // 4x4 blocks over 2x2 nodes: each node holds exactly 4 blocks.
+        let g = NodeGrid::new(&[2, 2]);
+        let mut counts = [0usize; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                counts[g.place(&[i, j])] += 1;
+            }
+        }
+        assert_eq!(counts, [4, 4, 4, 4]);
+    }
+}

@@ -1,0 +1,237 @@
+//! CSV substrate (§8.6, Table 3): a serial reader (the Pandas stand-in)
+//! and a parallel byte-range reader (NumS's `read_csv`).
+//!
+//! The parallel reader splits the file into byte ranges aligned to line
+//! boundaries, parses each range on a worker task, and scatters the
+//! resulting row blocks with the session's data layout — eliminating the
+//! serial parse that dominates the Python stack's load time.
+
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::api::Session;
+use crate::graph::DistArray;
+use crate::grid::ArrayGrid;
+use crate::store::Block;
+
+/// Write a numeric matrix as CSV (no header).
+pub fn write_csv(block: &Block, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    let (m, n) = (block.rows(), block.cols());
+    for i in 0..m {
+        let mut line = String::with_capacity(n * 12);
+        for j in 0..n {
+            if j > 0 {
+                line.push(',');
+            }
+            line.push_str(&format!("{}", block.at2(i, j)));
+        }
+        line.push('\n');
+        f.write_all(line.as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Serial CSV reader (the Pandas `read_csv` baseline).
+pub fn read_csv_serial(path: impl AsRef<Path>) -> Result<Block> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {:?}", path.as_ref()))?;
+    let reader = BufReader::new(f);
+    let mut data: Vec<f64> = Vec::new();
+    let mut cols = 0usize;
+    let mut rows = 0usize;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut c = 0;
+        for tok in line.split(',') {
+            data.push(tok.trim().parse::<f64>().with_context(|| format!("parse {tok:?}"))?);
+            c += 1;
+        }
+        if rows == 0 {
+            cols = c;
+        } else if c != cols {
+            bail!("ragged CSV: row {rows} has {c} fields, want {cols}");
+        }
+        rows += 1;
+    }
+    if rows == 0 {
+        bail!("empty CSV");
+    }
+    Ok(Block::from_vec(&[rows, cols], data))
+}
+
+/// Parse one byte range (already line-aligned) into rows.
+fn parse_range(bytes: &[u8]) -> Result<(Vec<f64>, usize, usize)> {
+    let text = std::str::from_utf8(bytes).context("CSV is not UTF-8")?;
+    let mut data = Vec::new();
+    let mut rows = 0;
+    let mut cols = 0;
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut c = 0;
+        for tok in line.split(',') {
+            data.push(tok.trim().parse::<f64>()?);
+            c += 1;
+        }
+        if rows == 0 {
+            cols = c;
+        } else if c != cols {
+            bail!("ragged CSV inside range");
+        }
+        rows += 1;
+    }
+    Ok((data, rows, cols))
+}
+
+/// Split `[0, len)` into `parts` ranges aligned to `\n` boundaries.
+pub fn line_aligned_ranges(path: impl AsRef<Path>, parts: usize) -> Result<Vec<(u64, u64)>> {
+    let mut f = std::fs::File::open(path.as_ref())?;
+    let len = f.metadata()?.len();
+    if len == 0 {
+        bail!("empty file");
+    }
+    let mut cuts = vec![0u64];
+    for p in 1..parts {
+        let guess = len * p as u64 / parts as u64;
+        f.seek(SeekFrom::Start(guess))?;
+        let mut buf = Vec::new();
+        let mut byte = [0u8; 1];
+        let mut pos = guess;
+        // scan to the next newline
+        loop {
+            let n = f.read(&mut byte)?;
+            if n == 0 {
+                break;
+            }
+            pos += 1;
+            if byte[0] == b'\n' {
+                break;
+            }
+            buf.push(byte[0]);
+        }
+        if pos < len && pos > *cuts.last().unwrap() {
+            cuts.push(pos);
+        }
+    }
+    cuts.push(len);
+    cuts.dedup();
+    Ok(cuts.windows(2).map(|w| (w[0], w[1])).collect())
+}
+
+/// Parallel CSV reader: one parse task per byte range, scattered into a
+/// row-partitioned [`DistArray`] using the session's layout. Returns the
+/// array plus (rows, cols).
+pub fn read_csv_parallel(
+    sess: &mut Session,
+    path: impl AsRef<Path>,
+    parts: usize,
+) -> Result<(DistArray, usize, usize)> {
+    let path = path.as_ref();
+    let ranges = line_aligned_ranges(path, parts)?;
+    // parse ranges on threads (the "worker tasks")
+    let parsed: Vec<(Vec<f64>, usize, usize)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .iter()
+            .map(|&(a, b)| {
+                scope.spawn(move || -> Result<(Vec<f64>, usize, usize)> {
+                    let mut f = std::fs::File::open(path)?;
+                    f.seek(SeekFrom::Start(a))?;
+                    let mut buf = vec![0u8; (b - a) as usize];
+                    f.read_exact(&mut buf)?;
+                    parse_range(&buf)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect::<Result<Vec<_>>>()
+    })?;
+
+    let cols = parsed
+        .iter()
+        .find(|p| p.1 > 0)
+        .map(|p| p.2)
+        .context("no rows parsed")?;
+    let total_rows: usize = parsed.iter().map(|p| p.1).sum();
+
+    // Assemble in range order, then scatter with the near-even grid the
+    // session would use for this shape. (Block boundaries need not match
+    // byte-range boundaries.)
+    let mut all = Vec::with_capacity(total_rows * cols);
+    for (data, r, c) in &parsed {
+        if *r > 0 {
+            assert_eq!(*c, cols);
+            all.extend_from_slice(data);
+        }
+    }
+    let dense = Block::from_vec(&[total_rows, cols], all);
+    let q = parts.min(total_rows).max(1);
+    let arr = sess.scatter2(&dense, &[q, 1]);
+    let _ = ArrayGrid::new(&[total_rows, cols], &[q, 1]);
+    Ok((arr, total_rows, cols))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::SessionConfig;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("nums_csv_{}_{name}", std::process::id()))
+    }
+
+    fn random_block(m: usize, n: usize, seed: u64) -> Block {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut v = vec![0.0; m * n];
+        rng.fill_normal(&mut v);
+        Block::from_vec(&[m, n], v)
+    }
+
+    #[test]
+    fn roundtrip_serial() {
+        let b = random_block(37, 5, 1);
+        let p = tmp("rt");
+        write_csv(&b, &p).unwrap();
+        let back = read_csv_serial(&p).unwrap();
+        assert_eq!(back.shape, b.shape);
+        assert!(back.max_abs_diff(&b) < 1e-12);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let b = random_block(101, 4, 2);
+        let p = tmp("par");
+        write_csv(&b, &p).unwrap();
+        let serial = read_csv_serial(&p).unwrap();
+        let mut sess = Session::new(SessionConfig::real_small(2, 2));
+        let (arr, rows, cols) = read_csv_parallel(&mut sess, &p, 7).unwrap();
+        assert_eq!((rows, cols), (101, 4));
+        let dense = sess.fetch(&arr).unwrap();
+        assert!(dense.max_abs_diff(&serial) < 1e-12);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn ranges_cover_file_exactly() {
+        let b = random_block(50, 3, 3);
+        let p = tmp("ranges");
+        write_csv(&b, &p).unwrap();
+        let len = std::fs::metadata(&p).unwrap().len();
+        for parts in [1, 2, 3, 8, 64] {
+            let rs = line_aligned_ranges(&p, parts).unwrap();
+            assert_eq!(rs[0].0, 0);
+            assert_eq!(rs.last().unwrap().1, len);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gap between ranges");
+            }
+        }
+        std::fs::remove_file(p).ok();
+    }
+}

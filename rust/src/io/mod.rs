@@ -1,0 +1,5 @@
+//! I/O substrate: CSV readers (serial and parallel) and the synthetic
+//! HIGGS generator (§8.6).
+
+pub mod csv;
+pub mod higgs;

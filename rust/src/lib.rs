@@ -1,0 +1,45 @@
+//! # NumS-RS — Scalable Array Programming for the Cloud (reproduction)
+//!
+//! A full-system reproduction of *NumS* (Elibol et al., 2022): distributed
+//! NumPy-like arrays scheduled by **LSHS** (Load Simulated Hierarchical
+//! Scheduling) over a task-based distributed system, built as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3** (this crate): GraphArrays, LSHS, baseline schedulers, the
+//!   cluster simulator, GLMs, TSQR, tensor algebra, SUMMA, benches.
+//! * **L2/L1** (`python/compile`): JAX block-compute graphs and Pallas
+//!   kernels, AOT-lowered once to HLO text.
+//! * **Runtime**: the `xla` crate's PJRT CPU client loads and executes the
+//!   artifacts on the request path; Python is never invoked at runtime.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index,
+//! and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod api;
+pub mod bench;
+pub mod exec;
+pub mod glm;
+pub mod graph;
+pub mod grid;
+pub mod io;
+pub mod linalg;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod scheduler;
+pub mod store;
+pub mod summa;
+pub mod tensor;
+pub mod util;
+
+/// Convenience prelude for examples and benches.
+pub mod prelude {
+    pub use crate::api::{ExecMode, Policy, Session, SessionConfig};
+    pub use crate::graph::{build, DistArray, Graph};
+    pub use crate::grid::{ArrayGrid, NodeGrid};
+    pub use crate::net::model::{ComputeParams, NetParams, SystemMode};
+    pub use crate::runtime::{Backend, BinOp, Kernel};
+    pub use crate::scheduler::{ClusterState, Lshs, Topology};
+    pub use crate::store::Block;
+    pub use crate::util::rng::Rng;
+}

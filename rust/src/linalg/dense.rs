@@ -1,0 +1,312 @@
+//! Dense factorization substrate (the LAPACK the paper's workers call).
+//!
+//! The image's PJRT CPU client cannot run LAPACK custom-calls lowered by
+//! `jnp.linalg.*`, so the factorization kernels (QR for TSQR §8.3, Cholesky
+//! and SPD solves for Newton §6) are implemented here from scratch and
+//! exposed as block kernels through `runtime::native`.
+//!
+//! All routines are f64, row-major on [`Block`]s, and validated against
+//! reconstruction/identity properties in the tests below plus property
+//! suites in `rust/tests/prop_suites.rs`.
+
+use crate::store::Block;
+
+/// C = A · B (naive blocked i-k-j loop; the hot path for big blocks goes
+/// through PJRT — this is the substrate/fallback).
+pub fn matmul(a: &Block, b: &Block) -> Block {
+    let (m, ka) = (a.rows(), a.cols());
+    let (kb, n) = (b.rows(), b.cols());
+    assert_eq!(ka, kb, "matmul {:?} x {:?}", a.shape, b.shape);
+    let mut out = vec![0.0; m * n];
+    let (ab, bb) = (a.buf(), b.buf());
+    for i in 0..m {
+        let arow = &ab[i * ka..(i + 1) * ka];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &bb[k * n..(k + 1) * n];
+            for j in 0..n {
+                orow[j] += aik * brow[j];
+            }
+        }
+    }
+    Block::from_vec(&[m, n], out)
+}
+
+/// Thin (reduced) Householder QR: X[m,n] with m >= n -> (Q[m,n], R[n,n]),
+/// R upper-triangular with non-negative diagonal (canonical form, so
+/// TSQR trees produce comparable R factors).
+pub fn householder_qr(x: &Block) -> (Block, Block) {
+    let (m, n) = (x.rows(), x.cols());
+    assert!(m >= n, "thin QR needs m >= n, got {m}x{n}");
+    let mut r = x.buf().to_vec(); // working copy, becomes R in top n rows
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n); // Householder vectors
+
+    for k in 0..n {
+        // build v for column k below (and including) the diagonal
+        let mut norm2 = 0.0;
+        for i in k..m {
+            let v = r[i * n + k];
+            norm2 += v * v;
+        }
+        let norm = norm2.sqrt();
+        let x0 = r[k * n + k];
+        let alpha = if x0 >= 0.0 { -norm } else { norm };
+        let mut v = vec![0.0; m - k];
+        if norm > 0.0 {
+            v[0] = x0 - alpha;
+            for i in (k + 1)..m {
+                v[i - k] = r[i * n + k];
+            }
+            let vnorm2: f64 = v.iter().map(|t| t * t).sum();
+            if vnorm2 > 0.0 {
+                // apply H = I - 2 v v^T / (v^T v) to the trailing matrix
+                for j in k..n {
+                    let mut dot = 0.0;
+                    for i in k..m {
+                        dot += v[i - k] * r[i * n + j];
+                    }
+                    let scale = 2.0 * dot / vnorm2;
+                    for i in k..m {
+                        r[i * n + j] -= scale * v[i - k];
+                    }
+                }
+            }
+        }
+        vs.push(v);
+        // zero the column explicitly for numerical hygiene
+        for i in (k + 1)..m {
+            r[i * n + k] = 0.0;
+        }
+    }
+
+    // sign-canonicalize: make diag(R) >= 0 by flipping rows of R (and the
+    // corresponding columns of Q later via the flips vector)
+    let mut flips = vec![1.0; n];
+    for k in 0..n {
+        if r[k * n + k] < 0.0 {
+            flips[k] = -1.0;
+            for j in k..n {
+                r[k * n + j] = -r[k * n + j];
+            }
+        }
+    }
+
+    // form thin Q by applying the Householder reflectors to I[m,n]
+    let mut q = vec![0.0; m * n];
+    for (j, fj) in flips.iter().enumerate() {
+        q[j * n + j] = *fj; // column j of (I * flip)
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|t| t * t).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q[i * n + j];
+            }
+            let scale = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[i * n + j] -= scale * v[i - k];
+            }
+        }
+    }
+
+    let r_top = Block::from_vec(&[n, n], r[..n * n].to_vec());
+    (Block::from_vec(&[m, n], q), r_top)
+}
+
+/// Cholesky factor L (lower) of an SPD matrix A = L Lᵀ.
+pub fn cholesky(a: &Block) -> Block {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "cholesky needs square");
+    let src = a.buf();
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = src[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                assert!(sum > 0.0, "matrix not positive definite at {i} (sum={sum})");
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Block::from_vec(&[n, n], l)
+}
+
+/// Solve L y = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &Block, b: &Block) -> Block {
+    let n = l.rows();
+    assert_eq!(b.rows(), n);
+    let m = b.cols();
+    let (lb, bb) = (l.buf(), b.buf());
+    let mut y = bb.to_vec();
+    for c in 0..m {
+        for i in 0..n {
+            let mut v = y[i * m + c];
+            for k in 0..i {
+                v -= lb[i * n + k] * y[k * m + c];
+            }
+            y[i * m + c] = v / lb[i * n + i];
+        }
+    }
+    Block::from_vec(&[n, m], y)
+}
+
+/// Solve U x = b (back substitution), U upper-triangular.
+pub fn solve_upper(u: &Block, b: &Block) -> Block {
+    let n = u.rows();
+    assert_eq!(b.rows(), n);
+    let m = b.cols();
+    let (ub, bb) = (u.buf(), b.buf());
+    let mut x = bb.to_vec();
+    for c in 0..m {
+        for i in (0..n).rev() {
+            let mut v = x[i * m + c];
+            for k in (i + 1)..n {
+                v -= ub[i * n + k] * x[k * m + c];
+            }
+            x[i * m + c] = v / ub[i * n + i];
+        }
+    }
+    Block::from_vec(&[n, m], x)
+}
+
+/// Solve the SPD system A x = b via Cholesky (the Newton step H⁻¹g, §6).
+/// A tiny ridge keeps near-singular Hessians factorable, matching the
+/// Python reference (`model.newton_solve_ref`).
+pub fn solve_spd(a: &Block, b: &Block, ridge: f64) -> Block {
+    let n = a.rows();
+    let mut a2 = a.clone();
+    for i in 0..n {
+        let v = a2.at2(i, i) + ridge;
+        a2.set2(i, i, v);
+    }
+    let l = cholesky(&a2);
+    let y = solve_lower(&l, b);
+    // L^T x = y: solve with U = L^T
+    solve_upper(&l.transposed(), &y)
+}
+
+/// Inverse of an upper-triangular matrix (indirect TSQR's R⁻¹, §8.3).
+pub fn inv_upper(u: &Block) -> Block {
+    let n = u.rows();
+    assert_eq!(n, u.cols());
+    let mut eye = Block::zeros(&[n, n]);
+    for i in 0..n {
+        eye.set2(i, i, 1.0);
+    }
+    solve_upper(u, &eye)
+}
+
+/// Frobenius norm.
+pub fn fro_norm(a: &Block) -> f64 {
+    a.buf().iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+/// Identity block.
+pub fn eye(n: usize) -> Block {
+    let mut b = Block::zeros(&[n, n]);
+    for i in 0..n {
+        b.set2(i, i, 1.0);
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(shape: &[usize], seed: u64) -> Block {
+        let mut rng = Rng::seed_from_u64(seed);
+        let n: usize = shape.iter().product();
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v);
+        Block::from_vec(shape, v)
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = randn(&[5, 5], 1);
+        assert!(matmul(&a, &eye(5)).max_abs_diff(&a) < 1e-12);
+        assert!(matmul(&eye(5), &a).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        for (m, n, seed) in [(8, 8, 2), (20, 5, 3), (64, 16, 4), (5, 1, 5)] {
+            let x = randn(&[m, n], seed);
+            let (q, r) = householder_qr(&x);
+            assert_eq!(q.shape, vec![m, n]);
+            assert_eq!(r.shape, vec![n, n]);
+            let back = matmul(&q, &r);
+            assert!(back.max_abs_diff(&x) < 1e-10, "reconstruction {m}x{n}");
+            // orthonormal columns
+            let qtq = matmul(&q.transposed(), &q);
+            assert!(qtq.max_abs_diff(&eye(n)) < 1e-10, "Q^T Q != I");
+            // upper-triangular with non-negative diagonal
+            for i in 0..n {
+                assert!(r.at2(i, i) >= 0.0);
+                for j in 0..i {
+                    assert!(r.at2(i, j).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let x = randn(&[12, 6], 7);
+        let a = matmul(&x.transposed(), &x); // SPD (whp)
+        let l = cholesky(&a);
+        assert!(matmul(&l, &l.transposed()).max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn spd_solve_matches_direct() {
+        let x = randn(&[20, 5], 8);
+        let a = matmul(&x.transposed(), &x);
+        let b = randn(&[5, 2], 9);
+        let sol = solve_spd(&a, &b, 0.0);
+        assert!(matmul(&a, &sol).max_abs_diff(&b) < 1e-8);
+    }
+
+    #[test]
+    fn inv_upper_is_inverse() {
+        let x = randn(&[10, 4], 10);
+        let (_, r) = householder_qr(&x);
+        let rinv = inv_upper(&r);
+        assert!(matmul(&r, &rinv).max_abs_diff(&eye(4)) < 1e-9);
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let x = randn(&[6, 6], 11);
+        let a = matmul(&x.transposed(), &x);
+        let l = cholesky(&a);
+        let b = randn(&[6, 1], 12);
+        let y = solve_lower(&l, &b);
+        assert!(matmul(&l, &y).max_abs_diff(&b) < 1e-10);
+        let z = solve_upper(&l.transposed(), &y);
+        assert!(matmul(&a, &z).max_abs_diff(&b) < 1e-8);
+    }
+
+    #[test]
+    #[should_panic(expected = "not positive definite")]
+    fn cholesky_rejects_indefinite() {
+        let mut a = eye(3);
+        a.set2(2, 2, -1.0);
+        cholesky(&a);
+    }
+}

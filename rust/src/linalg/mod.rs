@@ -1,0 +1,5 @@
+//! Linear algebra: the dense factorization substrate and distributed
+//! TSQR algorithms (§8.3).
+
+pub mod dense;
+pub mod tsqr;

@@ -1,0 +1,221 @@
+//! Distributed tall-skinny QR (§8.3).
+//!
+//! * **Direct TSQR** (Benson–Gleich–Demmel [5]): per-block thin QR, a
+//!   binary tree of `StackQr` over the R factors, then Q recovered by
+//!   propagating the tree's Q-factor halves back down
+//!   (`Q_i = Q_i⁰ · Π_level Split{Top,Bottom}(Q^level)`).
+//! * **Indirect TSQR** (Constantine–Gleich [12], Spark MLlib's variant):
+//!   the same R tree (Q factors discarded), then `Q = X R⁻¹`.
+//!
+//! Both build one expression graph so LSHS sees the whole computation; the
+//! tree reduction inherits the locality-aware pairing that makes local
+//! stacks free.
+
+use anyhow::Result;
+
+use crate::api::{RunReport, Session};
+use crate::graph::vertex::Ref;
+use crate::graph::{DistArray, Graph};
+use crate::grid::ArrayGrid;
+use crate::runtime::kernel::Kernel;
+
+pub struct QrResult {
+    /// Row-partitioned Q [n, d] with X's grid.
+    pub q: DistArray,
+    /// Single-block R [d, d].
+    pub r: DistArray,
+    pub report: RunReport,
+}
+
+/// Direct TSQR: returns (Q, R) with Q explicitly formed.
+pub fn direct_tsqr(sess: &mut Session, x: &DistArray) -> Result<QrResult> {
+    assert_eq!(x.grid.grid[1], 1, "TSQR wants a row-partitioned tall matrix");
+    let d = x.grid.shape[1];
+    let q_blocks = x.grid.grid[0];
+    let mut g = Graph::new();
+
+    // level 0: thin QR per block
+    let mut level: Vec<(Ref, Vec<Ref>)> = Vec::with_capacity(q_blocks);
+    // (R ref, per-original-block factor path) — paths[i] collects the
+    // [d,d] factors to right-multiply into block i's Q.
+    let mut paths: Vec<Vec<Ref>> = vec![Vec::new(); q_blocks];
+    let mut q0: Vec<Ref> = Vec::with_capacity(q_blocks);
+    let mut owners: Vec<Vec<usize>> = Vec::with_capacity(q_blocks);
+    for i in 0..q_blocks {
+        let shape = x.grid.block_shape(&[i, 0]);
+        let leaf = g.leaf(x.obj_at(&[i, 0]), &shape);
+        let qr = g.op(Kernel::Qr, vec![(leaf, 0)]);
+        q0.push((qr, 0));
+        level.push(((qr, 1), Vec::new()));
+        owners.push(vec![i]);
+    }
+
+    // binary tree over R factors
+    while level.len() > 1 {
+        let mut next: Vec<(Ref, Vec<Ref>)> = Vec::new();
+        let mut next_owners: Vec<Vec<usize>> = Vec::new();
+        let mut it = 0;
+        while it + 1 < level.len() {
+            let (ra, _) = level[it].clone();
+            let (rb, _) = level[it + 1].clone();
+            let sqr = g.op(Kernel::StackQr, vec![ra, rb]);
+            let top = g.op(Kernel::SplitTop, vec![(sqr, 0)]);
+            let bot = g.op(Kernel::SplitBottom, vec![(sqr, 0)]);
+            for &blk in &owners[it] {
+                paths[blk].push((top, 0));
+            }
+            for &blk in &owners[it + 1] {
+                paths[blk].push((bot, 0));
+            }
+            let merged: Vec<usize> = owners[it]
+                .iter()
+                .chain(owners[it + 1].iter())
+                .cloned()
+                .collect();
+            next.push(((sqr, 1), Vec::new()));
+            next_owners.push(merged);
+            it += 2;
+        }
+        if it < level.len() {
+            next.push(level[it].clone());
+            next_owners.push(owners[it].clone());
+        }
+        level = next;
+        owners = next_owners;
+    }
+    let r_root = level[0].0;
+
+    // back-propagate: Q_i = Q_i^0 · path factors (in level order)
+    let q_roots: Vec<Ref> = (0..q_blocks)
+        .map(|i| {
+            let mut acc = q0[i];
+            for &f in &paths[i] {
+                acc = (g.op(Kernel::Matmul, vec![acc, f]), 0);
+            }
+            acc
+        })
+        .collect();
+
+    let q_grid = ArrayGrid::new(&[x.grid.shape[0], d], &[q_blocks, 1]);
+    let q_out = g.add_output(q_grid, q_roots);
+    let r_out = g.add_output(ArrayGrid::new(&[d, d], &[1, 1]), vec![r_root]);
+
+    let (outs, report) = sess.run(&mut g)?;
+    Ok(QrResult {
+        q: outs[q_out].clone(),
+        r: outs[r_out].clone(),
+        report,
+    })
+}
+
+/// Indirect TSQR: R from the tree, Q = X R⁻¹.
+pub fn indirect_tsqr(sess: &mut Session, x: &DistArray) -> Result<QrResult> {
+    assert_eq!(x.grid.grid[1], 1, "TSQR wants a row-partitioned tall matrix");
+    let d = x.grid.shape[1];
+    let q_blocks = x.grid.grid[0];
+    let mut g = Graph::new();
+
+    // R-only tree
+    let mut level: Vec<Ref> = (0..q_blocks)
+        .map(|i| {
+            let shape = x.grid.block_shape(&[i, 0]);
+            let leaf = g.leaf(x.obj_at(&[i, 0]), &shape);
+            (g.op(Kernel::Qr, vec![(leaf, 0)]), 1) // keep R, drop Q
+        })
+        .collect();
+    while level.len() > 1 {
+        let mut next = Vec::new();
+        let mut it = 0;
+        while it + 1 < level.len() {
+            let sqr = g.op(Kernel::StackQr, vec![level[it], level[it + 1]]);
+            next.push((sqr, 1));
+            it += 2;
+        }
+        if it < level.len() {
+            next.push(level[it]);
+        }
+        level = next;
+    }
+    let r_root = level[0];
+    let rinv = g.op(Kernel::InvUpper, vec![r_root]);
+
+    // Q_i = X_i @ R^{-1}
+    let q_roots: Vec<Ref> = (0..q_blocks)
+        .map(|i| {
+            let shape = x.grid.block_shape(&[i, 0]);
+            let leaf = g.leaf(x.obj_at(&[i, 0]), &shape);
+            (g.op(Kernel::Matmul, vec![(leaf, 0), (rinv, 0)]), 0)
+        })
+        .collect();
+
+    let q_grid = ArrayGrid::new(&[x.grid.shape[0], d], &[q_blocks, 1]);
+    let q_out = g.add_output(q_grid, q_roots);
+    let r_out = g.add_output(ArrayGrid::new(&[d, d], &[1, 1]), vec![r_root]);
+
+    let (outs, report) = sess.run(&mut g)?;
+    Ok(QrResult {
+        q: outs[q_out].clone(),
+        r: outs[r_out].clone(),
+        report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::SessionConfig;
+    use crate::linalg::dense;
+
+    fn check_qr(sess: &Session, x: &DistArray, res: &QrResult, tol: f64) {
+        let xd = sess.fetch(x).unwrap();
+        let qd = sess.fetch(&res.q).unwrap();
+        let rd = sess.fetch(&res.r).unwrap();
+        // reconstruction
+        let back = dense::matmul(&qd, &rd);
+        assert!(back.max_abs_diff(&xd) < tol, "QR != X");
+        // orthonormality
+        let qtq = dense::matmul(&qd.transposed(), &qd);
+        let d = rd.rows();
+        assert!(qtq.max_abs_diff(&dense::eye(d)) < tol, "QᵀQ != I");
+        // R upper-triangular
+        for i in 0..d {
+            for j in 0..i {
+                assert!(rd.at2(i, j).abs() < tol);
+            }
+        }
+    }
+
+    #[test]
+    fn direct_tsqr_correct() {
+        for q in [1usize, 2, 3, 4, 7] {
+            let mut sess = Session::new(SessionConfig::real_small(2, 2));
+            let x = sess.randn(&[64 * q, 8], &[q, 1]);
+            let res = direct_tsqr(&mut sess, &x).unwrap();
+            check_qr(&sess, &x, &res, 1e-9);
+        }
+    }
+
+    #[test]
+    fn indirect_tsqr_correct() {
+        for q in [1usize, 2, 5, 8] {
+            let mut sess = Session::new(SessionConfig::real_small(2, 2));
+            let x = sess.randn(&[32 * q, 6], &[q, 1]);
+            let res = indirect_tsqr(&mut sess, &x).unwrap();
+            check_qr(&sess, &x, &res, 1e-8);
+        }
+    }
+
+    #[test]
+    fn direct_and_indirect_agree_on_r() {
+        let mut s1 = Session::new(SessionConfig::real_small(2, 2));
+        let x1 = s1.randn(&[128, 4], &[4, 1]);
+        let r1 = direct_tsqr(&mut s1, &x1).unwrap();
+        let mut s2 = Session::new(SessionConfig::real_small(2, 2));
+        let x2 = s2.randn(&[128, 4], &[4, 1]);
+        let r2 = indirect_tsqr(&mut s2, &x2).unwrap();
+        // same data (same seed) -> same canonical R (non-negative diag)
+        let rd1 = s1.fetch(&r1.r).unwrap();
+        let rd2 = s2.fetch(&r2.r).unwrap();
+        assert!(rd1.max_abs_diff(&rd2) < 1e-8);
+    }
+}

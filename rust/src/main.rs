@@ -1,0 +1,211 @@
+//! `nums` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   info                       show artifacts manifest + cluster presets
+//!   validate                   cross-check PJRT artifacts vs the native oracle
+//!   logreg  [--n --d --q ...]  run distributed Newton logistic regression
+//!   dgemm   [--n --nodes]      NumS recursive matmul vs SUMMA (modeled)
+//!   bench --list               list figure benches (run via `cargo bench`)
+
+use anyhow::Result;
+use nums::prelude::*;
+use nums::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("info");
+    match cmd {
+        "info" => info(&args),
+        "validate" => validate(&args),
+        "logreg" => logreg(&args),
+        "dgemm" => dgemm(&args),
+        "bench" => {
+            println!("figure benches run via `cargo bench`:");
+            for b in [
+                "fig08_overheads",
+                "fig09_micro",
+                "tab02_blocksize",
+                "fig10_dgemm",
+                "fig11_tsqr",
+                "fig12_scaling",
+                "fig13_tensor",
+                "fig14_logreg",
+                "fig15_ablation",
+                "tab03_datasci",
+                "fig16_fraction",
+            ] {
+                println!("  cargo bench --bench {b}");
+            }
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}; try: info|validate|logreg|dgemm|bench");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info(_args: &Args) -> Result<()> {
+    let dir = nums::runtime::Manifest::default_dir();
+    match nums::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} entries in {:?}", m.len(), dir);
+            let mut names: Vec<String> = m
+                .entries()
+                .map(|e| format!("{} {:?}", e.name, e.dims))
+                .collect();
+            names.sort();
+            for n in names {
+                println!("  {n}");
+            }
+        }
+        Err(e) => println!("no artifacts manifest ({e}); run `make artifacts`"),
+    }
+    Ok(())
+}
+
+/// Execute every PJRT-supported artifact against the native oracle.
+fn validate(args: &Args) -> Result<()> {
+    let dir = nums::runtime::Manifest::default_dir();
+    let backend = Backend::pjrt(&dir)?;
+    let manifest = nums::runtime::Manifest::load(&dir)?;
+    let mut rng = Rng::seed_from_u64(args.u64_or("seed", 7));
+    let mut checked = 0;
+    let mut worst: f64 = 0.0;
+    for entry in manifest.entries() {
+        let kernel = match kernel_for(&entry.name) {
+            Some(k) => k,
+            None => continue,
+        };
+        let inputs: Vec<Block> = entry
+            .input_shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let n: usize = s.iter().product();
+                let mut v = vec![0.0; n];
+                rng.fill_normal(&mut v);
+                // keep GLM probability inputs in (0,1)
+                if entry.name == "logloss" && i == 0 {
+                    for x in v.iter_mut() {
+                        *x = 1.0 / (1.0 + (-*x).exp());
+                    }
+                }
+                if (entry.name == "logloss" && i == 1)
+                    || ((entry.name == "newton_block" || entry.name == "lbfgs_block") && i == 1)
+                    || (entry.name == "glm_grad" && i == 2)
+                {
+                    for x in v.iter_mut() {
+                        *x = if *x > 0.0 { 1.0 } else { 0.0 };
+                    }
+                }
+                if entry.name == "glm_grad" && i == 1 || entry.name == "glm_hess" && i == 1 {
+                    for x in v.iter_mut() {
+                        *x = 1.0 / (1.0 + (-*x).exp());
+                    }
+                }
+                Block::from_vec(s, v)
+            })
+            .collect();
+        let refs: Vec<&Block> = inputs.iter().collect();
+        let got = backend.execute(&kernel, &refs)?;
+        let want = nums::runtime::native::execute(&kernel, &refs)?;
+        for (gb, wb) in got.iter().zip(&want) {
+            let d = nums::util::stats::max_rel_diff(gb.buf(), wb.buf());
+            worst = worst.max(d);
+            assert!(
+                d < 1e-8,
+                "{} {:?}: pjrt vs native rel diff {d}",
+                entry.name,
+                entry.dims
+            );
+        }
+        checked += 1;
+    }
+    let (hits, _) = backend.counters();
+    println!("validated {checked} artifacts via PJRT ({hits} executions), worst rel diff {worst:.3e}");
+    Ok(())
+}
+
+fn kernel_for(name: &str) -> Option<Kernel> {
+    Some(match name {
+        "neg" => Kernel::Neg,
+        "sigmoid" => Kernel::Sigmoid,
+        "add" => Kernel::Ew(BinOp::Add),
+        "sub" => Kernel::Ew(BinOp::Sub),
+        "mul" => Kernel::Ew(BinOp::Mul),
+        "div" => Kernel::Ew(BinOp::Div),
+        "matmul" => Kernel::Matmul,
+        "matmul_nt" => Kernel::MatmulNT,
+        "gram" => Kernel::Gram,
+        "sum_axis0" => Kernel::SumAxis0,
+        "sum_axis1" => Kernel::SumAxis1,
+        "sum_all" => Kernel::SumAll,
+        "glm_mu" => Kernel::GlmMu,
+        "glm_grad" => Kernel::GlmGrad,
+        "glm_hess" => Kernel::GlmHess,
+        "logloss" => Kernel::LogLoss,
+        "newton_block" => Kernel::NewtonBlock,
+        "lbfgs_block" => Kernel::LbfgsBlock,
+        "predict_block" => Kernel::PredictBlock,
+        _ => return None,
+    })
+}
+
+fn logreg(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 1 << 15);
+    let d = args.usize_or("d", 32);
+    let q = args.usize_or("q", 8);
+    let nodes = args.usize_or("nodes", 4);
+    let wpn = args.usize_or("workers", 4);
+    let steps = args.usize_or("steps", 8);
+    let policy = nums::api::Policy::parse(args.str_or("policy", "lshs"))?;
+    let cfg = SessionConfig::real_small(nodes, wpn).with_policy(policy);
+    let mut sess = Session::new(cfg);
+    let (x, y) = nums::glm::classification_data(&mut sess, n, d, q, args.u64_or("seed", 1));
+    let res = nums::glm::newton_fit(&mut sess, &x, &y, steps, 1e-8)?;
+    println!("policy={} iters={} losses={:?}", sess.policy_name(), res.iters, res.losses);
+    let acc = nums::glm::accuracy(&mut sess, &x, &y, &res.beta)?;
+    println!(
+        "accuracy={acc:.4} sim_secs={:.3} transfer_bytes={}",
+        res.sim_secs(),
+        res.transfer_bytes()
+    );
+    Ok(())
+}
+
+fn dgemm(args: &Args) -> Result<()> {
+    let nodes = args.usize_or("nodes", 16);
+    let n = args.usize_or("n", 16384);
+    let wpn = args.usize_or("workers", 32);
+    // SUMMA (SLATE stand-in)
+    let summa = nums::summa::Summa::new(nodes, n).run(
+        NetParams::mpi_testbed(),
+        ComputeParams::mpi_testbed(),
+        wpn,
+    );
+    println!(
+        "SUMMA       n={n} nodes={nodes}: modeled {:.3}s ({} tasks)",
+        summa.report.makespan, summa.tasks
+    );
+    // NumS recursive matmul via LSHS (simulated)
+    let side = (nodes as f64).sqrt() as usize;
+    let cfg = SessionConfig::paper_sim(nodes, wpn)
+        .with_node_grid(NodeGrid::new(&[side, nodes / side]));
+    let mut sess = Session::new(cfg);
+    let g = side * 2;
+    let a = sess.zeros(&[n, n], &[g, g]);
+    let b = sess.zeros(&[n, n], &[g, g]);
+    let mut graph = Graph::new();
+    build::matmul(&mut graph, &a, &b);
+    let (_, rep) = sess.run(&mut graph)?;
+    println!(
+        "NumS (LSHS) n={n} nodes={nodes}: modeled {:.3}s ({} tasks, {} transfers)",
+        rep.sim.makespan, rep.tasks, rep.transfers
+    );
+    Ok(())
+}

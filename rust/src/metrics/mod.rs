@@ -1,0 +1,5 @@
+//! Load traces and report writers (Fig. 15, EXPERIMENTS.md tables).
+
+pub mod trace;
+
+pub use trace::{summarize_trace, trace_to_tsv, NodeSeries};

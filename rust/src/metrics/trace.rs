@@ -1,0 +1,124 @@
+//! Per-node load time-series (Fig. 15): build per-node series from the
+//! DES trace events, summarize balance, dump TSV for plotting.
+
+use crate::exec::TraceEvent;
+
+/// One node's sampled (t, mem, net_in, net_out) series.
+#[derive(Clone, Debug, Default)]
+pub struct NodeSeries {
+    pub node: usize,
+    pub t: Vec<f64>,
+    pub mem_bytes: Vec<u64>,
+    pub net_in_bytes: Vec<u64>,
+    pub net_out_bytes: Vec<u64>,
+}
+
+impl NodeSeries {
+    pub fn peak_mem(&self) -> u64 {
+        self.mem_bytes.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn final_net_in(&self) -> u64 {
+        self.net_in_bytes.last().copied().unwrap_or(0)
+    }
+}
+
+/// Split raw events into per-node, time-sorted series.
+pub fn per_node_series(events: &[TraceEvent], nodes: usize) -> Vec<NodeSeries> {
+    let mut out: Vec<NodeSeries> = (0..nodes)
+        .map(|n| NodeSeries {
+            node: n,
+            ..Default::default()
+        })
+        .collect();
+    let mut sorted: Vec<&TraceEvent> = events.iter().collect();
+    sorted.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+    for e in sorted {
+        let s = &mut out[e.node];
+        s.t.push(e.t);
+        s.mem_bytes.push(e.mem_bytes);
+        s.net_in_bytes.push(e.net_in_bytes);
+        s.net_out_bytes.push(e.net_out_bytes);
+    }
+    out
+}
+
+/// Summary of a trace: (max peak mem, mean peak mem, max net_in, mean
+/// net_in, balance ratio max/mean of mem). "Densely clustered curves"
+/// in the paper = balance ratio near 1.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSummary {
+    pub max_peak_mem: u64,
+    pub mean_peak_mem: f64,
+    pub max_net_in: u64,
+    pub mean_net_in: f64,
+    pub mem_balance_ratio: f64,
+}
+
+pub fn summarize_trace(events: &[TraceEvent], nodes: usize) -> TraceSummary {
+    let series = per_node_series(events, nodes);
+    let peaks: Vec<u64> = series.iter().map(|s| s.peak_mem()).collect();
+    let ins: Vec<u64> = series.iter().map(|s| s.final_net_in()).collect();
+    let max_peak = peaks.iter().copied().max().unwrap_or(0);
+    let mean_peak = peaks.iter().sum::<u64>() as f64 / nodes.max(1) as f64;
+    TraceSummary {
+        max_peak_mem: max_peak,
+        mean_peak_mem: mean_peak,
+        max_net_in: ins.iter().copied().max().unwrap_or(0),
+        mean_net_in: ins.iter().sum::<u64>() as f64 / nodes.max(1) as f64,
+        mem_balance_ratio: max_peak as f64 / mean_peak.max(1.0),
+    }
+}
+
+/// TSV dump: `t  node  mem_bytes  net_in_bytes  net_out_bytes`.
+pub fn trace_to_tsv(events: &[TraceEvent]) -> String {
+    let mut out = String::from("t\tnode\tmem_bytes\tnet_in_bytes\tnet_out_bytes\n");
+    for e in events {
+        out.push_str(&format!(
+            "{:.6}\t{}\t{}\t{}\t{}\n",
+            e.t, e.node, e.mem_bytes, e.net_in_bytes, e.net_out_bytes
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: f64, node: usize, mem: u64, nin: u64) -> TraceEvent {
+        TraceEvent {
+            t,
+            node,
+            mem_bytes: mem,
+            net_in_bytes: nin,
+            net_out_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn series_split_and_sorted() {
+        let events = vec![ev(2.0, 0, 30, 5), ev(1.0, 0, 10, 0), ev(1.5, 1, 20, 0)];
+        let s = per_node_series(&events, 2);
+        assert_eq!(s[0].t, vec![1.0, 2.0]);
+        assert_eq!(s[0].peak_mem(), 30);
+        assert_eq!(s[1].peak_mem(), 20);
+    }
+
+    #[test]
+    fn summary_balance_ratio() {
+        let events = vec![ev(1.0, 0, 100, 0), ev(1.0, 1, 100, 0)];
+        let sm = summarize_trace(&events, 2);
+        assert!((sm.mem_balance_ratio - 1.0).abs() < 1e-9);
+        let skew = vec![ev(1.0, 0, 300, 0), ev(1.0, 1, 100, 0)];
+        assert!(summarize_trace(&skew, 2).mem_balance_ratio > 1.4);
+    }
+
+    #[test]
+    fn tsv_has_header_and_rows() {
+        let t = trace_to_tsv(&[ev(0.5, 1, 8, 8)]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("t\tnode"));
+    }
+}

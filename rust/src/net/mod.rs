@@ -1,0 +1,5 @@
+//! The α–β–γ communication model of §7 / Appendix A.
+
+pub mod model;
+
+pub use model::{LinkParams, NetParams};

@@ -1,0 +1,111 @@
+//! Kernel backend selection.
+//!
+//! [`Backend`] is what executors call. `Native` runs everything in-process;
+//! `Pjrt` prefers AOT artifacts for supported (kernel, shape) pairs and
+//! falls back to native for the rest (factorizations, odd shapes). The
+//! composite keeps counters so benches can report the artifact hit-rate.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::store::Block;
+
+use super::kernel::Kernel;
+use super::native;
+use super::pjrt::PjrtRuntime;
+
+pub enum Backend {
+    Native,
+    Pjrt {
+        rt: Arc<PjrtRuntime>,
+        pjrt_hits: AtomicU64,
+        native_falls: AtomicU64,
+    },
+}
+
+impl Backend {
+    pub fn native() -> Self {
+        Backend::Native
+    }
+
+    /// PJRT-preferring backend over the given artifacts dir.
+    pub fn pjrt(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(Backend::Pjrt {
+            rt: Arc::new(PjrtRuntime::new(dir)?),
+            pjrt_hits: AtomicU64::new(0),
+            native_falls: AtomicU64::new(0),
+        })
+    }
+
+    /// PJRT over the default artifacts dir (`$NUMS_ARTIFACTS` or
+    /// `./artifacts`), or native if artifacts are missing.
+    pub fn auto() -> Self {
+        let dir = super::manifest::Manifest::default_dir();
+        match Self::pjrt(&dir) {
+            Ok(b) => b,
+            Err(_) => Backend::Native,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt { .. } => "pjrt+native",
+        }
+    }
+
+    /// Execute a kernel over real blocks.
+    pub fn execute(&self, kernel: &Kernel, inputs: &[&Block]) -> Result<Vec<Block>> {
+        match self {
+            Backend::Native => native::execute(kernel, inputs),
+            Backend::Pjrt {
+                rt,
+                pjrt_hits,
+                native_falls,
+            } => {
+                let shapes: Vec<Vec<usize>> = inputs.iter().map(|b| b.shape.clone()).collect();
+                if rt.supports(kernel, &shapes) {
+                    pjrt_hits.fetch_add(1, Ordering::Relaxed);
+                    rt.execute(kernel, inputs)
+                } else {
+                    native_falls.fetch_add(1, Ordering::Relaxed);
+                    native::execute(kernel, inputs)
+                }
+            }
+        }
+    }
+
+    /// (pjrt executions, native fallbacks) so far.
+    pub fn counters(&self) -> (u64, u64) {
+        match self {
+            Backend::Native => (0, 0),
+            Backend::Pjrt {
+                pjrt_hits,
+                native_falls,
+                ..
+            } => (
+                pjrt_hits.load(Ordering::Relaxed),
+                native_falls.load(Ordering::Relaxed),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::kernel::BinOp;
+
+    #[test]
+    fn native_backend_executes() {
+        let b = Backend::native();
+        let x = Block::from_vec(&[1, 2], vec![1., 2.]);
+        let y = Block::from_vec(&[1, 2], vec![3., 4.]);
+        let out = b.execute(&Kernel::Ew(BinOp::Add), &[&x, &y]).unwrap();
+        assert_eq!(out[0].buf(), &[4., 6.]);
+        assert_eq!(b.counters(), (0, 0));
+        assert_eq!(b.name(), "native");
+    }
+}

@@ -1,0 +1,343 @@
+//! The block-kernel vocabulary of the system.
+//!
+//! Every block-level task executes one [`Kernel`]. Each kernel knows its
+//! output shapes (given input shapes), its cost model for the simulated
+//! executor (FLOPs / element traffic), and — when an AOT artifact exists —
+//! the manifest name used to find the PJRT executable lowered by
+//! `python/compile/aot.py`.
+
+use std::fmt;
+
+/// Element-wise binary micro-op used by reduce trees and GraphArray.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Kernel {
+    // --- element-wise (1 output) ---
+    Neg,
+    Sigmoid,
+    Scale(f64),
+    Ew(BinOp),
+    // --- contractions (1 output) ---
+    /// A[m,k] @ B[k,n]
+    Matmul,
+    /// A[m,k] @ B[n,k]^T (lazy-transpose outer product)
+    MatmulNT,
+    /// A[k,m]^T @ B[k,n] (lazy-transpose inner product / Gram)
+    Gram,
+    // --- reductions over one block (1 output) ---
+    SumAxis0,
+    SumAxis1,
+    SumAll,
+    // --- fused GLM kernels (L1) ---
+    GlmMu,
+    GlmGrad,
+    GlmHess,
+    LogLoss,
+    // --- fused L2 composites ---
+    /// (X[m,d], y[m,1], beta[d,1]) -> (g[d,1], H[d,d], loss[1,1])
+    NewtonBlock,
+    /// (X[m,d], y[m,1], beta[d,1]) -> (g[d,1], loss[1,1])
+    LbfgsBlock,
+    /// (X[m,d], beta[d,1]) -> mu[m,1]
+    PredictBlock,
+    // --- factorization kernels (native only; LAPACK substrate) ---
+    /// X[m,n] -> (Q[m,n], R[n,n]) thin Householder QR
+    Qr,
+    /// (Ra[d,d], Rb[d,d]) -> (Q[2d,d], R[d,d]): QR of the stacked pair
+    StackQr,
+    /// Q[2d,d] -> top/bottom [d,d] half (TSQR Q back-propagation)
+    SplitTop,
+    SplitBottom,
+    /// R[n,n] -> R^{-1} (indirect TSQR)
+    InvUpper,
+    /// A[n,n] SPD -> L[n,n]
+    Cholesky,
+    /// (H[d,d], g[d,1]) -> H^{-1} g with a tiny ridge (Newton step)
+    SolveSpd,
+    /// X[m,n] -> X^T[n,m] (only when fusion is impossible)
+    Transpose,
+    /// (X[m,d], w[m,1]) -> w ⊙ X (row-broadcast multiply; the unfused
+    /// Dask-ML pipeline materializes this dataset-sized intermediate, §8.5)
+    ColScale,
+    // --- tensor algebra (native only) ---
+    /// (X[a,b,c], B[b,f], C[c,f]) -> out[a,f]: block MTTKRP term (§8.4)
+    MttkrpTerm,
+    /// (X[a,b,c], Y[b,c,f]) -> out[a,f]: double contraction term (§8.4)
+    TensordotJK,
+    /// (X[a,b,c], B[b,f]) -> W[a,c,f]: stage 1 of a *materializing*
+    /// pairwise einsum (the Dask-Arrays baseline of Fig. 13a, which
+    /// contracts operands two at a time and materializes the F×-larger
+    /// intermediate)
+    EinsumXB,
+    /// (W[a,c,f], C[c,f]) -> out[a,f]: stage 2 of the pairwise einsum
+    EinsumWC,
+}
+
+impl Kernel {
+    /// Number of outputs.
+    pub fn n_outputs(&self) -> usize {
+        match self {
+            Kernel::NewtonBlock => 3,
+            Kernel::LbfgsBlock | Kernel::Qr | Kernel::StackQr => 2,
+            _ => 1,
+        }
+    }
+
+    /// Output shapes given input shapes. Panics on arity/shape mismatch —
+    /// graph construction must only emit well-formed tasks.
+    pub fn out_shapes(&self, ins: &[Vec<usize>]) -> Vec<Vec<usize>> {
+        let two = |s: &[Vec<usize>]| (s[0].clone(), s[1].clone());
+        match self {
+            Kernel::Neg | Kernel::Sigmoid | Kernel::Scale(_) => vec![ins[0].clone()],
+            Kernel::Ew(_) => {
+                let (a, b) = two(ins);
+                assert_eq!(a, b, "ew shape mismatch {a:?} vs {b:?}");
+                vec![a]
+            }
+            Kernel::Matmul => {
+                assert_eq!(ins[0][1], ins[1][0], "matmul {:?} @ {:?}", ins[0], ins[1]);
+                vec![vec![ins[0][0], ins[1][1]]]
+            }
+            Kernel::MatmulNT => {
+                assert_eq!(ins[0][1], ins[1][1], "matmul_nt {:?} {:?}", ins[0], ins[1]);
+                vec![vec![ins[0][0], ins[1][0]]]
+            }
+            Kernel::Gram => {
+                assert_eq!(ins[0][0], ins[1][0], "gram {:?} {:?}", ins[0], ins[1]);
+                vec![vec![ins[0][1], ins[1][1]]]
+            }
+            Kernel::SumAxis0 => vec![vec![1, ins[0][1]]],
+            Kernel::SumAxis1 => vec![vec![ins[0][0], 1]],
+            Kernel::SumAll => vec![vec![1, 1]],
+            Kernel::GlmMu | Kernel::PredictBlock => vec![vec![ins[0][0], 1]],
+            Kernel::GlmGrad => vec![vec![ins[0][1], 1]],
+            Kernel::GlmHess => vec![vec![ins[0][1], ins[0][1]]],
+            Kernel::LogLoss => vec![vec![1, 1]],
+            Kernel::NewtonBlock => {
+                let d = ins[0][1];
+                vec![vec![d, 1], vec![d, d], vec![1, 1]]
+            }
+            Kernel::LbfgsBlock => {
+                let d = ins[0][1];
+                vec![vec![d, 1], vec![1, 1]]
+            }
+            Kernel::Qr => {
+                let (m, n) = (ins[0][0], ins[0][1]);
+                assert!(m >= n, "thin QR needs m >= n");
+                vec![vec![m, n], vec![n, n]]
+            }
+            Kernel::StackQr => {
+                let d = ins[0][0];
+                assert_eq!(ins[0], ins[1], "StackQr wants equal square Rs");
+                vec![vec![2 * d, d], vec![d, d]]
+            }
+            Kernel::SplitTop | Kernel::SplitBottom => {
+                let d = ins[0][1];
+                assert_eq!(ins[0][0], 2 * d);
+                vec![vec![d, d]]
+            }
+            Kernel::InvUpper | Kernel::Cholesky => {
+                assert_eq!(ins[0][0], ins[0][1]);
+                vec![ins[0].clone()]
+            }
+            Kernel::SolveSpd => vec![ins[1].clone()],
+            Kernel::Transpose => vec![vec![ins[0][1], ins[0][0]]],
+            Kernel::ColScale => {
+                assert_eq!(ins[1], vec![ins[0][0], 1], "colscale weight shape");
+                vec![ins[0].clone()]
+            }
+            Kernel::MttkrpTerm => {
+                let (a, b, c) = (ins[0][0], ins[0][1], ins[0][2]);
+                let f = ins[1][1];
+                assert_eq!(ins[1][0], b, "mttkrp B rows");
+                assert_eq!(ins[2], vec![c, f], "mttkrp C shape");
+                vec![vec![a, f]]
+            }
+            Kernel::TensordotJK => {
+                let (a, b, c) = (ins[0][0], ins[0][1], ins[0][2]);
+                let f = ins[1][2];
+                assert_eq!(&ins[1][..2], &[b, c], "tensordot inner dims");
+                vec![vec![a, f]]
+            }
+            Kernel::EinsumXB => {
+                let (a, b, c) = (ins[0][0], ins[0][1], ins[0][2]);
+                let f = ins[1][1];
+                assert_eq!(ins[1][0], b, "einsum XB inner dim");
+                vec![vec![a, c, f]]
+            }
+            Kernel::EinsumWC => {
+                let (a, c, f) = (ins[0][0], ins[0][1], ins[0][2]);
+                assert_eq!(ins[1], vec![c, f], "einsum WC shapes");
+                vec![vec![a, f]]
+            }
+        }
+    }
+
+    /// Dense FLOP count for the cost model (contractions) — 0 for
+    /// bandwidth-bound kernels, which are charged by element instead.
+    pub fn flops(&self, ins: &[Vec<usize>]) -> f64 {
+        let p = |s: &[usize]| s.iter().map(|&x| x as f64).product::<f64>();
+        match self {
+            Kernel::Matmul => 2.0 * ins[0][0] as f64 * ins[0][1] as f64 * ins[1][1] as f64,
+            Kernel::MatmulNT => 2.0 * ins[0][0] as f64 * ins[0][1] as f64 * ins[1][0] as f64,
+            Kernel::Gram => 2.0 * ins[0][0] as f64 * ins[0][1] as f64 * ins[1][1] as f64,
+            Kernel::GlmMu | Kernel::PredictBlock => 2.0 * p(&ins[0]),
+            Kernel::GlmGrad => 2.0 * p(&ins[0]),
+            Kernel::GlmHess => 2.0 * p(&ins[0]) * ins[0][1] as f64 / 2.0 + 2.0 * p(&ins[0]),
+            Kernel::NewtonBlock => {
+                // mu + grad + hess + loss
+                let x = p(&ins[0]);
+                2.0 * x + 2.0 * x + (x * ins[0][1] as f64 + 2.0 * x) + 8.0 * ins[0][0] as f64
+            }
+            Kernel::LbfgsBlock => 4.0 * p(&ins[0]) + 8.0 * ins[0][0] as f64,
+            Kernel::Qr => 2.0 * ins[0][0] as f64 * (ins[0][1] as f64).powi(2),
+            Kernel::StackQr => 4.0 * (ins[0][0] as f64).powi(3),
+            Kernel::InvUpper | Kernel::Cholesky | Kernel::SolveSpd => {
+                (ins[0][0] as f64).powi(3) / 3.0
+            }
+            Kernel::MttkrpTerm => 3.0 * p(&ins[0]) * ins[1][1] as f64,
+            Kernel::TensordotJK => 2.0 * p(&ins[0]) * ins[1][2] as f64,
+            Kernel::EinsumXB => 2.0 * p(&ins[0]) * ins[1][1] as f64,
+            Kernel::EinsumWC => 3.0 * p(&ins[0]),
+            _ => 0.0,
+        }
+    }
+
+    /// Elements touched, for bandwidth-bound kernels.
+    pub fn ew_elems(&self, ins: &[Vec<usize>]) -> f64 {
+        ins.iter()
+            .map(|s| s.iter().map(|&x| x as f64).product::<f64>())
+            .sum()
+    }
+
+    /// Manifest (AOT artifact) name, if this kernel has a Python builder.
+    pub fn manifest_name(&self) -> Option<&'static str> {
+        Some(match self {
+            Kernel::Neg => "neg",
+            Kernel::Sigmoid => "sigmoid",
+            Kernel::Ew(BinOp::Add) => "add",
+            Kernel::Ew(BinOp::Sub) => "sub",
+            Kernel::Ew(BinOp::Mul) => "mul",
+            Kernel::Ew(BinOp::Div) => "div",
+            Kernel::Matmul => "matmul",
+            Kernel::MatmulNT => "matmul_nt",
+            Kernel::Gram => "gram",
+            Kernel::SumAxis0 => "sum_axis0",
+            Kernel::SumAxis1 => "sum_axis1",
+            Kernel::SumAll => "sum_all",
+            Kernel::GlmMu => "glm_mu",
+            Kernel::GlmGrad => "glm_grad",
+            Kernel::GlmHess => "glm_hess",
+            Kernel::LogLoss => "logloss",
+            Kernel::NewtonBlock => "newton_block",
+            Kernel::LbfgsBlock => "lbfgs_block",
+            Kernel::PredictBlock => "predict_block",
+            _ => return None,
+        })
+    }
+
+    /// Whether the cost model should charge FLOPs (compute-bound) rather
+    /// than elements (bandwidth-bound).
+    pub fn is_contraction(&self) -> bool {
+        matches!(
+            self,
+            Kernel::Matmul
+                | Kernel::MatmulNT
+                | Kernel::Gram
+                | Kernel::GlmMu
+                | Kernel::GlmGrad
+                | Kernel::GlmHess
+                | Kernel::NewtonBlock
+                | Kernel::LbfgsBlock
+                | Kernel::PredictBlock
+                | Kernel::Qr
+                | Kernel::StackQr
+                | Kernel::InvUpper
+                | Kernel::Cholesky
+                | Kernel::SolveSpd
+                | Kernel::MttkrpTerm
+                | Kernel::TensordotJK
+                | Kernel::EinsumXB
+                | Kernel::EinsumWC
+        )
+    }
+}
+
+impl fmt::Display for Kernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.manifest_name() {
+            Some(n) => write!(f, "{n}"),
+            None => write!(f, "{self:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_shapes_basic() {
+        let k = Kernel::Matmul;
+        assert_eq!(k.out_shapes(&[vec![4, 8], vec![8, 3]]), vec![vec![4, 3]]);
+        assert_eq!(
+            Kernel::Gram.out_shapes(&[vec![100, 4], vec![100, 6]]),
+            vec![vec![4, 6]]
+        );
+        assert_eq!(
+            Kernel::MatmulNT.out_shapes(&[vec![4, 8], vec![5, 8]]),
+            vec![vec![4, 5]]
+        );
+    }
+
+    #[test]
+    fn multi_output_arity() {
+        assert_eq!(Kernel::NewtonBlock.n_outputs(), 3);
+        let outs = Kernel::NewtonBlock.out_shapes(&[vec![512, 8], vec![512, 1], vec![8, 1]]);
+        assert_eq!(outs, vec![vec![8, 1], vec![8, 8], vec![1, 1]]);
+        let qr = Kernel::Qr.out_shapes(&[vec![32, 4]]);
+        assert_eq!(qr, vec![vec![32, 4], vec![4, 4]]);
+        let sq = Kernel::StackQr.out_shapes(&[vec![4, 4], vec![4, 4]]);
+        assert_eq!(sq, vec![vec![8, 4], vec![4, 4]]);
+    }
+
+    #[test]
+    fn tensor_shapes() {
+        assert_eq!(
+            Kernel::MttkrpTerm.out_shapes(&[vec![4, 5, 6], vec![5, 10], vec![6, 10]]),
+            vec![vec![4, 10]]
+        );
+        assert_eq!(
+            Kernel::TensordotJK.out_shapes(&[vec![4, 5, 6], vec![5, 6, 10]]),
+            vec![vec![4, 10]]
+        );
+    }
+
+    #[test]
+    fn flops_positive_for_contractions() {
+        assert!(Kernel::Matmul.flops(&[vec![64, 64], vec![64, 64]]) > 0.0);
+        assert_eq!(Kernel::Ew(BinOp::Add).flops(&[vec![64, 64], vec![64, 64]]), 0.0);
+        assert!(Kernel::Matmul.is_contraction());
+        assert!(!Kernel::Neg.is_contraction());
+    }
+
+    #[test]
+    fn manifest_names() {
+        assert_eq!(Kernel::Ew(BinOp::Add).manifest_name(), Some("add"));
+        assert_eq!(Kernel::Qr.manifest_name(), None);
+        assert_eq!(Kernel::NewtonBlock.manifest_name(), Some("newton_block"));
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul")]
+    fn matmul_shape_mismatch_panics() {
+        Kernel::Matmul.out_shapes(&[vec![4, 8], vec![7, 3]]);
+    }
+}

@@ -1,0 +1,163 @@
+//! Loader for `artifacts/manifest.tsv` written by `python/compile/aot.py`.
+//!
+//! Each row describes one AOT-lowered (kernel, shape) artifact:
+//! `name \t dims \t file \t n_outputs \t input_shapes \t output_shapes`
+//! where shape lists are `;`-separated `x`-joined dims. Entries are indexed
+//! by `(name, input_shapes)` — exactly what the runtime knows at dispatch
+//! time.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub file: PathBuf,
+    pub n_outputs: usize,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+#[derive(Default, Debug)]
+pub struct Manifest {
+    /// (kernel name, input shapes) -> entry
+    by_sig: HashMap<(String, Vec<Vec<usize>>), ManifestEntry>,
+    pub dir: PathBuf,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    s.split('x')
+        .map(|t| t.parse::<usize>().with_context(|| format!("bad dim {t:?}")))
+        .collect()
+}
+
+fn parse_shapes(s: &str) -> Result<Vec<Vec<usize>>> {
+    if s.is_empty() {
+        return Ok(vec![]);
+    }
+    s.split(';').map(parse_shape).collect()
+}
+
+impl Manifest {
+    /// Load `dir/manifest.tsv`. Missing manifest is an error — callers that
+    /// want optional PJRT use [`Manifest::load_optional`].
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let mut m = Manifest {
+            by_sig: HashMap::new(),
+            dir: dir.clone(),
+        };
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 6 {
+                bail!("manifest line {} has {} cols, want 6", lineno + 1, cols.len());
+            }
+            let entry = ManifestEntry {
+                name: cols[0].to_string(),
+                dims: parse_shape(cols[1])?,
+                file: dir.join(cols[2]),
+                n_outputs: cols[3].parse().context("n_outputs")?,
+                input_shapes: parse_shapes(cols[4])?,
+                output_shapes: parse_shapes(cols[5])?,
+            };
+            if entry.n_outputs != entry.output_shapes.len() {
+                bail!("manifest line {}: output arity mismatch", lineno + 1);
+            }
+            m.by_sig
+                .insert((entry.name.clone(), entry.input_shapes.clone()), entry);
+        }
+        Ok(m)
+    }
+
+    /// Load if present; empty manifest otherwise.
+    pub fn load_optional(dir: impl AsRef<Path>) -> Self {
+        Self::load(&dir).unwrap_or_else(|_| Manifest {
+            by_sig: HashMap::new(),
+            dir: dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn lookup(&self, name: &str, input_shapes: &[Vec<usize>]) -> Option<&ManifestEntry> {
+        self.by_sig
+            .get(&(name.to_string(), input_shapes.to_vec()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_sig.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_sig.is_empty()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &ManifestEntry> {
+        self.by_sig.values()
+    }
+
+    /// Default artifacts directory: `$NUMS_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("NUMS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.tsv")).unwrap();
+        writeln!(f, "# header").unwrap();
+        write!(f, "{body}").unwrap();
+    }
+
+    #[test]
+    fn parses_rows_and_lookups() {
+        let dir = std::env::temp_dir().join(format!("nums_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(
+            &dir,
+            "add\t64x64\tadd_64x64.hlo.txt\t1\t64x64;64x64\t64x64\n\
+             newton_block\t512x8\tnb.hlo.txt\t3\t512x8;512x1;8x1\t8x1;8x8;1x1\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 2);
+        let e = m
+            .lookup("add", &[vec![64, 64], vec![64, 64]])
+            .expect("add entry");
+        assert_eq!(e.n_outputs, 1);
+        let nb = m
+            .lookup("newton_block", &[vec![512, 8], vec![512, 1], vec![8, 1]])
+            .expect("newton entry");
+        assert_eq!(nb.output_shapes, vec![vec![8, 1], vec![8, 8], vec![1, 1]]);
+        assert!(m.lookup("add", &[vec![3, 3], vec![3, 3]]).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_optional_tolerates_missing() {
+        let m = Manifest::load_optional("/nonexistent/nowhere");
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        let dir = std::env::temp_dir().join(format!("nums_manifest_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, "add\t64x64\tf.hlo\n");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,14 @@
+//! Kernel runtime: the block-kernel vocabulary, the native (pure-Rust)
+//! implementation, and the PJRT loader for AOT artifacts produced by
+//! `python/compile/aot.py`.
+
+pub mod backend;
+pub mod kernel;
+pub mod manifest;
+pub mod native;
+pub mod pjrt;
+
+pub use backend::Backend;
+pub use kernel::{BinOp, Kernel};
+pub use manifest::{Manifest, ManifestEntry};
+pub use pjrt::PjrtRuntime;

@@ -1,0 +1,419 @@
+//! Pure-Rust kernel backend.
+//!
+//! Implements every [`Kernel`] for arbitrary block shapes. Three roles:
+//! 1. fallback for (kernel, shape) pairs without an AOT artifact,
+//! 2. host for the factorization/tensor kernels PJRT cannot run,
+//! 3. independent oracle the PJRT backend is cross-checked against
+//!    (`rust/tests/integration_runtime.rs`).
+
+use anyhow::{bail, Result};
+
+use crate::linalg::dense;
+use crate::store::Block;
+
+use super::kernel::{BinOp, Kernel};
+
+/// Execute `kernel` over real input blocks, producing real output blocks.
+pub fn execute(kernel: &Kernel, inputs: &[&Block]) -> Result<Vec<Block>> {
+    let out = match kernel {
+        Kernel::Neg => vec![map1(inputs[0], |v| -v)],
+        Kernel::Sigmoid => vec![map1(inputs[0], |v| 1.0 / (1.0 + (-v).exp()))],
+        Kernel::Scale(c) => {
+            let c = *c;
+            vec![map1(inputs[0], move |v| c * v)]
+        }
+        Kernel::Ew(op) => vec![map2(inputs[0], inputs[1], *op)?],
+        Kernel::Matmul => vec![dense::matmul(inputs[0], inputs[1])],
+        Kernel::MatmulNT => vec![dense::matmul(inputs[0], &inputs[1].transposed())],
+        Kernel::Gram => vec![dense::matmul(&inputs[0].transposed(), inputs[1])],
+        Kernel::SumAxis0 => vec![sum_axis0(inputs[0])],
+        Kernel::SumAxis1 => vec![sum_axis1(inputs[0])],
+        Kernel::SumAll => {
+            let s: f64 = inputs[0].buf().iter().sum();
+            vec![Block::from_vec(&[1, 1], vec![s])]
+        }
+        Kernel::GlmMu | Kernel::PredictBlock => vec![glm_mu(inputs[0], inputs[1])],
+        Kernel::GlmGrad => vec![glm_grad(inputs[0], inputs[1], inputs[2])],
+        Kernel::GlmHess => vec![glm_hess(inputs[0], inputs[1])],
+        Kernel::LogLoss => vec![logloss(inputs[0], inputs[1])],
+        Kernel::NewtonBlock => {
+            let (x, y, beta) = (inputs[0], inputs[1], inputs[2]);
+            let mu = glm_mu(x, beta);
+            vec![glm_grad(x, &mu, y), glm_hess(x, &mu), logloss(&mu, y)]
+        }
+        Kernel::LbfgsBlock => {
+            let (x, y, beta) = (inputs[0], inputs[1], inputs[2]);
+            let mu = glm_mu(x, beta);
+            vec![glm_grad(x, &mu, y), logloss(&mu, y)]
+        }
+        Kernel::Qr => {
+            let (q, r) = dense::householder_qr(inputs[0]);
+            vec![q, r]
+        }
+        Kernel::StackQr => {
+            let stacked = inputs[0].vstack(inputs[1]);
+            let (q, r) = dense::householder_qr(&stacked);
+            vec![q, r]
+        }
+        Kernel::SplitTop => {
+            let d = inputs[0].cols();
+            vec![inputs[0].slice_rows(0, d)]
+        }
+        Kernel::SplitBottom => {
+            let d = inputs[0].cols();
+            vec![inputs[0].slice_rows(d, 2 * d)]
+        }
+        Kernel::InvUpper => vec![dense::inv_upper(inputs[0])],
+        Kernel::Cholesky => vec![dense::cholesky(inputs[0])],
+        Kernel::SolveSpd => vec![dense::solve_spd(inputs[0], inputs[1], 1e-10)],
+        Kernel::Transpose => vec![inputs[0].transposed()],
+        Kernel::ColScale => {
+            let (x, w) = (inputs[0], inputs[1]);
+            let (m, d) = (x.rows(), x.cols());
+            assert_eq!(w.shape, vec![m, 1]);
+            let (xb, wb) = (x.buf(), w.buf());
+            let mut out = vec![0.0; m * d];
+            for i in 0..m {
+                let wi = wb[i];
+                for j in 0..d {
+                    out[i * d + j] = wi * xb[i * d + j];
+                }
+            }
+            vec![Block::from_vec(&[m, d], out)]
+        }
+        Kernel::MttkrpTerm => vec![mttkrp_term(inputs[0], inputs[1], inputs[2])],
+        Kernel::TensordotJK => vec![tensordot_jk(inputs[0], inputs[1])],
+        Kernel::EinsumXB => vec![einsum_xb(inputs[0], inputs[1])],
+        Kernel::EinsumWC => vec![einsum_wc(inputs[0], inputs[1])],
+    };
+    // sanity: shapes must match the kernel contract
+    let want = kernel.out_shapes(&inputs.iter().map(|b| b.shape.clone()).collect::<Vec<_>>());
+    for (o, w) in out.iter().zip(&want) {
+        if &o.shape != w {
+            bail!("{kernel}: produced {:?}, contract says {:?}", o.shape, w);
+        }
+    }
+    Ok(out)
+}
+
+fn map1(x: &Block, f: impl Fn(f64) -> f64) -> Block {
+    Block::from_vec(&x.shape, x.buf().iter().map(|&v| f(v)).collect())
+}
+
+fn map2(x: &Block, y: &Block, op: BinOp) -> Result<Block> {
+    if x.shape != y.shape {
+        bail!("ew shape mismatch {:?} vs {:?}", x.shape, y.shape);
+    }
+    let f = |a: f64, b: f64| match op {
+        BinOp::Add => a + b,
+        BinOp::Sub => a - b,
+        BinOp::Mul => a * b,
+        BinOp::Div => a / b,
+    };
+    Ok(Block::from_vec(
+        &x.shape,
+        x.buf().iter().zip(y.buf()).map(|(&a, &b)| f(a, b)).collect(),
+    ))
+}
+
+fn sum_axis0(x: &Block) -> Block {
+    let (m, n) = (x.rows(), x.cols());
+    let mut out = vec![0.0; n];
+    let b = x.buf();
+    for i in 0..m {
+        for j in 0..n {
+            out[j] += b[i * n + j];
+        }
+    }
+    Block::from_vec(&[1, n], out)
+}
+
+fn sum_axis1(x: &Block) -> Block {
+    let (m, n) = (x.rows(), x.cols());
+    let mut out = vec![0.0; m];
+    let b = x.buf();
+    for i in 0..m {
+        out[i] = b[i * n..(i + 1) * n].iter().sum();
+    }
+    Block::from_vec(&[m, 1], out)
+}
+
+fn glm_mu(x: &Block, beta: &Block) -> Block {
+    let (m, d) = (x.rows(), x.cols());
+    assert_eq!(beta.shape, vec![d, 1]);
+    let (xb, bb) = (x.buf(), beta.buf());
+    let mut out = vec![0.0; m];
+    for i in 0..m {
+        let mut z = 0.0;
+        for j in 0..d {
+            z += xb[i * d + j] * bb[j];
+        }
+        out[i] = 1.0 / (1.0 + (-z).exp());
+    }
+    Block::from_vec(&[m, 1], out)
+}
+
+fn glm_grad(x: &Block, mu: &Block, y: &Block) -> Block {
+    let (m, d) = (x.rows(), x.cols());
+    let (xb, mb, yb) = (x.buf(), mu.buf(), y.buf());
+    let mut out = vec![0.0; d];
+    for i in 0..m {
+        let r = mb[i] - yb[i];
+        for j in 0..d {
+            out[j] += xb[i * d + j] * r;
+        }
+    }
+    Block::from_vec(&[d, 1], out)
+}
+
+fn glm_hess(x: &Block, mu: &Block) -> Block {
+    let (m, d) = (x.rows(), x.cols());
+    let (xb, mb) = (x.buf(), mu.buf());
+    let mut out = vec![0.0; d * d];
+    for i in 0..m {
+        let w = mb[i] * (1.0 - mb[i]);
+        let row = &xb[i * d..(i + 1) * d];
+        for a in 0..d {
+            let wa = w * row[a];
+            for b in 0..d {
+                out[a * d + b] += wa * row[b];
+            }
+        }
+    }
+    Block::from_vec(&[d, d], out)
+}
+
+const LOGLOSS_EPS: f64 = 1e-12;
+
+fn logloss(mu: &Block, y: &Block) -> Block {
+    let mut s = 0.0;
+    for (&m, &yy) in mu.buf().iter().zip(y.buf()) {
+        let m = m.clamp(LOGLOSS_EPS, 1.0 - LOGLOSS_EPS);
+        s -= yy * m.ln() + (1.0 - yy) * (1.0 - m).ln();
+    }
+    Block::from_vec(&[1, 1], vec![s])
+}
+
+/// out[a,f] = Σ_{b,c} X[a,b,c] · B[b,f] · C[c,f] — the MTTKRP block term
+/// for `einsum("ijk,jf,kf->if")` (§8.4).
+fn mttkrp_term(x: &Block, bm: &Block, cm: &Block) -> Block {
+    let (a, b, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    let f = bm.shape[1];
+    assert_eq!(bm.shape, vec![b, f]);
+    assert_eq!(cm.shape, vec![c, f]);
+    let (xb, bb, cb) = (x.buf(), bm.buf(), cm.buf());
+    let mut out = vec![0.0; a * f];
+    // contract c first: T[a,b,f] implicit — loop order keeps C rows hot
+    for ia in 0..a {
+        for ib in 0..b {
+            let xrow = &xb[(ia * b + ib) * c..(ia * b + ib + 1) * c];
+            let brow = &bb[ib * f..(ib + 1) * f];
+            let orow = &mut out[ia * f..(ia + 1) * f];
+            for (ic, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let crow = &cb[ic * f..(ic + 1) * f];
+                for jf in 0..f {
+                    orow[jf] += xv * brow[jf] * crow[jf];
+                }
+            }
+        }
+    }
+    Block::from_vec(&[a, f], out)
+}
+
+/// W[a,c,f] = Σ_b X[a,b,c] · B[b,f] — stage 1 of the materializing
+/// pairwise einsum baseline (Fig. 13a's Dask Arrays behaviour).
+fn einsum_xb(x: &Block, bm: &Block) -> Block {
+    let (a, b, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    let f = bm.shape[1];
+    assert_eq!(bm.shape[0], b);
+    let (xb, bb) = (x.buf(), bm.buf());
+    let mut out = vec![0.0; a * c * f];
+    for ia in 0..a {
+        for ib in 0..b {
+            let brow = &bb[ib * f..(ib + 1) * f];
+            for ic in 0..c {
+                let xv = xb[(ia * b + ib) * c + ic];
+                if xv == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[(ia * c + ic) * f..(ia * c + ic + 1) * f];
+                for jf in 0..f {
+                    orow[jf] += xv * brow[jf];
+                }
+            }
+        }
+    }
+    Block::from_vec(&[a, c, f], out)
+}
+
+/// out[a,f] = Σ_c W[a,c,f] · C[c,f] — stage 2 of the pairwise einsum.
+fn einsum_wc(w: &Block, cm: &Block) -> Block {
+    let (a, c, f) = (w.shape[0], w.shape[1], w.shape[2]);
+    assert_eq!(cm.shape, vec![c, f]);
+    let (wb, cb) = (w.buf(), cm.buf());
+    let mut out = vec![0.0; a * f];
+    for ia in 0..a {
+        let orow = &mut out[ia * f..(ia + 1) * f];
+        for ic in 0..c {
+            let wrow = &wb[(ia * c + ic) * f..(ia * c + ic + 1) * f];
+            let crow = &cb[ic * f..(ic + 1) * f];
+            for jf in 0..f {
+                orow[jf] += wrow[jf] * crow[jf];
+            }
+        }
+    }
+    Block::from_vec(&[a, f], out)
+}
+
+/// out[a,f] = Σ_{b,c} X[a,b,c] · Y[b,c,f] — tensor double contraction.
+fn tensordot_jk(x: &Block, y: &Block) -> Block {
+    let (a, b, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    let f = y.shape[2];
+    assert_eq!(&y.shape[..2], &[b, c]);
+    let (xb, yb) = (x.buf(), y.buf());
+    let mut out = vec![0.0; a * f];
+    for ia in 0..a {
+        let orow = &mut out[ia * f..(ia + 1) * f];
+        for ib in 0..b {
+            for ic in 0..c {
+                let xv = xb[(ia * b + ib) * c + ic];
+                if xv == 0.0 {
+                    continue;
+                }
+                let yrow = &yb[(ib * c + ic) * f..(ib * c + ic + 1) * f];
+                for jf in 0..f {
+                    orow[jf] += xv * yrow[jf];
+                }
+            }
+        }
+    }
+    Block::from_vec(&[a, f], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(shape: &[usize], seed: u64) -> Block {
+        let mut rng = Rng::seed_from_u64(seed);
+        let n: usize = shape.iter().product();
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v);
+        Block::from_vec(shape, v)
+    }
+
+    #[test]
+    fn ew_ops() {
+        let a = Block::from_vec(&[1, 3], vec![1., 2., 3.]);
+        let b = Block::from_vec(&[1, 3], vec![4., 5., 6.]);
+        let sum = execute(&Kernel::Ew(BinOp::Add), &[&a, &b]).unwrap();
+        assert_eq!(sum[0].buf(), &[5., 7., 9.]);
+        let neg = execute(&Kernel::Neg, &[&a]).unwrap();
+        assert_eq!(neg[0].buf(), &[-1., -2., -3.]);
+    }
+
+    #[test]
+    fn contraction_variants_agree_with_transpose() {
+        let x = randn(&[7, 4], 1);
+        let y = randn(&[7, 5], 2);
+        let g = execute(&Kernel::Gram, &[&x, &y]).unwrap();
+        let manual = dense::matmul(&x.transposed(), &y);
+        assert!(g[0].max_abs_diff(&manual) < 1e-12);
+
+        let z = randn(&[6, 4], 3);
+        let nt = execute(&Kernel::MatmulNT, &[&x, &z]).unwrap();
+        let manual = dense::matmul(&x, &z.transposed());
+        assert!(nt[0].max_abs_diff(&manual) < 1e-12);
+    }
+
+    #[test]
+    fn glm_kernels_consistent_with_composites() {
+        let x = randn(&[40, 5], 4);
+        let y = map1(&randn(&[40, 1], 5), |v| if v > 0.0 { 1.0 } else { 0.0 });
+        let beta = map1(&randn(&[5, 1], 6), |v| 0.1 * v);
+        let mu = execute(&Kernel::GlmMu, &[&x, &beta]).unwrap().remove(0);
+        let g = execute(&Kernel::GlmGrad, &[&x, &mu, &y]).unwrap().remove(0);
+        let h = execute(&Kernel::GlmHess, &[&x, &mu]).unwrap().remove(0);
+        let l = execute(&Kernel::LogLoss, &[&mu, &y]).unwrap().remove(0);
+        let fused = execute(&Kernel::NewtonBlock, &[&x, &y, &beta]).unwrap();
+        assert!(fused[0].max_abs_diff(&g) < 1e-12);
+        assert!(fused[1].max_abs_diff(&h) < 1e-12);
+        assert!(fused[2].max_abs_diff(&l) < 1e-12);
+    }
+
+    #[test]
+    fn qr_and_stack_qr() {
+        let x = randn(&[32, 4], 7);
+        let out = execute(&Kernel::Qr, &[&x]).unwrap();
+        let back = dense::matmul(&out[0], &out[1]);
+        assert!(back.max_abs_diff(&x) < 1e-10);
+
+        let ra = out[1].clone();
+        let (_, rb) = dense::householder_qr(&randn(&[32, 4], 8));
+        let sq = execute(&Kernel::StackQr, &[&ra, &rb]).unwrap();
+        let back = dense::matmul(&sq[0], &sq[1]);
+        assert!(back.max_abs_diff(&ra.vstack(&rb)) < 1e-10);
+        let top = execute(&Kernel::SplitTop, &[&sq[0]]).unwrap();
+        let bot = execute(&Kernel::SplitBottom, &[&sq[0]]).unwrap();
+        assert_eq!(top[0].shape, vec![4, 4]);
+        assert_eq!(bot[0].shape, vec![4, 4]);
+    }
+
+    #[test]
+    fn mttkrp_matches_naive() {
+        let x = randn(&[3, 4, 5], 9);
+        let b = randn(&[4, 6], 10);
+        let c = randn(&[5, 6], 11);
+        let got = execute(&Kernel::MttkrpTerm, &[&x, &b, &c]).unwrap().remove(0);
+        let mut want = vec![0.0; 3 * 6];
+        for i in 0..3 {
+            for j in 0..4 {
+                for k in 0..5 {
+                    for f in 0..6 {
+                        want[i * 6 + f] += x.buf()[(i * 4 + j) * 5 + k]
+                            * b.buf()[j * 6 + f]
+                            * c.buf()[k * 6 + f];
+                    }
+                }
+            }
+        }
+        assert!(crate::util::stats::max_abs_diff(got.buf(), &want) < 1e-12);
+    }
+
+    #[test]
+    fn tensordot_matches_naive() {
+        let x = randn(&[3, 4, 5], 12);
+        let y = randn(&[4, 5, 7], 13);
+        let got = execute(&Kernel::TensordotJK, &[&x, &y]).unwrap().remove(0);
+        let mut want = vec![0.0; 3 * 7];
+        for i in 0..3 {
+            for j in 0..4 {
+                for k in 0..5 {
+                    for f in 0..7 {
+                        want[i * 7 + f] +=
+                            x.buf()[(i * 4 + j) * 5 + k] * y.buf()[(j * 5 + k) * 7 + f];
+                    }
+                }
+            }
+        }
+        assert!(crate::util::stats::max_abs_diff(got.buf(), &want) < 1e-12);
+    }
+
+    #[test]
+    fn reductions() {
+        let x = Block::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(
+            execute(&Kernel::SumAxis0, &[&x]).unwrap()[0].buf(),
+            &[5., 7., 9.]
+        );
+        assert_eq!(
+            execute(&Kernel::SumAxis1, &[&x]).unwrap()[0].buf(),
+            &[6., 15.]
+        );
+        assert_eq!(execute(&Kernel::SumAll, &[&x]).unwrap()[0].buf(), &[21.]);
+    }
+}

@@ -1,0 +1,147 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! request path.
+//!
+//! This is the only module that touches the `xla` crate. The interchange
+//! format is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5 emits
+//! serialized protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md §4.3).
+//!
+//! Executables are compiled lazily per manifest entry and cached. A process
+//! has one `PjRtClient::cpu()`; the client and compiled executables are
+//! wrapped in a mutex-protected cache and the *execution* call itself is
+//! serialized per-executable — the upstream PJRT CPU client is thread-safe
+//! for execution, but the `xla` crate's bindings do not declare `Send`, so
+//! we keep a conservative single execution lock (measured in §Perf; the
+//! real executor overlaps native kernels with PJRT calls).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::store::Block;
+
+use super::kernel::Kernel;
+use super::manifest::{Manifest, ManifestEntry};
+
+struct Inner {
+    client: xla::PjRtClient,
+    /// artifact file path -> compiled executable
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: the PJRT CPU client is internally synchronized for compilation
+// and execution (it is the same client the Python jax runtime shares across
+// threads). The `xla` crate merely wraps raw pointers without declaring
+// Send. All access from our side is additionally serialized by the Mutex in
+// `PjrtRuntime`, so no unsynchronized aliasing can occur.
+unsafe impl Send for Inner {}
+
+/// Lazily-compiling PJRT kernel runtime.
+pub struct PjrtRuntime {
+    inner: Mutex<Inner>,
+    pub manifest: Manifest,
+    /// Executions performed (for perf reports).
+    pub exec_count: std::sync::atomic::AtomicU64,
+}
+
+impl PjrtRuntime {
+    /// Create a runtime over the artifacts in `dir` (must contain
+    /// `manifest.tsv`).
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Self {
+            inner: Mutex::new(Inner {
+                client,
+                executables: HashMap::new(),
+            }),
+            manifest,
+            exec_count: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Whether this runtime can execute `kernel` over the given shapes.
+    pub fn supports(&self, kernel: &Kernel, input_shapes: &[Vec<usize>]) -> bool {
+        kernel
+            .manifest_name()
+            .and_then(|n| self.manifest.lookup(n, input_shapes))
+            .is_some()
+    }
+
+    fn entry_for(&self, kernel: &Kernel, input_shapes: &[Vec<usize>]) -> Result<ManifestEntry> {
+        let name = kernel
+            .manifest_name()
+            .ok_or_else(|| anyhow!("{kernel} has no AOT artifact (native-only kernel)"))?;
+        self.manifest
+            .lookup(name, input_shapes)
+            .cloned()
+            .ok_or_else(|| anyhow!("no artifact for {name} with inputs {input_shapes:?}"))
+    }
+
+    /// Execute `kernel` on real blocks through the compiled artifact.
+    pub fn execute(&self, kernel: &Kernel, inputs: &[&Block]) -> Result<Vec<Block>> {
+        let shapes: Vec<Vec<usize>> = inputs.iter().map(|b| b.shape.clone()).collect();
+        let entry = self.entry_for(kernel, &shapes)?;
+
+        let mut inner = self.inner.lock().unwrap();
+        // compile-on-first-use, cached thereafter
+        let key = entry.file.to_string_lossy().to_string();
+        if !inner.executables.contains_key(&key) {
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .map_err(|e| anyhow!("parse {:?}: {e:?}", entry.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {:?}: {e:?}", entry.file))?;
+            inner.executables.insert(key.clone(), exe);
+        }
+        let exe = &inner.executables[&key];
+
+        // Blocks are row-major f64; literals take the same layout.
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|b| {
+                let lit = xla::Literal::vec1(b.buf());
+                let dims: Vec<i64> = b.shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {kernel}: {e:?}"))?;
+        self.exec_count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        let mut parts = root
+            .to_tuple()
+            .map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        if parts.len() != entry.n_outputs {
+            bail!(
+                "{kernel}: artifact returned {} outputs, manifest says {}",
+                parts.len(),
+                entry.n_outputs
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, shape) in parts.drain(..).zip(&entry.output_shapes) {
+            let v: Vec<f64> = lit
+                .to_vec()
+                .map_err(|e| anyhow!("literal to_vec: {e:?}"))
+                .context("output literal")?;
+            out.push(Block::from_vec(shape, v));
+        }
+        Ok(out)
+    }
+
+    /// Number of distinct compiled executables (for perf reports).
+    pub fn compiled_count(&self) -> usize {
+        self.inner.lock().unwrap().executables.len()
+    }
+}

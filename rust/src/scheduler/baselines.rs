@@ -1,0 +1,361 @@
+//! Baseline dynamic schedulers the paper ablates LSHS against (§8).
+//!
+//! * [`RoundRobin`] — Dask-like: independent (creation) tasks round-robin
+//!   over workers (the Fig. 2 pathology), dependent tasks on the target
+//!   holding the most input bytes (Dask's `decide_worker` locality rule),
+//!   reduce operands paired in construction order (the "reduction tree
+//!   constructed before physical mapping is known" behaviour of §8.4).
+//! * [`BottomUp`] — Ray-without-LSHS: the driver's local scheduler keeps
+//!   work on the driver-adjacent node until its load saturates, then
+//!   spills to the least-loaded node ("Ray executes the majority of
+//!   submitted tasks on a single node", §8.5/Fig. 15).
+//! * [`RandomPlace`] — uniform-random placement, a pure-noise control.
+
+use crate::exec::task::Plan;
+use crate::graph::vertex::Vertex;
+use crate::graph::Graph;
+use crate::grid::ArrayGrid;
+use crate::store::IdGen;
+use crate::util::rng::Rng;
+
+use super::{
+    commit_op, commit_reduce_pair, op_view, reduce_leaf_positions, ClusterState, Scheduler,
+};
+
+// ---------------------------------------------------------------- RoundRobin
+
+pub struct RoundRobin {
+    next: usize,
+    /// Tasks assigned per target (Dask's `decide_worker` occupancy
+    /// tie-break: without it, greedy locality + caching collapses whole
+    /// workloads onto one worker).
+    assigned: Vec<usize>,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        Self {
+            next: 0,
+            assigned: Vec::new(),
+        }
+    }
+
+    /// Target owning the most input bytes; ties broken by occupancy.
+    fn most_data_target(&mut self, state: &ClusterState, inputs: &[u64]) -> usize {
+        if self.assigned.len() != state.targets() {
+            self.assigned = vec![0; state.targets()];
+        }
+        let mut best = 0usize;
+        let mut best_key = (-1.0f64, usize::MAX);
+        for t in 0..state.targets() {
+            let mut bytes = 0.0;
+            for &obj in inputs {
+                if state.locations_of(obj).contains(&t) {
+                    bytes += state.size_of(obj);
+                }
+            }
+            let key = (bytes, self.assigned[t]);
+            if key.0 > best_key.0 || (key.0 == best_key.0 && key.1 < best_key.1) {
+                best_key = key;
+                best = t;
+            }
+        }
+        self.assigned[best] += 1;
+        best
+    }
+}
+
+impl Default for RoundRobin {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for RoundRobin {
+    fn name(&self) -> String {
+        "round-robin".into()
+    }
+
+    fn place_creation(&mut self, grid: &ArrayGrid, state: &mut ClusterState) -> Vec<usize> {
+        let k = state.targets();
+        (0..grid.num_blocks())
+            .map(|_| {
+                let t = self.next % k;
+                self.next += 1;
+                t
+            })
+            .collect()
+    }
+
+    fn schedule(
+        &mut self,
+        graph: &mut Graph,
+        state: &mut ClusterState,
+        ids: &IdGen,
+        plan: &mut Plan,
+    ) {
+        loop {
+            let frontier = graph.frontier();
+            if frontier.is_empty() {
+                break;
+            }
+            // deterministic order: first frontier vertex
+            let vid = frontier[0];
+            match &graph.vertices[vid] {
+                Vertex::Op { .. } => {
+                    let view = op_view(graph, vid);
+                    let target = self.most_data_target(state, &view.inputs);
+                    commit_op(graph, state, ids, plan, vid, target);
+                }
+                Vertex::Reduce { .. } => {
+                    // naive pairing: first two leaves in construction order
+                    let pos = reduce_leaf_positions(graph, vid);
+                    let (pa, pb) = (pos[0], pos[1]);
+                    let ch = graph.vertices[vid].children();
+                    let inputs = vec![graph.resolve(ch[pa]), graph.resolve(ch[pb])];
+                    let target = self.most_data_target(state, &inputs);
+                    commit_reduce_pair(graph, state, ids, plan, vid, pa, pb, target);
+                }
+                Vertex::Leaf { .. } => unreachable!(),
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------ BottomUp
+
+pub struct BottomUp {
+    /// Node the driver process is attached to.
+    pub driver_target: usize,
+    /// Spill multiplier: stay local while mem[driver] <= spill * mean(mem).
+    pub spill_factor: f64,
+}
+
+impl BottomUp {
+    pub fn new() -> Self {
+        Self {
+            driver_target: 0,
+            spill_factor: 4.0,
+        }
+    }
+
+    fn pick(&self, state: &ClusterState) -> usize {
+        let mean = state.mem.iter().sum::<f64>() / state.mem.len() as f64;
+        if state.mem[self.driver_target] <= self.spill_factor * mean.max(1.0) {
+            self.driver_target
+        } else {
+            // forward to the centralized scheduler: least memory load
+            (0..state.targets())
+                .min_by(|&a, &b| state.mem[a].partial_cmp(&state.mem[b]).unwrap())
+                .unwrap()
+        }
+    }
+}
+
+impl Default for BottomUp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for BottomUp {
+    fn name(&self) -> String {
+        "bottom-up".into()
+    }
+
+    fn place_creation(&mut self, grid: &ArrayGrid, state: &mut ClusterState) -> Vec<usize> {
+        // §2: "when a local scheduler is presented with a collection of
+        // tasks which have no dependencies, it distributes tasks to reduce
+        // overall load" — creation spreads by least memory, with no notion
+        // of operand co-location (the Fig. 2 pathology's other half).
+        let mut projected = state.mem.clone();
+        let per_block = grid.num_elems() as f64 / grid.num_blocks() as f64;
+        (0..grid.num_blocks())
+            .map(|_| {
+                let t = (0..projected.len())
+                    .min_by(|&a, &b| projected[a].partial_cmp(&projected[b]).unwrap())
+                    .unwrap();
+                projected[t] += per_block;
+                t
+            })
+            .collect()
+    }
+
+    fn schedule(
+        &mut self,
+        graph: &mut Graph,
+        state: &mut ClusterState,
+        ids: &IdGen,
+        plan: &mut Plan,
+    ) {
+        loop {
+            let frontier = graph.frontier();
+            if frontier.is_empty() {
+                break;
+            }
+            let vid = frontier[0];
+            match &graph.vertices[vid] {
+                Vertex::Op { .. } => {
+                    let target = self.pick(state);
+                    commit_op(graph, state, ids, plan, vid, target);
+                }
+                Vertex::Reduce { .. } => {
+                    let pos = reduce_leaf_positions(graph, vid);
+                    let target = self.pick(state);
+                    commit_reduce_pair(graph, state, ids, plan, vid, pos[0], pos[1], target);
+                }
+                Vertex::Leaf { .. } => unreachable!(),
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- RandomPlace
+
+pub struct RandomPlace {
+    rng: Rng,
+}
+
+impl RandomPlace {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Rng::seed_from_u64(seed),
+        }
+    }
+}
+
+impl Scheduler for RandomPlace {
+    fn name(&self) -> String {
+        "random".into()
+    }
+
+    fn place_creation(&mut self, grid: &ArrayGrid, state: &mut ClusterState) -> Vec<usize> {
+        let k = state.targets();
+        (0..grid.num_blocks()).map(|_| self.rng.usize(k)).collect()
+    }
+
+    fn schedule(
+        &mut self,
+        graph: &mut Graph,
+        state: &mut ClusterState,
+        ids: &IdGen,
+        plan: &mut Plan,
+    ) {
+        loop {
+            let frontier = graph.frontier();
+            if frontier.is_empty() {
+                break;
+            }
+            let vid = frontier[0];
+            let k = state.targets();
+            match &graph.vertices[vid] {
+                Vertex::Op { .. } => {
+                    let target = self.rng.usize(k);
+                    commit_op(graph, state, ids, plan, vid, target);
+                }
+                Vertex::Reduce { .. } => {
+                    let pos = reduce_leaf_positions(graph, vid);
+                    let target = self.rng.usize(k);
+                    commit_reduce_pair(graph, state, ids, plan, vid, pos[0], pos[1], target);
+                }
+                Vertex::Leaf { .. } => unreachable!(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build, DistArray};
+    use crate::net::model::SystemMode;
+    use crate::runtime::kernel::BinOp;
+    use crate::scheduler::Topology;
+
+    fn create(
+        sched: &mut dyn Scheduler,
+        state: &mut ClusterState,
+        ids: &IdGen,
+        shape: &[usize],
+        grid: &[usize],
+    ) -> DistArray {
+        let g = ArrayGrid::new(shape, grid);
+        let targets = sched.place_creation(&g, state);
+        let blocks: Vec<u64> = (0..g.num_blocks()).map(|_| ids.next()).collect();
+        for (f, c) in g.iter_coords().enumerate() {
+            state.register(blocks[f], g.block_elems(&c) as f64, targets[f]);
+        }
+        DistArray::new(g, blocks, targets)
+    }
+
+    #[test]
+    fn round_robin_interleaves_operands_causing_transfers() {
+        // The Fig. 2 pathology: A's and B's blocks land on different targets,
+        // so X+Y must move data — unlike LSHS (zero transfers).
+        let topo = Topology::new(2, 1, SystemMode::Ray);
+        let mut state = ClusterState::new(topo);
+        let ids = IdGen::default();
+        let mut sched = RoundRobin::new();
+        let a = create(&mut sched, &mut state, &ids, &[64, 8], &[4, 1]);
+        let b = create(&mut sched, &mut state, &ids, &[64, 8], &[4, 1]);
+        // creation order: a0 t0, a1 t1, a2 t0, a3 t1 | b0 t0, b1 t1 ...
+        // a_i and b_i land together here; stagger by creating odd counts
+        let mut graph = Graph::new();
+        build::binary_ew(&mut graph, &a, &b, BinOp::Add);
+        let mut plan = Plan::new();
+        sched.schedule(&mut graph, &mut state, &ids, &mut plan);
+        // with 4 blocks over 2 targets and aligned rr, operands coincide;
+        // the pathology appears when block counts aren't divisible — §8.1
+        let topo = Topology::new(2, 1, SystemMode::Ray);
+        let mut state = ClusterState::new(topo);
+        let mut sched = RoundRobin::new();
+        let a = create(&mut sched, &mut state, &ids, &[96, 8], &[3, 1]);
+        let b = create(&mut sched, &mut state, &ids, &[96, 8], &[3, 1]);
+        let mut graph = Graph::new();
+        build::binary_ew(&mut graph, &a, &b, BinOp::Add);
+        let mut plan = Plan::new();
+        sched.schedule(&mut graph, &mut state, &ids, &mut plan);
+        assert!(
+            plan.transfer_count() > 0,
+            "odd partitioning must force transfers under round-robin"
+        );
+    }
+
+    #[test]
+    fn bottom_up_spreads_creation_but_concentrates_compute() {
+        use crate::graph::build;
+        use crate::runtime::kernel::BinOp;
+        let topo = Topology::new(4, 1, SystemMode::Ray);
+        let mut state = ClusterState::new(topo);
+        let ids = IdGen::default();
+        let mut sched = BottomUp::new();
+        // creation distributes (the paper's §2 description of Ray)
+        let a = create(&mut sched, &mut state, &ids, &[512, 8], &[8, 1]);
+        let b = create(&mut sched, &mut state, &ids, &[512, 8], &[8, 1]);
+        for t in 0..4 {
+            assert!(a.targets.iter().filter(|&&x| x == t).count() >= 1);
+        }
+        // ...but dependent compute piles on the driver node, pulling data
+        let mut graph = Graph::new();
+        build::binary_ew(&mut graph, &a, &b, BinOp::Add);
+        let mut plan = Plan::new();
+        sched.schedule(&mut graph, &mut state, &ids, &mut plan);
+        let per = plan.tasks_per_target(4);
+        assert!(
+            per[0] > per[1] + per[2] + per[3],
+            "driver should dominate: {per:?}"
+        );
+        assert!(plan.transfer_count() > 0, "pathology requires transfers");
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let topo = Topology::new(4, 1, SystemMode::Ray);
+        let mut s1 = ClusterState::new(topo.clone());
+        let mut s2 = ClusterState::new(topo);
+        let g = ArrayGrid::new(&[64, 8], &[8, 1]);
+        let t1 = RandomPlace::new(7).place_creation(&g, &mut s1);
+        let t2 = RandomPlace::new(7).place_creation(&g, &mut s2);
+        assert_eq!(t1, t2);
+    }
+}

@@ -1,0 +1,260 @@
+//! Cluster state: the load model LSHS simulates placements against (§5.1).
+//!
+//! `S` is the paper's k×3 matrix — memory, network-in, network-out per
+//! placement target, counted in *elements* as in the paper — and `M` the
+//! object→locations map. The objective (Eq. 2) is
+//! `max_j S[j,mem] + max_j S[j,in] + max_j S[j,out]` after simulating the
+//! candidate action; [`ClusterState::placement_cost`] evaluates it without
+//! mutating (the LSHS inner loop), and [`ClusterState::apply`] commits.
+//!
+//! In Dask mode targets are workers and same-physical-node transfers are
+//! discounted by `intra_discount` (the paper's footnote 1 coefficient);
+//! Ray-mode targets are nodes, where intra-node movement is free via the
+//! shared-memory store.
+
+use std::collections::HashMap;
+
+use crate::net::model::SystemMode;
+use crate::store::ObjectId;
+
+use super::topology::Topology;
+
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    pub topo: Topology,
+    pub mem: Vec<f64>,
+    pub net_in: Vec<f64>,
+    pub net_out: Vec<f64>,
+    /// M: object -> targets holding a copy (first = producer).
+    locations: HashMap<ObjectId, Vec<usize>>,
+    /// object -> elements.
+    sizes: HashMap<ObjectId, f64>,
+    /// Dask footnote-1 coefficient for same-node worker-to-worker loads.
+    pub intra_discount: f64,
+    // cached maxima so the objective is O(1) per candidate
+    max_mem: f64,
+    max_in: f64,
+    max_out: f64,
+}
+
+/// The load delta a placement would cause (reused by `apply`).
+#[derive(Clone, Debug, Default)]
+pub struct PlacementSim {
+    /// (obj, src, charged elems, raw elems) per missing input.
+    pub pulls: Vec<(ObjectId, usize, f64, u64)>,
+    pub cost: f64,
+}
+
+impl ClusterState {
+    pub fn new(topo: Topology) -> Self {
+        let n = topo.targets();
+        Self {
+            topo,
+            mem: vec![0.0; n],
+            net_in: vec![0.0; n],
+            net_out: vec![0.0; n],
+            locations: HashMap::new(),
+            sizes: HashMap::new(),
+            intra_discount: 0.25,
+            max_mem: 0.0,
+            max_in: 0.0,
+            max_out: 0.0,
+        }
+    }
+
+    pub fn targets(&self) -> usize {
+        self.mem.len()
+    }
+
+    /// Register a creation-time object resident at `target`.
+    pub fn register(&mut self, obj: ObjectId, elems: f64, target: usize) {
+        self.mem[target] += elems;
+        self.max_mem = self.max_mem.max(self.mem[target]);
+        self.locations.entry(obj).or_default().push(target);
+        self.sizes.insert(obj, elems);
+    }
+
+    pub fn locations_of(&self, obj: ObjectId) -> &[usize] {
+        self.locations
+            .get(&obj)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    pub fn size_of(&self, obj: ObjectId) -> f64 {
+        *self.sizes.get(&obj).unwrap_or(&0.0)
+    }
+
+    /// Eq. 2 objective at the current state.
+    pub fn objective(&self) -> f64 {
+        self.max_mem + self.max_in + self.max_out
+    }
+
+    /// Discount factor for moving data `src -> dst`.
+    fn charge_factor(&self, src: usize, dst: usize) -> f64 {
+        if src == dst {
+            0.0
+        } else if self.topo.mode == SystemMode::Dask && self.topo.same_node(src, dst) {
+            self.intra_discount
+        } else {
+            1.0
+        }
+    }
+
+    /// Simulate placing an op with `inputs` at `target`, producing
+    /// `out_elems` elements. Returns the Eq. 2 objective after the
+    /// simulated transition plus the transfer decisions; does not mutate.
+    pub fn placement_cost(&self, target: usize, inputs: &[ObjectId], out_elems: f64) -> PlacementSim {
+        let mut pulls = Vec::new();
+        let mut dst_mem = self.mem[target] + out_elems;
+        let mut dst_in = self.net_in[target];
+        let mut src_out_max: f64 = 0.0;
+        // src net_out accumulation must account for several pulls from the
+        // same source within this one placement
+        let mut src_extra: Vec<(usize, f64)> = Vec::new();
+        for &obj in inputs {
+            let locs = self.locations_of(obj);
+            if locs.contains(&target) {
+                continue;
+            }
+            let elems = self.size_of(obj);
+            // choose the source with the least projected net_out
+            let src = *locs
+                .iter()
+                .min_by(|&&a, &&b| {
+                    let ea = self.net_out[a] + extra(&src_extra, a);
+                    let eb = self.net_out[b] + extra(&src_extra, b);
+                    ea.partial_cmp(&eb).unwrap().then(a.cmp(&b))
+                })
+                .unwrap_or_else(|| panic!("object {obj} has no location"));
+            let f = self.charge_factor(src, target);
+            let charged = elems * f;
+            dst_mem += elems; // the copy becomes resident regardless of mode
+            dst_in += charged;
+            bump(&mut src_extra, src, charged);
+            src_out_max = src_out_max.max(self.net_out[src] + extra(&src_extra, src));
+            pulls.push((obj, src, charged, elems as u64));
+        }
+        let cost = self.max_mem.max(dst_mem)
+            + self.max_in.max(dst_in)
+            + self.max_out.max(src_out_max);
+        PlacementSim { pulls, cost }
+    }
+
+    /// Commit a simulated placement: move inputs, account the output.
+    pub fn apply(
+        &mut self,
+        target: usize,
+        sim: &PlacementSim,
+        outputs: &[(ObjectId, f64)],
+    ) {
+        for &(obj, src, charged, raw) in &sim.pulls {
+            self.net_out[src] += charged;
+            self.max_out = self.max_out.max(self.net_out[src]);
+            self.net_in[target] += charged;
+            self.max_in = self.max_in.max(self.net_in[target]);
+            self.mem[target] += raw as f64;
+            self.locations.entry(obj).or_default().push(target);
+        }
+        for &(obj, elems) in outputs {
+            self.register(obj, elems, target);
+        }
+        self.max_mem = self.max_mem.max(self.mem[target]);
+    }
+
+    /// Per-physical-node (mem, in, out) aggregation for reporting (Fig. 15).
+    pub fn per_node_loads(&self) -> Vec<(f64, f64, f64)> {
+        let mut out = vec![(0.0, 0.0, 0.0); self.topo.nodes];
+        for t in 0..self.targets() {
+            let n = self.topo.node_of(t);
+            out[n].0 += self.mem[t];
+            out[n].1 += self.net_in[t];
+            out[n].2 += self.net_out[t];
+        }
+        out
+    }
+}
+
+fn extra(v: &[(usize, f64)], key: usize) -> f64 {
+    v.iter().find(|(k, _)| *k == key).map(|(_, e)| *e).unwrap_or(0.0)
+}
+
+fn bump(v: &mut Vec<(usize, f64)>, key: usize, delta: f64) {
+    if let Some(e) = v.iter_mut().find(|(k, _)| *k == key) {
+        e.1 += delta;
+    } else {
+        v.push((key, delta));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ray_topo(k: usize) -> Topology {
+        Topology::new(k, 4, SystemMode::Ray)
+    }
+
+    #[test]
+    fn colocated_inputs_cost_nothing_extra() {
+        let mut s = ClusterState::new(ray_topo(2));
+        s.register(1, 100.0, 0);
+        s.register(2, 100.0, 0);
+        let local = s.placement_cost(0, &[1, 2], 100.0);
+        let remote = s.placement_cost(1, &[1, 2], 100.0);
+        assert!(local.pulls.is_empty());
+        assert!(remote.pulls.len() == 2);
+        assert!(local.cost < remote.cost, "{} vs {}", local.cost, remote.cost);
+    }
+
+    #[test]
+    fn apply_updates_maxima_and_locations() {
+        let mut s = ClusterState::new(ray_topo(2));
+        s.register(1, 50.0, 0);
+        let sim = s.placement_cost(1, &[1], 10.0);
+        s.apply(1, &sim, &[(2, 10.0)]);
+        assert_eq!(s.net_out[0], 50.0);
+        assert_eq!(s.net_in[1], 50.0);
+        assert_eq!(s.mem[1], 60.0); // copy + output
+        assert!(s.locations_of(1).contains(&1));
+        assert_eq!(s.locations_of(2), &[1]);
+        assert!((s.objective() - (60.0 + 50.0 + 50.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cached_copy_avoids_second_transfer() {
+        let mut s = ClusterState::new(ray_topo(2));
+        s.register(1, 50.0, 0);
+        let sim = s.placement_cost(1, &[1], 0.0);
+        s.apply(1, &sim, &[]);
+        // object now cached on node 1: placing there again pulls nothing
+        let again = s.placement_cost(1, &[1], 0.0);
+        assert!(again.pulls.is_empty());
+    }
+
+    #[test]
+    fn source_selection_balances_net_out() {
+        let mut s = ClusterState::new(ray_topo(3));
+        // object 1 available on nodes 0 and 1; node 0 already loaded
+        s.register(1, 10.0, 0);
+        s.net_out[0] = 100.0;
+        s.max_out = 100.0;
+        let sim0 = s.placement_cost(2, &[1], 0.0);
+        assert_eq!(sim0.pulls[0].1, 0); // only location
+        s.locations.entry(1).or_default().push(1);
+        let sim1 = s.placement_cost(2, &[1], 0.0);
+        assert_eq!(sim1.pulls[0].1, 1); // cheaper source chosen
+    }
+
+    #[test]
+    fn dask_mode_discounts_same_node() {
+        let topo = Topology::new(2, 2, SystemMode::Dask); // 4 worker targets
+        let mut s = ClusterState::new(topo);
+        s.register(1, 100.0, 0); // worker 0 (node 0)
+        // worker 1 is on node 0 -> discounted; worker 2 is node 1 -> full
+        let same = s.placement_cost(1, &[1], 0.0);
+        let cross = s.placement_cost(2, &[1], 0.0);
+        assert!((same.pulls[0].2 - 25.0).abs() < 1e-9);
+        assert!((cross.pulls[0].2 - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,380 @@
+//! Load Simulated Hierarchical Scheduling — Algorithm 1 (§5).
+//!
+//! LSHS is a greedy local tree search: while the graph has a frontier,
+//! sample a frontier vertex, simulate each placement option against the
+//! cluster-state load model, take the option minimizing the Eq. 2
+//! objective, and transition the graph. The final operation of every
+//! output block is pinned to the hierarchical data layout, so every
+//! GraphArray the system produces is again hierarchically laid out —
+//! that invariant is what makes element-wise chains communication-free
+//! (App. A.1).
+
+use crate::exec::task::Plan;
+use crate::graph::vertex::Vertex;
+use crate::graph::Graph;
+use crate::grid::{ArrayGrid, Layout, NodeGrid};
+use crate::store::IdGen;
+use crate::util::rng::Rng;
+
+use super::{
+    commit_op, commit_reduce_pair, location_union, op_view, reduce_leaf_positions, ClusterState,
+    Scheduler, Topology,
+};
+
+pub struct Lshs {
+    pub layout: Layout,
+    topo: Topology,
+    rng: Rng,
+    /// Placement decisions made (for perf reports).
+    pub decisions: u64,
+    /// Candidate simulations evaluated.
+    pub simulations: u64,
+}
+
+impl Lshs {
+    pub fn new(node_grid: NodeGrid, topo: Topology, seed: u64) -> Self {
+        assert_eq!(node_grid.num_nodes(), topo.nodes, "node grid vs cluster");
+        Self {
+            layout: Layout::new(node_grid, topo.workers_per_node),
+            topo,
+            rng: Rng::seed_from_u64(seed),
+            decisions: 0,
+            simulations: 0,
+        }
+    }
+
+    /// Pin the root op of every output block to its hierarchical-layout
+    /// target (the paper's transition-function invariant, §5).
+    fn pin_outputs(&self, graph: &mut Graph) {
+        let pins: Vec<(usize, usize)> = graph
+            .outputs
+            .iter()
+            .flat_map(|out| {
+                let grid = out.grid.clone();
+                out.roots
+                    .iter()
+                    .enumerate()
+                    .map(|(flat, &(vid, _))| {
+                        let coords = grid.coords_of(flat);
+                        let p = self.layout.place_block(&grid, &coords);
+                        (vid, self.topo.target_of(p))
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        for (vid, target) in pins {
+            graph.set_constraint(vid, target);
+        }
+    }
+
+    /// Choose the best placement among `options` for an op producing
+    /// `out_elems`, by simulating each (Algorithm 1's inner loop).
+    fn best_target(
+        &mut self,
+        state: &ClusterState,
+        options: &[usize],
+        inputs: &[crate::store::ObjectId],
+        out_elems: f64,
+    ) -> usize {
+        debug_assert!(!options.is_empty());
+        let mut best = options[0];
+        let mut best_cost = f64::INFINITY;
+        for &t in options {
+            self.simulations += 1;
+            let sim = state.placement_cost(t, inputs, out_elems);
+            if sim.cost < best_cost {
+                best_cost = sim.cost;
+                best = t;
+            }
+        }
+        best
+    }
+
+    /// Locality-aware operand pairing for a Reduce (§4): prefer two leaf
+    /// operands on the same target, then two on the same physical node,
+    /// else the first two leaves.
+    fn choose_pair(
+        &self,
+        graph: &Graph,
+        state: &ClusterState,
+        vid: usize,
+    ) -> (usize, usize) {
+        let positions = reduce_leaf_positions(graph, vid);
+        debug_assert!(positions.len() >= 2);
+        let children = graph.vertices[vid].children();
+        let primary = |pos: usize| -> usize {
+            let obj = graph.resolve(children[pos]);
+            state.locations_of(obj).first().copied().unwrap_or(0)
+        };
+        // same target
+        for (ai, &a) in positions.iter().enumerate() {
+            for &b in positions.iter().skip(ai + 1) {
+                if primary(a) == primary(b) {
+                    return (a, b);
+                }
+            }
+        }
+        // same physical node
+        for (ai, &a) in positions.iter().enumerate() {
+            for &b in positions.iter().skip(ai + 1) {
+                if state.topo.same_node(primary(a), primary(b)) {
+                    return (a, b);
+                }
+            }
+        }
+        (positions[0], positions[1])
+    }
+}
+
+impl Scheduler for Lshs {
+    fn name(&self) -> String {
+        "lshs".into()
+    }
+
+    fn place_creation(&mut self, grid: &ArrayGrid, state: &mut ClusterState) -> Vec<usize> {
+        // Hierarchical data layout (§4): cyclic over the node grid, round
+        // robin over workers within each node.
+        let _ = state;
+        self.layout
+            .place_all(grid)
+            .into_iter()
+            .map(|p| self.topo.target_of(p))
+            .collect()
+    }
+
+    fn schedule(
+        &mut self,
+        graph: &mut Graph,
+        state: &mut ClusterState,
+        ids: &IdGen,
+        plan: &mut Plan,
+    ) {
+        self.pin_outputs(graph);
+        // Incremental frontier (perf pass, EXPERIMENTS.md §Perf L3):
+        // rescanning every vertex per step is O(V²); instead track the
+        // candidate set and wake parents when a child resolves to a leaf.
+        let eligible = |graph: &Graph, v: usize| -> bool {
+            match &graph.vertices[v] {
+                Vertex::Leaf { .. } => false,
+                Vertex::Op { children, .. } => {
+                    children.iter().all(|&(c, _)| graph.is_leaf(c))
+                }
+                Vertex::Reduce { children, .. } => {
+                    children.iter().filter(|&&(c, _)| graph.is_leaf(c)).count() >= 2
+                }
+            }
+        };
+        // parent edges (built once)
+        let mut parents: Vec<Vec<usize>> = vec![Vec::new(); graph.vertices.len()];
+        for (vid, v) in graph.vertices.iter().enumerate() {
+            for &(c, _) in v.children() {
+                parents[c].push(vid);
+            }
+        }
+        let mut frontier: Vec<usize> = (0..graph.vertices.len())
+            .filter(|&v| eligible(graph, v))
+            .collect();
+        let mut in_list = vec![false; graph.vertices.len()];
+        for &v in &frontier {
+            in_list[v] = true;
+        }
+
+        loop {
+            // Algorithm 1: sample a frontier vertex (skip stale entries).
+            let vid = loop {
+                if frontier.is_empty() {
+                    break None;
+                }
+                let idx = self.rng.usize(frontier.len());
+                let v = frontier[idx];
+                if eligible(graph, v) {
+                    break Some((idx, v));
+                }
+                in_list[v] = false;
+                frontier.swap_remove(idx);
+            };
+            let Some((idx, vid)) = vid else { break };
+            match &graph.vertices[vid] {
+                Vertex::Op { .. } => {
+                    let view = op_view(graph, vid);
+                    let out_elems: f64 = view
+                        .kernel
+                        .out_shapes(&view.in_shapes)
+                        .iter()
+                        .map(|s| s.iter().map(|&d| d as f64).product::<f64>())
+                        .sum();
+                    let options = match view.constraint {
+                        Some(c) => vec![c],
+                        None => {
+                            let u = location_union(state, &view.inputs);
+                            if u.is_empty() {
+                                vec![0]
+                            } else {
+                                u
+                            }
+                        }
+                    };
+                    let target = self.best_target(state, &options, &view.inputs, out_elems);
+                    self.decisions += 1;
+                    commit_op(graph, state, ids, plan, vid, target);
+                    // vid is now a leaf: retire it, wake eligible parents
+                    in_list[vid] = false;
+                    frontier.swap_remove(idx);
+                    for &p in &parents[vid] {
+                        if !in_list[p] && eligible(graph, p) {
+                            in_list[p] = true;
+                            frontier.push(p);
+                        }
+                    }
+                }
+                Vertex::Reduce { children, constraint, .. } => {
+                    let constraint = *constraint;
+                    let final_pair = children.len() == 2;
+                    let (pa, pb) = self.choose_pair(graph, state, vid);
+                    let (ca, cb) = {
+                        let ch = graph.vertices[vid].children();
+                        (ch[pa], ch[pb])
+                    };
+                    let inputs = vec![graph.resolve(ca), graph.resolve(cb)];
+                    let elems: f64 = graph
+                        .ref_shape(ca)
+                        .iter()
+                        .map(|&d| d as f64)
+                        .product();
+                    let options = match (final_pair, constraint) {
+                        (true, Some(c)) => vec![c],
+                        _ => {
+                            let u = location_union(state, &inputs);
+                            if u.is_empty() {
+                                vec![0]
+                            } else {
+                                u
+                            }
+                        }
+                    };
+                    let target = self.best_target(state, &options, &inputs, elems);
+                    self.decisions += 1;
+                    commit_reduce_pair(graph, state, ids, plan, vid, pa, pb, target);
+                    // commit may have grown the arena (new leaf vertex)
+                    if parents.len() < graph.vertices.len() {
+                        parents.resize(graph.vertices.len(), Vec::new());
+                        in_list.resize(graph.vertices.len(), false);
+                    }
+                    if graph.is_leaf(vid) {
+                        // reduce collapsed: retire and wake parents
+                        in_list[vid] = false;
+                        frontier.swap_remove(idx);
+                        for &p in &parents[vid] {
+                            if !in_list[p] && eligible(graph, p) {
+                                in_list[p] = true;
+                                frontier.push(p);
+                            }
+                        }
+                    }
+                    // otherwise the reduce stays sampled (still >= 2 leaves
+                    // or will be lazily retired on next sample)
+                }
+                Vertex::Leaf { .. } => unreachable!("leaf on frontier"),
+            }
+        }
+        debug_assert!(graph.done(), "LSHS terminated with unresolved vertices");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build, DistArray};
+    use crate::net::model::SystemMode;
+    use crate::runtime::kernel::BinOp;
+    use crate::store::IdGen;
+
+    fn setup(k: usize) -> (Lshs, ClusterState, IdGen) {
+        let topo = Topology::new(k, 4, SystemMode::Ray);
+        let lshs = Lshs::new(NodeGrid::linear(k), topo.clone(), 42);
+        (lshs, ClusterState::new(topo), IdGen::default())
+    }
+
+    fn create(
+        sched: &mut Lshs,
+        state: &mut ClusterState,
+        ids: &IdGen,
+        shape: &[usize],
+        grid: &[usize],
+    ) -> DistArray {
+        let g = ArrayGrid::new(shape, grid);
+        let targets = sched.place_creation(&g, state);
+        let blocks: Vec<u64> = (0..g.num_blocks()).map(|_| ids.next()).collect();
+        for (f, c) in g.iter_coords().enumerate() {
+            state.register(blocks[f], g.block_elems(&c) as f64, targets[f]);
+        }
+        DistArray::new(g, blocks, targets)
+    }
+
+    #[test]
+    fn elementwise_is_communication_free() {
+        // App. A.1: equal shape+grid operands co-locate -> zero transfers.
+        let (mut sched, mut state, ids) = setup(4);
+        let a = create(&mut sched, &mut state, &ids, &[1024, 64], &[8, 1]);
+        let b = create(&mut sched, &mut state, &ids, &[1024, 64], &[8, 1]);
+        let mut graph = crate::graph::Graph::new();
+        build::binary_ew(&mut graph, &a, &b, BinOp::Add);
+        let mut plan = Plan::new();
+        sched.schedule(&mut graph, &mut state, &ids, &mut plan);
+        assert_eq!(plan.len(), 8);
+        assert_eq!(plan.transfer_count(), 0, "X+Y must move zero bytes");
+    }
+
+    #[test]
+    fn matmul_terminates_and_balances() {
+        let (mut sched, mut state, ids) = setup(2);
+        let a = create(&mut sched, &mut state, &ids, &[64, 64], &[2, 2]);
+        let b = create(&mut sched, &mut state, &ids, &[64, 64], &[2, 2]);
+        let mut graph = crate::graph::Graph::new();
+        build::matmul(&mut graph, &a, &b);
+        let mut plan = Plan::new();
+        sched.schedule(&mut graph, &mut state, &ids, &mut plan);
+        assert!(graph.done());
+        assert_eq!(plan.len(), 12); // 8 matmul + 4 reduce-adds
+        let per = plan.tasks_per_target(2);
+        assert!(per[0] > 0 && per[1] > 0, "both nodes used: {per:?}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let (mut sched, mut state, ids) = setup(4);
+            let a = create(&mut sched, &mut state, &ids, &[64, 64], &[4, 4]);
+            let b = create(&mut sched, &mut state, &ids, &[64, 64], &[4, 4]);
+            let mut graph = crate::graph::Graph::new();
+            build::matmul(&mut graph, &a, &b);
+            let mut plan = Plan::new();
+            sched.schedule(&mut graph, &mut state, &ids, &mut plan);
+            plan.tasks
+                .iter()
+                .map(|t| t.target)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn outputs_land_on_layout_targets() {
+        let (mut sched, mut state, ids) = setup(4);
+        let a = create(&mut sched, &mut state, &ids, &[512, 8], &[4, 1]);
+        let y = create(&mut sched, &mut state, &ids, &[512, 1], &[4, 1]);
+        let beta = create(&mut sched, &mut state, &ids, &[8, 1], &[1, 1]);
+        let mut graph = crate::graph::Graph::new();
+        build::glm_newton(&mut graph, &a, &y, &beta);
+        let mut plan = Plan::new();
+        sched.schedule(&mut graph, &mut state, &ids, &mut plan);
+        // g, H, loss are single-block outputs -> block (0,0) -> node 0 (§6)
+        for out in &graph.outputs {
+            let obj = graph.resolve(out.roots[0]);
+            assert!(
+                state.locations_of(obj).contains(&0),
+                "output must satisfy hierarchical layout"
+            );
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Operator schedulers: LSHS (§5) and the dynamic-scheduler baselines the
+//! paper ablates against (§8.1, Fig. 9/15).
+//!
+//! All schedulers share the same contract: walk a [`Graph`]'s frontier,
+//! choose a placement target per block-level operation, emit [`Task`]s into
+//! a [`Plan`] and update the [`ClusterState`] load model. The transition
+//! helpers here implement the graph rewriting (op vertex → leaf, Reduce
+//! pair → new leaf) so that policies differ only in *where* they place.
+
+pub mod baselines;
+pub mod cluster_state;
+pub mod lshs;
+pub mod topology;
+
+pub use cluster_state::ClusterState;
+pub use lshs::Lshs;
+pub use topology::Topology;
+
+use crate::exec::task::{Plan, Task, Transfer};
+use crate::graph::vertex::{Vertex, VertexId};
+use crate::graph::Graph;
+use crate::grid::ArrayGrid;
+use crate::runtime::kernel::Kernel;
+use crate::store::{IdGen, ObjectId};
+
+pub trait Scheduler {
+    fn name(&self) -> String;
+
+    /// Placement targets for the blocks of a newly-created array
+    /// (creation ops execute immediately, §4).
+    fn place_creation(&mut self, grid: &ArrayGrid, state: &mut ClusterState) -> Vec<usize>;
+
+    /// Schedule every operation of `graph`, emitting tasks into `plan`.
+    fn schedule(&mut self, graph: &mut Graph, state: &mut ClusterState, ids: &IdGen, plan: &mut Plan);
+}
+
+/// Resolved view of an op vertex ready for placement.
+pub(crate) struct OpView {
+    pub kernel: Kernel,
+    pub inputs: Vec<ObjectId>,
+    pub in_shapes: Vec<Vec<usize>>,
+    pub constraint: Option<usize>,
+}
+
+pub(crate) fn op_view(graph: &Graph, vid: VertexId) -> OpView {
+    match &graph.vertices[vid] {
+        Vertex::Op {
+            kernel,
+            children,
+            constraint,
+        } => OpView {
+            kernel: kernel.clone(),
+            inputs: children.iter().map(|&r| graph.resolve(r)).collect(),
+            in_shapes: children
+                .iter()
+                .map(|&r| graph.ref_shape(r).to_vec())
+                .collect(),
+            constraint: *constraint,
+        },
+        _ => panic!("op_view on non-op vertex"),
+    }
+}
+
+/// Execute an `Op` vertex at `target`: emit the task, update state, rewrite
+/// the vertex into a leaf.
+pub(crate) fn commit_op(
+    graph: &mut Graph,
+    state: &mut ClusterState,
+    ids: &IdGen,
+    plan: &mut Plan,
+    vid: VertexId,
+    target: usize,
+) {
+    let view = op_view(graph, vid);
+    let out_shapes = view.kernel.out_shapes(&view.in_shapes);
+    let objs: Vec<ObjectId> = out_shapes.iter().map(|_| ids.next()).collect();
+    let out_elems: f64 = out_shapes
+        .iter()
+        .map(|s| s.iter().map(|&d| d as f64).product::<f64>())
+        .sum();
+    let sim = state.placement_cost(target, &view.inputs, out_elems);
+    let out_pairs: Vec<(ObjectId, f64)> = objs
+        .iter()
+        .zip(&out_shapes)
+        .map(|(&o, s)| (o, s.iter().map(|&d| d as f64).product::<f64>()))
+        .collect();
+    state.apply(target, &sim, &out_pairs);
+    plan.tasks.push(Task {
+        kernel: view.kernel,
+        inputs: view.inputs,
+        in_shapes: view.in_shapes,
+        outputs: objs.iter().cloned().zip(out_shapes.clone()).collect(),
+        target,
+        transfers: sim
+            .pulls
+            .iter()
+            .map(|&(obj, src, _, raw)| Transfer {
+                obj,
+                src,
+                elems: raw,
+            })
+            .collect(),
+    });
+    graph.vertices[vid] = Vertex::Leaf {
+        objs,
+        shapes: out_shapes,
+    };
+}
+
+/// Leaf children (positions within the child list) of a Reduce vertex.
+pub(crate) fn reduce_leaf_positions(graph: &Graph, vid: VertexId) -> Vec<usize> {
+    match &graph.vertices[vid] {
+        Vertex::Reduce { children, .. } => children
+            .iter()
+            .enumerate()
+            .filter(|&(_, &(c, _))| graph.is_leaf(c))
+            .map(|(i, _)| i)
+            .collect(),
+        _ => panic!("reduce_leaf_positions on non-reduce"),
+    }
+}
+
+/// Execute one binary step of a `Reduce` vertex: combine the children at
+/// positions `pa`/`pb` with the reduce op at `target`; rewrite.
+pub(crate) fn commit_reduce_pair(
+    graph: &mut Graph,
+    state: &mut ClusterState,
+    ids: &IdGen,
+    plan: &mut Plan,
+    vid: VertexId,
+    pa: usize,
+    pb: usize,
+    target: usize,
+) {
+    assert_ne!(pa, pb);
+    let (op, ra, rb) = match &graph.vertices[vid] {
+        Vertex::Reduce { op, children, .. } => (*op, children[pa], children[pb]),
+        _ => panic!("commit_reduce_pair on non-reduce"),
+    };
+    let shape = graph.ref_shape(ra).to_vec();
+    assert_eq!(
+        shape,
+        graph.ref_shape(rb).to_vec(),
+        "reduce operands must have equal dimension (§4)"
+    );
+    let inputs = vec![graph.resolve(ra), graph.resolve(rb)];
+    let out_obj = ids.next();
+    let elems: f64 = shape.iter().map(|&d| d as f64).product();
+    let sim = state.placement_cost(target, &inputs, elems);
+    state.apply(target, &sim, &[(out_obj, elems)]);
+    plan.tasks.push(Task {
+        kernel: Kernel::Ew(op),
+        inputs: inputs.clone(),
+        in_shapes: vec![shape.clone(), shape.clone()],
+        outputs: vec![(out_obj, shape.clone())],
+        target,
+        transfers: sim
+            .pulls
+            .iter()
+            .map(|&(obj, src, _, raw)| Transfer {
+                obj,
+                src,
+                elems: raw,
+            })
+            .collect(),
+    });
+    // rewrite: drop the pair, append the new leaf
+    let new_leaf = graph.push(Vertex::Leaf {
+        objs: vec![out_obj],
+        shapes: vec![shape],
+    });
+    match &mut graph.vertices[vid] {
+        Vertex::Reduce { children, .. } => {
+            let (hi, lo) = (pa.max(pb), pa.min(pb));
+            children.remove(hi);
+            children.remove(lo);
+            children.push((new_leaf, 0));
+            if children.len() == 1 {
+                let last = children[0];
+                let objs = vec![graph.resolve(last)];
+                let shapes = vec![graph.ref_shape(last).to_vec()];
+                graph.vertices[vid] = Vertex::Leaf { objs, shapes };
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Current locations union for a set of objects (deduped, order-stable).
+pub(crate) fn location_union(state: &ClusterState, objs: &[ObjectId]) -> Vec<usize> {
+    let mut out: Vec<usize> = Vec::new();
+    for &o in objs {
+        for &t in state.locations_of(o) {
+            if !out.contains(&t) {
+                out.push(t);
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,102 @@
+//! Placement-target topology: node-granular on Ray, worker-granular on
+//! Dask (§3, Fig. 3).
+
+use crate::grid::{Layout, Placement};
+use crate::net::model::SystemMode;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub nodes: usize,
+    pub workers_per_node: usize,
+    pub mode: SystemMode,
+}
+
+impl Topology {
+    pub fn new(nodes: usize, workers_per_node: usize, mode: SystemMode) -> Self {
+        assert!(nodes >= 1 && workers_per_node >= 1);
+        Self {
+            nodes,
+            workers_per_node,
+            mode,
+        }
+    }
+
+    /// Number of placement targets the scheduler chooses among.
+    pub fn targets(&self) -> usize {
+        match self.mode {
+            SystemMode::Ray => self.nodes,
+            SystemMode::Dask => self.nodes * self.workers_per_node,
+        }
+    }
+
+    /// Physical node of a placement target.
+    pub fn node_of(&self, target: usize) -> usize {
+        match self.mode {
+            SystemMode::Ray => target,
+            SystemMode::Dask => target / self.workers_per_node,
+        }
+    }
+
+    /// Worker index within the node, when the mode distinguishes workers.
+    pub fn worker_of(&self, target: usize) -> Option<usize> {
+        match self.mode {
+            SystemMode::Ray => None,
+            SystemMode::Dask => Some(target % self.workers_per_node),
+        }
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Convert a hierarchical-layout placement to a target id.
+    pub fn target_of(&self, p: Placement) -> usize {
+        match self.mode {
+            SystemMode::Ray => p.node,
+            SystemMode::Dask => p.node * self.workers_per_node + p.worker,
+        }
+    }
+
+    /// Total workers (`p` in the paper).
+    pub fn total_workers(&self) -> usize {
+        self.nodes * self.workers_per_node
+    }
+
+    /// Layout helper bound to this topology's worker count.
+    pub fn layout(&self, node_grid: crate::grid::NodeGrid) -> Layout {
+        Layout::new(node_grid, self.workers_per_node)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::NodeGrid;
+
+    #[test]
+    fn ray_targets_are_nodes() {
+        let t = Topology::new(4, 8, SystemMode::Ray);
+        assert_eq!(t.targets(), 4);
+        assert_eq!(t.node_of(3), 3);
+        assert_eq!(t.worker_of(3), None);
+        assert_eq!(t.target_of(Placement { node: 2, worker: 5 }), 2);
+    }
+
+    #[test]
+    fn dask_targets_are_workers() {
+        let t = Topology::new(4, 8, SystemMode::Dask);
+        assert_eq!(t.targets(), 32);
+        assert_eq!(t.node_of(17), 2);
+        assert_eq!(t.worker_of(17), Some(1));
+        assert!(t.same_node(16, 23));
+        assert!(!t.same_node(15, 16));
+        assert_eq!(t.target_of(Placement { node: 2, worker: 5 }), 21);
+    }
+
+    #[test]
+    fn layout_roundtrip() {
+        let t = Topology::new(4, 2, SystemMode::Dask);
+        let layout = t.layout(NodeGrid::new(&[2, 2]));
+        assert_eq!(layout.workers_per_node, 2);
+    }
+}

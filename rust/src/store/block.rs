@@ -1,0 +1,225 @@
+//! Dense array blocks — the objects of the task-based system (§3).
+//!
+//! A block is either *real* (f64 buffer, row-major) or *phantom* (shape
+//! only). Phantom blocks back `ExecMode::Sim`, which runs paper-scale
+//! workloads (terabyte shapes) without materializing terabytes: LSHS and
+//! the DES only ever consume sizes and locations.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub enum BlockData {
+    Real(Vec<f64>),
+    Phantom,
+}
+
+#[derive(Clone, PartialEq)]
+pub struct Block {
+    pub shape: Vec<usize>,
+    pub data: BlockData,
+}
+
+impl Block {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: BlockData::Real(vec![0.0; n]),
+        }
+    }
+
+    pub fn filled(shape: &[usize], v: f64) -> Self {
+        let n: usize = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: BlockData::Real(vec![v; n]),
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f64>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(data.len(), n, "data len {} != shape {:?}", data.len(), shape);
+        Self {
+            shape: shape.to_vec(),
+            data: BlockData::Real(data),
+        }
+    }
+
+    /// A shape-only block for simulated execution.
+    pub fn phantom(shape: &[usize]) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: BlockData::Phantom,
+        }
+    }
+
+    pub fn is_phantom(&self) -> bool {
+        matches!(self.data, BlockData::Phantom)
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn elems(&self) -> u64 {
+        self.shape.iter().map(|&s| s as u64).product()
+    }
+
+    /// Logical size in bytes (f64), real or phantom.
+    pub fn bytes(&self) -> u64 {
+        self.elems() * 8
+    }
+
+    /// Borrow the buffer; panics on phantom blocks (executors must never
+    /// mix modes — that's a bug, not a recoverable condition).
+    pub fn buf(&self) -> &[f64] {
+        match &self.data {
+            BlockData::Real(v) => v,
+            BlockData::Phantom => panic!("buf() on phantom block {:?}", self.shape),
+        }
+    }
+
+    pub fn buf_mut(&mut self) -> &mut [f64] {
+        match &mut self.data {
+            BlockData::Real(v) => v,
+            BlockData::Phantom => panic!("buf_mut() on phantom block"),
+        }
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        match self.data {
+            BlockData::Real(v) => v,
+            BlockData::Phantom => panic!("into_vec() on phantom block"),
+        }
+    }
+
+    /// 2-D accessor (row-major).
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f64 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.buf()[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert_eq!(self.ndim(), 2);
+        let cols = self.shape[1];
+        self.buf_mut()[i * cols + j] = v;
+    }
+
+    /// Number of rows/cols of a 2-D block.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.ndim(), 2, "rows() on {:?}", self.shape);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.ndim(), 2, "cols() on {:?}", self.shape);
+        self.shape[1]
+    }
+
+    /// Copy a contiguous row range (2-D).
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Block {
+        assert_eq!(self.ndim(), 2);
+        let cols = self.shape[1];
+        Block::from_vec(
+            &[r1 - r0, cols],
+            self.buf()[r0 * cols..r1 * cols].to_vec(),
+        )
+    }
+
+    /// Vertically stack two 2-D blocks.
+    pub fn vstack(&self, other: &Block) -> Block {
+        assert_eq!(self.ndim(), 2);
+        assert_eq!(self.cols(), other.cols());
+        let mut data = Vec::with_capacity(self.buf().len() + other.buf().len());
+        data.extend_from_slice(self.buf());
+        data.extend_from_slice(other.buf());
+        Block::from_vec(&[self.rows() + other.rows(), self.cols()], data)
+    }
+
+    /// Transposed copy of a 2-D block.
+    pub fn transposed(&self) -> Block {
+        assert_eq!(self.ndim(), 2);
+        let (m, n) = (self.rows(), self.cols());
+        let src = self.buf();
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = src[i * n + j];
+            }
+        }
+        Block::from_vec(&[n, m], out)
+    }
+
+    /// Max |a - b| against another block.
+    pub fn max_abs_diff(&self, other: &Block) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        crate::util::stats::max_abs_diff(self.buf(), other.buf())
+    }
+}
+
+impl fmt::Debug for Block {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.data {
+            BlockData::Phantom => write!(f, "Block(phantom, shape={:?})", self.shape),
+            BlockData::Real(v) => {
+                let preview: Vec<f64> = v.iter().take(4).cloned().collect();
+                write!(
+                    f,
+                    "Block(shape={:?}, data={:?}{})",
+                    self.shape,
+                    preview,
+                    if v.len() > 4 { ", ..." } else { "" }
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        let b = Block::zeros(&[4, 8]);
+        assert_eq!(b.elems(), 32);
+        assert_eq!(b.bytes(), 256);
+        let p = Block::phantom(&[1_000_000, 1_000]);
+        assert_eq!(p.bytes(), 8_000_000_000);
+        assert!(p.is_phantom());
+    }
+
+    #[test]
+    fn accessors() {
+        let mut b = Block::zeros(&[2, 3]);
+        b.set2(1, 2, 5.0);
+        assert_eq!(b.at2(1, 2), 5.0);
+        assert_eq!(b.at2(0, 0), 0.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let b = Block::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let t = b.transposed();
+        assert_eq!(t.shape, vec![3, 2]);
+        assert_eq!(t.at2(2, 1), 6.0);
+        assert_eq!(t.transposed(), b);
+    }
+
+    #[test]
+    fn stack_and_slice() {
+        let a = Block::from_vec(&[1, 2], vec![1., 2.]);
+        let b = Block::from_vec(&[2, 2], vec![3., 4., 5., 6.]);
+        let s = a.vstack(&b);
+        assert_eq!(s.shape, vec![3, 2]);
+        assert_eq!(s.slice_rows(1, 3), b);
+    }
+
+    #[test]
+    #[should_panic(expected = "phantom")]
+    fn phantom_buf_panics() {
+        Block::phantom(&[2, 2]).buf();
+    }
+}

@@ -1,0 +1,7 @@
+//! Blocks and per-node object stores — the object substrate of §3.
+
+pub mod block;
+pub mod object_store;
+
+pub use block::{Block, BlockData};
+pub use object_store::{IdGen, ObjectId, ObjectStore, StoreSet};

@@ -1,0 +1,221 @@
+//! Per-node shared-memory object stores (§3) and the cluster-wide set.
+//!
+//! In Ray every worker on a node reads task outputs from the node's
+//! shared-memory store without copies; our real executor reproduces that
+//! with one store per simulated node holding `Arc<Block>`s. Transfers
+//! between nodes clone the Arc into the destination store and account the
+//! bytes — the byte counters are what the Fig. 15 ablation reports.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::block::Block;
+
+pub type ObjectId = u64;
+
+#[derive(Default)]
+pub struct ObjectStore {
+    objects: HashMap<ObjectId, Arc<Block>>,
+    /// Resident bytes now.
+    pub bytes: u64,
+    /// High-water mark (the paper's "memory load" per node).
+    pub peak_bytes: u64,
+    /// Cumulative bytes received from other nodes.
+    pub net_in_bytes: u64,
+    /// Cumulative bytes sent to other nodes.
+    pub net_out_bytes: u64,
+}
+
+impl ObjectStore {
+    pub fn put(&mut self, id: ObjectId, block: Arc<Block>) {
+        let sz = block.bytes();
+        if self.objects.insert(id, block).is_none() {
+            self.bytes += sz;
+            self.peak_bytes = self.peak_bytes.max(self.bytes);
+        }
+    }
+
+    pub fn get(&self, id: ObjectId) -> Option<Arc<Block>> {
+        self.objects.get(&id).cloned()
+    }
+
+    pub fn contains(&self, id: ObjectId) -> bool {
+        self.objects.contains_key(&id)
+    }
+
+    pub fn remove(&mut self, id: ObjectId) -> Option<Arc<Block>> {
+        let removed = self.objects.remove(&id);
+        if let Some(b) = &removed {
+            self.bytes -= b.bytes();
+        }
+        removed
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.objects.is_empty()
+    }
+}
+
+/// All node stores of a simulated cluster. Thread-safe: the real executor
+/// runs node queues concurrently.
+pub struct StoreSet {
+    stores: Vec<Mutex<ObjectStore>>,
+}
+
+impl StoreSet {
+    pub fn new(num_nodes: usize) -> Self {
+        Self {
+            stores: (0..num_nodes).map(|_| Mutex::new(ObjectStore::default())).collect(),
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.stores.len()
+    }
+
+    pub fn put(&self, node: usize, id: ObjectId, block: Arc<Block>) {
+        self.stores[node].lock().unwrap().put(id, block);
+    }
+
+    pub fn get(&self, node: usize, id: ObjectId) -> Option<Arc<Block>> {
+        self.stores[node].lock().unwrap().get(id)
+    }
+
+    pub fn contains(&self, node: usize, id: ObjectId) -> bool {
+        self.stores[node].lock().unwrap().contains(id)
+    }
+
+    /// Locate any node holding `id` (preferring `hint` first).
+    pub fn locate(&self, id: ObjectId, hint: usize) -> Option<usize> {
+        if self.contains(hint, id) {
+            return Some(hint);
+        }
+        (0..self.stores.len()).find(|&n| n != hint && self.contains(n, id))
+    }
+
+    /// Transfer `id` from `src` to `dst`, accounting bytes on both NICs.
+    /// No-op (and no accounting) if already resident at `dst`.
+    pub fn transfer(&self, src: usize, dst: usize, id: ObjectId) -> u64 {
+        if src == dst || self.contains(dst, id) {
+            return 0;
+        }
+        let block = self
+            .get(src, id)
+            .unwrap_or_else(|| panic!("transfer: object {id} not on node {src}"));
+        let sz = block.bytes();
+        {
+            let mut s = self.stores[src].lock().unwrap();
+            s.net_out_bytes += sz;
+        }
+        {
+            let mut d = self.stores[dst].lock().unwrap();
+            d.net_in_bytes += sz;
+            d.put(id, block);
+        }
+        sz
+    }
+
+    /// Snapshot (bytes, peak, net_in, net_out) for each node.
+    pub fn snapshot(&self) -> Vec<(u64, u64, u64, u64)> {
+        self.stores
+            .iter()
+            .map(|s| {
+                let s = s.lock().unwrap();
+                (s.bytes, s.peak_bytes, s.net_in_bytes, s.net_out_bytes)
+            })
+            .collect()
+    }
+
+    /// Fetch a block wherever it lives (driver-side gather).
+    pub fn fetch(&self, id: ObjectId) -> Option<Arc<Block>> {
+        for s in &self.stores {
+            if let Some(b) = s.lock().unwrap().get(id) {
+                return Some(b);
+            }
+        }
+        None
+    }
+
+    /// Drop an object from every node (refcount release).
+    pub fn evict_everywhere(&self, id: ObjectId) {
+        for s in &self.stores {
+            s.lock().unwrap().remove(id);
+        }
+    }
+}
+
+/// Monotonic object-id allocator shared by the driver.
+#[derive(Default)]
+pub struct IdGen(std::sync::atomic::AtomicU64);
+
+impl IdGen {
+    pub fn next(&self) -> ObjectId {
+        self.0.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blk(n: usize) -> Arc<Block> {
+        Arc::new(Block::zeros(&[n, 1]))
+    }
+
+    #[test]
+    fn put_get_tracks_bytes_and_peak() {
+        let mut s = ObjectStore::default();
+        s.put(1, blk(10)); // 80 bytes
+        s.put(2, blk(5)); // 40 bytes
+        assert_eq!(s.bytes, 120);
+        s.remove(1);
+        assert_eq!(s.bytes, 40);
+        assert_eq!(s.peak_bytes, 120);
+    }
+
+    #[test]
+    fn duplicate_put_not_double_counted() {
+        let mut s = ObjectStore::default();
+        let b = blk(10);
+        s.put(1, b.clone());
+        s.put(1, b);
+        assert_eq!(s.bytes, 80);
+    }
+
+    #[test]
+    fn transfer_accounts_both_ends() {
+        let set = StoreSet::new(2);
+        set.put(0, 7, blk(16)); // 128 bytes
+        let moved = set.transfer(0, 1, 7);
+        assert_eq!(moved, 128);
+        assert!(set.contains(1, 7));
+        assert!(set.contains(0, 7)); // source keeps its copy (Ray caching)
+        let snap = set.snapshot();
+        assert_eq!(snap[0].3, 128); // node0 out
+        assert_eq!(snap[1].2, 128); // node1 in
+        // second transfer is a no-op (already cached at dst)
+        assert_eq!(set.transfer(0, 1, 7), 0);
+        assert_eq!(set.snapshot()[1].2, 128);
+    }
+
+    #[test]
+    fn locate_prefers_hint() {
+        let set = StoreSet::new(3);
+        set.put(2, 9, blk(1));
+        assert_eq!(set.locate(9, 2), Some(2));
+        assert_eq!(set.locate(9, 0), Some(2));
+        assert_eq!(set.locate(42, 0), None);
+    }
+
+    #[test]
+    fn idgen_monotonic() {
+        let g = IdGen::default();
+        let a = g.next();
+        let b = g.next();
+        assert!(b > a);
+    }
+}

@@ -1,0 +1,113 @@
+//! Tensor algebra workloads (§8.4): MTTKRP and double contraction, plus
+//! the 3-D sampling helpers the benchmarks use.
+
+use crate::api::Session;
+use crate::graph::DistArray;
+
+/// Sample a random 3-D tensor X [i, j, k] over the given block grid.
+pub fn random_tensor3(
+    sess: &mut Session,
+    shape: &[usize; 3],
+    grid: &[usize; 3],
+) -> DistArray {
+    sess.randn(shape.as_slice(), grid.as_slice())
+}
+
+/// Sample a factor matrix [rows, f], row-partitioned into `g` blocks.
+pub fn random_factor(sess: &mut Session, rows: usize, f: usize, g: usize) -> DistArray {
+    sess.randn(&[rows, f], &[g, 1])
+}
+
+/// Dense MTTKRP reference: out[i,f] = Σ_{j,k} X[i,j,k] B[j,f] C[k,f].
+pub fn mttkrp_dense(
+    x: &crate::store::Block,
+    b: &crate::store::Block,
+    c: &crate::store::Block,
+) -> crate::store::Block {
+    let (i, j, k) = (x.shape[0], x.shape[1], x.shape[2]);
+    let f = b.shape[1];
+    let mut out = vec![0.0; i * f];
+    let (xb, bb, cb) = (x.buf(), b.buf(), c.buf());
+    for a in 0..i {
+        for jj in 0..j {
+            for kk in 0..k {
+                let xv = xb[(a * j + jj) * k + kk];
+                for ff in 0..f {
+                    out[a * f + ff] += xv * bb[jj * f + ff] * cb[kk * f + ff];
+                }
+            }
+        }
+    }
+    crate::store::Block::from_vec(&[i, f], out)
+}
+
+/// Dense double-contraction reference: out[i,f] = Σ_{j,k} X[i,j,k] Y[j,k,f].
+pub fn tensordot_dense(
+    x: &crate::store::Block,
+    y: &crate::store::Block,
+) -> crate::store::Block {
+    let (i, j, k) = (x.shape[0], x.shape[1], x.shape[2]);
+    let f = y.shape[2];
+    let mut out = vec![0.0; i * f];
+    let (xb, yb) = (x.buf(), y.buf());
+    for a in 0..i {
+        for jj in 0..j {
+            for kk in 0..k {
+                let xv = xb[(a * j + jj) * k + kk];
+                for ff in 0..f {
+                    out[a * f + ff] += xv * yb[(jj * k + kk) * f + ff];
+                }
+            }
+        }
+    }
+    crate::store::Block::from_vec(&[i, f], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{ops, SessionConfig};
+
+    #[test]
+    fn distributed_mttkrp_matches_dense() {
+        let mut sess = Session::new(SessionConfig::real_small(2, 2));
+        let x = random_tensor3(&mut sess, &[8, 6, 4], &[2, 2, 2]);
+        let b = random_factor(&mut sess, 6, 5, 2);
+        let c = random_factor(&mut sess, 4, 5, 2);
+        let (out, _) = ops::mttkrp(&mut sess, &x, &b, &c).unwrap();
+        let want = mttkrp_dense(
+            &sess.fetch(&x).unwrap(),
+            &sess.fetch(&b).unwrap(),
+            &sess.fetch(&c).unwrap(),
+        );
+        assert!(sess.fetch(&out).unwrap().max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn naive_einsum_matches_fused_mttkrp() {
+        use crate::graph::{build, Graph};
+        let mut sess = Session::new(SessionConfig::real_small(2, 2));
+        let x = random_tensor3(&mut sess, &[8, 6, 4], &[2, 2, 2]);
+        let b = random_factor(&mut sess, 6, 5, 2);
+        let c = random_factor(&mut sess, 4, 5, 2);
+        let mut g = Graph::new();
+        build::mttkrp_naive(&mut g, &x, &b, &c);
+        let (outs, _) = sess.run(&mut g).unwrap();
+        let want = mttkrp_dense(
+            &sess.fetch(&x).unwrap(),
+            &sess.fetch(&b).unwrap(),
+            &sess.fetch(&c).unwrap(),
+        );
+        assert!(sess.fetch(&outs[0]).unwrap().max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn distributed_tensordot_matches_dense() {
+        let mut sess = Session::new(SessionConfig::real_small(2, 2));
+        let x = random_tensor3(&mut sess, &[6, 4, 4], &[2, 2, 1]);
+        let y = random_tensor3(&mut sess, &[4, 4, 6], &[2, 1, 2]);
+        let (out, _) = ops::tensordot(&mut sess, &x, &y).unwrap();
+        let want = tensordot_dense(&sess.fetch(&x).unwrap(), &sess.fetch(&y).unwrap());
+        assert!(sess.fetch(&out).unwrap().max_abs_diff(&want) < 1e-10);
+    }
+}

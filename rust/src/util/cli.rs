@@ -1,0 +1,126 @@
+//! Minimal command-line argument parser (the `clap` crate is unavailable
+//! offline). Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters and defaults.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a float, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key} expects a bool, got {v:?}"),
+        }
+    }
+
+    /// Parse `--key a,b,c` into a vec.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["bench", "--nodes", "16", "--verbose", "--mode=sim"]);
+        assert_eq!(a.positional, vec!["bench"]);
+        assert_eq!(a.usize_or("nodes", 1), 16);
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.str_or("mode", "real"), "sim");
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("nodes", 4), 4);
+        assert_eq!(a.f64_or("gamma", 0.5), 0.5);
+        assert!(!a.has("x"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["--fast"]);
+        assert!(a.bool_or("fast", false));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--figs", "9,10, 11"]);
+        assert_eq!(a.list_or("figs", &[]), vec!["9", "10", "11"]);
+    }
+}

@@ -1,0 +1,29 @@
+//! Zero-dependency utility substrate: PRNG, CLI parsing, statistics,
+//! property testing, table formatting. These replace `rand`, `clap`,
+//! `criterion`'s stats and `proptest`, none of which are available in the
+//! offline build image (see DESIGN.md §1).
+
+pub mod cli;
+pub mod fmt;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Wall-clock stopwatch used by benches and the real executor.
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self(std::time::Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}

@@ -1,0 +1,77 @@
+//! TSQR integration (§8.3): correctness at larger scale, scheduling
+//! behaviour, weak-scaling shape.
+
+use nums::api::{Policy, Session, SessionConfig};
+use nums::linalg::dense;
+use nums::linalg::tsqr::{direct_tsqr, indirect_tsqr};
+
+#[test]
+fn direct_tsqr_large_block_counts() {
+    let mut sess = Session::new(SessionConfig::real_small(4, 2));
+    let x = sess.randn(&[1024, 16], &[16, 1]);
+    let res = direct_tsqr(&mut sess, &x).unwrap();
+    let xd = sess.fetch(&x).unwrap();
+    let qd = sess.fetch(&res.q).unwrap();
+    let rd = sess.fetch(&res.r).unwrap();
+    assert!(dense::matmul(&qd, &rd).max_abs_diff(&xd) < 1e-9);
+    let qtq = dense::matmul(&qd.transposed(), &qd);
+    assert!(qtq.max_abs_diff(&dense::eye(16)) < 1e-9);
+}
+
+#[test]
+fn indirect_tsqr_matches_direct_r() {
+    let mut s1 = Session::new(SessionConfig::real_small(2, 2));
+    let x1 = s1.randn(&[512, 8], &[8, 1]);
+    let d = direct_tsqr(&mut s1, &x1).unwrap();
+    let mut s2 = Session::new(SessionConfig::real_small(2, 2));
+    let x2 = s2.randn(&[512, 8], &[8, 1]);
+    let i = indirect_tsqr(&mut s2, &x2).unwrap();
+    let rd = s1.fetch(&d.r).unwrap();
+    let ri = s2.fetch(&i.r).unwrap();
+    assert!(rd.max_abs_diff(&ri) < 1e-8);
+}
+
+#[test]
+fn tsqr_solves_least_squares() {
+    // full pipeline use: solve min ||X b - y|| via R^{-1} Q^T y
+    let mut sess = Session::new(SessionConfig::real_small(2, 2));
+    let x = sess.randn(&[256, 4], &[4, 1]);
+    let res = direct_tsqr(&mut sess, &x).unwrap();
+    let xd = sess.fetch(&x).unwrap();
+    let qd = sess.fetch(&res.q).unwrap();
+    let rd = sess.fetch(&res.r).unwrap();
+    // make y = X * [1,2,3,4]
+    let truth = nums::store::Block::from_vec(&[4, 1], vec![1., 2., 3., 4.]);
+    let y = dense::matmul(&xd, &truth);
+    let qty = dense::matmul(&qd.transposed(), &y);
+    let sol = dense::solve_upper(&rd, &qty);
+    assert!(sol.max_abs_diff(&truth) < 1e-9);
+}
+
+#[test]
+fn tsqr_weak_scaling_shape_fig12a() {
+    // QR weak scaling is near-perfect in the paper (Fig. 12a): doubling
+    // nodes and data should keep modeled time within 2x of the 1-node run.
+    let mut times = Vec::new();
+    for nodes in [1usize, 2, 4, 8] {
+        let mut sess = Session::new(SessionConfig::paper_sim(nodes, 8));
+        let x = sess.zeros(&[nodes << 18, 256], &[nodes * 4, 1]);
+        let res = indirect_tsqr(&mut sess, &x).unwrap();
+        times.push(res.report.sim.makespan);
+    }
+    for (i, t) in times.iter().enumerate() {
+        assert!(*t < times[0] * 2.0, "point {i}: {times:?}");
+    }
+}
+
+#[test]
+fn lshs_tsqr_beats_random_placement() {
+    let run = |policy: Policy| {
+        let mut sess = Session::new(SessionConfig::paper_sim(4, 8).with_policy(policy));
+        let x = sess.zeros(&[1 << 20, 256], &[16, 1]);
+        indirect_tsqr(&mut sess, &x).unwrap().report.sim.makespan
+    };
+    let lshs = run(Policy::Lshs);
+    let random = run(Policy::Random);
+    assert!(lshs <= random, "lshs {lshs} vs random {random}");
+}

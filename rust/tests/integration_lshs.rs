@@ -1,0 +1,139 @@
+//! End-to-end scheduling integration: LSHS vs baselines over the §8.1
+//! microbenchmark operation set, plus layout invariants.
+
+use nums::api::{ops, Policy, Session, SessionConfig};
+use nums::prelude::*;
+
+fn sim_session(policy: Policy, nodes: usize, wpn: usize) -> Session {
+    Session::new(SessionConfig::paper_sim(nodes, wpn).with_policy(policy))
+}
+
+#[test]
+fn ew_zero_communication_under_lshs_any_partitioning() {
+    for q in [3usize, 5, 8, 16, 30] {
+        let mut sess = sim_session(Policy::Lshs, 4, 4);
+        let a = sess.zeros(&[1 << 20, 64], &[q, 1]);
+        let b = sess.zeros(&[1 << 20, 64], &[q, 1]);
+        let (_, rep) = ops::add(&mut sess, &a, &b).unwrap();
+        assert_eq!(rep.transfers, 0, "q={q}: X+Y must be communication-free");
+    }
+}
+
+#[test]
+fn round_robin_pays_for_nondivisible_partitioning() {
+    // Fig. 9's divisibility effect: when #blocks % #targets != 0, the
+    // round-robin layout misaligns operands and forces transfers.
+    let mut sess = sim_session(Policy::RoundRobin, 4, 4);
+    let a = sess.zeros(&[1 << 18, 64], &[5, 1]);
+    let b = sess.zeros(&[1 << 18, 64], &[5, 1]);
+    let (_, rep) = ops::add(&mut sess, &a, &b).unwrap();
+    assert!(rep.transfers > 0, "misaligned rr layout must move data");
+}
+
+#[test]
+fn lshs_beats_baselines_on_inner_product() {
+    // Xᵀ@Y on row-partitioned 16-block operands (§8.1's X^T @ Y).
+    let run = |policy: Policy| {
+        let mut sess = sim_session(policy, 4, 8);
+        let x = sess.zeros(&[1 << 20, 64], &[16, 1]);
+        let y = sess.zeros(&[1 << 20, 64], &[16, 1]);
+        let (_, rep) = ops::matmul(&mut sess, &x.t(), &y).unwrap();
+        (rep.sim.makespan, rep.transfer_bytes)
+    };
+    let (t_lshs, b_lshs) = run(Policy::Lshs);
+    let (t_rand, b_rand) = run(Policy::Random);
+    let (t_bu, b_bu) = run(Policy::BottomUp);
+    assert!(
+        b_lshs <= b_rand && b_lshs <= b_bu,
+        "LSHS bytes {b_lshs} vs random {b_rand} / bottom-up {b_bu}"
+    );
+    assert!(
+        t_lshs <= t_rand && t_lshs <= t_bu,
+        "LSHS time {t_lshs} vs random {t_rand} / bottom-up {t_bu}"
+    );
+}
+
+#[test]
+fn lshs_balances_memory_vs_bottom_up() {
+    let peak_imbalance = |policy: Policy| {
+        let mut sess = sim_session(policy, 8, 4);
+        let x = sess.zeros(&[1 << 20, 64], &[32, 1]);
+        let y = sess.zeros(&[1 << 20, 64], &[32, 1]);
+        let (_, rep) = ops::matmul(&mut sess, &x.t(), &y).unwrap();
+        rep.sim.mem_imbalance()
+    };
+    let lshs = peak_imbalance(Policy::Lshs);
+    let bu = peak_imbalance(Policy::BottomUp);
+    assert!(lshs < bu, "LSHS imbalance {lshs:.2} vs bottom-up {bu:.2}");
+    assert!(lshs < 1.5, "LSHS should be near-balanced, got {lshs:.2}");
+}
+
+#[test]
+fn matmul_outputs_follow_hierarchical_layout() {
+    // After A@B, output blocks must sit on their layout nodes, so a
+    // subsequent element-wise op is again communication-free.
+    let mut sess = sim_session(Policy::Lshs, 4, 4);
+    let a = sess.zeros(&[4096, 4096], &[4, 4]);
+    let b = sess.zeros(&[4096, 4096], &[4, 4]);
+    let (c, _) = ops::matmul(&mut sess, &a, &b).unwrap();
+    let (d, _) = ops::matmul(&mut sess, &a, &b).unwrap();
+    let (_, rep) = ops::add(&mut sess, &c, &d).unwrap();
+    assert_eq!(
+        rep.transfers, 0,
+        "chained ew op after matmul must stay local (hierarchical layout invariant)"
+    );
+}
+
+#[test]
+fn dask_mode_schedules_at_worker_granularity() {
+    let cfg = SessionConfig::paper_sim(2, 4)
+        .with_policy(Policy::Lshs)
+        .with_mode(SystemMode::Dask);
+    let mut sess = Session::new(cfg);
+    let a = sess.zeros(&[1 << 16, 64], &[8, 1]);
+    let b = sess.zeros(&[1 << 16, 64], &[8, 1]);
+    // 8 blocks over 8 worker targets: one per worker
+    let mut seen: Vec<usize> = a.targets.clone();
+    seen.sort_unstable();
+    assert_eq!(seen, (0..8).collect::<Vec<_>>());
+    let (_, rep) = ops::add(&mut sess, &a, &b).unwrap();
+    assert_eq!(rep.transfers, 0);
+}
+
+#[test]
+fn sum_reduction_tree_is_local_first() {
+    // sum over 16 row blocks on 4 nodes: intra-node pairs reduce first, so
+    // inter-node transfers are at most k-1 = 3 object moves.
+    let mut sess = sim_session(Policy::Lshs, 4, 4);
+    let x = sess.zeros(&[1 << 20, 64], &[16, 1]);
+    let (_, rep) = ops::sum_axis(&mut sess, &x, 0).unwrap();
+    assert!(
+        rep.transfers <= 3,
+        "locality-paired tree should move <= k-1 blocks, got {}",
+        rep.transfers
+    );
+}
+
+#[test]
+fn schedulers_produce_identical_numerics() {
+    // Scheduling must never change results — only placement.
+    let mut dense: Vec<Block> = Vec::new();
+    for policy in [Policy::Lshs, Policy::RoundRobin, Policy::BottomUp, Policy::Random] {
+        let mut sess = Session::new(SessionConfig::real_small(3, 2).with_policy(policy));
+        let a = sess.randn(&[96, 96], &[3, 3]);
+        let b = sess.randn(&[96, 96], &[3, 3]);
+        let (c, _) = ops::matmul(&mut sess, &a, &b).unwrap();
+        dense.push(sess.fetch(&c).unwrap());
+    }
+    for other in &dense[1..] {
+        assert!(dense[0].max_abs_diff(other) < 1e-12);
+    }
+}
+
+#[test]
+fn softmax_auto_partitioning_is_used() {
+    let sess = Session::new(SessionConfig::paper_sim(4, 4));
+    // square: near-even 2-D split; tall-skinny: all along rows (§4)
+    assert_eq!(sess.auto_grid(&[4096, 4096]), vec![4, 4]);
+    assert_eq!(sess.auto_grid(&[1 << 24, 256]), vec![16, 1]);
+}

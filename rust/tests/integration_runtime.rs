@@ -1,0 +1,154 @@
+//! PJRT runtime integration: every AOT artifact executes and matches the
+//! native oracle; the composite backend routes correctly.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so `cargo test`
+//! works on a fresh checkout).
+
+use nums::prelude::*;
+use nums::runtime::{native, Manifest, PjrtRuntime};
+use nums::store::Block;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn kernel_for(name: &str) -> Option<Kernel> {
+    Some(match name {
+        "neg" => Kernel::Neg,
+        "sigmoid" => Kernel::Sigmoid,
+        "add" => Kernel::Ew(BinOp::Add),
+        "sub" => Kernel::Ew(BinOp::Sub),
+        "mul" => Kernel::Ew(BinOp::Mul),
+        "div" => Kernel::Ew(BinOp::Div),
+        "matmul" => Kernel::Matmul,
+        "matmul_nt" => Kernel::MatmulNT,
+        "gram" => Kernel::Gram,
+        "sum_axis0" => Kernel::SumAxis0,
+        "sum_axis1" => Kernel::SumAxis1,
+        "sum_all" => Kernel::SumAll,
+        "glm_mu" => Kernel::GlmMu,
+        "glm_grad" => Kernel::GlmGrad,
+        "glm_hess" => Kernel::GlmHess,
+        "logloss" => Kernel::LogLoss,
+        "newton_block" => Kernel::NewtonBlock,
+        "lbfgs_block" => Kernel::LbfgsBlock,
+        "predict_block" => Kernel::PredictBlock,
+        _ => return None,
+    })
+}
+
+/// Build inputs that respect each kernel's domain (probabilities, labels).
+fn inputs_for(entry: &nums::runtime::ManifestEntry, rng: &mut Rng) -> Vec<Block> {
+    entry
+        .input_shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let n: usize = s.iter().product();
+            let mut v = vec![0.0; n];
+            rng.fill_normal(&mut v);
+            let sigmoid = |v: &mut Vec<f64>| {
+                for x in v.iter_mut() {
+                    *x = 1.0 / (1.0 + (-*x).exp());
+                }
+            };
+            let binarize = |v: &mut Vec<f64>| {
+                for x in v.iter_mut() {
+                    *x = if *x > 0.0 { 1.0 } else { 0.0 };
+                }
+            };
+            match (entry.name.as_str(), i) {
+                ("logloss", 0) => sigmoid(&mut v),
+                ("logloss", 1) => binarize(&mut v),
+                ("glm_grad", 1) | ("glm_hess", 1) => sigmoid(&mut v),
+                ("glm_grad", 2) => binarize(&mut v),
+                ("newton_block", 1) | ("lbfgs_block", 1) => binarize(&mut v),
+                ("div", 1) => {
+                    for x in v.iter_mut() {
+                        *x = x.abs() + 1.0;
+                    }
+                }
+                _ => {}
+            }
+            Block::from_vec(s, v)
+        })
+        .collect()
+}
+
+#[test]
+fn every_artifact_matches_native_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::new(&dir).expect("pjrt client");
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut rng = Rng::seed_from_u64(0xA0A0);
+    let mut checked = 0;
+    for entry in manifest.entries() {
+        let Some(kernel) = kernel_for(&entry.name) else { continue };
+        let inputs = inputs_for(entry, &mut rng);
+        let refs: Vec<&Block> = inputs.iter().collect();
+        let got = rt.execute(&kernel, &refs).expect(&entry.name);
+        let want = native::execute(&kernel, &refs).unwrap();
+        assert_eq!(got.len(), want.len(), "{}", entry.name);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.shape, w.shape);
+            let d = nums::util::stats::max_rel_diff(g.buf(), w.buf());
+            assert!(d < 1e-8, "{} {:?}: rel diff {d}", entry.name, entry.dims);
+        }
+        checked += 1;
+    }
+    assert!(checked >= 40, "only {checked} artifacts checked");
+    assert_eq!(rt.exec_count.load(std::sync::atomic::Ordering::Relaxed), checked);
+}
+
+#[test]
+fn executables_are_cached_across_calls() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::new(&dir).unwrap();
+    let mut rng = Rng::seed_from_u64(1);
+    let mk = |rng: &mut Rng| {
+        let mut v = vec![0.0; 64 * 64];
+        rng.fill_normal(&mut v);
+        Block::from_vec(&[64, 64], v)
+    };
+    for _ in 0..5 {
+        let (a, b) = (mk(&mut rng), mk(&mut rng));
+        rt.execute(&Kernel::Matmul, &[&a, &b]).unwrap();
+    }
+    assert_eq!(rt.compiled_count(), 1, "one executable, five executions");
+}
+
+#[test]
+fn composite_backend_falls_back_to_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let backend = Backend::pjrt(&dir).unwrap();
+    // 64x64 add: in the manifest -> PJRT
+    let a = Block::filled(&[64, 64], 1.0);
+    let b = Block::filled(&[64, 64], 2.0);
+    backend.execute(&Kernel::Ew(BinOp::Add), &[&a, &b]).unwrap();
+    // 7x7 add: not in the manifest -> native
+    let c = Block::filled(&[7, 7], 1.0);
+    let d = Block::filled(&[7, 7], 2.0);
+    backend.execute(&Kernel::Ew(BinOp::Add), &[&c, &d]).unwrap();
+    // QR: native-only kernel
+    let x = Block::filled(&[16, 4], 1.0);
+    backend.execute(&Kernel::Qr, &[&x]).ok();
+    let (pjrt, native) = backend.counters();
+    assert_eq!(pjrt, 1);
+    assert!(native >= 2);
+}
+
+#[test]
+fn unsupported_shape_errors_cleanly_on_pure_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::new(&dir).unwrap();
+    let a = Block::filled(&[3, 3], 1.0);
+    let b = Block::filled(&[3, 3], 1.0);
+    let err = rt.execute(&Kernel::Ew(BinOp::Add), &[&a, &b]).unwrap_err();
+    assert!(format!("{err}").contains("no artifact"));
+}

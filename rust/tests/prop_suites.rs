@@ -1,0 +1,268 @@
+//! Property suites over randomized inputs (in-tree `util::prop` driver —
+//! proptest is unavailable offline). Each property runs a few hundred
+//! seeded cases and panics with the replay seed on failure.
+
+use nums::api::{ops, Policy, Session, SessionConfig};
+use nums::grid::{softmax_grid, ArrayGrid, Layout, NodeGrid};
+use nums::prelude::*;
+use nums::util::prop::{forall, forall_res};
+
+// --------------------------------------------------------------- grids
+
+#[test]
+fn prop_grid_flat_coords_roundtrip() {
+    forall(
+        0x61D1,
+        300,
+        |r| {
+            let ndim = 1 + r.usize(3);
+            let shape: Vec<usize> = (0..ndim).map(|_| 1 + r.usize(40)).collect();
+            let grid: Vec<usize> = shape.iter().map(|&s| 1 + r.usize(s.min(6))).collect();
+            (shape, grid)
+        },
+        |(shape, grid)| {
+            let g = ArrayGrid::new(shape, grid);
+            (0..g.num_blocks()).all(|f| g.flat_of(&g.coords_of(f)) == f)
+        },
+    );
+}
+
+#[test]
+fn prop_block_extents_tile_shape() {
+    forall_res(
+        0x61D2,
+        300,
+        |r| (1 + r.usize(10_000), 1 + r.usize(64)),
+        |&(s, g)| {
+            let g = g.min(s);
+            let a = ArrayGrid::new(&[s], &[g]);
+            let total: usize = (0..g).map(|b| a.block_extent(0, b)).sum();
+            if total != s {
+                return Err(format!("extents sum {total} != {s}"));
+            }
+            // offsets strictly increasing, last + extent == s
+            let last = a.block_offset(0, g - 1) + a.block_extent(0, g - 1);
+            if last != s {
+                return Err(format!("last block ends at {last} != {s}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_softmax_grid_within_budget() {
+    forall_res(
+        0x61D3,
+        300,
+        |r| {
+            let ndim = 1 + r.usize(3);
+            let shape: Vec<usize> = (0..ndim).map(|_| 1 + r.usize(1 << 20)).collect();
+            let p = 1 + r.usize(512);
+            (shape, p)
+        },
+        |(shape, p)| {
+            let g = softmax_grid(shape, *p);
+            if g.len() != shape.len() {
+                return Err("rank mismatch".into());
+            }
+            for (gi, si) in g.iter().zip(shape) {
+                if *gi < 1 || gi > si {
+                    return Err(format!("axis grid {gi} out of [1, {si}]"));
+                }
+            }
+            let prod: usize = g.iter().product();
+            if prod > (*p).max(1) {
+                return Err(format!("{prod} blocks > {p} workers"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_layout_place_matches_paper_formula() {
+    forall(
+        0x61D4,
+        300,
+        |r| {
+            let g1 = 1 + r.usize(5);
+            let g2 = 1 + r.usize(5);
+            let i = r.usize(32);
+            let j = r.usize(32);
+            (g1, g2, i, j)
+        },
+        |&(g1, g2, i, j)| {
+            NodeGrid::new(&[g1, g2]).place(&[i, j]) == (i % g1) * g2 + (j % g2)
+        },
+    );
+}
+
+#[test]
+fn prop_layout_balanced_when_divisible() {
+    forall_res(
+        0x61D5,
+        200,
+        |r| {
+            let g1 = 1 + r.usize(3);
+            let g2 = 1 + r.usize(3);
+            let m1 = 1 + r.usize(3);
+            let m2 = 1 + r.usize(3);
+            (g1, g2, m1, m2)
+        },
+        |&(g1, g2, m1, m2)| {
+            // block grid = node grid × multiple -> perfectly even placement
+            let layout = Layout::new(NodeGrid::new(&[g1, g2]), 4);
+            let blocks = ArrayGrid::new(&[64 * g1 * m1, 64 * g2 * m2], &[g1 * m1, g2 * m2]);
+            let placements = layout.place_all(&blocks);
+            let mut counts = vec![0usize; g1 * g2];
+            for p in &placements {
+                counts[p.node] += 1;
+            }
+            let want = m1 * m2;
+            if counts.iter().any(|&c| c != want) {
+                return Err(format!("uneven placement {counts:?}, want {want} each"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ----------------------------------------------------------- scheduler
+
+/// Random expression over random partitioning; check plan well-formedness:
+/// topological order, every transfer source actually holds the object,
+/// outputs resolve, and the DES accepts the plan.
+#[test]
+fn prop_random_expressions_yield_wellformed_plans() {
+    forall_res(
+        0x5CED,
+        120,
+        |r| {
+            let nodes = 1 + r.usize(8);
+            let q = 1 + r.usize(12);
+            let op = r.usize(4);
+            let policy = match r.usize(4) {
+                0 => Policy::Lshs,
+                1 => Policy::RoundRobin,
+                2 => Policy::BottomUp,
+                _ => Policy::Random,
+            };
+            (nodes, q, op, policy, r.next_u64())
+        },
+        |&(nodes, q, op, ref policy, seed)| {
+            let cfg = SessionConfig::paper_sim(nodes, 4)
+                .with_policy(policy.clone())
+                .with_seed(seed);
+            let mut sess = Session::new(cfg);
+            let x = sess.zeros(&[1 << 14, 64], &[q, 1]);
+            let y = sess.zeros(&[1 << 14, 64], &[q, 1]);
+            let rep = match op {
+                0 => ops::add(&mut sess, &x, &y),
+                1 => ops::matmul(&mut sess, &x.t(), &y),
+                2 => ops::sum_axis(&mut sess, &x, 0),
+                _ => ops::matmul(&mut sess, &x, &y.t()),
+            }
+            .map_err(|e| format!("run failed: {e}"))?;
+            let rep = rep.1;
+            if rep.sim.makespan <= 0.0 {
+                return Err("zero makespan".into());
+            }
+            if rep.sim.makespan.is_nan() {
+                return Err("NaN makespan".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lshs_never_worse_traffic_than_random() {
+    forall_res(
+        0x5CEE,
+        60,
+        |r| (2 + r.usize(7), 2 + r.usize(14), r.next_u64()),
+        |&(nodes, q, seed)| {
+            let run = |policy: Policy| {
+                let cfg = SessionConfig::paper_sim(nodes, 4)
+                    .with_policy(policy)
+                    .with_seed(seed);
+                let mut sess = Session::new(cfg);
+                let x = sess.zeros(&[1 << 16, 64], &[q, 1]);
+                let y = sess.zeros(&[1 << 16, 64], &[q, 1]);
+                let (_, rep) = ops::matmul(&mut sess, &x.t(), &y).unwrap();
+                rep.transfer_bytes
+            };
+            let lshs = run(Policy::Lshs);
+            let random = run(Policy::Random);
+            if lshs > random {
+                return Err(format!("lshs {lshs} > random {random}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_real_and_dense_matmul_agree() {
+    forall_res(
+        0x5CEF,
+        25,
+        |r| {
+            let m = 8 + r.usize(56);
+            let k = 8 + r.usize(56);
+            let n = 8 + r.usize(56);
+            let gm = 1 + r.usize(3);
+            let gk = 1 + r.usize(3);
+            let gn = 1 + r.usize(3);
+            (m, k, n, gm.min(m), gk.min(k), gn.min(n), r.next_u64())
+        },
+        |&(m, k, n, gm, gk, gn, seed)| {
+            let mut sess =
+                Session::new(SessionConfig::real_small(2, 2).with_seed(seed));
+            let a = sess.randn(&[m, k], &[gm, gk]);
+            let b = sess.randn(&[k, n], &[gk, gn]);
+            let (c, _) = ops::matmul(&mut sess, &a, &b).map_err(|e| e.to_string())?;
+            let want = nums::linalg::dense::matmul(
+                &sess.fetch(&a).unwrap(),
+                &sess.fetch(&b).unwrap(),
+            );
+            let got = sess.fetch(&c).unwrap();
+            let d = got.max_abs_diff(&want);
+            if d > 1e-9 {
+                return Err(format!("max diff {d}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_des_makespan_at_least_critical_compute() {
+    // DES sanity: makespan >= total busy time / workers and >= dispatch γ·n.
+    forall_res(
+        0x5CF0,
+        60,
+        |r| (1 + r.usize(8), 1 + r.usize(16), r.next_u64()),
+        |&(nodes, q, seed)| {
+            let cfg = SessionConfig::paper_sim(nodes, 2).with_seed(seed);
+            let mut sess = Session::new(cfg);
+            let x = sess.zeros(&[1 << 16, 64], &[q, 1]);
+            let y = sess.zeros(&[1 << 16, 64], &[q, 1]);
+            let (_, rep) = ops::add(&mut sess, &x, &y).unwrap();
+            let total_busy: f64 = rep.sim.busy.iter().sum();
+            let cap = (nodes * 2) as f64;
+            if rep.sim.makespan + 1e-12 < total_busy / cap {
+                return Err(format!(
+                    "makespan {} < busy/workers {}",
+                    rep.sim.makespan,
+                    total_busy / cap
+                ));
+            }
+            if rep.sim.makespan + 1e-12 < rep.sim.dispatch_time {
+                return Err("makespan below dispatch serialization".into());
+            }
+            Ok(())
+        },
+    );
+}
