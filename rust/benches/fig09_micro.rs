@@ -6,10 +6,18 @@
 //! Expected shape (paper §8.1): LSHS flat & fast everywhere; the Dask-like
 //! round-robin competitive only when partitions divide the worker count;
 //! Ray-without-LSHS concentrated and slow.
+//!
+//! Extended sections (this repo's perf work): the element-wise-chain
+//! fusion ablation (fusion on/off over modeled cluster + real execution)
+//! and the blocked-vs-naive dense matmul kernel shootout. Results are
+//! also written machine-readably to `BENCH_fig09.json` so future PRs have
+//! a perf trajectory to diff against.
 
 use nums::api::{ops, Policy, RunReport, Session, SessionConfig};
-use nums::bench::harness::print_series;
+use nums::bench::harness::{emit_json, print_series, PerfRecord};
+use nums::linalg::dense;
 use nums::prelude::*;
+use nums::util::Stopwatch;
 
 type OpFn = fn(&mut Session, &DistArray, &DistArray) -> anyhow::Result<(DistArray, RunReport)>;
 
@@ -95,6 +103,108 @@ fn series(title: &str, f: impl Fn(Policy, SystemMode, usize) -> f64, parts: &[us
     print_series(title, "partitions", &xs, &rows);
 }
 
+/// The 6-step chain used by the fusion ablation:
+/// `-( sigmoid((-X · 0.5) + Y) · Z )`.
+fn chain_steps() -> Vec<EwStep> {
+    vec![
+        EwStep::Neg,
+        EwStep::Scale(0.5),
+        EwStep::Bin(BinOp::Add),
+        EwStep::Sigmoid,
+        EwStep::Bin(BinOp::Mul),
+        EwStep::Neg,
+    ]
+}
+
+/// Fusion ablation: the same 6-op chain with fusion on/off, on the
+/// modeled paper cluster (task counts + modeled seconds) and on a real
+/// local session (wall seconds).
+fn chain_ablation(records: &mut Vec<PerfRecord>) {
+    let steps = chain_steps();
+    println!("## Fig 9 (ext): elementwise-chain fusion ablation (6-op chain)");
+
+    // modeled: 64 GB-shape operands over 16 nodes x 32 workers
+    let (rows, d, q) = (1usize << 27, 64usize, 64usize);
+    for fusion in [false, true] {
+        let cfg = SessionConfig::paper_sim(16, 32).with_fusion(fusion);
+        let mut sess = Session::new(cfg);
+        let x = sess.zeros(&[rows, d], &[q, 1]);
+        let y = sess.zeros(&[rows, d], &[q, 1]);
+        let z = sess.zeros(&[rows, d], &[q, 1]);
+        let (_, rep) = ops::ew_chain(&mut sess, &x, &[&y, &z], &steps).unwrap();
+        println!(
+            "  sim  fusion={fusion:<5} tasks={:<4} fused_ops={:<4} modeled={:.4}s transfers={}",
+            rep.tasks, rep.fused_ops, rep.sim.makespan, rep.transfers
+        );
+        records.push(PerfRecord {
+            op: format!("ew_chain6_sim_fusion_{fusion}"),
+            bytes: (rows as u64) * (d as u64) * 8 * 3,
+            secs: rep.sim.makespan,
+            gflops: 0.0,
+        });
+    }
+
+    // real execution: moderate shapes, actual kernels and wall-clock
+    let m = 1usize << 12;
+    for fusion in [false, true] {
+        let cfg = SessionConfig::real_small(2, 4).with_fusion(fusion);
+        let mut sess = Session::new(cfg);
+        let x = sess.randn(&[m, 256], &[8, 1]);
+        let y = sess.randn(&[m, 256], &[8, 1]);
+        let z = sess.randn(&[m, 256], &[8, 1]);
+        let sw = Stopwatch::start();
+        let (_, rep) = ops::ew_chain(&mut sess, &x, &[&y, &z], &steps).unwrap();
+        let secs = sw.secs();
+        println!(
+            "  real fusion={fusion:<5} tasks={:<4} wall={:.4}s",
+            rep.tasks, secs
+        );
+        records.push(PerfRecord {
+            op: format!("ew_chain6_real_fusion_{fusion}"),
+            bytes: (m * 256 * 8 * 3) as u64,
+            secs,
+            gflops: 0.0,
+        });
+    }
+}
+
+/// Blocked/register-tiled/parallel matmul vs the seed's naive triple loop
+/// on one 1024x1024 f64 block (the acceptance kernel for this PR).
+fn kernel_shootout(records: &mut Vec<PerfRecord>) {
+    // standalone kernel timing: reclaim full per-kernel parallelism (the
+    // real sessions above lowered the hint to their worker count)
+    dense::set_parallelism_hint(1);
+    let n = 1024usize;
+    let mut rng = Rng::seed_from_u64(0x909);
+    let mut av = vec![0.0; n * n];
+    rng.fill_normal(&mut av);
+    let mut bv = vec![0.0; n * n];
+    rng.fill_normal(&mut bv);
+    let a = Block::from_vec(&[n, n], av);
+    let b = Block::from_vec(&[n, n], bv);
+    let flops = 2.0 * (n as f64).powi(3);
+    println!("## Fig 9 (ext): dense matmul kernel, one {n}x{n} block");
+    let mut secs_of = |name: &str, f: fn(&Block, &Block) -> Block| -> f64 {
+        let _ = f(&a, &b); // warmup
+        let sw = Stopwatch::start();
+        let out = f(&a, &b);
+        let secs = sw.secs();
+        assert_eq!(out.shape, vec![n, n]);
+        let g = flops / secs / 1e9;
+        println!("  {name:<16} {secs:.4}s  {g:8.2} GFLOP/s");
+        records.push(PerfRecord {
+            op: format!("{name}_{n}"),
+            bytes: (3 * n * n * 8) as u64,
+            secs,
+            gflops: g,
+        });
+        secs
+    };
+    let blocked = secs_of("matmul_blocked", dense::matmul);
+    let naive = secs_of("matmul_naive", dense::matmul_naive);
+    println!("  speedup: {:.2}x", naive / blocked);
+}
+
 fn main() {
     // 64 GB-shape operands (2^27 x 64 f64) — modeled time, phantom blocks.
     let rows = 1usize << 27;
@@ -112,4 +222,10 @@ fn main() {
         &parts,
     );
     series("Fig 9: sum(X, 0) [modeled s]", |p, m, q| run_case(p, m, rows, d, q, sum0), &parts);
+
+    let mut records = Vec::new();
+    chain_ablation(&mut records);
+    kernel_shootout(&mut records);
+    emit_json("BENCH_fig09.json", &records).expect("write BENCH_fig09.json");
+    println!("wrote BENCH_fig09.json ({} records)", records.len());
 }

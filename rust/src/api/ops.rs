@@ -4,7 +4,7 @@
 use anyhow::Result;
 
 use crate::graph::{build, DistArray, Graph};
-use crate::runtime::kernel::{BinOp, Kernel};
+use crate::runtime::kernel::{BinOp, EwStep, Kernel};
 
 use super::session::{RunReport, Session};
 
@@ -45,6 +45,20 @@ pub fn sub(sess: &mut Session, a: &DistArray, b: &DistArray) -> Result<(DistArra
 pub fn mul(sess: &mut Session, a: &DistArray, b: &DistArray) -> Result<(DistArray, RunReport)> {
     let mut g = Graph::new();
     build::binary_ew(&mut g, a, b, BinOp::Mul);
+    run_one(sess, &mut g)
+}
+
+/// An element-wise chain (e.g. `sigmoid(-X · 2 + Y)`) expressed as
+/// [`EwStep`]s over `first` plus one operand per binary step. Built
+/// unfused; `SessionConfig::fusion` collapses it to one task per block.
+pub fn ew_chain(
+    sess: &mut Session,
+    first: &DistArray,
+    rest: &[&DistArray],
+    steps: &[EwStep],
+) -> Result<(DistArray, RunReport)> {
+    let mut g = Graph::new();
+    build::ew_chain(&mut g, first, rest, steps);
     run_one(sess, &mut g)
 }
 

@@ -62,6 +62,11 @@ pub struct SessionConfig {
     pub seed: u64,
     /// Record Fig. 15 trace events in sim reports.
     pub record_trace: bool,
+    /// Collapse element-wise chains into single `FusedEw` tasks before
+    /// scheduling (`graph::fuse`). On by default; toggleable for the
+    /// fusion ablation in `benches/fig09_micro.rs` and for baselines that
+    /// model systems without a fusion pass (`glm::driver_agg`).
+    pub fusion: bool,
 }
 
 impl SessionConfig {
@@ -78,6 +83,7 @@ impl SessionConfig {
             compute: ComputeParams::paper_testbed(),
             seed: 0xC0FFEE,
             record_trace: false,
+            fusion: true,
         }
     }
 
@@ -94,11 +100,17 @@ impl SessionConfig {
             compute: ComputeParams::paper_testbed(),
             seed: 0xC0FFEE,
             record_trace: false,
+            fusion: true,
         }
     }
 
     pub fn with_policy(mut self, p: Policy) -> Self {
         self.policy = p;
+        self
+    }
+
+    pub fn with_fusion(mut self, on: bool) -> Self {
+        self.fusion = on;
         self
     }
 
@@ -128,6 +140,8 @@ pub struct RunReport {
     pub real: Option<RealReport>,
     /// Scheduling wall time (the γ-side cost LSHS itself adds).
     pub schedule_secs: f64,
+    /// Element-wise ops absorbed by the fusion pass (tasks saved).
+    pub fused_ops: usize,
 }
 
 pub struct Session {
@@ -273,6 +287,13 @@ impl Session {
     /// [`DistArray`] per graph output plus the run report.
     pub fn run(&mut self, graph: &mut Graph) -> Result<(Vec<DistArray>, RunReport)> {
         let sw = crate::util::Stopwatch::start();
+        // planning step 1: collapse element-wise chains (one task, one
+        // placement decision, zero intermediates per chain)
+        let fuse_stats = if self.cfg.fusion {
+            crate::graph::fuse::fuse_elementwise(graph)
+        } else {
+            crate::graph::fuse::FuseStats::default()
+        };
         let mut plan = Plan::new();
         self.scheduler
             .schedule(graph, &mut self.state, &self.ids, &mut plan);
@@ -333,6 +354,7 @@ impl Session {
                 sim,
                 real,
                 schedule_secs,
+                fused_ops: fuse_stats.absorbed,
             },
         ))
     }

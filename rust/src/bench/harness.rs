@@ -90,6 +90,39 @@ impl Bench {
     }
 }
 
+/// One machine-readable perf datapoint for cross-PR trajectory tracking.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PerfRecord {
+    /// Operation label, e.g. `matmul_blocked_1024`.
+    pub op: String,
+    /// Bytes the operation touches (inputs + outputs).
+    pub bytes: u64,
+    /// Wall (or modeled) seconds.
+    pub secs: f64,
+    /// Achieved GFLOP/s (0 for bandwidth-bound ops).
+    pub gflops: f64,
+}
+
+/// Write records as a JSON array (hand-rolled: no serde offline). Benches
+/// emit `BENCH_<fig>.json` next to the working directory so future PRs can
+/// diff perf against this one.
+pub fn emit_json(path: &str, records: &[PerfRecord]) -> std::io::Result<()> {
+    let mut s = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"op\": \"{}\", \"bytes\": {}, \"secs\": {:.9}, \"gflops\": {:.6}}}{}\n",
+            r.op.replace('"', "'"),
+            r.bytes,
+            r.secs,
+            r.gflops,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    s.push(']');
+    s.push('\n');
+    std::fs::write(path, s)
+}
+
 /// Print a paper-style series table: label column + one column per point.
 pub fn print_series(title: &str, x_label: &str, xs: &[String], rows: &[(String, Vec<f64>)]) {
     println!("## {title}");
@@ -119,5 +152,37 @@ mod tests {
         assert!(mean >= 0.0);
         assert_eq!(b.measurements[0].samples.len(), 3);
         assert!(b.report().contains("noop"));
+    }
+
+    #[test]
+    fn emit_json_is_wellformed() {
+        let path = std::env::temp_dir().join(format!(
+            "nums_bench_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_string_lossy().to_string();
+        let recs = vec![
+            PerfRecord {
+                op: "matmul_blocked_1024".into(),
+                bytes: 3 * 1024 * 1024 * 8,
+                secs: 0.125,
+                gflops: 17.18,
+            },
+            PerfRecord {
+                op: "ew_chain_fused".into(),
+                bytes: 1 << 20,
+                secs: 0.001,
+                gflops: 0.0,
+            },
+        ];
+        emit_json(&path, &recs).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(text.starts_with("[\n"));
+        assert!(text.trim_end().ends_with(']'));
+        assert!(text.contains("\"op\": \"matmul_blocked_1024\""));
+        assert!(text.contains("\"gflops\": 17.180000"));
+        assert_eq!(text.matches('{').count(), 2);
+        assert_eq!(text.matches("},").count(), 1, "one record separator");
     }
 }

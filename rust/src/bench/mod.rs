@@ -3,4 +3,4 @@
 
 pub mod harness;
 
-pub use harness::{Bench, Measurement};
+pub use harness::{emit_json, Bench, Measurement, PerfRecord};

@@ -9,6 +9,7 @@
 
 use std::collections::HashSet;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -33,11 +34,25 @@ struct Shared {
     failed: Mutex<Option<String>>,
 }
 
+/// `NUMS_DEADLOCK_TIMEOUT_SECS` parsing (non-positive/garbage/absurd -> 30s).
+fn parse_deadlock_timeout(v: Option<String>) -> Duration {
+    // upper bound keeps Duration::from_secs_f64 from panicking on overflow
+    const MAX_SECS: f64 = 1e9;
+    v.and_then(|s| s.parse::<f64>().ok())
+        .filter(|s| *s > 0.0 && *s <= MAX_SECS)
+        .map(Duration::from_secs_f64)
+        .unwrap_or(Duration::from_secs(30))
+}
+
 pub struct RealExecutor {
     pub topo: Topology,
     pub backend: Arc<Backend>,
     /// Worker threads per node (capped: a laptop can't host 512).
     pub threads_per_node: usize,
+    /// How long a task may wait on its inputs before the run is declared
+    /// deadlocked. Defaults to 30s; `NUMS_DEADLOCK_TIMEOUT_SECS` overrides
+    /// (long single-kernel workloads legitimately exceed 30s).
+    pub deadlock_timeout: Duration,
 }
 
 impl RealExecutor {
@@ -45,10 +60,17 @@ impl RealExecutor {
         // cap total threads near the host's cores
         let cap = (16 / topo.nodes).max(1).min(8);
         let threads_per_node = topo.workers_per_node.min(cap).max(1);
+        let deadlock_timeout =
+            parse_deadlock_timeout(std::env::var("NUMS_DEADLOCK_TIMEOUT_SECS").ok());
+        // tell the blocked dense kernels how many workers will call them
+        // concurrently, so kernel-internal parallelism divides the host's
+        // cores instead of multiplying into oversubscription
+        crate::linalg::dense::set_parallelism_hint(topo.nodes * threads_per_node);
         Self {
             topo,
             backend,
             threads_per_node,
+            deadlock_timeout,
         }
     }
 
@@ -84,6 +106,7 @@ impl RealExecutor {
             .map(|v| Arc::new(Mutex::new(v.into_iter().collect())))
             .collect();
 
+        let deadlock_timeout = self.deadlock_timeout;
         std::thread::scope(|scope| {
             for node in 0..k {
                 for _ in 0..self.threads_per_node {
@@ -111,13 +134,22 @@ impl RealExecutor {
                                     }
                                     let (guard, timeout) = shared
                                         .cv
-                                        .wait_timeout(p, std::time::Duration::from_secs(30))
+                                        .wait_timeout(p, deadlock_timeout)
                                         .unwrap();
                                     p = guard;
                                     if timeout.timed_out() {
+                                        let missing: Vec<ObjectId> = task
+                                            .inputs
+                                            .iter()
+                                            .copied()
+                                            .filter(|o| !p.contains(o))
+                                            .collect();
                                         *shared.failed.lock().unwrap() = Some(format!(
-                                            "deadlock: task {idx} ({}) waiting on inputs",
-                                            task.kernel
+                                            "deadlock: task {idx} ({}) timed out after \
+                                             {:.1}s waiting on input objects {missing:?} \
+                                             (raise NUMS_DEADLOCK_TIMEOUT_SECS for long kernels)",
+                                            task.kernel,
+                                            deadlock_timeout.as_secs_f64()
                                         ));
                                         shared.cv.notify_all();
                                         return;
@@ -181,5 +213,60 @@ impl RealExecutor {
             tasks: plan.len(),
             store_snapshot: stores.snapshot(),
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::task::{Plan, Task};
+    use crate::net::model::SystemMode;
+    use crate::runtime::kernel::{BinOp, Kernel};
+    use crate::store::Block;
+
+    #[test]
+    fn deadlock_error_names_the_blocking_objects() {
+        let topo = Topology::new(1, 1, SystemMode::Ray);
+        let mut ex = RealExecutor::new(topo, Arc::new(Backend::native()));
+        ex.deadlock_timeout = Duration::from_millis(50);
+        let stores = StoreSet::new(1);
+        stores.put(0, 7, Arc::new(Block::from_vec(&[1, 1], vec![1.0])));
+        // input 99 is never produced -> the wait must time out and say so
+        let plan = Plan {
+            tasks: vec![Task {
+                kernel: Kernel::Ew(BinOp::Add),
+                inputs: vec![7, 99],
+                in_shapes: vec![vec![1, 1], vec![1, 1]],
+                outputs: vec![(100, vec![1, 1])],
+                target: 0,
+                transfers: vec![],
+            }],
+        };
+        let msg = format!("{}", ex.run(&plan, &stores).unwrap_err());
+        assert!(msg.contains("deadlock"), "{msg}");
+        assert!(msg.contains("[99]"), "must name the missing input: {msg}");
+        assert!(msg.contains("NUMS_DEADLOCK_TIMEOUT_SECS"), "{msg}");
+    }
+
+    #[test]
+    fn timeout_env_override_parses() {
+        assert_eq!(
+            parse_deadlock_timeout(Some("0.25".into())),
+            Duration::from_millis(250)
+        );
+        assert_eq!(
+            parse_deadlock_timeout(Some("-3".into())),
+            Duration::from_secs(30)
+        );
+        assert_eq!(
+            parse_deadlock_timeout(Some("nope".into())),
+            Duration::from_secs(30)
+        );
+        // absurdly large values must not overflow Duration construction
+        assert_eq!(
+            parse_deadlock_timeout(Some("1e30".into())),
+            Duration::from_secs(30)
+        );
+        assert_eq!(parse_deadlock_timeout(None), Duration::from_secs(30));
     }
 }

@@ -491,6 +491,56 @@ mod tests {
     }
 
     #[test]
+    fn fused_chain_is_cheaper_than_unfused_in_the_model() {
+        // Three Negs as a task chain vs one FusedEw[3] task: same math, but
+        // the fused plan pays one dispatch γ, one task overhead and one
+        // object-store write instead of three, and the chain's
+        // intermediates never hit the bandwidth term.
+        use crate::runtime::kernel::EwStep;
+        let ex = SimExecutor::new(
+            topo(1, 1),
+            NetParams::paper_testbed(),
+            ComputeParams::paper_testbed(),
+        );
+        let shape = vec![512, 512];
+        let mk = |kernel: Kernel, inputs: Vec<ObjectId>, out: ObjectId| Task {
+            in_shapes: vec![shape.clone(); inputs.len()],
+            inputs,
+            outputs: vec![(out, shape.clone())],
+            target: 0,
+            transfers: vec![],
+            kernel,
+        };
+        let unfused = Plan {
+            tasks: vec![
+                mk(Kernel::Neg, vec![0], 100),
+                mk(Kernel::Neg, vec![100], 101),
+                mk(Kernel::Neg, vec![101], 102),
+            ],
+        };
+        let fused = Plan {
+            tasks: vec![mk(
+                Kernel::FusedEw(vec![EwStep::Neg, EwStep::Neg, EwStep::Neg]),
+                vec![0],
+                200,
+            )],
+        };
+        let initial = [(0u64, 0usize, 512 * 512 * 8u64)];
+        let ru = ex.run(&unfused, &initial);
+        let rf = ex.run(&fused, &initial);
+        assert_eq!(ru.tasks, 3);
+        assert_eq!(rf.tasks, 1);
+        assert!(
+            rf.makespan < ru.makespan,
+            "fused {} !< unfused {}",
+            rf.makespan,
+            ru.makespan
+        );
+        // and the chain's intermediates never became resident objects
+        assert!(rf.max_mem_bytes() < ru.max_mem_bytes());
+    }
+
+    #[test]
     fn trace_events_recorded_when_enabled() {
         let mut ex = SimExecutor::new(
             topo(2, 1),

@@ -42,6 +42,22 @@ pub fn newton_fit_driver_agg(
     y: &DistArray,
     steps: usize,
 ) -> Result<DriverAggResult> {
+    // Dask ML has no operator-fusion pass, so this baseline pins the
+    // session's fusion off for its runs: every intermediate stays its own
+    // task/block, exactly the implementation shape §8.5 attributes the
+    // gap to. Restored on exit so the session can keep serving fused work.
+    let prev = std::mem::replace(&mut sess.cfg.fusion, false);
+    let out = driver_agg_inner(sess, x, y, steps);
+    sess.cfg.fusion = prev;
+    out
+}
+
+fn driver_agg_inner(
+    sess: &mut Session,
+    x: &DistArray,
+    y: &DistArray,
+    steps: usize,
+) -> Result<DriverAggResult> {
     let d = x.grid.shape[1];
     let n = x.grid.shape[0];
     let q = x.grid.grid[0];
@@ -142,6 +158,22 @@ mod tests {
             "driver-agg {} vs lshs {}",
             agg.transfer_bytes(),
             base.transfer_bytes()
+        );
+    }
+
+    #[test]
+    fn baseline_keeps_unfused_task_structure() {
+        // the baseline must pin fusion off during its runs (Dask ML has no
+        // fusion pass) and restore the session flag afterwards
+        let mut s = Session::new(SessionConfig::real_small(2, 2));
+        assert!(s.cfg.fusion);
+        let (x, y) = classification_data(&mut s, 128, 4, 4, 5);
+        let agg = newton_fit_driver_agg(&mut s, &x, &y, 1).unwrap();
+        assert!(s.cfg.fusion, "fusion flag must be restored");
+        assert_eq!(
+            agg.reports.iter().map(|r| r.fused_ops).sum::<usize>(),
+            0,
+            "no op of the Dask-ML baseline may be fused away"
         );
     }
 }

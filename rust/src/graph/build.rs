@@ -8,7 +8,7 @@
 //! `MatmulNT`, never materializing a transposed block.
 
 use crate::grid::ArrayGrid;
-use crate::runtime::kernel::{BinOp, Kernel};
+use crate::runtime::kernel::{BinOp, EwStep, Kernel};
 
 use super::dist::DistArray;
 use super::graph::Graph;
@@ -44,6 +44,51 @@ pub fn binary_ew(g: &mut Graph, a: &DistArray, b: &DistArray, op: BinOp) -> usiz
         })
         .collect();
     g.add_output(a.grid.clone(), roots)
+}
+
+/// Element-wise expression chain over equal-grid operands: apply `steps`
+/// in order starting from `first`, consuming one operand from `rest` per
+/// binary step. Emits the *unfused* per-op graph — one vertex per step per
+/// block — which `graph::fuse` collapses to one task per block when
+/// `SessionConfig::fusion` is on; with fusion off the same builder is the
+/// oracle for the ablation and the property suite.
+pub fn ew_chain(g: &mut Graph, first: &DistArray, rest: &[&DistArray], steps: &[EwStep]) -> usize {
+    assert!(!steps.is_empty(), "empty chain");
+    assert!(!first.transposed, "chain over transposed view");
+    let binary = steps.iter().filter(|s| s.consumes_input()).count();
+    assert_eq!(binary, rest.len(), "one operand per binary step");
+    for r in rest {
+        assert!(!r.transposed);
+        assert_eq!(first.grid, r.grid, "chain operands must share the grid (§4)");
+    }
+    let roots: Vec<Ref> = first
+        .grid
+        .iter_coords()
+        .map(|c| {
+            let shape = first.grid.block_shape(&c);
+            let mut acc: Ref = (g.leaf(first.obj_at(&c), &shape), 0);
+            let mut next = 0;
+            for s in steps {
+                acc = match *s {
+                    EwStep::Neg => (g.op(Kernel::Neg, vec![acc]), 0),
+                    EwStep::Sigmoid => (g.op(Kernel::Sigmoid, vec![acc]), 0),
+                    EwStep::Scale(v) => (g.op(Kernel::Scale(v), vec![acc]), 0),
+                    EwStep::Bin(op) => {
+                        let l = g.leaf(rest[next].obj_at(&c), &shape);
+                        next += 1;
+                        (g.op(Kernel::Ew(op), vec![acc, (l, 0)]), 0)
+                    }
+                    EwStep::BinRev(op) => {
+                        let l = g.leaf(rest[next].obj_at(&c), &shape);
+                        next += 1;
+                        (g.op(Kernel::Ew(op), vec![(l, 0), acc]), 0)
+                    }
+                };
+            }
+            acc
+        })
+        .collect();
+    g.add_output(first.grid.clone(), roots)
 }
 
 /// sum(X, axis) for matrices (Fig. 5c): `ReduceAxis` per block, then a
@@ -393,6 +438,34 @@ mod tests {
         assert_eq!(g.outputs[out].roots.len(), 4);
         assert_eq!(g.total_tasks(), 4);
         assert_eq!(g.frontier().len(), 4);
+    }
+
+    #[test]
+    fn ew_chain_emits_one_vertex_per_step_per_block() {
+        let a = dist(&[8, 8], &[2, 2], 0);
+        let b = dist(&[8, 8], &[2, 2], 10);
+        let mut g = Graph::new();
+        let steps = [
+            EwStep::Neg,
+            EwStep::Bin(BinOp::Add),
+            EwStep::Sigmoid,
+        ];
+        let out = ew_chain(&mut g, &a, &[&b], &steps);
+        assert_eq!(g.outputs[out].roots.len(), 4);
+        assert_eq!(g.total_tasks(), 4 * 3);
+        // ... and the fusion pass collapses each block's chain to one task
+        let st = crate::graph::fuse::fuse_elementwise(&mut g);
+        assert_eq!(st.chains, 4);
+        assert_eq!(st.absorbed, 4 * 2);
+        assert_eq!(g.total_tasks(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "one operand per binary step")]
+    fn ew_chain_checks_operand_count() {
+        let a = dist(&[4, 4], &[1, 1], 0);
+        let mut g = Graph::new();
+        ew_chain(&mut g, &a, &[], &[EwStep::Bin(BinOp::Add)]);
     }
 
     #[test]

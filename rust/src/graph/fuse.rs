@@ -1,0 +1,301 @@
+//! Graph-level element-wise fusion: App. A.1's chains made cheap, not just
+//! communication-free.
+//!
+//! The hierarchical-layout invariant (§5) already makes element-wise
+//! chains *communication-free*: operands of equal shape and grid co-locate
+//! block-for-block, so `sigmoid(-X · 2 + Y)` moves zero bytes. But the
+//! graph builders still emit one vertex — hence one dispatched task and
+//! one materialized output block — per operation. On a q-block array, a
+//! k-op chain costs k·q tasks and (k−1)·q intermediate blocks that exist
+//! only to feed the next op.
+//!
+//! [`fuse_elementwise`] collapses such chains after graph construction and
+//! before scheduling: every maximal chain of single-consumer `Neg` /
+//! `Sigmoid` / `Scale` / `Ew` vertices becomes one [`Kernel::FusedEw`]
+//! vertex holding the step program. The scheduler then makes *one*
+//! placement decision per chain (the fused vertex keeps the tail's layout
+//! constraint), both executors run one task, and the native backend
+//! interprets the program in a single pass over one buffer
+//! (`runtime::native`) — the chain's intermediates never touch memory.
+//!
+//! Fusion invariants:
+//!
+//! * **Semantics** — the fused program applies exactly the same scalar
+//!   operations in exactly the same order as the unfused vertices, so
+//!   results are bit-for-bit identical (property-checked by
+//!   `tests/prop_suites.rs::prop_fused_chain_matches_unfused_oracle`).
+//! * **Single consumer** — a vertex is absorbed only if exactly one edge
+//!   (counting output roots) references it; fusion never duplicates work
+//!   and never removes a block another consumer needs.
+//! * **Constraints** — vertices carrying a placement constraint are never
+//!   absorbed, so pinned baselines (`glm::driver_agg`'s serial driver-side
+//!   fold) keep their task structure; the chain tail's own constraint is
+//!   preserved on the fused vertex, upholding the §5 output-layout rule.
+//! * **Shape** — element-wise kernels are shape-preserving and `Ew`
+//!   requires equal operand shapes, so every input of a fused vertex has
+//!   the output's shape; `Kernel::FusedEw::out_shapes` re-asserts this.
+
+use crate::runtime::kernel::{BinOp, EwStep, Kernel};
+
+use super::graph::Graph;
+use super::vertex::{Ref, Vertex};
+
+/// What [`fuse_elementwise`] did (surfaced as `RunReport::fused_ops`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FuseStats {
+    /// Chains rewritten into a single `FusedEw` vertex.
+    pub chains: usize,
+    /// Interior vertices absorbed — tasks removed from the eventual plan.
+    pub absorbed: usize,
+}
+
+/// The op-level shape of a fusible vertex.
+enum Fusible {
+    Unary(EwStep),
+    Bin(BinOp),
+}
+
+fn fusible(kernel: &Kernel) -> Option<Fusible> {
+    match kernel {
+        Kernel::Neg => Some(Fusible::Unary(EwStep::Neg)),
+        Kernel::Sigmoid => Some(Fusible::Unary(EwStep::Sigmoid)),
+        Kernel::Scale(c) => Some(Fusible::Unary(EwStep::Scale(*c))),
+        Kernel::Ew(op) => Some(Fusible::Bin(*op)),
+        _ => None,
+    }
+}
+
+type Prog = (Vec<EwStep>, Vec<Ref>);
+
+/// May the chain ending at `r`'s vertex be absorbed into its consumer?
+fn absorbable(g: &Graph, consumers: &[usize], progs: &[Option<Prog>], r: Ref) -> bool {
+    let c = r.0;
+    consumers[c] == 1 && progs[c].is_some() && g.vertices[c].constraint().is_none()
+}
+
+/// Collapse chains of element-wise vertices into `FusedEw` programs.
+///
+/// Runs in one topological sweep (builders push children before parents,
+/// so arena order is topological) plus one rewrite sweep; O(V + E).
+pub fn fuse_elementwise(g: &mut Graph) -> FuseStats {
+    let n = g.vertices.len();
+
+    // Consumer edge count per vertex: op/reduce children plus output roots.
+    let mut consumers = vec![0usize; n];
+    for v in &g.vertices {
+        for &(c, _) in v.children() {
+            consumers[c] += 1;
+        }
+    }
+    for out in &g.outputs {
+        for &(r, _) in &out.roots {
+            consumers[r] += 1;
+        }
+    }
+
+    // The chain program each fusible vertex would execute as a tail.
+    let mut progs: Vec<Option<Prog>> = Vec::with_capacity(n);
+    let mut absorbed = vec![false; n];
+
+    for vid in 0..n {
+        let parts = match &g.vertices[vid] {
+            Vertex::Op { kernel, children, .. } => {
+                fusible(kernel).map(|f| (f, children.clone()))
+            }
+            _ => None,
+        };
+        let Some((shape, children)) = parts else {
+            progs.push(None);
+            continue;
+        };
+        let prog = match shape {
+            Fusible::Unary(step) => {
+                let child = children[0];
+                if absorbable(g, &consumers, &progs, child) {
+                    let (mut steps, inputs) = progs[child.0].take().unwrap();
+                    absorbed[child.0] = true;
+                    steps.push(step);
+                    (steps, inputs)
+                } else {
+                    (vec![step], vec![child])
+                }
+            }
+            Fusible::Bin(op) => {
+                let (a, b) = (children[0], children[1]);
+                if absorbable(g, &consumers, &progs, a) {
+                    let (mut steps, mut inputs) = progs[a.0].take().unwrap();
+                    absorbed[a.0] = true;
+                    steps.push(EwStep::Bin(op));
+                    inputs.push(b);
+                    (steps, inputs)
+                } else if absorbable(g, &consumers, &progs, b) {
+                    // the chain is the RIGHT operand: record the swapped
+                    // application so Sub/Div keep their operand order
+                    let (mut steps, mut inputs) = progs[b.0].take().unwrap();
+                    absorbed[b.0] = true;
+                    steps.push(EwStep::BinRev(op));
+                    inputs.push(a);
+                    (steps, inputs)
+                } else {
+                    (vec![EwStep::Bin(op)], vec![a, b])
+                }
+            }
+        };
+        progs.push(Some(prog));
+    }
+
+    // Rewrite sweep: absorbed interiors become inert leaves (nothing
+    // references them anymore); tails whose program grew past their own
+    // step become FusedEw vertices in place, so output roots stay valid.
+    let mut stats = FuseStats::default();
+    for vid in 0..n {
+        if absorbed[vid] {
+            g.vertices[vid] = Vertex::Leaf {
+                objs: Vec::new(),
+                shapes: Vec::new(),
+            };
+            stats.absorbed += 1;
+            continue;
+        }
+        if let Some((steps, inputs)) = progs[vid].take() {
+            if steps.len() >= 2 {
+                let constraint = g.vertices[vid].constraint();
+                g.vertices[vid] = Vertex::Op {
+                    kernel: Kernel::FusedEw(steps),
+                    children: inputs,
+                    constraint,
+                };
+                stats.chains += 1;
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::ArrayGrid;
+
+    #[test]
+    fn collapses_linear_chain_into_one_vertex() {
+        let mut g = Graph::new();
+        let x = g.leaf(0, &[4, 4]);
+        let y = g.leaf(1, &[4, 4]);
+        let n1 = g.op(Kernel::Neg, vec![(x, 0)]);
+        let s = g.op(Kernel::Scale(2.0), vec![(n1, 0)]);
+        let a = g.op(Kernel::Ew(BinOp::Add), vec![(s, 0), (y, 0)]);
+        let t = g.op(Kernel::Sigmoid, vec![(a, 0)]);
+        g.add_output(ArrayGrid::new(&[4, 4], &[1, 1]), vec![(t, 0)]);
+        assert_eq!(g.total_tasks(), 4);
+
+        let st = fuse_elementwise(&mut g);
+        assert_eq!(st.chains, 1);
+        assert_eq!(st.absorbed, 3);
+        assert_eq!(g.total_tasks(), 1);
+        match &g.vertices[t] {
+            Vertex::Op {
+                kernel: Kernel::FusedEw(steps),
+                children,
+                ..
+            } => {
+                assert_eq!(
+                    steps,
+                    &vec![
+                        EwStep::Neg,
+                        EwStep::Scale(2.0),
+                        EwStep::Bin(BinOp::Add),
+                        EwStep::Sigmoid,
+                    ]
+                );
+                assert_eq!(children, &vec![(x, 0), (y, 0)]);
+            }
+            other => panic!("expected fused vertex, got {other:?}"),
+        }
+        // interiors are inert leaves now
+        assert!(g.vertices[n1].is_leaf());
+        assert!(g.vertices[s].is_leaf());
+        assert!(g.vertices[a].is_leaf());
+    }
+
+    #[test]
+    fn right_operand_chain_records_swapped_step() {
+        // y - (-x): the chain is the right child of the Sub.
+        let mut g = Graph::new();
+        let x = g.leaf(0, &[2, 2]);
+        let y = g.leaf(1, &[2, 2]);
+        let nx = g.op(Kernel::Neg, vec![(x, 0)]);
+        let sub = g.op(Kernel::Ew(BinOp::Sub), vec![(y, 0), (nx, 0)]);
+        g.add_output(ArrayGrid::new(&[2, 2], &[1, 1]), vec![(sub, 0)]);
+        fuse_elementwise(&mut g);
+        match &g.vertices[sub] {
+            Vertex::Op {
+                kernel: Kernel::FusedEw(steps),
+                children,
+                ..
+            } => {
+                assert_eq!(steps, &vec![EwStep::Neg, EwStep::BinRev(BinOp::Sub)]);
+                // chain source first, then the deferred left operand
+                assert_eq!(children, &vec![(x, 0), (y, 0)]);
+            }
+            other => panic!("expected fused vertex, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn multi_consumer_interior_is_not_absorbed() {
+        // mu feeds both branches: it must stay a real materialized op.
+        let mut g = Graph::new();
+        let x = g.leaf(0, &[4, 1]);
+        let mu = g.op(Kernel::Sigmoid, vec![(x, 0)]);
+        let a = g.op(Kernel::Neg, vec![(mu, 0)]);
+        let b = g.op(Kernel::Scale(3.0), vec![(mu, 0)]);
+        let grid = ArrayGrid::new(&[4, 1], &[1, 1]);
+        g.add_output(grid.clone(), vec![(a, 0)]);
+        g.add_output(grid, vec![(b, 0)]);
+        let st = fuse_elementwise(&mut g);
+        assert_eq!(st.chains, 0);
+        assert_eq!(st.absorbed, 0);
+        assert_eq!(g.total_tasks(), 3);
+    }
+
+    #[test]
+    fn constrained_interior_is_not_absorbed() {
+        let mut g = Graph::new();
+        let x = g.leaf(0, &[2, 2]);
+        let n1 = g.op(Kernel::Neg, vec![(x, 0)]);
+        g.set_constraint(n1, 3); // e.g. a pinned driver-side step
+        let t = g.op(Kernel::Sigmoid, vec![(n1, 0)]);
+        g.add_output(ArrayGrid::new(&[2, 2], &[1, 1]), vec![(t, 0)]);
+        let st = fuse_elementwise(&mut g);
+        assert_eq!(st.absorbed, 0);
+        assert_eq!(g.total_tasks(), 2, "pinned vertex must keep its task");
+    }
+
+    #[test]
+    fn contraction_boundaries_stop_the_chain() {
+        // sigmoid(A @ B): the matmul is not fusible; only chains above it
+        // of length >= 2 would collapse (here the sigmoid stays alone).
+        let mut g = Graph::new();
+        let a = g.leaf(0, &[2, 2]);
+        let b = g.leaf(1, &[2, 2]);
+        let mm = g.op(Kernel::Matmul, vec![(a, 0), (b, 0)]);
+        let s = g.op(Kernel::Sigmoid, vec![(mm, 0)]);
+        g.add_output(ArrayGrid::new(&[2, 2], &[1, 1]), vec![(s, 0)]);
+        let st = fuse_elementwise(&mut g);
+        assert_eq!(st.chains, 0);
+        assert_eq!(g.total_tasks(), 2);
+    }
+
+    #[test]
+    fn reduce_trees_are_untouched() {
+        let mut g = Graph::new();
+        let terms: Vec<Ref> = (0..4).map(|i| (g.leaf(i, &[2, 2]), 0)).collect();
+        let r = g.reduce(BinOp::Add, terms);
+        g.add_output(ArrayGrid::new(&[2, 2], &[1, 1]), vec![(r, 0)]);
+        let before = g.total_tasks();
+        let st = fuse_elementwise(&mut g);
+        assert_eq!(st.chains + st.absorbed, 0);
+        assert_eq!(g.total_tasks(), before);
+    }
+}

@@ -3,10 +3,12 @@
 
 pub mod build;
 pub mod dist;
+pub mod fuse;
 #[allow(clippy::module_inception)]
 pub mod graph;
 pub mod vertex;
 
 pub use dist::DistArray;
+pub use fuse::{fuse_elementwise, FuseStats};
 pub use graph::{Graph, GraphArrayRef};
 pub use vertex::{Ref, Vertex, VertexId};

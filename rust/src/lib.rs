@@ -38,7 +38,7 @@ pub mod prelude {
     pub use crate::graph::{build, DistArray, Graph};
     pub use crate::grid::{ArrayGrid, NodeGrid};
     pub use crate::net::model::{ComputeParams, NetParams, SystemMode};
-    pub use crate::runtime::{Backend, BinOp, Kernel};
+    pub use crate::runtime::{Backend, BinOp, EwStep, Kernel};
     pub use crate::scheduler::{ClusterState, Lshs, Topology};
     pub use crate::store::Block;
     pub use crate::util::rng::Rng;

@@ -9,11 +9,176 @@
 //! reconstruction/identity properties in the tests below plus property
 //! suites in `rust/tests/prop_suites.rs`.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::store::block::pool;
 use crate::store::Block;
 
-/// C = A · B (naive blocked i-k-j loop; the hot path for big blocks goes
-/// through PJRT — this is the substrate/fallback).
+/// How many kernel invocations may run concurrently — the real executor's
+/// total worker-thread count. The per-kernel thread budget divides the
+/// host's cores by this hint so nested parallelism (executor workers ×
+/// kernel threads) doesn't oversubscribe the machine.
+static CONCURRENT_CALLERS: AtomicUsize = AtomicUsize::new(1);
+
+/// Declare how many threads will be calling the blocked kernels
+/// concurrently (clamped to >= 1). `RealExecutor` sets this to its worker
+/// count; standalone benches may reset it to 1 for full per-kernel
+/// parallelism.
+pub fn set_parallelism_hint(concurrent_callers: usize) {
+    CONCURRENT_CALLERS.store(concurrent_callers.max(1), Ordering::Relaxed);
+}
+
+/// Depth of the B panel kept hot across a row sweep (KC·NC·8 B ≈ L2-sized).
+const KC: usize = 256;
+/// Width of the B panel.
+const NC: usize = 512;
+/// Register tile: rows of C accumulated per inner sweep, so each B element
+/// loaded from cache feeds MR fused multiply-adds.
+const MR: usize = 4;
+/// Below this many FLOPs a kernel stays single-threaded (keeps small-block
+/// numerics bit-stable and avoids spawn overhead on the task hot path).
+const PAR_THRESHOLD: f64 = 3.2e7;
+
+/// Worker threads for a blocked kernel of `flops` total work over `rows`
+/// independent row slices: cores ÷ concurrent-caller hint, capped at 8.
+/// `NUMS_MATMUL_THREADS` overrides (1 = serial).
+fn kernel_threads(flops: f64, rows: usize) -> usize {
+    if flops < PAR_THRESHOLD || rows < 2 {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1);
+    let callers = CONCURRENT_CALLERS.load(Ordering::Relaxed).max(1);
+    std::env::var("NUMS_MATMUL_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or_else(|| (hw / callers).min(8))
+        .clamp(1, rows)
+}
+
+/// Ceiling division (rows per thread chunk).
+fn div_up(a: usize, b: usize) -> usize {
+    a / b + usize::from(a % b != 0)
+}
+
+/// C = A · B — cache-blocked, register-tiled, parallel over row panels.
+///
+/// Loop order keeps a KC×NC panel of B resident in L2 while MR rows of C
+/// accumulate in registers; k is consumed in ascending order for every
+/// output element, so results are bit-identical to [`matmul_naive`] (and
+/// across thread counts — threads own disjoint row ranges).
 pub fn matmul(a: &Block, b: &Block) -> Block {
+    let (m, ka) = (a.rows(), a.cols());
+    let (kb, n) = (b.rows(), b.cols());
+    assert_eq!(ka, kb, "matmul {:?} x {:?}", a.shape, b.shape);
+    let mut out = pool::alloc_zeroed(m * n);
+    if m == 0 || n == 0 || ka == 0 {
+        return Block::from_vec(&[m, n], out);
+    }
+    let (ab, bb) = (a.buf(), b.buf());
+    let threads = kernel_threads(2.0 * m as f64 * ka as f64 * n as f64, m);
+    if threads <= 1 {
+        matmul_rows(ab, bb, &mut out, 0, m, ka, n);
+    } else {
+        let rows_per = div_up(m, threads);
+        std::thread::scope(|scope| {
+            for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                let r0 = t * rows_per;
+                let r1 = r0 + chunk.len() / n;
+                scope.spawn(move || matmul_rows(ab, bb, chunk, r0, r1, ka, n));
+            }
+        });
+    }
+    Block::from_vec(&[m, n], out)
+}
+
+/// Blocked kernel over absolute rows `[r0, r1)`; `c` holds exactly those
+/// rows (row `i` lives at chunk offset `(i - r0) * n`).
+fn matmul_rows(ab: &[f64], bb: &[f64], c: &mut [f64], r0: usize, r1: usize, k: usize, n: usize) {
+    let mut kk = 0;
+    while kk < k {
+        let kend = (kk + KC).min(k);
+        let mut jj = 0;
+        while jj < n {
+            let jend = (jj + NC).min(n);
+            let mut i = r0;
+            while i + MR <= r1 {
+                let base = (i - r0) * n;
+                let (r01, r23) = c[base..base + MR * n].split_at_mut(2 * n);
+                let (row0, row1) = r01.split_at_mut(n);
+                let (row2, row3) = r23.split_at_mut(n);
+                let c0 = &mut row0[jj..jend];
+                let c1 = &mut row1[jj..jend];
+                let c2 = &mut row2[jj..jend];
+                let c3 = &mut row3[jj..jend];
+                for dk in kk..kend {
+                    let a0 = ab[i * k + dk];
+                    let a1 = ab[(i + 1) * k + dk];
+                    let a2 = ab[(i + 2) * k + dk];
+                    let a3 = ab[(i + 3) * k + dk];
+                    let brow = &bb[dk * n + jj..dk * n + jend];
+                    if a0 != 0.0 && a1 != 0.0 && a2 != 0.0 && a3 != 0.0 {
+                        // fast path: one B load feeds four accumulators
+                        for (jx, &bv) in brow.iter().enumerate() {
+                            c0[jx] += a0 * bv;
+                            c1[jx] += a1 * bv;
+                            c2[jx] += a2 * bv;
+                            c3[jx] += a3 * bv;
+                        }
+                        continue;
+                    }
+                    // some row has a zero multiplier: skip per row exactly
+                    // like the naive oracle (0·inf would otherwise mint NaNs
+                    // the oracle never produces)
+                    if a0 != 0.0 {
+                        for (cv, &bv) in c0.iter_mut().zip(brow) {
+                            *cv += a0 * bv;
+                        }
+                    }
+                    if a1 != 0.0 {
+                        for (cv, &bv) in c1.iter_mut().zip(brow) {
+                            *cv += a1 * bv;
+                        }
+                    }
+                    if a2 != 0.0 {
+                        for (cv, &bv) in c2.iter_mut().zip(brow) {
+                            *cv += a2 * bv;
+                        }
+                    }
+                    if a3 != 0.0 {
+                        for (cv, &bv) in c3.iter_mut().zip(brow) {
+                            *cv += a3 * bv;
+                        }
+                    }
+                }
+                i += MR;
+            }
+            while i < r1 {
+                let base = (i - r0) * n;
+                let crow = &mut c[base + jj..base + jend];
+                for dk in kk..kend {
+                    let aik = ab[i * k + dk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bb[dk * n + jj..dk * n + jend];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+                i += 1;
+            }
+            jj = jend;
+        }
+        kk = kend;
+    }
+}
+
+/// C = A · B, the seed's naive i-k-j triple loop. Kept as the oracle the
+/// blocked kernel is property-checked against and as the ablation baseline
+/// in `benches/fig09_micro.rs`.
+pub fn matmul_naive(a: &Block, b: &Block) -> Block {
     let (m, ka) = (a.rows(), a.cols());
     let (kb, n) = (b.rows(), b.cols());
     assert_eq!(ka, kb, "matmul {:?} x {:?}", a.shape, b.shape);
@@ -33,6 +198,59 @@ pub fn matmul(a: &Block, b: &Block) -> Block {
         }
     }
     Block::from_vec(&[m, n], out)
+}
+
+/// C = Aᵀ · B computed *without materializing Aᵀ* — a streaming rank-1
+/// accumulation over the shared row dimension. This is the GLM hot path
+/// (Xᵀ·v with X tall-skinny): the old route transposed the full X block
+/// per task; this one reads X and B once, accumulates into the small p×q
+/// output, and parallelizes over row ranges with a deterministic in-order
+/// partial reduction.
+pub fn gram(a: &Block, b: &Block) -> Block {
+    let (m, p) = (a.rows(), a.cols());
+    let (m2, q) = (b.rows(), b.cols());
+    assert_eq!(m, m2, "gram {:?}ᵀ x {:?}", a.shape, b.shape);
+    let (ab, bb) = (a.buf(), b.buf());
+    let threads = kernel_threads(2.0 * m as f64 * p as f64 * q as f64, m);
+    if threads <= 1 {
+        return Block::from_vec(&[p, q], gram_rows(ab, bb, 0, m, p, q));
+    }
+    let rows_per = div_up(m, threads);
+    let partials: Vec<Vec<f64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let r0 = t * rows_per;
+                let r1 = ((t + 1) * rows_per).min(m);
+                scope.spawn(move || gram_rows(ab, bb, r0, r1, p, q))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut out = pool::alloc_zeroed(p * q);
+    for part in &partials {
+        for (o, v) in out.iter_mut().zip(part) {
+            *o += *v;
+        }
+    }
+    Block::from_vec(&[p, q], out)
+}
+
+fn gram_rows(ab: &[f64], bb: &[f64], r0: usize, r1: usize, p: usize, q: usize) -> Vec<f64> {
+    let mut out = vec![0.0; p * q];
+    for i in r0..r1 {
+        let ar = &ab[i * p..(i + 1) * p];
+        let br = &bb[i * q..(i + 1) * q];
+        for (x, &av) in ar.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[x * q..(x + 1) * q];
+            for (o, &bv) in orow.iter_mut().zip(br) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
 }
 
 /// Thin (reduced) Householder QR: X[m,n] with m >= n -> (Q[m,n], R[n,n]),
@@ -241,6 +459,69 @@ mod tests {
         let a = randn(&[5, 5], 1);
         assert!(matmul(&a, &eye(5)).max_abs_diff(&a) < 1e-12);
         assert!(matmul(&eye(5), &a).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn blocked_matches_naive_across_shapes() {
+        // ragged sizes hit every tile-remainder path (MR, KC, NC edges)
+        for (m, k, n, seed) in [
+            (1, 1, 1, 20),
+            (3, 7, 5, 21),
+            (4, 256, 512, 22),
+            (5, 257, 513, 23),
+            (67, 300, 129, 24),
+            (130, 64, 33, 25),
+        ] {
+            let a = randn(&[m, k], seed);
+            let b = randn(&[k, n], seed + 100);
+            let got = matmul(&a, &b);
+            let want = matmul_naive(&a, &b);
+            assert_eq!(got.shape, want.shape);
+            assert_eq!(
+                got.max_abs_diff(&want),
+                0.0,
+                "blocked must be bit-identical at {m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_above_parallel_threshold() {
+        // 2·300³ = 5.4e7 FLOPs > PAR_THRESHOLD: exercises the threaded path,
+        // which still owns disjoint rows -> bit-identical.
+        let a = randn(&[300, 300], 30);
+        let b = randn(&[300, 300], 31);
+        assert_eq!(matmul(&a, &b).max_abs_diff(&matmul_naive(&a, &b)), 0.0);
+    }
+
+    #[test]
+    fn gram_matches_transpose_matmul() {
+        let x = randn(&[40, 7], 40);
+        let y = randn(&[40, 9], 41);
+        let got = gram(&x, &y);
+        let want = matmul_naive(&x.transposed(), &y);
+        assert_eq!(got.shape, vec![7, 9]);
+        assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn gram_parallel_matches_serial() {
+        // 2·4000·64·64 = 3.3e7 FLOPs > PAR_THRESHOLD: threaded partials,
+        // reduced in deterministic range order.
+        let x = randn(&[4000, 64], 42);
+        let y = randn(&[4000, 64], 43);
+        let got = gram(&x, &y);
+        let want = matmul_naive(&x.transposed(), &y);
+        assert!(got.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn zero_dim_matmul_is_well_formed() {
+        let a = Block::zeros(&[2, 0]);
+        let b = Block::zeros(&[0, 3]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.shape, vec![2, 3]);
+        assert!(c.buf().iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -17,6 +17,29 @@ pub enum BinOp {
     Div,
 }
 
+/// One step of a fused element-wise program ([`Kernel::FusedEw`]).
+///
+/// A program runs over a single accumulator seeded from input 0; each
+/// `Bin`/`BinRev` step consumes the next unconsumed input, in order.
+/// `BinRev` applies the operands swapped (`input ∘ acc`), which preserves
+/// operand order for non-commutative ops when the fused chain arrives as
+/// the *right* child of a binary vertex.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EwStep {
+    Neg,
+    Sigmoid,
+    Scale(f64),
+    Bin(BinOp),
+    BinRev(BinOp),
+}
+
+impl EwStep {
+    /// Whether this step consumes one additional input block.
+    pub fn consumes_input(&self) -> bool {
+        matches!(self, EwStep::Bin(_) | EwStep::BinRev(_))
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Kernel {
     // --- element-wise (1 output) ---
@@ -24,6 +47,11 @@ pub enum Kernel {
     Sigmoid,
     Scale(f64),
     Ew(BinOp),
+    /// A fused chain of element-wise steps (`graph::fuse`): one task, one
+    /// output block, zero materialized intermediates. This is App. A.1's
+    /// communication-free chain made overhead-free as well — the native
+    /// backend interprets the program in a single pass over one buffer.
+    FusedEw(Vec<EwStep>),
     // --- contractions (1 output) ---
     /// A[m,k] @ B[k,n]
     Matmul,
@@ -100,6 +128,19 @@ impl Kernel {
                 let (a, b) = two(ins);
                 assert_eq!(a, b, "ew shape mismatch {a:?} vs {b:?}");
                 vec![a]
+            }
+            Kernel::FusedEw(steps) => {
+                let binary = steps.iter().filter(|s| s.consumes_input()).count();
+                assert_eq!(
+                    ins.len(),
+                    binary + 1,
+                    "fused_ew arity: {} inputs for {binary} binary steps",
+                    ins.len()
+                );
+                for s in &ins[1..] {
+                    assert_eq!(s, &ins[0], "fused_ew shape mismatch {s:?} vs {:?}", ins[0]);
+                }
+                vec![ins[0].clone()]
             }
             Kernel::Matmul => {
                 assert_eq!(ins[0][1], ins[1][0], "matmul {:?} @ {:?}", ins[0], ins[1]);
@@ -212,9 +253,20 @@ impl Kernel {
 
     /// Elements touched, for bandwidth-bound kernels.
     pub fn ew_elems(&self, ins: &[Vec<usize>]) -> f64 {
-        ins.iter()
+        let read: f64 = ins
+            .iter()
             .map(|s| s.iter().map(|&x| x as f64).product::<f64>())
-            .sum()
+            .sum();
+        match self {
+            // Single-pass interpretation: each input is read once and the
+            // accumulator written once — the unfused chain's intermediates
+            // never touch memory, so a k-op chain costs (k+2)·B instead of
+            // ~2k·B elements of traffic.
+            Kernel::FusedEw(_) => {
+                read + ins[0].iter().map(|&x| x as f64).product::<f64>()
+            }
+            _ => read,
+        }
     }
 
     /// Manifest (AOT artifact) name, if this kernel has a Python builder.
@@ -272,6 +324,9 @@ impl Kernel {
 
 impl fmt::Display for Kernel {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if let Kernel::FusedEw(steps) = self {
+            return write!(f, "fused_ew[{}]", steps.len());
+        }
         match self.manifest_name() {
             Some(n) => write!(f, "{n}"),
             None => write!(f, "{self:?}"),
@@ -339,5 +394,43 @@ mod tests {
     #[should_panic(expected = "matmul")]
     fn matmul_shape_mismatch_panics() {
         Kernel::Matmul.out_shapes(&[vec![4, 8], vec![7, 3]]);
+    }
+
+    #[test]
+    fn fused_ew_contract() {
+        let k = Kernel::FusedEw(vec![
+            EwStep::Neg,
+            EwStep::Bin(BinOp::Add),
+            EwStep::Sigmoid,
+            EwStep::BinRev(BinOp::Sub),
+        ]);
+        assert_eq!(k.n_outputs(), 1);
+        assert!(!k.is_contraction());
+        assert_eq!(k.manifest_name(), None);
+        assert_eq!(format!("{k}"), "fused_ew[4]");
+        let ins = vec![vec![8, 4], vec![8, 4], vec![8, 4]];
+        assert_eq!(k.out_shapes(&ins), vec![vec![8, 4]]);
+        assert_eq!(k.flops(&ins), 0.0);
+        // single-pass traffic: 3 reads + 1 write of a 32-elem block ...
+        assert_eq!(k.ew_elems(&ins), 4.0 * 32.0);
+        // ... versus ~2 reads per op for the 4-task unfused chain
+        let unfused = Kernel::Neg.ew_elems(&ins[..1])
+            + Kernel::Ew(BinOp::Add).ew_elems(&ins[..2])
+            + Kernel::Sigmoid.ew_elems(&ins[..1])
+            + Kernel::Ew(BinOp::Sub).ew_elems(&ins[..2]);
+        assert!(k.ew_elems(&ins) < unfused);
+    }
+
+    #[test]
+    #[should_panic(expected = "fused_ew arity")]
+    fn fused_ew_arity_mismatch_panics() {
+        Kernel::FusedEw(vec![EwStep::Neg]).out_shapes(&[vec![2, 2], vec![2, 2]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "fused_ew shape mismatch")]
+    fn fused_ew_shape_mismatch_panics() {
+        Kernel::FusedEw(vec![EwStep::Bin(BinOp::Mul)])
+            .out_shapes(&[vec![2, 2], vec![4, 1]]);
     }
 }

@@ -9,6 +9,6 @@ pub mod native;
 pub mod pjrt;
 
 pub use backend::Backend;
-pub use kernel::{BinOp, Kernel};
+pub use kernel::{BinOp, EwStep, Kernel};
 pub use manifest::{Manifest, ManifestEntry};
 pub use pjrt::PjrtRuntime;

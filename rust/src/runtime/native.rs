@@ -9,9 +9,10 @@
 use anyhow::{bail, Result};
 
 use crate::linalg::dense;
+use crate::store::block::pool;
 use crate::store::Block;
 
-use super::kernel::{BinOp, Kernel};
+use super::kernel::{BinOp, EwStep, Kernel};
 
 /// Execute `kernel` over real input blocks, producing real output blocks.
 pub fn execute(kernel: &Kernel, inputs: &[&Block]) -> Result<Vec<Block>> {
@@ -23,9 +24,13 @@ pub fn execute(kernel: &Kernel, inputs: &[&Block]) -> Result<Vec<Block>> {
             vec![map1(inputs[0], move |v| c * v)]
         }
         Kernel::Ew(op) => vec![map2(inputs[0], inputs[1], *op)?],
+        Kernel::FusedEw(steps) => vec![fused_ew(steps, inputs)?],
         Kernel::Matmul => vec![dense::matmul(inputs[0], inputs[1])],
+        // lazy transpose of the (usually much smaller) right operand, then
+        // the blocked kernel
         Kernel::MatmulNT => vec![dense::matmul(inputs[0], &inputs[1].transposed())],
-        Kernel::Gram => vec![dense::matmul(&inputs[0].transposed(), inputs[1])],
+        // streaming Aᵀ·B — never materializes the transposed block
+        Kernel::Gram => vec![dense::gram(inputs[0], inputs[1])],
         Kernel::SumAxis0 => vec![sum_axis0(inputs[0])],
         Kernel::SumAxis1 => vec![sum_axis1(inputs[0])],
         Kernel::SumAll => {
@@ -39,12 +44,16 @@ pub fn execute(kernel: &Kernel, inputs: &[&Block]) -> Result<Vec<Block>> {
         Kernel::NewtonBlock => {
             let (x, y, beta) = (inputs[0], inputs[1], inputs[2]);
             let mu = glm_mu(x, beta);
-            vec![glm_grad(x, &mu, y), glm_hess(x, &mu), logloss(&mu, y)]
+            let outs = vec![glm_grad(x, &mu, y), glm_hess(x, &mu), logloss(&mu, y)];
+            pool::recycle(mu.into_vec());
+            outs
         }
         Kernel::LbfgsBlock => {
             let (x, y, beta) = (inputs[0], inputs[1], inputs[2]);
             let mu = glm_mu(x, beta);
-            vec![glm_grad(x, &mu, y), logloss(&mu, y)]
+            let outs = vec![glm_grad(x, &mu, y), logloss(&mu, y)];
+            pool::recycle(mu.into_vec());
+            outs
         }
         Kernel::Qr => {
             let (q, r) = dense::householder_qr(inputs[0]);
@@ -100,6 +109,90 @@ fn map1(x: &Block, f: impl Fn(f64) -> f64) -> Block {
     Block::from_vec(&x.shape, x.buf().iter().map(|&v| f(v)).collect())
 }
 
+/// Elements per fused-interpreter chunk: steps run back-to-back on a
+/// slice that stays in L1 while the whole block is traversed once.
+const FUSED_CHUNK: usize = 4096;
+
+/// Single-pass interpreter for [`Kernel::FusedEw`]: one pool-backed
+/// accumulator buffer, zero intermediate blocks. Applies each step with
+/// exactly the scalar expression the unfused kernel uses, so fused results
+/// are bit-for-bit identical to the op-by-op oracle.
+fn fused_ew(steps: &[EwStep], inputs: &[&Block]) -> Result<Block> {
+    if inputs.is_empty() {
+        bail!("fused_ew: no inputs");
+    }
+    let shape = inputs[0].shape.clone();
+    for b in &inputs[1..] {
+        if b.shape != shape {
+            bail!("fused_ew shape mismatch {:?} vs {shape:?}", b.shape);
+        }
+    }
+    // map each binary step to the input slot it consumes
+    let mut slot = 1usize;
+    let plan: Vec<usize> = steps
+        .iter()
+        .map(|s| {
+            if s.consumes_input() {
+                slot += 1;
+                slot - 1
+            } else {
+                0 // unused for unary steps
+            }
+        })
+        .collect();
+    if slot != inputs.len() {
+        bail!(
+            "fused_ew arity: {} inputs for {} binary steps",
+            inputs.len(),
+            slot - 1
+        );
+    }
+
+    let n: usize = shape.iter().product();
+    let mut out = pool::alloc_copy(inputs[0].buf());
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + FUSED_CHUNK).min(n);
+        for (step, &inp) in steps.iter().zip(&plan) {
+            let seg = &mut out[lo..hi];
+            match *step {
+                EwStep::Neg => {
+                    for v in seg {
+                        *v = -*v;
+                    }
+                }
+                EwStep::Sigmoid => {
+                    for v in seg {
+                        *v = 1.0 / (1.0 + (-*v).exp());
+                    }
+                }
+                EwStep::Scale(c) => {
+                    for v in seg {
+                        *v = c * *v;
+                    }
+                }
+                EwStep::Bin(op) => bin_segment(seg, &inputs[inp].buf()[lo..hi], op, false),
+                EwStep::BinRev(op) => bin_segment(seg, &inputs[inp].buf()[lo..hi], op, true),
+            }
+        }
+        lo = hi;
+    }
+    Ok(Block::from_vec(&shape, out))
+}
+
+/// acc ∘= rhs (or rhs ∘ acc when `rev`), matching `map2`'s scalar forms.
+fn bin_segment(acc: &mut [f64], rhs: &[f64], op: BinOp, rev: bool) {
+    for (a, &b) in acc.iter_mut().zip(rhs) {
+        let (x, y) = if rev { (b, *a) } else { (*a, b) };
+        *a = match op {
+            BinOp::Add => x + y,
+            BinOp::Sub => x - y,
+            BinOp::Mul => x * y,
+            BinOp::Div => x / y,
+        };
+    }
+}
+
 fn map2(x: &Block, y: &Block, op: BinOp) -> Result<Block> {
     if x.shape != y.shape {
         bail!("ew shape mismatch {:?} vs {:?}", x.shape, y.shape);
@@ -142,7 +235,7 @@ fn glm_mu(x: &Block, beta: &Block) -> Block {
     let (m, d) = (x.rows(), x.cols());
     assert_eq!(beta.shape, vec![d, 1]);
     let (xb, bb) = (x.buf(), beta.buf());
-    let mut out = vec![0.0; m];
+    let mut out = pool::alloc_zeroed(m);
     for i in 0..m {
         let mut z = 0.0;
         for j in 0..d {
@@ -169,7 +262,7 @@ fn glm_grad(x: &Block, mu: &Block, y: &Block) -> Block {
 fn glm_hess(x: &Block, mu: &Block) -> Block {
     let (m, d) = (x.rows(), x.cols());
     let (xb, mb) = (x.buf(), mu.buf());
-    let mut out = vec![0.0; d * d];
+    let mut out = pool::alloc_zeroed(d * d);
     for i in 0..m {
         let w = mb[i] * (1.0 - mb[i]);
         let row = &xb[i * d..(i + 1) * d];
@@ -314,6 +407,52 @@ mod tests {
         assert_eq!(sum[0].buf(), &[5., 7., 9.]);
         let neg = execute(&Kernel::Neg, &[&a]).unwrap();
         assert_eq!(neg[0].buf(), &[-1., -2., -3.]);
+    }
+
+    #[test]
+    fn fused_ew_matches_op_by_op_oracle() {
+        // sigmoid(((-x) * 2 + y) / z) — crosses a chunk boundary (n > 4096)
+        let x = randn(&[3, 2048], 21);
+        let y = randn(&[3, 2048], 22);
+        let z = map1(&randn(&[3, 2048], 23), |v| v.abs() + 1.0);
+        let steps = vec![
+            EwStep::Neg,
+            EwStep::Scale(2.0),
+            EwStep::Bin(BinOp::Add),
+            EwStep::Bin(BinOp::Div),
+            EwStep::Sigmoid,
+        ];
+        let fused = execute(&Kernel::FusedEw(steps), &[&x, &y, &z])
+            .unwrap()
+            .remove(0);
+        let s1 = execute(&Kernel::Neg, &[&x]).unwrap().remove(0);
+        let s2 = execute(&Kernel::Scale(2.0), &[&s1]).unwrap().remove(0);
+        let s3 = execute(&Kernel::Ew(BinOp::Add), &[&s2, &y]).unwrap().remove(0);
+        let s4 = execute(&Kernel::Ew(BinOp::Div), &[&s3, &z]).unwrap().remove(0);
+        let want = execute(&Kernel::Sigmoid, &[&s4]).unwrap().remove(0);
+        assert_eq!(fused.shape, want.shape);
+        assert_eq!(fused.max_abs_diff(&want), 0.0, "fusion must be bit-exact");
+    }
+
+    #[test]
+    fn fused_ew_rev_step_swaps_operands() {
+        // y - (-x) via BinRev(Sub) with the chain as right operand
+        let x = Block::from_vec(&[1, 3], vec![1., 2., 3.]);
+        let y = Block::from_vec(&[1, 3], vec![10., 10., 10.]);
+        let fused = execute(
+            &Kernel::FusedEw(vec![EwStep::Neg, EwStep::BinRev(BinOp::Sub)]),
+            &[&x, &y],
+        )
+        .unwrap()
+        .remove(0);
+        assert_eq!(fused.buf(), &[11., 12., 13.]);
+    }
+
+    #[test]
+    fn fused_ew_rejects_bad_arity() {
+        let x = Block::from_vec(&[1, 2], vec![1., 2.]);
+        let err = fused_ew(&[EwStep::Bin(BinOp::Add)], &[&x]).unwrap_err();
+        assert!(format!("{err}").contains("arity"));
     }
 
     #[test]

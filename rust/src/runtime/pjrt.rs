@@ -1,10 +1,16 @@
 //! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
 //! request path.
 //!
-//! This is the only module that touches the `xla` crate. The interchange
-//! format is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5 emits
-//! serialized protos with 64-bit instruction ids that xla_extension 0.5.1
-//! rejects, while the text parser reassigns ids (see
+//! This is the only module that touches the `xla` crate, and that crate
+//! cannot be fetched in the offline build image — so the xla-backed
+//! implementation lives behind the `pjrt` cargo feature (enable it *and*
+//! add the `xla` dependency manually to use it). Default builds get a stub
+//! with the same API whose constructor always errors, which makes
+//! [`crate::runtime::Backend::auto`] fall back to the native kernels.
+//!
+//! The interchange format is HLO *text* (`HloModuleProto::from_text_file`):
+//! jax ≥ 0.5 emits serialized protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects, while the text parser reassigns ids (see
 //! /opt/xla-example/README.md and DESIGN.md §4.3).
 //!
 //! Executables are compiled lazily per manifest entry and cached. A process
@@ -15,133 +21,184 @@
 //! we keep a conservative single execution lock (measured in §Perf; the
 //! real executor overlaps native kernels with PJRT calls).
 
-use std::collections::HashMap;
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod xla_impl {
+    use std::collections::HashMap;
+    use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
+    use anyhow::{anyhow, bail, Context, Result};
 
-use crate::store::Block;
+    use crate::runtime::kernel::Kernel;
+    use crate::runtime::manifest::{Manifest, ManifestEntry};
+    use crate::store::Block;
 
-use super::kernel::Kernel;
-use super::manifest::{Manifest, ManifestEntry};
-
-struct Inner {
-    client: xla::PjRtClient,
-    /// artifact file path -> compiled executable
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-// SAFETY: the PJRT CPU client is internally synchronized for compilation
-// and execution (it is the same client the Python jax runtime shares across
-// threads). The `xla` crate merely wraps raw pointers without declaring
-// Send. All access from our side is additionally serialized by the Mutex in
-// `PjrtRuntime`, so no unsynchronized aliasing can occur.
-unsafe impl Send for Inner {}
-
-/// Lazily-compiling PJRT kernel runtime.
-pub struct PjrtRuntime {
-    inner: Mutex<Inner>,
-    pub manifest: Manifest,
-    /// Executions performed (for perf reports).
-    pub exec_count: std::sync::atomic::AtomicU64,
-}
-
-impl PjrtRuntime {
-    /// Create a runtime over the artifacts in `dir` (must contain
-    /// `manifest.tsv`).
-    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-        Ok(Self {
-            inner: Mutex::new(Inner {
-                client,
-                executables: HashMap::new(),
-            }),
-            manifest,
-            exec_count: std::sync::atomic::AtomicU64::new(0),
-        })
+    struct Inner {
+        client: xla::PjRtClient,
+        /// artifact file path -> compiled executable
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    /// Whether this runtime can execute `kernel` over the given shapes.
-    pub fn supports(&self, kernel: &Kernel, input_shapes: &[Vec<usize>]) -> bool {
-        kernel
-            .manifest_name()
-            .and_then(|n| self.manifest.lookup(n, input_shapes))
-            .is_some()
+    // SAFETY: the PJRT CPU client is internally synchronized for compilation
+    // and execution (it is the same client the Python jax runtime shares
+    // across threads). The `xla` crate merely wraps raw pointers without
+    // declaring Send. All access from our side is additionally serialized by
+    // the Mutex in `PjrtRuntime`, so no unsynchronized aliasing can occur.
+    unsafe impl Send for Inner {}
+
+    /// Lazily-compiling PJRT kernel runtime.
+    pub struct PjrtRuntime {
+        inner: Mutex<Inner>,
+        pub manifest: Manifest,
+        /// Executions performed (for perf reports).
+        pub exec_count: std::sync::atomic::AtomicU64,
     }
 
-    fn entry_for(&self, kernel: &Kernel, input_shapes: &[Vec<usize>]) -> Result<ManifestEntry> {
-        let name = kernel
-            .manifest_name()
-            .ok_or_else(|| anyhow!("{kernel} has no AOT artifact (native-only kernel)"))?;
-        self.manifest
-            .lookup(name, input_shapes)
-            .cloned()
-            .ok_or_else(|| anyhow!("no artifact for {name} with inputs {input_shapes:?}"))
-    }
-
-    /// Execute `kernel` on real blocks through the compiled artifact.
-    pub fn execute(&self, kernel: &Kernel, inputs: &[&Block]) -> Result<Vec<Block>> {
-        let shapes: Vec<Vec<usize>> = inputs.iter().map(|b| b.shape.clone()).collect();
-        let entry = self.entry_for(kernel, &shapes)?;
-
-        let mut inner = self.inner.lock().unwrap();
-        // compile-on-first-use, cached thereafter
-        let key = entry.file.to_string_lossy().to_string();
-        if !inner.executables.contains_key(&key) {
-            let proto = xla::HloModuleProto::from_text_file(&entry.file)
-                .map_err(|e| anyhow!("parse {:?}: {e:?}", entry.file))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = inner
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {:?}: {e:?}", entry.file))?;
-            inner.executables.insert(key.clone(), exe);
-        }
-        let exe = &inner.executables[&key];
-
-        // Blocks are row-major f64; literals take the same layout.
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|b| {
-                let lit = xla::Literal::vec1(b.buf());
-                let dims: Vec<i64> = b.shape.iter().map(|&d| d as i64).collect();
-                lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+    impl PjrtRuntime {
+        /// Create a runtime over the artifacts in `dir` (must contain
+        /// `manifest.tsv`).
+        pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+            let manifest = Manifest::load(&dir)?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+            Ok(Self {
+                inner: Mutex::new(Inner {
+                    client,
+                    executables: HashMap::new(),
+                }),
+                manifest,
+                exec_count: std::sync::atomic::AtomicU64::new(0),
             })
-            .collect::<Result<_>>()?;
-
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {kernel}: {e:?}"))?;
-        self.exec_count
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let root = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: unwrap the tuple.
-        let mut parts = root
-            .to_tuple()
-            .map_err(|e| anyhow!("to_tuple: {e:?}"))?;
-        if parts.len() != entry.n_outputs {
-            bail!(
-                "{kernel}: artifact returned {} outputs, manifest says {}",
-                parts.len(),
-                entry.n_outputs
-            );
         }
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, shape) in parts.drain(..).zip(&entry.output_shapes) {
-            let v: Vec<f64> = lit
-                .to_vec()
-                .map_err(|e| anyhow!("literal to_vec: {e:?}"))
-                .context("output literal")?;
-            out.push(Block::from_vec(shape, v));
-        }
-        Ok(out)
-    }
 
-    /// Number of distinct compiled executables (for perf reports).
-    pub fn compiled_count(&self) -> usize {
-        self.inner.lock().unwrap().executables.len()
+        /// Whether this runtime can execute `kernel` over the given shapes.
+        pub fn supports(&self, kernel: &Kernel, input_shapes: &[Vec<usize>]) -> bool {
+            kernel
+                .manifest_name()
+                .and_then(|n| self.manifest.lookup(n, input_shapes))
+                .is_some()
+        }
+
+        fn entry_for(&self, kernel: &Kernel, input_shapes: &[Vec<usize>]) -> Result<ManifestEntry> {
+            let name = kernel
+                .manifest_name()
+                .ok_or_else(|| anyhow!("{kernel} has no AOT artifact (native-only kernel)"))?;
+            self.manifest
+                .lookup(name, input_shapes)
+                .cloned()
+                .ok_or_else(|| anyhow!("no artifact for {name} with inputs {input_shapes:?}"))
+        }
+
+        /// Execute `kernel` on real blocks through the compiled artifact.
+        pub fn execute(&self, kernel: &Kernel, inputs: &[&Block]) -> Result<Vec<Block>> {
+            let shapes: Vec<Vec<usize>> = inputs.iter().map(|b| b.shape.clone()).collect();
+            let entry = self.entry_for(kernel, &shapes)?;
+
+            let mut inner = self.inner.lock().unwrap();
+            // compile-on-first-use, cached thereafter
+            let key = entry.file.to_string_lossy().to_string();
+            if !inner.executables.contains_key(&key) {
+                let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                    .map_err(|e| anyhow!("parse {:?}: {e:?}", entry.file))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = inner
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile {:?}: {e:?}", entry.file))?;
+                inner.executables.insert(key.clone(), exe);
+            }
+            let exe = &inner.executables[&key];
+
+            // Blocks are row-major f64; literals take the same layout.
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|b| {
+                    let lit = xla::Literal::vec1(b.buf());
+                    let dims: Vec<i64> = b.shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+                })
+                .collect::<Result<_>>()?;
+
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("execute {kernel}: {e:?}"))?;
+            self.exec_count
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let root = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            // aot.py lowers with return_tuple=True: unwrap the tuple.
+            let mut parts = root
+                .to_tuple()
+                .map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+            if parts.len() != entry.n_outputs {
+                bail!(
+                    "{kernel}: artifact returned {} outputs, manifest says {}",
+                    parts.len(),
+                    entry.n_outputs
+                );
+            }
+            let mut out = Vec::with_capacity(parts.len());
+            for (lit, shape) in parts.drain(..).zip(&entry.output_shapes) {
+                let v: Vec<f64> = lit
+                    .to_vec()
+                    .map_err(|e| anyhow!("literal to_vec: {e:?}"))
+                    .context("output literal")?;
+                out.push(Block::from_vec(shape, v));
+            }
+            Ok(out)
+        }
+
+        /// Number of distinct compiled executables (for perf reports).
+        pub fn compiled_count(&self) -> usize {
+            self.inner.lock().unwrap().executables.len()
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use xla_impl::PjrtRuntime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::sync::atomic::AtomicU64;
+
+    use anyhow::{anyhow, Result};
+
+    use crate::runtime::kernel::Kernel;
+    use crate::runtime::manifest::Manifest;
+    use crate::store::Block;
+
+    /// API-compatible stand-in used when the `pjrt` feature is off: the
+    /// constructor always errors, so composite backends route everything
+    /// to the native kernels.
+    pub struct PjrtRuntime {
+        pub manifest: Manifest,
+        pub exec_count: AtomicU64,
+    }
+
+    impl PjrtRuntime {
+        pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+            // still requires a manifest, to mirror the real constructor's
+            // failure mode on a fresh checkout
+            let _ = Manifest::load(&dir)?;
+            Err(anyhow!(
+                "pjrt support not compiled in (enable the `pjrt` feature and \
+                 add the `xla` dependency); using the native backend"
+            ))
+        }
+
+        pub fn supports(&self, _kernel: &Kernel, _input_shapes: &[Vec<usize>]) -> bool {
+            false
+        }
+
+        pub fn execute(&self, kernel: &Kernel, _inputs: &[&Block]) -> Result<Vec<Block>> {
+            Err(anyhow!("no artifact runtime for {kernel}: pjrt feature disabled"))
+        }
+
+        pub fn compiled_count(&self) -> usize {
+            0
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtRuntime;

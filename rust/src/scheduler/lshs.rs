@@ -286,7 +286,7 @@ mod tests {
     use super::*;
     use crate::graph::{build, DistArray};
     use crate::net::model::SystemMode;
-    use crate::runtime::kernel::BinOp;
+    use crate::runtime::kernel::{BinOp, EwStep};
     use crate::store::IdGen;
 
     fn setup(k: usize) -> (Lshs, ClusterState, IdGen) {
@@ -323,6 +323,29 @@ mod tests {
         sched.schedule(&mut graph, &mut state, &ids, &mut plan);
         assert_eq!(plan.len(), 8);
         assert_eq!(plan.transfer_count(), 0, "X+Y must move zero bytes");
+    }
+
+    #[test]
+    fn fused_chain_is_one_placement_decision_per_block() {
+        // A 3-op chain over an 8-block array: after fusion the scheduler
+        // sees one vertex per block — one decision, one task, zero bytes
+        // moved (the fused vertex inherits the App. A.1 layout alignment).
+        let (mut sched, mut state, ids) = setup(4);
+        let a = create(&mut sched, &mut state, &ids, &[1024, 64], &[8, 1]);
+        let b = create(&mut sched, &mut state, &ids, &[1024, 64], &[8, 1]);
+        let mut graph = crate::graph::Graph::new();
+        build::ew_chain(
+            &mut graph,
+            &a,
+            &[&b],
+            &[EwStep::Neg, EwStep::Bin(BinOp::Add), EwStep::Sigmoid],
+        );
+        crate::graph::fuse::fuse_elementwise(&mut graph);
+        let mut plan = Plan::new();
+        sched.schedule(&mut graph, &mut state, &ids, &mut plan);
+        assert_eq!(plan.len(), 8, "one fused task per block");
+        assert_eq!(sched.decisions, 8, "one placement decision per block");
+        assert_eq!(plan.transfer_count(), 0, "chains stay communication-free");
     }
 
     #[test]

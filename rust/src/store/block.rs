@@ -7,6 +7,107 @@
 
 use std::fmt;
 
+/// Per-thread buffer pool for kernel scratch and task outputs.
+///
+/// Every block task used to allocate its output (`vec![0.0; m*n]`) and any
+/// scratch (the Newton μ vector, fused-chain accumulators) fresh from the
+/// allocator. This pool recycles the `Vec<f64>` backing stores instead:
+/// kernels request buffers via [`pool::alloc_zeroed`]/[`pool::alloc_copy`]
+/// and hand transient ones back with [`pool::recycle`]. It is thread-local
+/// — the real executor runs one pool per worker thread — so the task hot
+/// path takes no locks. Buffers that become stored `Block`s leave the pool
+/// permanently (they are owned by the object store); only per-task scratch
+/// cycles, which is where the allocator pressure was.
+pub mod pool {
+    use std::cell::RefCell;
+
+    /// Keep at most this many free buffers per thread.
+    const MAX_POOLED: usize = 16;
+    /// Never pool buffers above this element count (bounds resident waste).
+    const MAX_ELEMS: usize = 1 << 23;
+    /// Cap on the *summed* capacity of all pooled buffers per thread
+    /// (32 MiB of f64) — a count bound alone would let sixteen large
+    /// scratch vectors pin ~1 GiB per worker thread.
+    const MAX_TOTAL_ELEMS: usize = 1 << 22;
+
+    thread_local! {
+        static FREE: RefCell<Vec<Vec<f64>>> = RefCell::new(Vec::new());
+    }
+
+    /// Smallest pooled buffer with adequate capacity. Over-sized buffers
+    /// (> 4·n) are left pooled: a stored `Block` keeps its backing
+    /// capacity forever, so handing a huge recycled buffer to a tiny
+    /// allocation would pin the waste in the object store.
+    fn take(n: usize) -> Option<Vec<f64>> {
+        let max_cap = n.saturating_mul(4).max(64);
+        FREE.with(|p| {
+            let mut p = p.borrow_mut();
+            let mut best: Option<usize> = None;
+            for (i, v) in p.iter().enumerate() {
+                if v.capacity() >= n && v.capacity() <= max_cap {
+                    let better = match best {
+                        Some(b) => v.capacity() < p[b].capacity(),
+                        None => true,
+                    };
+                    if better {
+                        best = Some(i);
+                    }
+                }
+            }
+            best.map(|i| p.swap_remove(i))
+        })
+    }
+
+    /// A zeroed buffer of exactly `n` elements.
+    pub fn alloc_zeroed(n: usize) -> Vec<f64> {
+        match take(n) {
+            Some(mut v) => {
+                v.clear();
+                v.resize(n, 0.0);
+                v
+            }
+            None => vec![0.0; n],
+        }
+    }
+
+    /// A buffer initialized as a copy of `src`.
+    pub fn alloc_copy(src: &[f64]) -> Vec<f64> {
+        match take(src.len()) {
+            Some(mut v) => {
+                v.clear();
+                v.extend_from_slice(src);
+                v
+            }
+            None => src.to_vec(),
+        }
+    }
+
+    /// Return a transient buffer to the pool (dropped if the pool is full
+    /// or the buffer is oversized).
+    pub fn recycle(v: Vec<f64>) {
+        if v.capacity() == 0 || v.capacity() > MAX_ELEMS {
+            return;
+        }
+        FREE.with(|p| {
+            let mut p = p.borrow_mut();
+            let pooled: usize = p.iter().map(|b| b.capacity()).sum();
+            if p.len() < MAX_POOLED && pooled + v.capacity() <= MAX_TOTAL_ELEMS {
+                let mut v = v;
+                v.clear();
+                p.push(v);
+            }
+        });
+    }
+
+    /// (free buffer count, total pooled capacity in elements).
+    pub fn stats() -> (usize, usize) {
+        FREE.with(|p| {
+            let p = p.borrow();
+            (p.len(), p.iter().map(|v| v.capacity()).sum())
+        })
+    }
+}
+
 #[derive(Clone, PartialEq)]
 pub enum BlockData {
     Real(Vec<f64>),
@@ -221,5 +322,44 @@ mod tests {
     #[should_panic(expected = "phantom")]
     fn phantom_buf_panics() {
         Block::phantom(&[2, 2]).buf();
+    }
+
+    #[test]
+    fn pool_recycles_capacity() {
+        // run on a dedicated thread: the pool is thread-local and other
+        // tests on this thread may already have seeded it
+        std::thread::spawn(|| {
+            let v = pool::alloc_zeroed(100);
+            assert_eq!(v.len(), 100);
+            assert!(v.iter().all(|&x| x == 0.0));
+            let cap = v.capacity();
+            pool::recycle(v);
+            assert_eq!(pool::stats().0, 1);
+            // close-enough size: the pooled buffer is reused
+            let w = pool::alloc_zeroed(40);
+            assert!(w.capacity() >= cap, "pooled buffer must be reused");
+            assert_eq!(pool::stats().0, 0);
+            pool::recycle(w);
+            // far smaller request: the big buffer must stay pooled (a
+            // stored Block would pin its capacity forever)
+            let tiny = pool::alloc_copy(&[1.0, 2.0, 3.0]);
+            assert_eq!(tiny, vec![1.0, 2.0, 3.0]);
+            assert!(tiny.capacity() < cap, "over-sized reuse must be refused");
+            assert_eq!(pool::stats().0, 1);
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn pool_zeroes_reused_buffers() {
+        std::thread::spawn(|| {
+            pool::recycle(vec![9.0; 64]);
+            let v = pool::alloc_zeroed(32);
+            assert_eq!(v.len(), 32);
+            assert!(v.iter().all(|&x| x == 0.0), "stale data must be cleared");
+        })
+        .join()
+        .unwrap();
     }
 }

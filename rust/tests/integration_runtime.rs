@@ -9,6 +9,10 @@ use nums::runtime::{native, Manifest, PjrtRuntime};
 use nums::store::Block;
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the `pjrt` feature (no xla crate offline)");
+        return None;
+    }
     let dir = Manifest::default_dir();
     if dir.join("manifest.tsv").exists() {
         Some(dir)

@@ -203,6 +203,157 @@ fn prop_lshs_never_worse_traffic_than_random() {
     );
 }
 
+// --------------------------------------------------------------- fusion
+
+/// Fused chains must match the unfused op-by-op oracle *bit-for-bit*: the
+/// same scalar expressions run in the same order, only without task
+/// boundaries or materialized intermediates.
+#[test]
+fn prop_fused_chain_matches_unfused_oracle() {
+    forall_res(
+        0xF05E,
+        40,
+        |r| {
+            let m = 1 + r.usize(96);
+            let q = 1 + r.usize(4);
+            let nsteps = 2 + r.usize(5);
+            let mut steps = Vec::with_capacity(nsteps);
+            for _ in 0..nsteps {
+                steps.push(match r.usize(5) {
+                    0 => EwStep::Neg,
+                    1 => EwStep::Sigmoid,
+                    2 => EwStep::Scale(r.range_f64(0.5, 2.0)),
+                    3 => EwStep::Bin(match r.usize(3) {
+                        0 => BinOp::Add,
+                        1 => BinOp::Sub,
+                        _ => BinOp::Mul,
+                    }),
+                    _ => EwStep::BinRev(BinOp::Sub),
+                });
+            }
+            (m, q, steps, r.next_u64())
+        },
+        |&(m, q, ref steps, seed)| {
+            let nbin = steps.iter().filter(|s| s.consumes_input()).count();
+            let q = q.min(m);
+            let run = |fusion: bool| -> Result<(Vec<f64>, usize, usize), String> {
+                let cfg = SessionConfig::real_small(2, 2)
+                    .with_seed(seed)
+                    .with_fusion(fusion);
+                let mut sess = Session::new(cfg);
+                let first = sess.randn(&[m, 8], &[q, 1]);
+                let rest: Vec<DistArray> =
+                    (0..nbin).map(|_| sess.randn(&[m, 8], &[q, 1])).collect();
+                let rest_refs: Vec<&DistArray> = rest.iter().collect();
+                let (out, rep) = ops::ew_chain(&mut sess, &first, &rest_refs, steps)
+                    .map_err(|e| e.to_string())?;
+                let host = sess.fetch(&out).map_err(|e| e.to_string())?;
+                Ok((host.into_vec(), rep.tasks, rep.fused_ops))
+            };
+            let (fused, ftasks, fops) = run(true)?;
+            let (plain, ptasks, pops) = run(false)?;
+            if fused.len() != plain.len() {
+                return Err("output length mismatch".into());
+            }
+            for (i, (a, b)) in fused.iter().zip(&plain).enumerate() {
+                if !(a == b || (a.is_nan() && b.is_nan())) {
+                    return Err(format!("elem {i}: fused {a} != unfused {b}"));
+                }
+            }
+            if pops != 0 {
+                return Err(format!("fusion off but fused_ops = {pops}"));
+            }
+            if fops == 0 {
+                return Err("chain of >= 2 ops fused nothing".into());
+            }
+            if ftasks >= ptasks {
+                return Err(format!("fused plan {ftasks} tasks !< unfused {ptasks}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Fusion must strictly shrink an element-wise pipeline: a k-op chain on a
+/// q-block array goes from k·q tasks to q, and modeled time drops with it.
+#[test]
+fn prop_fusion_halves_chain_task_count() {
+    forall_res(
+        0xF05F,
+        40,
+        |r| (2 + r.usize(6), 1 + r.usize(12), r.next_u64()),
+        |&(k, q, seed)| {
+            let steps: Vec<EwStep> = (0..k)
+                .map(|i| if i % 2 == 0 { EwStep::Neg } else { EwStep::Sigmoid })
+                .collect();
+            let run = |fusion: bool| {
+                let cfg = SessionConfig::paper_sim(4, 4)
+                    .with_seed(seed)
+                    .with_fusion(fusion);
+                let mut sess = Session::new(cfg);
+                let x = sess.zeros(&[1 << 12, 16], &[q, 1]);
+                let (_, rep) = ops::ew_chain(&mut sess, &x, &[], &steps).unwrap();
+                (rep.tasks, rep.sim.makespan)
+            };
+            let (ftasks, fmake) = run(true);
+            let (ptasks, pmake) = run(false);
+            if ptasks != k * q {
+                return Err(format!("unfused plan {ptasks} != {}", k * q));
+            }
+            if ftasks != q {
+                return Err(format!("fused plan {ftasks} != {q}"));
+            }
+            if ftasks * 2 > ptasks {
+                return Err(format!("fusion saved < 2x: {ftasks} vs {ptasks}"));
+            }
+            if fmake >= pmake {
+                return Err(format!("fused makespan {fmake} !< {pmake}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------- dense kernels
+
+/// The cache-blocked parallel matmul is bit-identical to the naive oracle:
+/// every output element accumulates over k in the same ascending order, and
+/// threads own disjoint row ranges.
+#[test]
+fn prop_blocked_matmul_matches_naive() {
+    forall_res(
+        0xB10C,
+        60,
+        |r| {
+            (
+                1 + r.usize(200),
+                1 + r.usize(200),
+                1 + r.usize(200),
+                r.next_u64(),
+            )
+        },
+        |&(m, k, n, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let mut av = vec![0.0; m * k];
+            rng.fill_normal(&mut av);
+            let mut bv = vec![0.0; k * n];
+            rng.fill_normal(&mut bv);
+            let a = Block::from_vec(&[m, k], av);
+            let b = Block::from_vec(&[k, n], bv);
+            let got = nums::linalg::dense::matmul(&a, &b);
+            let want = nums::linalg::dense::matmul_naive(&a, &b);
+            if got.shape != want.shape {
+                return Err("shape mismatch".into());
+            }
+            let d = got.max_abs_diff(&want);
+            if d > 0.0 {
+                return Err(format!("blocked vs naive diff {d} at {m}x{k}x{n}"));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_real_and_dense_matmul_agree() {
     forall_res(
