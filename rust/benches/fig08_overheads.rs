@@ -58,10 +58,11 @@ fn fig8b() {
         native_t.push(sw.secs() / trials as f64);
         // PJRT RFC (literal copies model the object-store round trip)
         if let Some(b) = &backend_pjrt {
-            b.execute(&Kernel::Neg, &[&x]).unwrap(); // warmup compile
+            let ctx = ExecContext::host_default();
+            b.execute(&Kernel::Neg, &[&x], &ctx).unwrap(); // warmup compile
             let sw = Stopwatch::start();
             for _ in 0..trials {
-                b.execute(&Kernel::Neg, &[&x]).unwrap();
+                b.execute(&Kernel::Neg, &[&x], &ctx).unwrap();
             }
             pjrt_t.push(sw.secs() / trials as f64);
         } else {

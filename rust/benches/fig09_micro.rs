@@ -8,15 +8,24 @@
 //! Ray-without-LSHS concentrated and slow.
 //!
 //! Extended sections (this repo's perf work): the element-wise-chain
-//! fusion ablation (fusion on/off over modeled cluster + real execution)
-//! and the blocked-vs-naive dense matmul kernel shootout. Results are
-//! also written machine-readably to `BENCH_fig09.json` so future PRs have
-//! a perf trajectory to diff against.
+//! fusion ablation (fusion on/off over modeled cluster + real execution),
+//! the blocked-vs-naive dense matmul kernel shootout, and the
+//! work-stealing ablation (a deliberately skewed plan with stealing
+//! on/off, per-node steal counters included). Results are also written
+//! machine-readably to `BENCH_fig09.json` so future PRs have a perf
+//! trajectory to diff against.
+//!
+//! `cargo bench --bench fig09_micro -- --smoke` runs a bounded-size
+//! variant for CI: same sections, small shapes, still emits the JSON.
+
+use std::sync::Arc;
 
 use nums::api::{ops, Policy, RunReport, Session, SessionConfig};
-use nums::bench::harness::{emit_json, print_series, PerfRecord};
+use nums::bench::harness::{emit_json, print_series, steal_summary, PerfRecord};
+use nums::exec::{Plan, RealExecutor, Task};
 use nums::linalg::dense;
 use nums::prelude::*;
+use nums::store::StoreSet;
 use nums::util::Stopwatch;
 
 type OpFn = fn(&mut Session, &DistArray, &DistArray) -> anyhow::Result<(DistArray, RunReport)>;
@@ -119,7 +128,7 @@ fn chain_steps() -> Vec<EwStep> {
 /// Fusion ablation: the same 6-op chain with fusion on/off, on the
 /// modeled paper cluster (task counts + modeled seconds) and on a real
 /// local session (wall seconds).
-fn chain_ablation(records: &mut Vec<PerfRecord>) {
+fn chain_ablation(records: &mut Vec<PerfRecord>, smoke: bool) {
     let steps = chain_steps();
     println!("## Fig 9 (ext): elementwise-chain fusion ablation (6-op chain)");
 
@@ -145,7 +154,7 @@ fn chain_ablation(records: &mut Vec<PerfRecord>) {
     }
 
     // real execution: moderate shapes, actual kernels and wall-clock
-    let m = 1usize << 12;
+    let m = if smoke { 1usize << 10 } else { 1usize << 12 };
     for fusion in [false, true] {
         let cfg = SessionConfig::real_small(2, 4).with_fusion(fusion);
         let mut sess = Session::new(cfg);
@@ -169,12 +178,12 @@ fn chain_ablation(records: &mut Vec<PerfRecord>) {
 }
 
 /// Blocked/register-tiled/parallel matmul vs the seed's naive triple loop
-/// on one 1024x1024 f64 block (the acceptance kernel for this PR).
-fn kernel_shootout(records: &mut Vec<PerfRecord>) {
-    // standalone kernel timing: reclaim full per-kernel parallelism (the
-    // real sessions above lowered the hint to their worker count)
-    dense::set_parallelism_hint(1);
-    let n = 1024usize;
+/// on one 1024x1024 f64 block. (Standalone `dense::matmul` gets the
+/// whole-host budget from `ExecContext::host_default()` — the real
+/// sessions above no longer leak their per-worker budgets into this
+/// timing, because there is no global parallelism state.)
+fn kernel_shootout(records: &mut Vec<PerfRecord>, smoke: bool) {
+    let n = if smoke { 256usize } else { 1024usize };
     let mut rng = Rng::seed_from_u64(0x909);
     let mut av = vec![0.0; n * n];
     rng.fill_normal(&mut av);
@@ -205,11 +214,105 @@ fn kernel_shootout(records: &mut Vec<PerfRecord>) {
     println!("  speedup: {:.2}x", naive / blocked);
 }
 
+/// Work-stealing ablation: K independent matmuls all *targeted* at node 0
+/// of a 4-node topology (a deliberately skewed layout). Without stealing,
+/// node 0's two workers serialize the whole queue while six other workers
+/// idle; with stealing, idle nodes pull ready tasks from node 0's deque /
+/// the overflow and pay the input transfers. Outputs are asserted
+/// bit-identical across the two runs, and the per-node steal counters go
+/// into `BENCH_fig09.json` (bytes = steal_bytes, gflops = tasks stolen).
+fn stealing_ablation(records: &mut Vec<PerfRecord>, smoke: bool) {
+    let nodes = 4usize;
+    let n = if smoke { 96usize } else { 256usize };
+    let k_tasks = if smoke { 16usize } else { 48usize };
+    println!(
+        "## Fig 9 (ext): work-stealing ablation ({k_tasks} independent {n}x{n} matmuls, \
+         all targeted at node 0 of {nodes} nodes x 2 workers)"
+    );
+    let mut rng = Rng::seed_from_u64(0x57EA);
+    let operands: Vec<(Block, Block)> = (0..k_tasks)
+        .map(|_| {
+            let mut av = vec![0.0; n * n];
+            rng.fill_normal(&mut av);
+            let mut bv = vec![0.0; n * n];
+            rng.fill_normal(&mut bv);
+            (Block::from_vec(&[n, n], av), Block::from_vec(&[n, n], bv))
+        })
+        .collect();
+    let plan = Plan {
+        tasks: (0..k_tasks)
+            .map(|i| Task {
+                kernel: Kernel::Matmul,
+                inputs: vec![(2 * i) as u64, (2 * i + 1) as u64],
+                in_shapes: vec![vec![n, n], vec![n, n]],
+                outputs: vec![(1000 + i as u64, vec![n, n])],
+                target: 0,
+                transfers: vec![],
+            })
+            .collect(),
+    };
+    let mut walls = Vec::new();
+    let mut outputs: Vec<Vec<Block>> = Vec::new();
+    for stealing in [false, true] {
+        let topo = Topology::new(nodes, 2, SystemMode::Ray);
+        let mut exec =
+            RealExecutor::new(topo, Arc::new(Backend::native())).with_stealing(stealing);
+        exec.threads_per_node = 2;
+        let stores = StoreSet::new(nodes);
+        for (i, (a, b)) in operands.iter().enumerate() {
+            stores.put(0, (2 * i) as u64, Arc::new(a.clone()));
+            stores.put(0, (2 * i + 1) as u64, Arc::new(b.clone()));
+        }
+        let rep = exec.run(&plan, &stores).unwrap();
+        println!(
+            "  stealing={stealing:<5} wall={:.4}s  {}",
+            rep.wall_secs,
+            steal_summary(&rep)
+        );
+        walls.push(rep.wall_secs);
+        outputs.push(
+            (0..k_tasks)
+                .map(|i| stores.fetch(1000 + i as u64).unwrap().as_ref().clone())
+                .collect(),
+        );
+        records.push(PerfRecord {
+            op: format!("skewed_matmul_stealing_{stealing}"),
+            bytes: (3 * n * n * 8 * k_tasks) as u64,
+            secs: rep.wall_secs,
+            gflops: 2.0 * (n as f64).powi(3) * k_tasks as f64 / rep.wall_secs / 1e9,
+        });
+        for (nid, s) in rep.node_stats.iter().enumerate() {
+            records.push(PerfRecord {
+                op: format!("skewed_matmul_stealing_{stealing}_node{nid}_steals"),
+                bytes: s.steal_bytes,
+                secs: 0.0,
+                gflops: s.tasks_stolen as f64,
+            });
+        }
+    }
+    for (o0, o1) in outputs[0].iter().zip(&outputs[1]) {
+        assert_eq!(
+            o0.max_abs_diff(o1),
+            0.0,
+            "stealing must not change numerics"
+        );
+    }
+    println!(
+        "  outputs bit-identical; stealing speedup: {:.2}x",
+        walls[0] / walls[1]
+    );
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     // 64 GB-shape operands (2^27 x 64 f64) — modeled time, phantom blocks.
     let rows = 1usize << 27;
     let d = 64usize;
-    let parts: Vec<usize> = vec![16, 32, 48, 64, 96, 128];
+    let parts: Vec<usize> = if smoke {
+        vec![16, 64]
+    } else {
+        vec![16, 32, 48, 64, 96, 128]
+    };
 
     series("Fig 9: X + Y [modeled s]", |p, m, q| run_case(p, m, rows, d, q, add), &parts);
     series("Fig 9: X @ y [modeled s]", |p, m, q| run_matvec(p, m, rows, d, q), &parts);
@@ -224,8 +327,9 @@ fn main() {
     series("Fig 9: sum(X, 0) [modeled s]", |p, m, q| run_case(p, m, rows, d, q, sum0), &parts);
 
     let mut records = Vec::new();
-    chain_ablation(&mut records);
-    kernel_shootout(&mut records);
+    chain_ablation(&mut records, smoke);
+    kernel_shootout(&mut records, smoke);
+    stealing_ablation(&mut records, smoke);
     emit_json("BENCH_fig09.json", &records).expect("write BENCH_fig09.json");
     println!("wrote BENCH_fig09.json ({} records)", records.len());
 }

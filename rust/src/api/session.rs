@@ -67,6 +67,13 @@ pub struct SessionConfig {
     /// fusion ablation in `benches/fig09_micro.rs` and for baselines that
     /// model systems without a fusion pass (`glm::driver_agg`).
     pub fusion: bool,
+    /// Let the real executor's idle workers steal ready tasks from other
+    /// nodes (dependency-counted work stealing; inputs of stolen tasks
+    /// are pulled cross-node, paying real bytes). On by default; off
+    /// reproduces strict node-affinity FIFO execution for the stealing
+    /// ablation in `benches/fig09_micro.rs`. Per-node steal counters land
+    /// in `RealReport::node_stats`.
+    pub stealing: bool,
 }
 
 impl SessionConfig {
@@ -84,6 +91,7 @@ impl SessionConfig {
             seed: 0xC0FFEE,
             record_trace: false,
             fusion: true,
+            stealing: true,
         }
     }
 
@@ -101,6 +109,7 @@ impl SessionConfig {
             seed: 0xC0FFEE,
             record_trace: false,
             fusion: true,
+            stealing: true,
         }
     }
 
@@ -111,6 +120,12 @@ impl SessionConfig {
 
     pub fn with_fusion(mut self, on: bool) -> Self {
         self.fusion = on;
+        self
+    }
+
+    /// Toggle real-executor work stealing (see [`SessionConfig::stealing`]).
+    pub fn with_stealing(mut self, on: bool) -> Self {
+        self.stealing = on;
         self
     }
 
@@ -152,6 +167,9 @@ pub struct Session {
     ids: IdGen,
     pub stores: StoreSet,
     pub backend: Arc<Backend>,
+    /// Built once at session construction (real mode only): worker pools
+    /// and stealing mode are session-lifetime state, not per-`run()`.
+    real_exec: Option<RealExecutor>,
     data_rng: Rng,
     /// Every materialized object: (target, bytes) — seeds sim-exec runs.
     objects: Vec<(ObjectId, usize, u64)>,
@@ -178,12 +196,21 @@ impl Session {
             Policy::BottomUp => Box::new(BottomUp::new()),
             Policy::Random => Box::new(RandomPlace::new(cfg.seed)),
         };
+        let real_exec = if cfg.exec == ExecMode::Real {
+            Some(
+                RealExecutor::new(topo.clone(), Arc::clone(&backend))
+                    .with_stealing(cfg.stealing),
+            )
+        } else {
+            None
+        };
         Session {
             topo: topo.clone(),
             state: ClusterState::new(topo.clone()),
             ids: IdGen::default(),
             stores: StoreSet::new(topo.nodes),
             backend,
+            real_exec,
             data_rng: Rng::seed_from_u64(cfg.seed ^ 0xDA7A),
             objects: Vec::new(),
             total_tasks: 0,
@@ -304,12 +331,10 @@ impl Session {
         sim_exec.record_trace = self.cfg.record_trace;
         let sim = sim_exec.run(&plan, &self.objects);
 
-        // real execution
-        let real = if self.cfg.exec == ExecMode::Real {
-            let exec = RealExecutor::new(self.topo.clone(), Arc::clone(&self.backend));
-            Some(exec.run(&plan, &self.stores)?)
-        } else {
-            None
+        // real execution on the session-lifetime executor
+        let real = match &self.real_exec {
+            Some(exec) => Some(exec.run(&plan, &self.stores)?),
+            None => None,
         };
 
         // register new outputs as resident objects for subsequent runs
@@ -410,21 +435,58 @@ impl Session {
         Ok(b.buf()[0])
     }
 
-    /// Seed the session with an externally-built block (tests, CSV reader).
-    pub fn adopt_block(&mut self, block: Block, target: usize) -> ObjectId {
+    /// Seed the session with an externally-built block (tests, CSV
+    /// reader): the block becomes a single-block [`DistArray`] of its own
+    /// shape, resident on `target`.
+    pub fn adopt_block(&mut self, block: Block, target: usize) -> DistArray {
         let obj = self.ids.next();
         self.state
             .register(obj, block.elems() as f64, target);
         self.objects.push((obj, target, block.bytes()));
+        let shape = block.shape.clone();
         if self.cfg.exec == ExecMode::Real {
             self.stores
                 .put(self.topo.node_of(target), obj, Arc::new(block));
         }
-        DistArray::new(
-            ArrayGrid::new(&[1], &[1]),
-            vec![obj],
-            vec![target],
-        );
-        obj
+        let grid = ArrayGrid::new(&shape, &vec![1; shape.len()]);
+        DistArray::new(grid, vec![obj], vec![target])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::ops;
+
+    #[test]
+    fn adopt_block_returns_a_correctly_shaped_array() {
+        let mut sess = Session::new(SessionConfig::real_small(2, 2));
+        let block = Block::from_vec(&[3, 4], (0..12).map(|v| v as f64).collect());
+        let arr = sess.adopt_block(block.clone(), 1);
+        assert_eq!(arr.shape(), vec![3, 4]);
+        assert_eq!(arr.num_blocks(), 1);
+        assert_eq!(arr.targets, vec![1]);
+        let back = sess.fetch(&arr).unwrap();
+        assert_eq!(back.shape, block.shape);
+        assert_eq!(back.max_abs_diff(&block), 0.0);
+    }
+
+    #[test]
+    fn sessions_with_different_topologies_do_not_share_state() {
+        // regression for the old global parallelism hint: two live
+        // sessions must keep independent executors and produce correct
+        // results regardless of construction order
+        let mut a = Session::new(SessionConfig::real_small(1, 1));
+        let mut b = Session::new(SessionConfig::real_small(4, 2).with_stealing(false));
+        for sess in [&mut a, &mut b] {
+            let x = sess.randn(&[64, 8], &[4, 1]);
+            let y = sess.ones(&[64, 8], &[4, 1]);
+            let (out, _) = ops::add(sess, &x, &y).unwrap();
+            let got = sess.fetch(&out).unwrap();
+            let want_x = sess.fetch(&x).unwrap();
+            for (g, w) in got.buf().iter().zip(want_x.buf()) {
+                assert_eq!(*g, *w + 1.0);
+            }
+        }
     }
 }

@@ -4,6 +4,7 @@
 //! drop the best and worst, report the trimmed mean. `NUMS_BENCH_FAST=1`
 //! shrinks repetitions for CI-style smoke runs.
 
+use crate::exec::RealReport;
 use crate::util::fmt::{human_secs, render_table};
 use crate::util::stats::Summary;
 use crate::util::Stopwatch;
@@ -123,6 +124,24 @@ pub fn emit_json(path: &str, records: &[PerfRecord]) -> std::io::Result<()> {
     std::fs::write(path, s)
 }
 
+/// One-line per-node load-balance summary of a real run:
+/// `node0: 12 run (3 stolen, 1.2 KB) | node1: ...` — what the fig09
+/// stealing ablation prints next to wall time.
+pub fn steal_summary(report: &RealReport) -> String {
+    report
+        .node_stats
+        .iter()
+        .enumerate()
+        .map(|(n, s)| {
+            format!(
+                "node{n}: {} run ({} stolen, {} B)",
+                s.tasks_run, s.tasks_stolen, s.steal_bytes
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
+
 /// Print a paper-style series table: label column + one column per point.
 pub fn print_series(title: &str, x_label: &str, xs: &[String], rows: &[(String, Vec<f64>)]) {
     println!("## {title}");
@@ -152,6 +171,22 @@ mod tests {
         assert!(mean >= 0.0);
         assert_eq!(b.measurements[0].samples.len(), 3);
         assert!(b.report().contains("noop"));
+    }
+
+    #[test]
+    fn steal_summary_formats_per_node() {
+        let mut rep = RealReport::default();
+        rep.node_stats = vec![
+            crate::exec::NodeExecStats {
+                tasks_run: 5,
+                tasks_stolen: 2,
+                steal_bytes: 128,
+            },
+            crate::exec::NodeExecStats::default(),
+        ];
+        let s = steal_summary(&rep);
+        assert!(s.contains("node0: 5 run (2 stolen, 128 B)"), "{s}");
+        assert!(s.contains("node1: 0 run"), "{s}");
     }
 
     #[test]

@@ -1,11 +1,24 @@
 //! Plan execution: the discrete-event simulated executor (paper-scale,
 //! modeled time) and the real threaded executor (actual numerics via the
 //! kernel backends).
+//!
+//! The real executor is dependency-counted and work-stealing: per-task
+//! input counts are precomputed from the plan, task completion enqueues
+//! newly-ready consumers onto per-node ready deques (plus a global
+//! overflow for saturated nodes), and idle workers steal from the
+//! most-loaded sibling node — pulling the stolen task's inputs through
+//! the object stores so stolen work pays real transfer bytes. There are
+//! no condvar waits on the hot path; the condvar only parks fully idle
+//! workers, which re-check for a provable deadlock (nothing running,
+//! nothing queued, work left) on a `deadlock_timeout` heartbeat and fail
+//! the run naming the blocking `ObjectId`s. Kernel parallelism is granted
+//! per task via [`crate::runtime::ExecContext`] — no process-global
+//! parallelism state exists.
 
 pub mod real_exec;
 pub mod sim_exec;
 pub mod task;
 
-pub use real_exec::{RealExecutor, RealReport};
+pub use real_exec::{NodeExecStats, RealExecutor, RealReport};
 pub use sim_exec::{SimExecutor, SimReport, TraceEvent};
 pub use task::{Plan, Task, Transfer};

@@ -1,24 +1,55 @@
-//! Real threaded execution of a plan.
+//! Real threaded execution of a plan: dependency-counted ready queues
+//! with work stealing.
 //!
-//! Each simulated node gets a small pool of worker threads and a FIFO task
-//! queue (plan order). Tasks wait until their inputs exist (producer
-//! notification via condvar), pull missing inputs through the
-//! [`StoreSet`] — which accounts real bytes per node — and execute their
-//! kernel on the configured [`Backend`] (PJRT artifacts or native). This is
-//! the correctness executor: block numerics are real end-to-end.
+//! The scheduler decides *placement*; this executor decides *when* each
+//! task actually runs. Input counts are precomputed from the plan, so a
+//! task enters a ready deque the instant its last input is produced —
+//! workers never block waiting for inputs. Each node owns a ready deque
+//! (plan order at the front); a saturated node spills newly-ready tasks
+//! into a global overflow deque that any idle worker may drain. Workers
+//! pop locally first, then take from the overflow, then steal from the
+//! back of the most-loaded sibling node's deque. A stolen task pulls its
+//! inputs to the thief's node through [`StoreSet::transfer`], so stolen
+//! work still pays real bytes — the per-node `(tasks_run, tasks_stolen,
+//! steal_bytes)` counters in [`RealReport`] are what the fig09 stealing
+//! ablation reports.
+//!
+//! Failure modes: a plan referencing an object that no store holds and no
+//! task produces (or a dependency cycle) is detected as soon as the
+//! executor goes fully idle — nothing running, nothing queued, work left —
+//! and fails immediately, naming the blocking `ObjectId`s. Parked workers
+//! re-check that condition every `deadlock_timeout`
+//! (`NUMS_DEADLOCK_TIMEOUT_SECS` overrides), so a missed wakeup can only
+//! delay detection, never hang the run; a long-running kernel never trips
+//! the watchdog (progress stalls are only fatal once nothing is running).
+//! Kernel panics are caught and surfaced as task errors rather than
+//! poisoning the worker pool.
 
-use std::collections::HashSet;
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::Backend;
+use crate::runtime::{Backend, ExecContext};
 use crate::scheduler::Topology;
-use crate::store::{ObjectId, StoreSet};
+use crate::store::{Block, ObjectId, StoreSet};
 use crate::util::Stopwatch;
 
+use std::sync::Arc;
+
 use super::task::Plan;
+
+/// Per-node load-balance counters for one run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NodeExecStats {
+    /// Tasks executed by this node's workers (stolen ones included).
+    pub tasks_run: usize,
+    /// Tasks this node executed whose plan target was another node.
+    pub tasks_stolen: usize,
+    /// Input bytes pulled cross-node for those stolen tasks.
+    pub steal_bytes: u64,
+}
 
 #[derive(Clone, Debug, Default)]
 pub struct RealReport {
@@ -26,12 +57,8 @@ pub struct RealReport {
     pub tasks: usize,
     /// Per-node (resident, peak, net_in, net_out) bytes after execution.
     pub store_snapshot: Vec<(u64, u64, u64, u64)>,
-}
-
-struct Shared {
-    produced: Mutex<HashSet<ObjectId>>,
-    cv: Condvar,
-    failed: Mutex<Option<String>>,
+    /// Per-node execution counters (see [`NodeExecStats`]).
+    pub node_stats: Vec<NodeExecStats>,
 }
 
 /// `NUMS_DEADLOCK_TIMEOUT_SECS` parsing (non-positive/garbage/absurd -> 30s).
@@ -44,158 +71,386 @@ fn parse_deadlock_timeout(v: Option<String>) -> Duration {
         .unwrap_or(Duration::from_secs(30))
 }
 
+/// Mutable run state, guarded by one mutex. Tasks are cheap to enqueue
+/// (an index push) and kernels run outside the lock, so a single guard is
+/// both simple and uncontended; the condvar only parks *idle* workers —
+/// task completion never waits.
+struct ExecState {
+    /// Per-node ready deques: plan order in at the back, popped at the
+    /// front by owners, stolen from the back by siblings.
+    ready: Vec<VecDeque<usize>>,
+    /// Ready-but-spilled tasks from saturated nodes; any worker may take.
+    overflow: VecDeque<usize>,
+    /// Unproduced-input count per task (multiplicity counted).
+    deps: Vec<usize>,
+    /// Objects resident or produced so far (for deadlock diagnostics).
+    produced: HashSet<ObjectId>,
+    completed: Vec<bool>,
+    /// Tasks not yet completed.
+    remaining: usize,
+    /// Tasks currently executing on some worker.
+    running: usize,
+    stats: Vec<NodeExecStats>,
+}
+
+struct Shared {
+    state: Mutex<ExecState>,
+    cv: Condvar,
+    failed: Mutex<Option<String>>,
+    /// obj -> consumer task indices (with multiplicity), for every input
+    /// that is not pre-resident.
+    consumers: HashMap<ObjectId, Vec<usize>>,
+    /// Inputs that no store holds and no task produces — a deadlock the
+    /// moment any consumer would otherwise become ready.
+    never_satisfied: HashSet<ObjectId>,
+    /// Node each task's plan target maps to.
+    task_node: Vec<usize>,
+    stealing: bool,
+    /// Ready-queue length at which a node spills to the overflow.
+    spill_threshold: usize,
+}
+
+impl Shared {
+    fn enqueue(&self, st: &mut ExecState, i: usize) {
+        let node = self.task_node[i];
+        if self.stealing && st.ready[node].len() >= self.spill_threshold {
+            st.overflow.push_back(i);
+        } else {
+            st.ready[node].push_back(i);
+        }
+    }
+
+    /// Next task for a worker on `me`: local front, then overflow, then
+    /// steal from the back of the most-loaded sibling.
+    fn pick(&self, st: &mut ExecState, me: usize) -> Option<usize> {
+        if let Some(i) = st.ready[me].pop_front() {
+            return Some(i);
+        }
+        if !self.stealing {
+            return None;
+        }
+        if let Some(i) = st.overflow.pop_front() {
+            return Some(i);
+        }
+        let victim = (0..st.ready.len())
+            .filter(|&n| n != me)
+            .max_by_key(|&n| st.ready[n].len())?;
+        st.ready[victim].pop_back()
+    }
+
+    fn fail(&self, msg: String) {
+        let mut f = self.failed.lock().unwrap();
+        if f.is_none() {
+            *f = Some(msg);
+        }
+        drop(f);
+        self.cv.notify_all();
+    }
+
+    fn has_failed(&self) -> bool {
+        self.failed.lock().unwrap().is_some()
+    }
+}
+
+/// Inputs of incomplete tasks that nothing has produced yet (deduped, in
+/// first-reference order) — the objects a stuck run is blocked on. With
+/// `only`, restricts to that set (e.g. the provably-unsatisfiable inputs).
+fn missing_inputs(
+    plan: &Plan,
+    st: &ExecState,
+    only: Option<&HashSet<ObjectId>>,
+) -> Vec<ObjectId> {
+    let mut seen = HashSet::new();
+    let mut missing = Vec::new();
+    for (i, t) in plan.tasks.iter().enumerate() {
+        if st.completed[i] {
+            continue;
+        }
+        for &o in &t.inputs {
+            if !st.produced.contains(&o)
+                && only.map_or(true, |f| f.contains(&o))
+                && seen.insert(o)
+            {
+                missing.push(o);
+            }
+        }
+    }
+    missing
+}
+
 pub struct RealExecutor {
     pub topo: Topology,
     pub backend: Arc<Backend>,
-    /// Worker threads per node (capped: a laptop can't host 512).
+    /// Worker threads per node (sized from the host's cores).
     pub threads_per_node: usize,
-    /// How long a task may wait on its inputs before the run is declared
-    /// deadlocked. Defaults to 30s; `NUMS_DEADLOCK_TIMEOUT_SECS` overrides
-    /// (long single-kernel workloads legitimately exceed 30s).
+    /// How often parked workers re-check the provable-deadlock condition
+    /// (nothing running, nothing queued, work left). A stalled-but-stuck
+    /// run is declared dead on the first re-check that finds it; running
+    /// kernels are never interrupted, however long. 30s default;
+    /// `NUMS_DEADLOCK_TIMEOUT_SECS` overrides.
     pub deadlock_timeout: Duration,
+    /// Work stealing on/off (off = strict node-affinity FIFO; the
+    /// ablation baseline for `SessionConfig::stealing`).
+    pub stealing: bool,
 }
 
 impl RealExecutor {
     pub fn new(topo: Topology, backend: Arc<Backend>) -> Self {
-        // cap total threads near the host's cores
-        let cap = (16 / topo.nodes).max(1).min(8);
+        // size the total worker count to the actual host, not a guess
+        let hw = crate::runtime::exec_ctx::host_threads();
+        let cap = (hw / topo.nodes).max(1).min(8);
         let threads_per_node = topo.workers_per_node.min(cap).max(1);
         let deadlock_timeout =
             parse_deadlock_timeout(std::env::var("NUMS_DEADLOCK_TIMEOUT_SECS").ok());
-        // tell the blocked dense kernels how many workers will call them
-        // concurrently, so kernel-internal parallelism divides the host's
-        // cores instead of multiplying into oversubscription
-        crate::linalg::dense::set_parallelism_hint(topo.nodes * threads_per_node);
         Self {
             topo,
             backend,
             threads_per_node,
             deadlock_timeout,
+            stealing: true,
         }
+    }
+
+    pub fn with_stealing(mut self, on: bool) -> Self {
+        self.stealing = on;
+        self
     }
 
     /// Execute the plan over `stores`. All creation-time objects must
     /// already be resident (see `api::Session`).
     pub fn run(&self, plan: &Plan, stores: &StoreSet) -> Result<RealReport> {
         let sw = Stopwatch::start();
-        let shared = Arc::new(Shared {
-            produced: Mutex::new(HashSet::new()),
+        let k = self.topo.nodes;
+        let n_tasks = plan.tasks.len();
+
+        // --- dependency counting -------------------------------------
+        // An input is either produced by some task in this plan, already
+        // resident in a store, or permanently missing (counted as an
+        // unmet dep so the deadlock path can name it).
+        let mut will_produce: HashSet<ObjectId> = HashSet::new();
+        for t in &plan.tasks {
+            for (o, _) in &t.outputs {
+                will_produce.insert(*o);
+            }
+        }
+        let mut deps = vec![0usize; n_tasks];
+        let mut consumers: HashMap<ObjectId, Vec<usize>> = HashMap::new();
+        let mut produced: HashSet<ObjectId> = HashSet::new();
+        let mut never_satisfied: HashSet<ObjectId> = HashSet::new();
+        for (i, t) in plan.tasks.iter().enumerate() {
+            for &obj in &t.inputs {
+                if will_produce.contains(&obj) {
+                    deps[i] += 1;
+                    consumers.entry(obj).or_default().push(i);
+                } else if stores.fetch(obj).is_some() {
+                    produced.insert(obj);
+                } else {
+                    // never satisfied -> task stays blocked, deadlock names it
+                    deps[i] += 1;
+                    consumers.entry(obj).or_default().push(i);
+                    never_satisfied.insert(obj);
+                }
+            }
+        }
+        let task_node: Vec<usize> = plan
+            .tasks
+            .iter()
+            .map(|t| self.topo.node_of(t.target))
+            .collect();
+
+        let shared = Shared {
+            state: Mutex::new(ExecState {
+                ready: vec![VecDeque::new(); k],
+                overflow: VecDeque::new(),
+                deps,
+                produced,
+                completed: vec![false; n_tasks],
+                remaining: n_tasks,
+                running: 0,
+                stats: vec![NodeExecStats::default(); k],
+            }),
             cv: Condvar::new(),
             failed: Mutex::new(None),
-        });
-        // seed "produced" with everything already in a store
+            consumers,
+            never_satisfied,
+            task_node,
+            stealing: self.stealing,
+            spill_threshold: (2 * self.threads_per_node).max(2),
+        };
+        // seed the deques with initially-ready tasks, in plan order
         {
-            let mut p = shared.produced.lock().unwrap();
-            for t in &plan.tasks {
-                for &obj in &t.inputs {
-                    if stores.fetch(obj).is_some() {
-                        p.insert(obj);
-                    }
+            let mut st = shared.state.lock().unwrap();
+            for i in 0..n_tasks {
+                if st.deps[i] == 0 {
+                    shared.enqueue(&mut st, i);
                 }
             }
         }
 
-        // per-node FIFO queues in plan order
-        let k = self.topo.nodes;
-        let mut queues: Vec<Vec<usize>> = vec![Vec::new(); k];
-        for (i, t) in plan.tasks.iter().enumerate() {
-            queues[self.topo.node_of(t.target)].push(i);
-        }
-        let queues: Vec<Arc<Mutex<std::collections::VecDeque<usize>>>> = queues
-            .into_iter()
-            .map(|v| Arc::new(Mutex::new(v.into_iter().collect())))
-            .collect();
-
+        let total_workers = k * self.threads_per_node;
         let deadlock_timeout = self.deadlock_timeout;
+        let backend = self.backend.as_ref();
+        let shared = &shared;
         std::thread::scope(|scope| {
             for node in 0..k {
                 for _ in 0..self.threads_per_node {
-                    let queue = Arc::clone(&queues[node]);
-                    let shared = Arc::clone(&shared);
-                    let backend = Arc::clone(&self.backend);
-                    let topo = self.topo.clone();
+                    let stealing = self.stealing;
                     scope.spawn(move || {
+                        let me = node;
+                        let ctx = ExecContext::shared(total_workers, me, stealing);
                         loop {
-                            if shared.failed.lock().unwrap().is_some() {
+                            if shared.has_failed() {
                                 return;
                             }
-                            let idx = match queue.lock().unwrap().pop_front() {
-                                Some(i) => i,
-                                None => return,
+                            let mut st = shared.state.lock().unwrap();
+                            if st.remaining == 0 {
+                                drop(st);
+                                shared.cv.notify_all();
+                                return;
+                            }
+                            let Some(idx) = shared.pick(&mut st, me) else {
+                                // idle. Provably stuck? (nothing queued
+                                // anywhere, nothing running, work left)
+                                let all_empty = st.overflow.is_empty()
+                                    && st.ready.iter().all(|q| q.is_empty());
+                                if st.running == 0 && all_empty {
+                                    let never = missing_inputs(
+                                        plan,
+                                        &st,
+                                        Some(&shared.never_satisfied),
+                                    );
+                                    let msg = if never.is_empty() {
+                                        // every missing input has a producer,
+                                        // yet nothing can run: a cycle
+                                        let all = missing_inputs(plan, &st, None);
+                                        format!(
+                                            "deadlock: dependency cycle among plan \
+                                             tasks; unproduced inputs {all:?} \
+                                             (idle re-check window: \
+                                             NUMS_DEADLOCK_TIMEOUT_SECS)"
+                                        )
+                                    } else {
+                                        format!(
+                                            "deadlock: {n_tasks}-task plan is \
+                                             incomplete and blocked on input objects \
+                                             {never:?} that no store holds and no \
+                                             task produces (idle re-check window: \
+                                             NUMS_DEADLOCK_TIMEOUT_SECS)"
+                                        )
+                                    };
+                                    drop(st);
+                                    shared.fail(msg);
+                                    return;
+                                }
+                                // park until something completes; the timeout
+                                // is only a re-check heartbeat — a running
+                                // kernel, however slow, is never declared dead
+                                let (g, _timeout) = shared
+                                    .cv
+                                    .wait_timeout(st, deadlock_timeout)
+                                    .unwrap();
+                                drop(g);
+                                continue;
                             };
+                            st.running += 1;
+                            drop(st);
+
                             let task = &plan.tasks[idx];
-                            let dst_node = topo.node_of(task.target);
-                            // wait for all inputs to be produced somewhere
-                            {
-                                let mut p = shared.produced.lock().unwrap();
-                                while !task.inputs.iter().all(|o| p.contains(o)) {
-                                    if shared.failed.lock().unwrap().is_some() {
-                                        return;
-                                    }
-                                    let (guard, timeout) = shared
-                                        .cv
-                                        .wait_timeout(p, deadlock_timeout)
-                                        .unwrap();
-                                    p = guard;
-                                    if timeout.timed_out() {
-                                        let missing: Vec<ObjectId> = task
-                                            .inputs
-                                            .iter()
-                                            .copied()
-                                            .filter(|o| !p.contains(o))
-                                            .collect();
-                                        *shared.failed.lock().unwrap() = Some(format!(
-                                            "deadlock: task {idx} ({}) timed out after \
-                                             {:.1}s waiting on input objects {missing:?} \
-                                             (raise NUMS_DEADLOCK_TIMEOUT_SECS for long kernels)",
-                                            task.kernel,
-                                            deadlock_timeout.as_secs_f64()
-                                        ));
-                                        shared.cv.notify_all();
-                                        return;
-                                    }
-                                }
-                            }
-                            // pull missing inputs to this node (real bytes)
+                            let stolen = shared.task_node[idx] != me;
+                            // pull missing inputs to this node (real bytes;
+                            // a stolen task pays its cross-node transfers)
+                            let mut moved = 0u64;
+                            let mut vanished = None;
                             for &obj in &task.inputs {
-                                if !stores.contains(dst_node, obj) {
-                                    match stores.locate(obj, dst_node) {
-                                        Some(src) => {
-                                            stores.transfer(src, dst_node, obj);
-                                        }
+                                if !stores.contains(me, obj) {
+                                    match stores.locate(obj, me) {
+                                        Some(src) => moved += stores.transfer(src, me, obj),
                                         None => {
-                                            *shared.failed.lock().unwrap() = Some(format!(
-                                                "object {obj} vanished (task {idx})"
-                                            ));
-                                            shared.cv.notify_all();
-                                            return;
+                                            vanished = Some(obj);
+                                            break;
                                         }
                                     }
                                 }
                             }
-                            let inputs: Vec<Arc<crate::store::Block>> = task
+                            if let Some(obj) = vanished {
+                                // set failed before releasing `running`: a
+                                // parked worker's heartbeat must never see
+                                // running==0 with no failure recorded and
+                                // mask this error with a bogus deadlock
+                                shared.fail(format!("object {obj} vanished (task {idx})"));
+                                shared.state.lock().unwrap().running -= 1;
+                                return;
+                            }
+                            let inputs: Vec<Arc<Block>> = task
                                 .inputs
                                 .iter()
-                                .map(|&o| stores.get(dst_node, o).unwrap())
+                                .map(|&o| stores.get(me, o).unwrap())
                                 .collect();
-                            let in_refs: Vec<&crate::store::Block> =
+                            let in_refs: Vec<&Block> =
                                 inputs.iter().map(|b| b.as_ref()).collect();
-                            match backend.execute(&task.kernel, &in_refs) {
+                            // catch kernel panics (e.g. cholesky on an
+                            // indefinite block): a panicking task must fail
+                            // the run, not leave `running` pinned and the
+                            // pool hung
+                            let executed = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    backend.execute(&task.kernel, &in_refs, &ctx)
+                                }),
+                            )
+                            .unwrap_or_else(|p| {
+                                let why = p
+                                    .downcast_ref::<String>()
+                                    .cloned()
+                                    .or_else(|| {
+                                        p.downcast_ref::<&str>().map(|s| s.to_string())
+                                    })
+                                    .unwrap_or_else(|| "kernel panicked".into());
+                                Err(anyhow!("panic: {why}"))
+                            });
+                            match executed {
                                 Ok(outs) => {
                                     for ((obj, _), block) in task.outputs.iter().zip(outs) {
-                                        stores.put(dst_node, *obj, Arc::new(block));
+                                        stores.put(me, *obj, Arc::new(block));
                                     }
-                                    let mut p = shared.produced.lock().unwrap();
+                                    let mut st = shared.state.lock().unwrap();
+                                    st.completed[idx] = true;
+                                    st.remaining -= 1;
+                                    st.running -= 1;
+                                    st.stats[me].tasks_run += 1;
+                                    if stolen {
+                                        st.stats[me].tasks_stolen += 1;
+                                        st.stats[me].steal_bytes += moved;
+                                    }
                                     for (obj, _) in &task.outputs {
-                                        p.insert(*obj);
+                                        st.produced.insert(*obj);
+                                        if let Some(cs) = shared.consumers.get(obj) {
+                                            for &c in cs {
+                                                // guard: a malformed plan with two
+                                                // producers of one object must not
+                                                // underflow the count — the first
+                                                // producer releases the consumer
+                                                // (matching the old produced-set
+                                                // executor), later ones are no-ops
+                                                if st.deps[c] > 0 {
+                                                    st.deps[c] -= 1;
+                                                    if st.deps[c] == 0 {
+                                                        shared.enqueue(&mut st, c);
+                                                    }
+                                                }
+                                            }
+                                        }
                                     }
-                                    drop(p);
+                                    drop(st);
                                     shared.cv.notify_all();
                                 }
                                 Err(e) => {
-                                    *shared.failed.lock().unwrap() =
-                                        Some(format!("task {idx} ({}): {e}", task.kernel));
-                                    shared.cv.notify_all();
+                                    // fail first, then release `running`
+                                    // (same masking hazard as above)
+                                    shared.fail(format!(
+                                        "task {idx} ({}): {e}",
+                                        task.kernel
+                                    ));
+                                    shared.state.lock().unwrap().running -= 1;
                                     return;
                                 }
                             }
@@ -208,10 +463,12 @@ impl RealExecutor {
         if let Some(err) = shared.failed.lock().unwrap().take() {
             return Err(anyhow!(err));
         }
+        let stats = shared.state.lock().unwrap().stats.clone();
         Ok(RealReport {
             wall_secs: sw.secs(),
             tasks: plan.len(),
             store_snapshot: stores.snapshot(),
+            node_stats: stats,
         })
     }
 }
@@ -231,7 +488,7 @@ mod tests {
         ex.deadlock_timeout = Duration::from_millis(50);
         let stores = StoreSet::new(1);
         stores.put(0, 7, Arc::new(Block::from_vec(&[1, 1], vec![1.0])));
-        // input 99 is never produced -> the wait must time out and say so
+        // input 99 is never produced -> provable deadlock, named
         let plan = Plan {
             tasks: vec![Task {
                 kernel: Kernel::Ew(BinOp::Add),
@@ -268,5 +525,84 @@ mod tests {
             Duration::from_secs(30)
         );
         assert_eq!(parse_deadlock_timeout(None), Duration::from_secs(30));
+    }
+
+    #[test]
+    fn dependency_chain_executes_in_order() {
+        // a -> b -> c across 2 nodes: dependency counting must release
+        // each task only after its producer completes
+        let topo = Topology::new(2, 2, SystemMode::Ray);
+        let ex = RealExecutor::new(topo, Arc::new(Backend::native()));
+        let stores = StoreSet::new(2);
+        stores.put(0, 1, Arc::new(Block::from_vec(&[1, 1], vec![2.0])));
+        let mk = |inputs: Vec<u64>, out: u64, target: usize| Task {
+            kernel: Kernel::Scale(3.0),
+            inputs,
+            in_shapes: vec![vec![1, 1]],
+            outputs: vec![(out, vec![1, 1])],
+            target,
+            transfers: vec![],
+        };
+        let plan = Plan {
+            tasks: vec![mk(vec![1], 10, 0), mk(vec![10], 11, 1), mk(vec![11], 12, 0)],
+        };
+        let rep = ex.run(&plan, &stores).unwrap();
+        assert_eq!(rep.tasks, 3);
+        let out = stores.fetch(12).unwrap();
+        assert_eq!(out.buf(), &[2.0 * 27.0]);
+        let total: usize = rep.node_stats.iter().map(|s| s.tasks_run).sum();
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn kernel_panic_fails_the_run_instead_of_hanging() {
+        let topo = Topology::new(1, 2, SystemMode::Ray);
+        let ex = RealExecutor::new(topo, Arc::new(Backend::native()));
+        let stores = StoreSet::new(1);
+        // indefinite matrix: the cholesky kernel asserts (panics)
+        let mut m = Block::zeros(&[2, 2]);
+        m.set2(0, 0, 1.0);
+        m.set2(1, 1, -1.0);
+        stores.put(0, 1, Arc::new(m));
+        let plan = Plan {
+            tasks: vec![Task {
+                kernel: Kernel::Cholesky,
+                inputs: vec![1],
+                in_shapes: vec![vec![2, 2]],
+                outputs: vec![(2, vec![2, 2])],
+                target: 0,
+                transfers: vec![],
+            }],
+        };
+        let err = format!("{}", ex.run(&plan, &stores).unwrap_err());
+        assert!(err.contains("panic"), "{err}");
+        assert!(err.contains("Cholesky"), "{err}");
+    }
+
+    #[test]
+    fn no_stealing_keeps_node_affinity() {
+        let topo = Topology::new(2, 1, SystemMode::Ray);
+        let ex = RealExecutor::new(topo, Arc::new(Backend::native())).with_stealing(false);
+        let stores = StoreSet::new(2);
+        for i in 0..8u64 {
+            stores.put(0, i, Arc::new(Block::from_vec(&[1, 1], vec![i as f64])));
+        }
+        // all tasks target node 0: without stealing node 1 must run none
+        let plan = Plan {
+            tasks: (0..8u64)
+                .map(|i| Task {
+                    kernel: Kernel::Neg,
+                    inputs: vec![i],
+                    in_shapes: vec![vec![1, 1]],
+                    outputs: vec![(100 + i, vec![1, 1])],
+                    target: 0,
+                    transfers: vec![],
+                })
+                .collect(),
+        };
+        let rep = ex.run(&plan, &stores).unwrap();
+        assert_eq!(rep.node_stats[0].tasks_run, 8);
+        assert_eq!(rep.node_stats[1].tasks_run, 0);
+        assert!(rep.node_stats.iter().all(|s| s.tasks_stolen == 0));
     }
 }

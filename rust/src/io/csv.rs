@@ -125,6 +125,22 @@ pub fn line_aligned_ranges(path: impl AsRef<Path>, parts: usize) -> Result<Vec<(
     Ok(cuts.windows(2).map(|w| (w[0], w[1])).collect())
 }
 
+/// Serial read + hand-off: parse the whole file on the driver (the
+/// Pandas-style path) and adopt the result as a single-block array
+/// resident on `target`, without re-partitioning. Returns the array plus
+/// (rows, cols). Use [`read_csv_parallel`] when the data should land
+/// partitioned across the cluster.
+pub fn read_csv_adopt(
+    sess: &mut Session,
+    path: impl AsRef<Path>,
+    target: usize,
+) -> Result<(DistArray, usize, usize)> {
+    let dense = read_csv_serial(path)?;
+    let (rows, cols) = (dense.rows(), dense.cols());
+    let arr = sess.adopt_block(dense, target);
+    Ok((arr, rows, cols))
+}
+
 /// Parallel CSV reader: one parse task per byte range, scattered into a
 /// row-partitioned [`DistArray`] using the session's layout. Returns the
 /// array plus (rows, cols).
@@ -215,6 +231,21 @@ mod tests {
         assert_eq!((rows, cols), (101, 4));
         let dense = sess.fetch(&arr).unwrap();
         assert!(dense.max_abs_diff(&serial) < 1e-12);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn adopt_reader_matches_serial() {
+        let b = random_block(23, 6, 5);
+        let p = tmp("adopt");
+        write_csv(&b, &p).unwrap();
+        let mut sess = Session::new(SessionConfig::real_small(2, 2));
+        let (arr, rows, cols) = read_csv_adopt(&mut sess, &p, 1).unwrap();
+        assert_eq!((rows, cols), (23, 6));
+        assert_eq!(arr.shape(), vec![23, 6]);
+        assert_eq!(arr.num_blocks(), 1);
+        let dense = sess.fetch(&arr).unwrap();
+        assert!(dense.max_abs_diff(&b) < 1e-12);
         std::fs::remove_file(p).ok();
     }
 

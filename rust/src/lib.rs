@@ -12,6 +12,25 @@
 //! * **Runtime**: the `xla` crate's PJRT CPU client loads and executes the
 //!   artifacts on the request path; Python is never invoked at runtime.
 //!
+//! ## Execution model
+//!
+//! Real execution is dependency-counted and work-stealing
+//! ([`exec::RealExecutor`]): tasks become runnable the moment their last
+//! input is produced, idle workers steal ready tasks from other nodes
+//! (paying the input transfers), and per-node
+//! `(tasks_run, tasks_stolen, steal_bytes)` counters surface in
+//! [`exec::RealReport`]. `SessionConfig::stealing` (default `true`)
+//! toggles stealing per session — `false` reproduces strict node-affinity
+//! FIFO execution for ablations. Kernel thread budgets are explicit: every
+//! `Backend::execute` call takes a [`runtime::ExecContext`], so there is
+//! no process-global parallelism state and concurrent sessions cannot
+//! clobber each other. `NUMS_MATMUL_THREADS=N` overrides the budget of
+//! any context at construction time (`1` = serial kernels, useful on
+//! shared CI runners); `NUMS_DEADLOCK_TIMEOUT_SECS` sets how often idle
+//! workers re-check for a provable deadlock (nothing running, nothing
+//! queued, work left), which fails the run naming the blocking object
+//! ids — running kernels are never interrupted, however slow.
+//!
 //! See DESIGN.md for the system inventory and the per-experiment index,
 //! and EXPERIMENTS.md for paper-vs-measured results.
 
@@ -38,7 +57,7 @@ pub mod prelude {
     pub use crate::graph::{build, DistArray, Graph};
     pub use crate::grid::{ArrayGrid, NodeGrid};
     pub use crate::net::model::{ComputeParams, NetParams, SystemMode};
-    pub use crate::runtime::{Backend, BinOp, EwStep, Kernel};
+    pub use crate::runtime::{Backend, BinOp, EwStep, ExecContext, Kernel};
     pub use crate::scheduler::{ClusterState, Lshs, Topology};
     pub use crate::store::Block;
     pub use crate::util::rng::Rng;

@@ -9,24 +9,9 @@
 //! reconstruction/identity properties in the tests below plus property
 //! suites in `rust/tests/prop_suites.rs`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-
+use crate::runtime::ExecContext;
 use crate::store::block::pool;
 use crate::store::Block;
-
-/// How many kernel invocations may run concurrently — the real executor's
-/// total worker-thread count. The per-kernel thread budget divides the
-/// host's cores by this hint so nested parallelism (executor workers ×
-/// kernel threads) doesn't oversubscribe the machine.
-static CONCURRENT_CALLERS: AtomicUsize = AtomicUsize::new(1);
-
-/// Declare how many threads will be calling the blocked kernels
-/// concurrently (clamped to >= 1). `RealExecutor` sets this to its worker
-/// count; standalone benches may reset it to 1 for full per-kernel
-/// parallelism.
-pub fn set_parallelism_hint(concurrent_callers: usize) {
-    CONCURRENT_CALLERS.store(concurrent_callers.max(1), Ordering::Relaxed);
-}
 
 /// Depth of the B panel kept hot across a row sweep (KC·NC·8 B ≈ L2-sized).
 const KC: usize = 256;
@@ -40,21 +25,13 @@ const MR: usize = 4;
 const PAR_THRESHOLD: f64 = 3.2e7;
 
 /// Worker threads for a blocked kernel of `flops` total work over `rows`
-/// independent row slices: cores ÷ concurrent-caller hint, capped at 8.
-/// `NUMS_MATMUL_THREADS` overrides (1 = serial).
-fn kernel_threads(flops: f64, rows: usize) -> usize {
+/// independent row slices, given the caller's thread `budget` (from an
+/// [`ExecContext`] — there is no process-global parallelism state).
+fn kernel_threads(flops: f64, rows: usize, budget: usize) -> usize {
     if flops < PAR_THRESHOLD || rows < 2 {
         return 1;
     }
-    let hw = std::thread::available_parallelism()
-        .map(|v| v.get())
-        .unwrap_or(1);
-    let callers = CONCURRENT_CALLERS.load(Ordering::Relaxed).max(1);
-    std::env::var("NUMS_MATMUL_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .unwrap_or_else(|| (hw / callers).min(8))
-        .clamp(1, rows)
+    budget.clamp(1, rows)
 }
 
 /// Ceiling division (rows per thread chunk).
@@ -62,13 +39,21 @@ fn div_up(a: usize, b: usize) -> usize {
     a / b + usize::from(a % b != 0)
 }
 
-/// C = A · B — cache-blocked, register-tiled, parallel over row panels.
+/// C = A · B with a whole-host thread budget (standalone callers: driver
+/// math, benches, tests). Executors use [`matmul_with`] with their
+/// per-worker [`ExecContext`] budget.
+pub fn matmul(a: &Block, b: &Block) -> Block {
+    matmul_with(a, b, ExecContext::host_default().kernel_threads)
+}
+
+/// C = A · B — cache-blocked, register-tiled, parallel over row panels,
+/// using at most `budget` threads.
 ///
 /// Loop order keeps a KC×NC panel of B resident in L2 while MR rows of C
 /// accumulate in registers; k is consumed in ascending order for every
 /// output element, so results are bit-identical to [`matmul_naive`] (and
 /// across thread counts — threads own disjoint row ranges).
-pub fn matmul(a: &Block, b: &Block) -> Block {
+pub fn matmul_with(a: &Block, b: &Block, budget: usize) -> Block {
     let (m, ka) = (a.rows(), a.cols());
     let (kb, n) = (b.rows(), b.cols());
     assert_eq!(ka, kb, "matmul {:?} x {:?}", a.shape, b.shape);
@@ -77,7 +62,7 @@ pub fn matmul(a: &Block, b: &Block) -> Block {
         return Block::from_vec(&[m, n], out);
     }
     let (ab, bb) = (a.buf(), b.buf());
-    let threads = kernel_threads(2.0 * m as f64 * ka as f64 * n as f64, m);
+    let threads = kernel_threads(2.0 * m as f64 * ka as f64 * n as f64, m, budget);
     if threads <= 1 {
         matmul_rows(ab, bb, &mut out, 0, m, ka, n);
     } else {
@@ -207,11 +192,16 @@ pub fn matmul_naive(a: &Block, b: &Block) -> Block {
 /// output, and parallelizes over row ranges with a deterministic in-order
 /// partial reduction.
 pub fn gram(a: &Block, b: &Block) -> Block {
+    gram_with(a, b, ExecContext::host_default().kernel_threads)
+}
+
+/// C = Aᵀ · B with an explicit thread budget (see [`gram`]).
+pub fn gram_with(a: &Block, b: &Block, budget: usize) -> Block {
     let (m, p) = (a.rows(), a.cols());
     let (m2, q) = (b.rows(), b.cols());
     assert_eq!(m, m2, "gram {:?}ᵀ x {:?}", a.shape, b.shape);
     let (ab, bb) = (a.buf(), b.buf());
-    let threads = kernel_threads(2.0 * m as f64 * p as f64 * q as f64, m);
+    let threads = kernel_threads(2.0 * m as f64 * p as f64 * q as f64, m, budget);
     if threads <= 1 {
         return Block::from_vec(&[p, q], gram_rows(ab, bb, 0, m, p, q));
     }

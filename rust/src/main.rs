@@ -112,7 +112,7 @@ fn validate(args: &Args) -> Result<()> {
             })
             .collect();
         let refs: Vec<&Block> = inputs.iter().collect();
-        let got = backend.execute(&kernel, &refs)?;
+        let got = backend.execute(&kernel, &refs, &nums::runtime::ExecContext::host_default())?;
         let want = nums::runtime::native::execute(&kernel, &refs)?;
         for (gb, wb) in got.iter().zip(&want) {
             let d = nums::util::stats::max_rel_diff(gb.buf(), wb.buf());

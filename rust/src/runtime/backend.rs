@@ -12,6 +12,7 @@ use anyhow::Result;
 
 use crate::store::Block;
 
+use super::exec_ctx::ExecContext;
 use super::kernel::Kernel;
 use super::native;
 use super::pjrt::PjrtRuntime;
@@ -56,10 +57,12 @@ impl Backend {
         }
     }
 
-    /// Execute a kernel over real blocks.
-    pub fn execute(&self, kernel: &Kernel, inputs: &[&Block]) -> Result<Vec<Block>> {
+    /// Execute a kernel over real blocks. `ctx` carries the intra-kernel
+    /// thread budget and placement info; there is no global fallback — the
+    /// caller decides how much of the machine this task may use.
+    pub fn execute(&self, kernel: &Kernel, inputs: &[&Block], ctx: &ExecContext) -> Result<Vec<Block>> {
         match self {
-            Backend::Native => native::execute(kernel, inputs),
+            Backend::Native => native::execute_ctx(kernel, inputs, ctx),
             Backend::Pjrt {
                 rt,
                 pjrt_hits,
@@ -68,10 +71,10 @@ impl Backend {
                 let shapes: Vec<Vec<usize>> = inputs.iter().map(|b| b.shape.clone()).collect();
                 if rt.supports(kernel, &shapes) {
                     pjrt_hits.fetch_add(1, Ordering::Relaxed);
-                    rt.execute(kernel, inputs)
+                    rt.execute(kernel, inputs, ctx)
                 } else {
                     native_falls.fetch_add(1, Ordering::Relaxed);
-                    native::execute(kernel, inputs)
+                    native::execute_ctx(kernel, inputs, ctx)
                 }
             }
         }
@@ -103,7 +106,9 @@ mod tests {
         let b = Backend::native();
         let x = Block::from_vec(&[1, 2], vec![1., 2.]);
         let y = Block::from_vec(&[1, 2], vec![3., 4.]);
-        let out = b.execute(&Kernel::Ew(BinOp::Add), &[&x, &y]).unwrap();
+        let out = b
+            .execute(&Kernel::Ew(BinOp::Add), &[&x, &y], &ExecContext::host_default())
+            .unwrap();
         assert_eq!(out[0].buf(), &[4., 6.]);
         assert_eq!(b.counters(), (0, 0));
         assert_eq!(b.name(), "native");

@@ -1,0 +1,114 @@
+//! Per-execution kernel configuration — the context object that replaced
+//! the old process-global parallelism hint in `linalg::dense`.
+//!
+//! Every [`crate::runtime::Backend::execute`] call receives an
+//! [`ExecContext`] describing how much intra-kernel parallelism the caller
+//! grants and where (which simulated node) the task runs. The real
+//! executor derives one context per worker thread so that
+//! `executor workers × kernel threads` never oversubscribes the host;
+//! standalone callers (benches, tests, the serial GLM reference) use
+//! [`ExecContext::host_default`], which grants the whole machine.
+//!
+//! Because the budget is a plain value threaded through call arguments,
+//! two `Session`s with different topologies in one process can no longer
+//! clobber each other's kernel parallelism — there is no global mutable
+//! state left to race on.
+//!
+//! `NUMS_MATMUL_THREADS` overrides the budget of any context at
+//! construction time (`1` forces serial kernels; useful on shared CI
+//! runners). This is the only environment knob; it is read when a context
+//! is built, never from kernel hot loops.
+
+/// Hard cap on intra-kernel threads: beyond this the blocked kernels are
+/// memory-bound and extra threads only add spawn/join overhead.
+const MAX_KERNEL_THREADS: usize = 8;
+
+/// The host's core count (1 if it cannot be determined) — the single
+/// source every pool- and budget-sizing decision derives from.
+pub(crate) fn host_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1)
+}
+
+/// Execution context handed to kernel backends for one task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecContext {
+    /// Intra-kernel thread budget (>= 1). Kernels may use fewer threads
+    /// (small inputs stay serial) but never more.
+    pub kernel_threads: usize,
+    /// Simulated node the task executes on (diagnostics / traces).
+    pub node: usize,
+    /// Whether the owning executor runs with work stealing (so kernels
+    /// and traces can report the mode they ran under).
+    pub stealing: bool,
+}
+
+impl ExecContext {
+    /// Context with an explicit thread budget. `NUMS_MATMUL_THREADS`
+    /// overrides `kernel_threads` when set to a positive integer.
+    pub fn new(kernel_threads: usize, node: usize, stealing: bool) -> Self {
+        let budget = std::env::var("NUMS_MATMUL_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or_else(|| kernel_threads.max(1));
+        Self {
+            kernel_threads: budget,
+            node,
+            stealing,
+        }
+    }
+
+    /// Whole-host context for standalone kernel calls (benches, tests,
+    /// driver-side math): budget = available cores, capped.
+    pub fn host_default() -> Self {
+        Self::new(host_threads().min(MAX_KERNEL_THREADS), 0, false)
+    }
+
+    /// Context for one of `concurrent_workers` executor threads running
+    /// kernels at the same time: the host's cores are divided evenly so
+    /// nested parallelism does not oversubscribe the machine.
+    pub fn shared(concurrent_workers: usize, node: usize, stealing: bool) -> Self {
+        let budget = (host_threads() / concurrent_workers.max(1)).clamp(1, MAX_KERNEL_THREADS);
+        Self::new(budget, node, stealing)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_are_at_least_one() {
+        // `new` clamps a zero request (env override, if set, is >= 1 too)
+        assert!(ExecContext::new(0, 0, false).kernel_threads >= 1);
+        assert!(ExecContext::host_default().kernel_threads >= 1);
+        assert!(ExecContext::shared(1 << 20, 3, true).kernel_threads >= 1);
+        assert!(host_threads() >= 1);
+        // dividing the host among absurdly many workers leaves exactly 1
+        // (unless the env override is active, e.g. on CI)
+        if std::env::var("NUMS_MATMUL_THREADS").is_err() {
+            assert_eq!(ExecContext::shared(1 << 20, 3, true).kernel_threads, 1);
+        }
+    }
+
+    #[test]
+    fn shared_divides_the_host() {
+        let hw = host_threads();
+        let one = ExecContext::shared(1, 0, false);
+        // a single worker gets the whole (capped) machine unless the env
+        // override is active in this test environment
+        if std::env::var("NUMS_MATMUL_THREADS").is_err() {
+            assert_eq!(one.kernel_threads, hw.min(8));
+        }
+        assert!(ExecContext::shared(4, 0, false).kernel_threads <= one.kernel_threads);
+    }
+
+    #[test]
+    fn carries_node_and_mode() {
+        let c = ExecContext::new(2, 5, true);
+        assert_eq!(c.node, 5);
+        assert!(c.stealing);
+    }
+}

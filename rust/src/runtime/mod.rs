@@ -3,12 +3,14 @@
 //! `python/compile/aot.py`.
 
 pub mod backend;
+pub mod exec_ctx;
 pub mod kernel;
 pub mod manifest;
 pub mod native;
 pub mod pjrt;
 
 pub use backend::Backend;
+pub use exec_ctx::ExecContext;
 pub use kernel::{BinOp, EwStep, Kernel};
 pub use manifest::{Manifest, ManifestEntry};
 pub use pjrt::PjrtRuntime;

@@ -12,10 +12,22 @@ use crate::linalg::dense;
 use crate::store::block::pool;
 use crate::store::Block;
 
+use super::exec_ctx::ExecContext;
 use super::kernel::{BinOp, EwStep, Kernel};
 
-/// Execute `kernel` over real input blocks, producing real output blocks.
+/// Execute `kernel` with a whole-host thread budget. Convenience for
+/// driver-side math, benches and tests; the executors call
+/// [`execute_ctx`] with their per-worker budget instead.
 pub fn execute(kernel: &Kernel, inputs: &[&Block]) -> Result<Vec<Block>> {
+    execute_ctx(kernel, inputs, &ExecContext::host_default())
+}
+
+/// Execute `kernel` over real input blocks, producing real output blocks.
+/// `ctx.kernel_threads` bounds the intra-kernel parallelism of the
+/// compute-heavy kernels (matmul/gram/fused element-wise); everything else
+/// is single-threaded regardless.
+pub fn execute_ctx(kernel: &Kernel, inputs: &[&Block], ctx: &ExecContext) -> Result<Vec<Block>> {
+    let t = ctx.kernel_threads;
     let out = match kernel {
         Kernel::Neg => vec![map1(inputs[0], |v| -v)],
         Kernel::Sigmoid => vec![map1(inputs[0], |v| 1.0 / (1.0 + (-v).exp()))],
@@ -24,13 +36,13 @@ pub fn execute(kernel: &Kernel, inputs: &[&Block]) -> Result<Vec<Block>> {
             vec![map1(inputs[0], move |v| c * v)]
         }
         Kernel::Ew(op) => vec![map2(inputs[0], inputs[1], *op)?],
-        Kernel::FusedEw(steps) => vec![fused_ew(steps, inputs)?],
-        Kernel::Matmul => vec![dense::matmul(inputs[0], inputs[1])],
+        Kernel::FusedEw(steps) => vec![fused_ew(steps, inputs, t)?],
+        Kernel::Matmul => vec![dense::matmul_with(inputs[0], inputs[1], t)],
         // lazy transpose of the (usually much smaller) right operand, then
         // the blocked kernel
-        Kernel::MatmulNT => vec![dense::matmul(inputs[0], &inputs[1].transposed())],
+        Kernel::MatmulNT => vec![dense::matmul_with(inputs[0], &inputs[1].transposed(), t)],
         // streaming Aᵀ·B — never materializes the transposed block
-        Kernel::Gram => vec![dense::gram(inputs[0], inputs[1])],
+        Kernel::Gram => vec![dense::gram_with(inputs[0], inputs[1], t)],
         Kernel::SumAxis0 => vec![sum_axis0(inputs[0])],
         Kernel::SumAxis1 => vec![sum_axis1(inputs[0])],
         Kernel::SumAll => {
@@ -113,11 +125,18 @@ fn map1(x: &Block, f: impl Fn(f64) -> f64) -> Block {
 /// slice that stays in L1 while the whole block is traversed once.
 const FUSED_CHUNK: usize = 4096;
 
+/// Below this many elements a fused chain stays single-threaded (it is
+/// bandwidth-bound; spawning threads for small blocks only adds latency).
+const FUSED_PAR_MIN: usize = 1 << 16;
+
 /// Single-pass interpreter for [`Kernel::FusedEw`]: one pool-backed
 /// accumulator buffer, zero intermediate blocks. Applies each step with
 /// exactly the scalar expression the unfused kernel uses, so fused results
-/// are bit-for-bit identical to the op-by-op oracle.
-fn fused_ew(steps: &[EwStep], inputs: &[&Block]) -> Result<Block> {
+/// are bit-for-bit identical to the op-by-op oracle. Large blocks split
+/// into disjoint element ranges across up to `threads` workers — each
+/// element's value never depends on the split, so results are also
+/// bit-identical across thread counts.
+fn fused_ew(steps: &[EwStep], inputs: &[&Block], threads: usize) -> Result<Block> {
     if inputs.is_empty() {
         bail!("fused_ew: no inputs");
     }
@@ -150,10 +169,34 @@ fn fused_ew(steps: &[EwStep], inputs: &[&Block]) -> Result<Block> {
 
     let n: usize = shape.iter().product();
     let mut out = pool::alloc_copy(inputs[0].buf());
+    let t = if n >= FUSED_PAR_MIN && threads > 1 {
+        threads.min(n / FUSED_CHUNK).max(1)
+    } else {
+        1
+    };
+    if t <= 1 {
+        fused_ew_range(steps, &plan, inputs, &mut out, 0);
+    } else {
+        let per = n / t + usize::from(n % t != 0);
+        let plan = &plan;
+        std::thread::scope(|scope| {
+            for (ci, chunk) in out.chunks_mut(per).enumerate() {
+                scope.spawn(move || fused_ew_range(steps, plan, inputs, chunk, ci * per));
+            }
+        });
+    }
+    Ok(Block::from_vec(&shape, out))
+}
+
+/// Apply the fused chain to `out` (which holds elements `[base,
+/// base+out.len())` of input 0's copy), reading the side inputs at the
+/// same absolute offsets.
+fn fused_ew_range(steps: &[EwStep], plan: &[usize], inputs: &[&Block], out: &mut [f64], base: usize) {
+    let n = out.len();
     let mut lo = 0;
     while lo < n {
         let hi = (lo + FUSED_CHUNK).min(n);
-        for (step, &inp) in steps.iter().zip(&plan) {
+        for (step, &inp) in steps.iter().zip(plan) {
             let seg = &mut out[lo..hi];
             match *step {
                 EwStep::Neg => {
@@ -171,13 +214,16 @@ fn fused_ew(steps: &[EwStep], inputs: &[&Block]) -> Result<Block> {
                         *v = c * *v;
                     }
                 }
-                EwStep::Bin(op) => bin_segment(seg, &inputs[inp].buf()[lo..hi], op, false),
-                EwStep::BinRev(op) => bin_segment(seg, &inputs[inp].buf()[lo..hi], op, true),
+                EwStep::Bin(op) => {
+                    bin_segment(seg, &inputs[inp].buf()[base + lo..base + hi], op, false)
+                }
+                EwStep::BinRev(op) => {
+                    bin_segment(seg, &inputs[inp].buf()[base + lo..base + hi], op, true)
+                }
             }
         }
         lo = hi;
     }
-    Ok(Block::from_vec(&shape, out))
 }
 
 /// acc ∘= rhs (or rhs ∘ acc when `rev`), matching `map2`'s scalar forms.
@@ -451,7 +497,7 @@ mod tests {
     #[test]
     fn fused_ew_rejects_bad_arity() {
         let x = Block::from_vec(&[1, 2], vec![1., 2.]);
-        let err = fused_ew(&[EwStep::Bin(BinOp::Add)], &[&x]).unwrap_err();
+        let err = fused_ew(&[EwStep::Bin(BinOp::Add)], &[&x], 1).unwrap_err();
         assert!(format!("{err}").contains("arity"));
     }
 

@@ -28,6 +28,7 @@ mod xla_impl {
 
     use anyhow::{anyhow, bail, Context, Result};
 
+    use crate::runtime::exec_ctx::ExecContext;
     use crate::runtime::kernel::Kernel;
     use crate::runtime::manifest::{Manifest, ManifestEntry};
     use crate::store::Block;
@@ -88,7 +89,11 @@ mod xla_impl {
         }
 
         /// Execute `kernel` on real blocks through the compiled artifact.
-        pub fn execute(&self, kernel: &Kernel, inputs: &[&Block]) -> Result<Vec<Block>> {
+        /// The PJRT CPU client owns its internal thread pool, so `ctx`'s
+        /// budget is advisory here; it is accepted for signature parity
+        /// with the native path (the executor threads one context through
+        /// every backend).
+        pub fn execute(&self, kernel: &Kernel, inputs: &[&Block], _ctx: &ExecContext) -> Result<Vec<Block>> {
             let shapes: Vec<Vec<usize>> = inputs.iter().map(|b| b.shape.clone()).collect();
             let entry = self.entry_for(kernel, &shapes)?;
 
@@ -163,6 +168,7 @@ mod stub {
 
     use anyhow::{anyhow, Result};
 
+    use crate::runtime::exec_ctx::ExecContext;
     use crate::runtime::kernel::Kernel;
     use crate::runtime::manifest::Manifest;
     use crate::store::Block;
@@ -190,7 +196,12 @@ mod stub {
             false
         }
 
-        pub fn execute(&self, kernel: &Kernel, _inputs: &[&Block]) -> Result<Vec<Block>> {
+        pub fn execute(
+            &self,
+            kernel: &Kernel,
+            _inputs: &[&Block],
+            _ctx: &ExecContext,
+        ) -> Result<Vec<Block>> {
             Err(anyhow!("no artifact runtime for {kernel}: pjrt feature disabled"))
         }
 

@@ -98,7 +98,9 @@ impl StoreSet {
     }
 
     /// Transfer `id` from `src` to `dst`, accounting bytes on both NICs.
-    /// No-op (and no accounting) if already resident at `dst`.
+    /// No-op (and no accounting) if already resident at `dst`. The
+    /// residency check happens under the destination lock, so two workers
+    /// racing to pull the same object account its bytes exactly once.
     pub fn transfer(&self, src: usize, dst: usize, id: ObjectId) -> u64 {
         if src == dst || self.contains(dst, id) {
             return 0;
@@ -108,14 +110,15 @@ impl StoreSet {
             .unwrap_or_else(|| panic!("transfer: object {id} not on node {src}"));
         let sz = block.bytes();
         {
-            let mut s = self.stores[src].lock().unwrap();
-            s.net_out_bytes += sz;
-        }
-        {
             let mut d = self.stores[dst].lock().unwrap();
+            if d.contains(id) {
+                return 0; // lost the race: the other puller accounted it
+            }
             d.net_in_bytes += sz;
             d.put(id, block);
         }
+        let mut s = self.stores[src].lock().unwrap();
+        s.net_out_bytes += sz;
         sz
     }
 

@@ -1,0 +1,231 @@
+//! Work-stealing real-executor suites: the dependency-counted, stealing
+//! executor must be a pure scheduling optimization — outputs bit-identical
+//! to sequential plan-order execution for every random graph, node count,
+//! thread count, and stealing mode — and must actually steal on skewed
+//! plans.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use nums::exec::{Plan, RealExecutor, Task};
+use nums::prelude::*;
+use nums::runtime::native;
+use nums::store::StoreSet;
+use nums::util::prop::forall_res;
+
+/// Sequential oracle: run the plan in order, single process, no stores.
+fn run_sequential(plan: &Plan, seeds: &HashMap<u64, Block>) -> HashMap<u64, Block> {
+    let mut env: HashMap<u64, Block> = seeds.clone();
+    for t in &plan.tasks {
+        let refs: Vec<&Block> = t.inputs.iter().map(|o| &env[o]).collect();
+        let outs = native::execute(&t.kernel, &refs).unwrap();
+        for ((obj, _), b) in t.outputs.iter().zip(outs) {
+            env.insert(*obj, b);
+        }
+    }
+    env
+}
+
+/// Random-but-valid plan spec: decoded against `avail` (seed objects plus
+/// earlier task outputs), so every generated graph is executable and the
+/// plan order is topological.
+#[derive(Debug)]
+struct PlanSpec {
+    nodes: usize,
+    workers_per_node: usize,
+    threads_per_node: usize,
+    stealing: bool,
+    n_seeds: usize,
+    /// (kernel kind, input pick 1, input pick 2, target pick) per task.
+    tasks: Vec<(u8, usize, usize, usize)>,
+}
+
+const SHAPE: [usize; 2] = [4, 4];
+
+fn decode(spec: &PlanSpec) -> (Plan, HashMap<u64, Block>) {
+    let mut rng = Rng::seed_from_u64(0xB10C ^ spec.tasks.len() as u64);
+    let mut seeds = HashMap::new();
+    let mut avail: Vec<u64> = Vec::new();
+    for s in 0..spec.n_seeds {
+        let mut v = vec![0.0; SHAPE[0] * SHAPE[1]];
+        rng.fill_normal(&mut v);
+        seeds.insert(s as u64, Block::from_vec(&SHAPE, v));
+        avail.push(s as u64);
+    }
+    let mut tasks = Vec::new();
+    for (i, &(kind, p1, p2, tgt)) in spec.tasks.iter().enumerate() {
+        let out = 1000 + i as u64;
+        let (kernel, inputs) = match kind % 5 {
+            0 => (Kernel::Ew(BinOp::Add), vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+            1 => (Kernel::Ew(BinOp::Mul), vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+            2 => (Kernel::Neg, vec![avail[p1 % avail.len()]]),
+            3 => (Kernel::Scale(0.5), vec![avail[p1 % avail.len()]]),
+            _ => (Kernel::Matmul, vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+        };
+        let in_shapes = vec![SHAPE.to_vec(); inputs.len()];
+        tasks.push(Task {
+            kernel,
+            inputs,
+            in_shapes,
+            outputs: vec![(out, SHAPE.to_vec())],
+            target: tgt % spec.nodes,
+            transfers: vec![],
+        });
+        avail.push(out);
+    }
+    (Plan { tasks }, seeds)
+}
+
+#[test]
+fn prop_stealing_executor_matches_sequential_bit_for_bit() {
+    forall_res(
+        0x57EA1,
+        30,
+        |r| PlanSpec {
+            nodes: 1 + r.usize(4),
+            workers_per_node: 1 + r.usize(3),
+            threads_per_node: 1 + r.usize(3),
+            stealing: r.usize(2) == 1,
+            n_seeds: 2 + r.usize(4),
+            tasks: (0..1 + r.usize(24))
+                .map(|_| (r.usize(256) as u8, r.usize(1 << 16), r.usize(1 << 16), r.usize(1 << 16)))
+                .collect(),
+        },
+        |spec| {
+            let (plan, seeds) = decode(spec);
+            let want = run_sequential(&plan, &seeds);
+
+            let topo = Topology::new(spec.nodes, spec.workers_per_node, SystemMode::Ray);
+            let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+                .with_stealing(spec.stealing);
+            exec.threads_per_node = spec.threads_per_node;
+            let stores = StoreSet::new(spec.nodes);
+            for (obj, b) in &seeds {
+                stores.put((*obj as usize) % spec.nodes, *obj, Arc::new(b.clone()));
+            }
+            let rep = exec
+                .run(&plan, &stores)
+                .map_err(|e| format!("executor failed: {e}"))?;
+            if rep.tasks != plan.tasks.len() {
+                return Err(format!("report says {} tasks, plan has {}", rep.tasks, plan.tasks.len()));
+            }
+            let total_run: usize = rep.node_stats.iter().map(|s| s.tasks_run).sum();
+            if total_run != plan.tasks.len() {
+                return Err(format!("{total_run} tasks run != {} planned", plan.tasks.len()));
+            }
+            if !spec.stealing && rep.node_stats.iter().any(|s| s.tasks_stolen > 0) {
+                return Err("stole with stealing disabled".into());
+            }
+            for i in 0..plan.tasks.len() {
+                let obj = 1000 + i as u64;
+                let got = stores
+                    .fetch(obj)
+                    .ok_or_else(|| format!("output {obj} missing from every store"))?;
+                let w = &want[&obj];
+                if got.shape != w.shape {
+                    return Err(format!("shape mismatch on {obj}"));
+                }
+                // bit-identical, not approximately equal
+                if got.buf().iter().zip(w.buf()).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err(format!("output {obj} differs from sequential oracle"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn skewed_plan_gets_stolen_by_other_nodes_and_stays_bit_identical() {
+    // every task targeted at node 0 of 4 nodes: the canonical worst case
+    // for FIFO node-affinity execution
+    let nodes = 4usize;
+    let n = 128usize;
+    let k_tasks = 40usize;
+    let mut rng = Rng::seed_from_u64(0x5C3A);
+    let mut seeds = HashMap::new();
+    for i in 0..2 * k_tasks as u64 {
+        let mut v = vec![0.0; n * n];
+        rng.fill_normal(&mut v);
+        seeds.insert(i, Block::from_vec(&[n, n], v));
+    }
+    let plan = Plan {
+        tasks: (0..k_tasks)
+            .map(|i| Task {
+                kernel: Kernel::Matmul,
+                inputs: vec![(2 * i) as u64, (2 * i + 1) as u64],
+                in_shapes: vec![vec![n, n], vec![n, n]],
+                outputs: vec![(1000 + i as u64, vec![n, n])],
+                target: 0,
+                transfers: vec![],
+            })
+            .collect(),
+    };
+
+    let run = |stealing: bool| {
+        let topo = Topology::new(nodes, 2, SystemMode::Ray);
+        let mut exec =
+            RealExecutor::new(topo, Arc::new(Backend::native())).with_stealing(stealing);
+        exec.threads_per_node = 2;
+        let stores = StoreSet::new(nodes);
+        for (obj, b) in &seeds {
+            stores.put(0, *obj, Arc::new(b.clone()));
+        }
+        let rep = exec.run(&plan, &stores).unwrap();
+        let outs: Vec<Block> = (0..k_tasks)
+            .map(|i| stores.fetch(1000 + i as u64).unwrap().as_ref().clone())
+            .collect();
+        (rep, outs)
+    };
+
+    let (baseline, base_outs) = run(false);
+    let (stolen, steal_outs) = run(true);
+
+    // without stealing, node 0 does everything
+    assert_eq!(baseline.node_stats[0].tasks_run, k_tasks);
+    assert!(baseline.node_stats[1..].iter().all(|s| s.tasks_run == 0));
+
+    // with stealing, at least two other nodes take a nonzero share and
+    // pay real bytes for it
+    let stealers = stolen.node_stats[1..]
+        .iter()
+        .filter(|s| s.tasks_stolen > 0)
+        .count();
+    assert!(
+        stealers >= 2,
+        "expected >=2 stealing nodes, stats: {:?}",
+        stolen.node_stats
+    );
+    assert!(
+        stolen.node_stats.iter().map(|s| s.steal_bytes).sum::<u64>() > 0,
+        "stolen tasks must account transfer bytes"
+    );
+    let total: usize = stolen.node_stats.iter().map(|s| s.tasks_run).sum();
+    assert_eq!(total, k_tasks);
+
+    // and the numerics are exactly the same
+    for (a, b) in base_outs.iter().zip(&steal_outs) {
+        assert_eq!(a.max_abs_diff(b), 0.0, "stealing changed results");
+    }
+}
+
+#[test]
+fn session_reports_steal_counters_through_run() {
+    // end-to-end: a real session exposes per-node stats on RunReport
+    let mut sess = Session::new(SessionConfig::real_small(2, 2));
+    let x = sess.randn(&[256, 32], &[4, 1]);
+    let y = sess.randn(&[256, 32], &[4, 1]);
+    let (_, rep) = nums::api::ops::add(&mut sess, &x, &y).unwrap();
+    let real = rep.real.expect("real mode");
+    assert_eq!(real.node_stats.len(), 2);
+    let total: usize = real.node_stats.iter().map(|s| s.tasks_run).sum();
+    assert_eq!(total, rep.tasks);
+
+    // stealing can be disabled per session
+    let mut sess2 = Session::new(SessionConfig::real_small(2, 2).with_stealing(false));
+    let x2 = sess2.randn(&[256, 32], &[4, 1]);
+    let y2 = sess2.randn(&[256, 32], &[4, 1]);
+    let (_, rep2) = nums::api::ops::add(&mut sess2, &x2, &y2).unwrap();
+    let real2 = rep2.real.expect("real mode");
+    assert!(real2.node_stats.iter().all(|s| s.tasks_stolen == 0));
+}

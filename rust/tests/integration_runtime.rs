@@ -96,7 +96,7 @@ fn every_artifact_matches_native_oracle() {
         let Some(kernel) = kernel_for(&entry.name) else { continue };
         let inputs = inputs_for(entry, &mut rng);
         let refs: Vec<&Block> = inputs.iter().collect();
-        let got = rt.execute(&kernel, &refs).expect(&entry.name);
+        let got = rt.execute(&kernel, &refs, &ExecContext::host_default()).expect(&entry.name);
         let want = native::execute(&kernel, &refs).unwrap();
         assert_eq!(got.len(), want.len(), "{}", entry.name);
         for (g, w) in got.iter().zip(&want) {
@@ -122,7 +122,7 @@ fn executables_are_cached_across_calls() {
     };
     for _ in 0..5 {
         let (a, b) = (mk(&mut rng), mk(&mut rng));
-        rt.execute(&Kernel::Matmul, &[&a, &b]).unwrap();
+        rt.execute(&Kernel::Matmul, &[&a, &b], &ExecContext::host_default()).unwrap();
     }
     assert_eq!(rt.compiled_count(), 1, "one executable, five executions");
 }
@@ -134,14 +134,14 @@ fn composite_backend_falls_back_to_native() {
     // 64x64 add: in the manifest -> PJRT
     let a = Block::filled(&[64, 64], 1.0);
     let b = Block::filled(&[64, 64], 2.0);
-    backend.execute(&Kernel::Ew(BinOp::Add), &[&a, &b]).unwrap();
+    backend.execute(&Kernel::Ew(BinOp::Add), &[&a, &b], &ExecContext::host_default()).unwrap();
     // 7x7 add: not in the manifest -> native
     let c = Block::filled(&[7, 7], 1.0);
     let d = Block::filled(&[7, 7], 2.0);
-    backend.execute(&Kernel::Ew(BinOp::Add), &[&c, &d]).unwrap();
+    backend.execute(&Kernel::Ew(BinOp::Add), &[&c, &d], &ExecContext::host_default()).unwrap();
     // QR: native-only kernel
     let x = Block::filled(&[16, 4], 1.0);
-    backend.execute(&Kernel::Qr, &[&x]).ok();
+    backend.execute(&Kernel::Qr, &[&x], &ExecContext::host_default()).ok();
     let (pjrt, native) = backend.counters();
     assert_eq!(pjrt, 1);
     assert!(native >= 2);
@@ -153,6 +153,6 @@ fn unsupported_shape_errors_cleanly_on_pure_pjrt() {
     let rt = PjrtRuntime::new(&dir).unwrap();
     let a = Block::filled(&[3, 3], 1.0);
     let b = Block::filled(&[3, 3], 1.0);
-    let err = rt.execute(&Kernel::Ew(BinOp::Add), &[&a, &b]).unwrap_err();
+    let err = rt.execute(&Kernel::Ew(BinOp::Add), &[&a, &b], &ExecContext::host_default()).unwrap_err();
     assert!(format!("{err}").contains("no artifact"));
 }
