@@ -21,11 +21,14 @@
 use std::sync::Arc;
 
 use nums::api::{ops, Policy, RunReport, Session, SessionConfig};
-use nums::bench::harness::{emit_json, print_series, steal_summary, PerfRecord};
+use nums::bench::harness::{
+    emit_json, glm_mem_run, max_peak_bytes, mem_summary, print_series, produce_fold_plan,
+    steal_summary, PerfRecord,
+};
 use nums::exec::{Plan, RealExecutor, Task};
 use nums::linalg::dense;
 use nums::prelude::*;
-use nums::store::StoreSet;
+use nums::store::{MemoryManager, StoreSet};
 use nums::util::Stopwatch;
 
 type OpFn = fn(&mut Session, &DistArray, &DistArray) -> anyhow::Result<(DistArray, RunReport)>;
@@ -303,6 +306,78 @@ fn stealing_ablation(records: &mut Vec<PerfRecord>, smoke: bool) {
     );
 }
 
+/// Memory-manager ablation (the §8.1 memory-load axis, real execution):
+/// (a) a multi-iteration GLM with lifetime GC on/off — per-node peak
+/// bytes show what refcount release buys; (b) a skewed matmul plan under
+/// a tight per-node byte budget — spill/read-back traffic vs unlimited.
+/// Peaks and spill counters land in `BENCH_fig09.json` (bytes = peak or
+/// spilled bytes) instead of ad-hoc prints.
+fn memory_ablation(records: &mut Vec<PerfRecord>, smoke: bool) {
+    println!("## Fig 9 (ext): memory-manager ablation (lifetime GC + spill)");
+    let (rows, d, q, steps) = if smoke { (256, 8, 4, 2) } else { (1024, 16, 8, 3) };
+    for gc in [false, true] {
+        let (secs, last) = glm_mem_run(2, 2, rows, d, q, steps, gc);
+        let last = &last;
+        println!("  glm gc={gc:<5} wall={secs:.4}s  {}", mem_summary(last));
+        records.push(PerfRecord {
+            op: format!("glm_newton{steps}_mem_gc_{gc}"),
+            bytes: max_peak_bytes(last),
+            secs,
+            gflops: 0.0,
+        });
+        for (nid, &(_, peak, _, _)) in last.store_snapshot.iter().enumerate() {
+            records.push(PerfRecord {
+                op: format!("glm_newton{steps}_mem_gc_{gc}_node{nid}_peak"),
+                bytes: peak,
+                secs: 0.0,
+                gflops: 0.0,
+            });
+        }
+    }
+
+    // budgeted spill: K producer blocks that all stay live until a late
+    // fold consumes them — under a 4-block budget the cold producers page
+    // out to disk and come back for the adds (spill AND read-back
+    // traffic). Same topology the executor's budget test verifies.
+    let n = if smoke { 64usize } else { 256usize };
+    let k_prod = 10usize;
+    let block_bytes = (n * n * 8) as u64;
+    let mut rng = Rng::seed_from_u64(0x5B11);
+    let mut sv = vec![0.0; n * n];
+    rng.fill_normal(&mut sv);
+    let seed_block = Block::from_vec(&[n, n], sv);
+    let (plan, _final_out) = produce_fold_plan(k_prod, n);
+    for budget in [None, Some(4 * block_bytes)] {
+        let topo = Topology::new(1, 1, SystemMode::Ray);
+        let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+            .with_memory(MemoryManager::new(1, budget, true));
+        exec.threads_per_node = 1;
+        let stores = StoreSet::new(1);
+        stores.put(0, 1, Arc::new(seed_block.clone()));
+        let sw = Stopwatch::start();
+        let rep = exec.run(&plan, &stores).unwrap();
+        let secs = sw.secs();
+        let label = match budget {
+            None => "unlimited".to_string(),
+            Some(bb) => format!("{}B", bb),
+        };
+        println!(
+            "  produce-fold budget={label:<10} wall={secs:.4}s  {}",
+            mem_summary(&rep)
+        );
+        let spilled: u64 = rep.mem_stats.iter().map(|m| m.spilled_bytes).sum();
+        records.push(PerfRecord {
+            op: format!(
+                "produce{k_prod}_fold_budget_{}",
+                budget.map_or("unlimited".to_string(), |b| format!("{b}B"))
+            ),
+            bytes: spilled,
+            secs,
+            gflops: 0.0,
+        });
+    }
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     // 64 GB-shape operands (2^27 x 64 f64) — modeled time, phantom blocks.
@@ -330,6 +405,7 @@ fn main() {
     chain_ablation(&mut records, smoke);
     kernel_shootout(&mut records, smoke);
     stealing_ablation(&mut records, smoke);
+    memory_ablation(&mut records, smoke);
     emit_json("BENCH_fig09.json", &records).expect("write BENCH_fig09.json");
     println!("wrote BENCH_fig09.json ({} records)", records.len());
 }

@@ -2,8 +2,15 @@
 //! Newton iteration of a 128 GB logistic regression problem on 16 nodes,
 //! LSHS vs Ray-without-LSHS. Dumps plot-ready TSV traces to target/ and
 //! prints the paper's headline ratios (network 2×, memory 4×, time 10×).
+//!
+//! The final section replays the memory story on the *real* executor at
+//! reduced scale: a multi-iteration Newton fit with the memory manager's
+//! lifetime GC on/off, reporting actual per-node peak bytes (and any
+//! spill traffic) via `bench::harness::mem_summary` — the measured
+//! counterpart of the modeled Fig. 15 curves.
 
 use nums::api::{Policy, Session, SessionConfig};
+use nums::bench::harness::{glm_mem_run, max_peak_bytes, mem_summary};
 use nums::glm::data::classification_data;
 use nums::glm::newton_fit;
 use nums::metrics::{summarize_trace, trace_to_tsv};
@@ -48,6 +55,16 @@ fn run(policy: Policy, label: &str) -> Outcome {
     }
 }
 
+/// Real-executor memory ablation: lifetime GC on/off over a 3-iteration
+/// Newton fit on a small real cluster (the shared `glm_mem_run` arm, so
+/// this section and fig09's memory ablation measure the same protocol).
+/// Returns max per-node peak bytes.
+fn run_real_memory(gc: bool) -> u64 {
+    let (_, last) = glm_mem_run(4, 2, 2048, 16, 16, 3, gc);
+    println!("  gc={gc:<5} {}", mem_summary(&last));
+    max_peak_bytes(&last)
+}
+
 fn main() {
     let lshs = run(Policy::Lshs, "lshs");
     let nolshs = run(Policy::BottomUp, "no_lshs");
@@ -70,5 +87,15 @@ fn main() {
     println!(
         "balance      : LSHS {:.2} vs no-LSHS {:.2} (lower = denser clustering)",
         lshs.balance, nolshs.balance
+    );
+
+    println!("\n=== real-executor memory ablation (lifetime GC, 3 Newton iterations) ===");
+    let peak_nogc = run_real_memory(false);
+    let peak_gc = run_real_memory(true);
+    println!(
+        "max node peak: {} (no GC) vs {} (GC)  ->  {:.2}x less memory",
+        human_bytes(peak_nogc as f64),
+        human_bytes(peak_gc as f64),
+        peak_nogc as f64 / peak_gc.max(1) as f64
     );
 }

@@ -18,7 +18,7 @@ use crate::net::model::{ComputeParams, NetParams, SystemMode};
 use crate::runtime::Backend;
 use crate::scheduler::baselines::{BottomUp, RandomPlace, RoundRobin};
 use crate::scheduler::{ClusterState, Lshs, Scheduler, Topology};
-use crate::store::{Block, IdGen, ObjectId, StoreSet};
+use crate::store::{Block, IdGen, MemoryManager, ObjectId, StoreSet};
 use crate::util::rng::Rng;
 
 /// Scheduling policy selector (the ablation axis of Fig. 9/15).
@@ -74,6 +74,22 @@ pub struct SessionConfig {
     /// ablation in `benches/fig09_micro.rs`. Per-node steal counters land
     /// in `RealReport::node_stats`.
     pub stealing: bool,
+    /// Release dead intermediates eagerly during real execution: a
+    /// pre-run lifetime pass over the plan counts per-object consumers,
+    /// and the executor evicts an unpinned intermediate from every node
+    /// the moment its last consumer finishes (the real-execution
+    /// counterpart of Ray/Dask refcount GC, already modeled in
+    /// `exec::sim_exec`). On by default; off is the memory ablation
+    /// baseline where `peak_bytes` equals total allocation.
+    pub lifetime_gc: bool,
+    /// Per-node resident-byte budget for real execution. When a `put`
+    /// would exceed it, the memory manager first evicts replica copies
+    /// (objects whose primary lives on another node), then spills the
+    /// coldest unpinned blocks to per-node temp files, reading them back
+    /// transparently on access. `None` (default) = unlimited. Per-node
+    /// `(spilled, readback, evicted-replica)` bytes land in
+    /// `RealReport::mem_stats`.
+    pub mem_budget_bytes: Option<u64>,
 }
 
 impl SessionConfig {
@@ -92,6 +108,8 @@ impl SessionConfig {
             record_trace: false,
             fusion: true,
             stealing: true,
+            lifetime_gc: true,
+            mem_budget_bytes: None,
         }
     }
 
@@ -110,6 +128,8 @@ impl SessionConfig {
             record_trace: false,
             fusion: true,
             stealing: true,
+            lifetime_gc: true,
+            mem_budget_bytes: None,
         }
     }
 
@@ -126,6 +146,19 @@ impl SessionConfig {
     /// Toggle real-executor work stealing (see [`SessionConfig::stealing`]).
     pub fn with_stealing(mut self, on: bool) -> Self {
         self.stealing = on;
+        self
+    }
+
+    /// Toggle plan-lifetime GC (see [`SessionConfig::lifetime_gc`]).
+    pub fn with_lifetime_gc(mut self, on: bool) -> Self {
+        self.lifetime_gc = on;
+        self
+    }
+
+    /// Set the per-node resident-byte budget
+    /// (see [`SessionConfig::mem_budget_bytes`]).
+    pub fn with_mem_budget(mut self, bytes: u64) -> Self {
+        self.mem_budget_bytes = Some(bytes);
         self
     }
 
@@ -197,9 +230,12 @@ impl Session {
             Policy::Random => Box::new(RandomPlace::new(cfg.seed)),
         };
         let real_exec = if cfg.exec == ExecMode::Real {
+            let memory =
+                MemoryManager::new(topo.nodes, cfg.mem_budget_bytes, cfg.lifetime_gc);
             Some(
                 RealExecutor::new(topo.clone(), Arc::clone(&backend))
-                    .with_stealing(cfg.stealing),
+                    .with_stealing(cfg.stealing)
+                    .with_memory(memory),
             )
         } else {
             None
@@ -223,6 +259,29 @@ impl Session {
 
     pub fn policy_name(&self) -> String {
         self.scheduler.name()
+    }
+
+    /// The cluster memory manager (real mode), owned by the executor.
+    pub fn memory(&self) -> Option<&MemoryManager> {
+        self.real_exec.as_ref().and_then(|e| e.memory.as_ref())
+    }
+
+    /// Place a creation-time block on `node`, through the memory manager
+    /// when one exists (so creation data obeys the byte budget too).
+    fn place_block(&self, node: usize, obj: ObjectId, block: Arc<Block>) {
+        match self.memory() {
+            Some(m) => m.insert(&self.stores, node, obj, block, &|_| true),
+            None => self.stores.put(node, obj, block),
+        }
+    }
+
+    /// Locate a block anywhere — resident in a store, or (with a
+    /// manager) paged out to a spill file.
+    fn fetch_block(&self, obj: ObjectId) -> Option<Arc<Block>> {
+        match self.memory() {
+            Some(m) => m.fetch(&self.stores, obj),
+            None => self.stores.fetch(obj),
+        }
     }
 
     // ------------------------------------------------------------ creation
@@ -252,7 +311,7 @@ impl Session {
                 let mut rng = Rng::seed_from_u64(self.cfg.seed ^ obj.wrapping_mul(0x9E3779B97F4A7C15));
                 let data = gen(&mut rng, &bshape, &coords);
                 assert_eq!(data.len() as u64, elems);
-                self.stores.put(
+                self.place_block(
                     self.topo.node_of(targets[f]),
                     obj,
                     Arc::new(Block::from_vec(&bshape, data)),
@@ -331,9 +390,18 @@ impl Session {
         sim_exec.record_trace = self.cfg.record_trace;
         let sim = sim_exec.run(&plan, &self.objects);
 
-        // real execution on the session-lifetime executor
+        // real execution on the session-lifetime executor; the graph's
+        // output blocks are pinned so lifetime GC and budget spilling
+        // never touch what the driver is about to hand back
         let real = match &self.real_exec {
-            Some(exec) => Some(exec.run(&plan, &self.stores)?),
+            Some(exec) => {
+                let pins: Vec<ObjectId> = graph
+                    .outputs
+                    .iter()
+                    .flat_map(|o| o.roots.iter().map(|&r| graph.resolve(r)))
+                    .collect();
+                Some(exec.run_pinned(&plan, &self.stores, &pins)?)
+            }
             None => None,
         };
 
@@ -396,8 +464,7 @@ impl Session {
         for coords in a.grid.iter_coords() {
             let obj = a.obj_at(&coords);
             let block = self
-                .stores
-                .fetch(obj)
+                .fetch_block(obj)
                 .ok_or_else(|| anyhow!("block {obj} not found in any store"))?;
             let bshape = &block.shape;
             let offsets: Vec<usize> = (0..shape.len())
@@ -445,8 +512,7 @@ impl Session {
         self.objects.push((obj, target, block.bytes()));
         let shape = block.shape.clone();
         if self.cfg.exec == ExecMode::Real {
-            self.stores
-                .put(self.topo.node_of(target), obj, Arc::new(block));
+            self.place_block(self.topo.node_of(target), obj, Arc::new(block));
         }
         let grid = ArrayGrid::new(&shape, &vec![1; shape.len()]);
         DistArray::new(grid, vec![obj], vec![target])

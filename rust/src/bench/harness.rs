@@ -4,7 +4,9 @@
 //! drop the best and worst, report the trimmed mean. `NUMS_BENCH_FAST=1`
 //! shrinks repetitions for CI-style smoke runs.
 
-use crate::exec::RealReport;
+use crate::exec::{Plan, RealReport, Task};
+use crate::runtime::kernel::{BinOp, Kernel};
+use crate::store::ObjectId;
 use crate::util::fmt::{human_secs, render_table};
 use crate::util::stats::Summary;
 use crate::util::Stopwatch;
@@ -142,6 +144,110 @@ pub fn steal_summary(report: &RealReport) -> String {
         .join(" | ")
 }
 
+/// One-line per-node memory summary of a real run:
+/// `node0: peak 1.2 MB (spilled 0 B, readback 0 B, repl-evict 0 B, gc 384 KB) | ...`
+/// — what the fig09/fig15 memory ablations print next to wall time.
+pub fn mem_summary(report: &RealReport) -> String {
+    use crate::util::fmt::human_bytes;
+    report
+        .store_snapshot
+        .iter()
+        .enumerate()
+        .map(|(n, &(_, peak, _, _))| {
+            let m = report.mem_stats.get(n).cloned().unwrap_or_default();
+            format!(
+                "node{n}: peak {} (spilled {}, readback {}, repl-evict {}, gc {})",
+                human_bytes(peak as f64),
+                human_bytes(m.spilled_bytes as f64),
+                human_bytes(m.readback_bytes as f64),
+                human_bytes(m.evicted_replica_bytes as f64),
+                human_bytes(m.gc_freed_bytes as f64),
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
+
+/// Max per-node peak resident bytes of a real run (the paper's headline
+/// "memory load" axis).
+pub fn max_peak_bytes(report: &RealReport) -> u64 {
+    report
+        .store_snapshot
+        .iter()
+        .map(|&(_, peak, _, _)| peak)
+        .max()
+        .unwrap_or(0)
+}
+
+/// The canonical budget-pressure plan: `k_prod` Scale "producers" off one
+/// seed block (object 1), then a binary fold of Adds that consumes every
+/// producer output *late* — so under a tight `mem_budget_bytes` the cold
+/// producer outputs spill to disk and are read back for the folds.
+/// Returns the plan and the final fold output's object id. Shared by the
+/// fig09 memory ablation and the executor's budget test so the bench
+/// measures exactly the topology the test verifies.
+pub fn produce_fold_plan(k_prod: usize, n: usize) -> (Plan, ObjectId) {
+    assert!(k_prod >= 2);
+    let shape = vec![n, n];
+    let mut tasks: Vec<Task> = (0..k_prod)
+        .map(|i| Task {
+            kernel: Kernel::Scale((i + 1) as f64),
+            inputs: vec![1],
+            in_shapes: vec![shape.clone()],
+            outputs: vec![(10 + i as u64, shape.clone())],
+            target: 0,
+            transfers: vec![],
+        })
+        .collect();
+    let mut acc = 10u64;
+    for (j, i) in (1..k_prod).enumerate() {
+        let out = 100 + j as u64;
+        tasks.push(Task {
+            kernel: Kernel::Ew(BinOp::Add),
+            inputs: vec![acc, 10 + i as u64],
+            in_shapes: vec![shape.clone(), shape.clone()],
+            outputs: vec![(out, shape.clone())],
+            target: 0,
+            transfers: vec![],
+        });
+        acc = out;
+    }
+    (Plan { tasks }, acc)
+}
+
+/// One GC-ablation GLM arm, shared by the fig09 memory ablation and the
+/// fig15 real-executor section so the two figures cannot diverge: a real
+/// session (stealing off for placement determinism) fits `steps` Newton
+/// iterations with lifetime GC on or off. Returns wall seconds and the
+/// final run's [`RealReport`] (whose `store_snapshot` carries the
+/// session-cumulative per-node peaks).
+pub fn glm_mem_run(
+    nodes: usize,
+    workers: usize,
+    rows: usize,
+    d: usize,
+    q: usize,
+    steps: usize,
+    gc: bool,
+) -> (f64, RealReport) {
+    use crate::api::{Session, SessionConfig};
+    use crate::glm::{classification_data, newton_fit};
+    let cfg = SessionConfig::real_small(nodes, workers)
+        .with_stealing(false)
+        .with_lifetime_gc(gc);
+    let mut sess = Session::new(cfg);
+    let (x, y) = classification_data(&mut sess, rows, d, q, 15);
+    let sw = Stopwatch::start();
+    let res = newton_fit(&mut sess, &x, &y, steps, 0.0).unwrap();
+    let secs = sw.secs();
+    let last = res
+        .reports
+        .last()
+        .and_then(|r| r.real.clone())
+        .expect("real mode");
+    (secs, last)
+}
+
 /// Print a paper-style series table: label column + one column per point.
 pub fn print_series(title: &str, x_label: &str, xs: &[String], rows: &[(String, Vec<f64>)]) {
     println!("## {title}");
@@ -187,6 +293,29 @@ mod tests {
         let s = steal_summary(&rep);
         assert!(s.contains("node0: 5 run (2 stolen, 128 B)"), "{s}");
         assert!(s.contains("node1: 0 run"), "{s}");
+    }
+
+    #[test]
+    fn mem_summary_formats_per_node() {
+        let mut rep = RealReport::default();
+        rep.store_snapshot = vec![(0, 2048, 0, 0), (512, 512, 0, 0)];
+        rep.mem_stats = vec![
+            crate::store::NodeMemStats {
+                spilled_bytes: 1024,
+                readback_bytes: 1024,
+                evicted_replica_bytes: 0,
+                gc_freed_bytes: 256,
+            },
+            crate::store::NodeMemStats::default(),
+        ];
+        let s = mem_summary(&rep);
+        assert!(s.contains("node0: peak 2.00 KiB"), "{s}");
+        assert!(s.contains("spilled 1.00 KiB"), "{s}");
+        assert!(s.contains("node1: peak 512 B"), "{s}");
+        assert_eq!(max_peak_bytes(&rep), 2048);
+        // mem_stats may be absent (no manager): still renders
+        rep.mem_stats.clear();
+        assert!(mem_summary(&rep).contains("node0"));
     }
 
     #[test]

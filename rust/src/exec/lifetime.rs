@@ -1,0 +1,160 @@
+//! Plan lifetime analysis: per-object consumer refcounts and pinning.
+//!
+//! Ray and Dask free task outputs by distributed reference counting; the
+//! sim executor models that (`sim_exec.rs` releases plan-local
+//! temporaries after their last use). This pass gives the real executor
+//! the same information ahead of time: one walk over the [`Plan`] counts,
+//! for every `ObjectId`, how many task inputs consume it (with
+//! multiplicity — a task reading the same block twice holds two
+//! references), records which objects the plan itself produces, and pins
+//! the objects that must survive the run:
+//!
+//! * explicit pins — the scheduled graph's output blocks, passed in by
+//!   the session (`RealExecutor::run_pinned`);
+//! * implicit pins — produced objects no task in the plan consumes
+//!   (terminal results a direct executor caller will read).
+//!
+//! During execution the completion path decrements the counts; when an
+//! *evictable* object (produced here, not pinned) hits zero the executor
+//! releases it everywhere via the memory manager, so per-node
+//! `peak_bytes` reflects the schedule's true working set. Objects the
+//! plan did not produce (session arrays from earlier runs) are never
+//! refcount-released — but they are *spillable* under a byte budget,
+//! exactly like Ray's object store pages out cold primaries.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::store::ObjectId;
+
+use super::task::Plan;
+
+/// Immutable result of the pre-execution lifetime pass.
+#[derive(Clone, Debug, Default)]
+pub struct Lifetimes {
+    /// obj -> number of consuming task inputs in the plan (multiplicity).
+    consumers: HashMap<ObjectId, usize>,
+    /// Objects some task in the plan produces.
+    produced: HashSet<ObjectId>,
+    /// Objects that must survive the run (graph outputs + terminals).
+    pinned: HashSet<ObjectId>,
+}
+
+impl Lifetimes {
+    /// Analyze `plan`, pinning `pins` (the scheduled graph's outputs) in
+    /// addition to the implicit terminal pins.
+    pub fn analyze(plan: &Plan, pins: &[ObjectId]) -> Self {
+        let mut consumers: HashMap<ObjectId, usize> = HashMap::new();
+        let mut produced: HashSet<ObjectId> = HashSet::new();
+        for t in &plan.tasks {
+            for &o in &t.inputs {
+                *consumers.entry(o).or_insert(0) += 1;
+            }
+            for (o, _) in &t.outputs {
+                produced.insert(*o);
+            }
+        }
+        let mut pinned: HashSet<ObjectId> = pins.iter().copied().collect();
+        // an output nothing in-plan consumes is a terminal result: a
+        // refcount of zero must read "kept", never "dead on arrival"
+        for &o in &produced {
+            if !consumers.contains_key(&o) {
+                pinned.insert(o);
+            }
+        }
+        Self {
+            consumers,
+            produced,
+            pinned,
+        }
+    }
+
+    /// May this object be refcount-released once its count hits zero?
+    /// Only plan-produced, unpinned intermediates qualify; external
+    /// session arrays are owned by the driver, not this run.
+    pub fn evictable(&self, id: ObjectId) -> bool {
+        self.produced.contains(&id) && !self.pinned.contains(&id)
+    }
+
+    /// May this object be paged out to disk under memory pressure?
+    /// Everything except pinned run outputs (which the driver reads right
+    /// after the run — keeping them resident keeps gathers off the disk).
+    pub fn spillable(&self, id: ObjectId) -> bool {
+        !self.pinned.contains(&id)
+    }
+
+    pub fn is_pinned(&self, id: ObjectId) -> bool {
+        self.pinned.contains(&id)
+    }
+
+    /// Remaining-consumer count the executor should start from.
+    pub fn refcount(&self, id: ObjectId) -> usize {
+        self.consumers.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Initial live-count table for the executor's completion path:
+    /// evictable objects only (nothing else is ever released).
+    pub fn live_counts(&self) -> HashMap<ObjectId, usize> {
+        self.consumers
+            .iter()
+            .filter(|(&o, _)| self.evictable(o))
+            .map(|(&o, &c)| (o, c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::task::Task;
+    use crate::runtime::kernel::{BinOp, Kernel};
+
+    fn task(inputs: Vec<ObjectId>, out: ObjectId) -> Task {
+        Task {
+            kernel: Kernel::Ew(BinOp::Add),
+            in_shapes: vec![vec![2, 2]; inputs.len()],
+            inputs,
+            outputs: vec![(out, vec![2, 2])],
+            target: 0,
+            transfers: vec![],
+        }
+    }
+
+    #[test]
+    fn refcounts_count_multiplicity_and_pins_protect() {
+        // 1,2 external; 10 = 1+2; 11 = 10+10 (double ref); 12 = 11+2
+        let plan = Plan {
+            tasks: vec![
+                task(vec![1, 2], 10),
+                task(vec![10, 10], 11),
+                task(vec![11, 2], 12),
+            ],
+        };
+        let lt = Lifetimes::analyze(&plan, &[12]);
+        assert_eq!(lt.refcount(10), 2, "same-task double read = two refs");
+        assert_eq!(lt.refcount(11), 1);
+        assert_eq!(lt.refcount(2), 2);
+        // externals are spillable but never evictable
+        assert!(!lt.evictable(1) && !lt.evictable(2));
+        assert!(lt.spillable(1));
+        // intermediates are both
+        assert!(lt.evictable(10) && lt.evictable(11));
+        // the pinned output is neither evictable nor spillable
+        assert!(lt.is_pinned(12));
+        assert!(!lt.evictable(12) && !lt.spillable(12));
+        // live table carries only the evictable intermediates
+        let live = lt.live_counts();
+        assert_eq!(live.len(), 2);
+        assert_eq!(live[&10], 2);
+    }
+
+    #[test]
+    fn unconsumed_outputs_are_implicitly_pinned() {
+        let plan = Plan {
+            tasks: vec![task(vec![1, 2], 10), task(vec![1, 2], 11)],
+        };
+        let lt = Lifetimes::analyze(&plan, &[]);
+        assert!(lt.is_pinned(10) && lt.is_pinned(11));
+        assert!(!lt.evictable(10));
+        assert!(lt.live_counts().is_empty());
+    }
+}

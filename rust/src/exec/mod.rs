@@ -15,10 +15,12 @@
 //! per task via [`crate::runtime::ExecContext`] — no process-global
 //! parallelism state exists.
 
+pub mod lifetime;
 pub mod real_exec;
 pub mod sim_exec;
 pub mod task;
 
+pub use lifetime::Lifetimes;
 pub use real_exec::{NodeExecStats, RealExecutor, RealReport};
 pub use sim_exec::{SimExecutor, SimReport, TraceEvent};
 pub use task::{Plan, Task, Transfer};

@@ -14,6 +14,21 @@
 //! steal_bytes)` counters in [`RealReport`] are what the fig09 stealing
 //! ablation reports.
 //!
+//! Stealing is locality-aware and batched: the victim is the sibling
+//! whose next-stealable task needs the fewest bytes pulled to the thief's
+//! node, and a deeply-skewed victim loses half its deque in one steal so
+//! the thief's node (and its own siblings) amortize the migration.
+//!
+//! Memory: when the executor owns a [`MemoryManager`]
+//! (`RealExecutor::memory`, wired up by `api::Session`), each run first
+//! computes plan lifetimes ([`super::lifetime::Lifetimes`]) — consumer
+//! refcounts plus output pinning — and the completion path releases dead
+//! intermediates everywhere the moment their last consumer finishes.
+//! Under a per-node byte budget the manager also evicts replica copies
+//! and spills cold primaries to disk, transparently reading them back on
+//! access; the per-node spill/readback/eviction counters land in
+//! [`RealReport::mem_stats`].
+//!
 //! Failure modes: a plan referencing an object that no store holds and no
 //! task produces (or a dependency cycle) is detected as soon as the
 //! executor goes fully idle — nothing running, nothing queued, work left —
@@ -33,11 +48,12 @@ use anyhow::{anyhow, Result};
 
 use crate::runtime::{Backend, ExecContext};
 use crate::scheduler::Topology;
-use crate::store::{Block, ObjectId, StoreSet};
+use crate::store::{Block, MemoryManager, NodeMemStats, ObjectId, StoreSet};
 use crate::util::Stopwatch;
 
 use std::sync::Arc;
 
+use super::lifetime::Lifetimes;
 use super::task::Plan;
 
 /// Per-node load-balance counters for one run.
@@ -59,6 +75,9 @@ pub struct RealReport {
     pub store_snapshot: Vec<(u64, u64, u64, u64)>,
     /// Per-node execution counters (see [`NodeExecStats`]).
     pub node_stats: Vec<NodeExecStats>,
+    /// Per-node memory-manager counters for *this run* (spill, read-back,
+    /// replica eviction, GC frees). Empty when no manager is attached.
+    pub mem_stats: Vec<NodeMemStats>,
 }
 
 /// `NUMS_DEADLOCK_TIMEOUT_SECS` parsing (non-positive/garbage/absurd -> 30s).
@@ -91,6 +110,9 @@ struct ExecState {
     /// Tasks currently executing on some worker.
     running: usize,
     stats: Vec<NodeExecStats>,
+    /// Remaining-consumer counts for refcount-releasable intermediates
+    /// (empty unless a memory manager with lifetime GC is attached).
+    live: HashMap<ObjectId, usize>,
 }
 
 struct Shared {
@@ -105,9 +127,47 @@ struct Shared {
     never_satisfied: HashSet<ObjectId>,
     /// Node each task's plan target maps to.
     task_node: Vec<usize>,
+    /// Per-task (input object, bytes) — locality scoring for steals.
+    input_bytes: Vec<Vec<(ObjectId, u64)>>,
     stealing: bool,
     /// Ready-queue length at which a node spills to the overflow.
     spill_threshold: usize,
+}
+
+/// Deque depth at which a steal takes half the victim's queue instead of
+/// one task (the ROADMAP "deep skew" batch steal).
+const DEEP_SKEW_DEQUE: usize = 4;
+
+/// Choose the steal victim: the sibling whose next-stealable
+/// (back-of-deque) task needs the fewest bytes moved to `me`; ties go to
+/// the deeper deque. `None` when no sibling has ready work.
+fn best_victim(
+    ready: &[VecDeque<usize>],
+    me: usize,
+    missing_bytes: impl Fn(usize) -> u64,
+) -> Option<usize> {
+    // single candidate (the common deep-skew case): no scoring needed —
+    // keeps store-lock traffic out of the state-lock critical section
+    let mut candidates = ready
+        .iter()
+        .enumerate()
+        .filter(|&(n, q)| n != me && !q.is_empty());
+    let first = candidates.next()?;
+    let Some(second) = candidates.next() else {
+        return Some(first.0);
+    };
+    let mut best: Option<(usize, u64)> = None;
+    for (n, q) in [first, second].into_iter().chain(candidates) {
+        let miss = missing_bytes(*q.back().unwrap());
+        let better = match best {
+            None => true,
+            Some((bn, bm)) => miss < bm || (miss == bm && q.len() > ready[bn].len()),
+        };
+        if better {
+            best = Some((n, miss));
+        }
+    }
+    best.map(|(n, _)| n)
 }
 
 impl Shared {
@@ -120,9 +180,11 @@ impl Shared {
         }
     }
 
-    /// Next task for a worker on `me`: local front, then overflow, then
-    /// steal from the back of the most-loaded sibling.
-    fn pick(&self, st: &mut ExecState, me: usize) -> Option<usize> {
+    /// Next task for a worker on `me`: local front, then overflow, then a
+    /// locality-aware steal — prefer the victim whose back task's inputs
+    /// are already resident here, and strip half of a deeply-skewed
+    /// victim's deque in one steal.
+    fn pick(&self, st: &mut ExecState, me: usize, stores: &StoreSet) -> Option<usize> {
         if let Some(i) = st.ready[me].pop_front() {
             return Some(i);
         }
@@ -132,9 +194,27 @@ impl Shared {
         if let Some(i) = st.overflow.pop_front() {
             return Some(i);
         }
-        let victim = (0..st.ready.len())
-            .filter(|&n| n != me)
-            .max_by_key(|&n| st.ready[n].len())?;
+        let victim = best_victim(&st.ready, me, |t| {
+            self.input_bytes[t]
+                .iter()
+                .filter(|&&(o, _)| !stores.contains(me, o))
+                .map(|&(_, b)| b)
+                .sum()
+        })?;
+        let vlen = st.ready[victim].len();
+        if vlen >= DEEP_SKEW_DEQUE {
+            // deep skew: migrate the back half in one steal, run the
+            // earliest of the batch now and queue the rest locally
+            let batch: Vec<usize> = st.ready[victim].drain(vlen - vlen / 2..).collect();
+            let mut it = batch.into_iter();
+            let first = it.next();
+            for t in it {
+                st.ready[me].push_back(t);
+            }
+            // this node's deque just became stealable: wake parked workers
+            self.cv.notify_all();
+            return first;
+        }
         st.ready[victim].pop_back()
     }
 
@@ -192,6 +272,9 @@ pub struct RealExecutor {
     /// Work stealing on/off (off = strict node-affinity FIFO; the
     /// ablation baseline for `SessionConfig::stealing`).
     pub stealing: bool,
+    /// Cluster memory manager: lifetime GC, replica eviction, and
+    /// spill-to-disk (`None` = unmanaged, the pre-manager behavior).
+    pub memory: Option<MemoryManager>,
 }
 
 impl RealExecutor {
@@ -208,6 +291,7 @@ impl RealExecutor {
             threads_per_node,
             deadlock_timeout,
             stealing: true,
+            memory: None,
         }
     }
 
@@ -216,12 +300,40 @@ impl RealExecutor {
         self
     }
 
+    /// Attach a cluster memory manager (lifetime GC + budgeted spill).
+    pub fn with_memory(mut self, mgr: MemoryManager) -> Self {
+        self.memory = Some(mgr);
+        self
+    }
+
     /// Execute the plan over `stores`. All creation-time objects must
-    /// already be resident (see `api::Session`).
+    /// already be resident (see `api::Session`). No pins: every terminal
+    /// output survives, but nothing else is protected from GC/spill.
     pub fn run(&self, plan: &Plan, stores: &StoreSet) -> Result<RealReport> {
+        self.run_pinned(plan, stores, &[])
+    }
+
+    /// [`RealExecutor::run`] with an explicit pin set: `pins` (the
+    /// scheduled graph's output objects) survive the run un-evicted and
+    /// un-spilled even when they are also consumed mid-plan.
+    pub fn run_pinned(
+        &self,
+        plan: &Plan,
+        stores: &StoreSet,
+        pins: &[ObjectId],
+    ) -> Result<RealReport> {
         let sw = Stopwatch::start();
         let k = self.topo.nodes;
         let n_tasks = plan.tasks.len();
+        let memory = self.memory.as_ref();
+        let mem_start = memory.map(|m| m.stats());
+        // only the managed paths read lifetimes: the unmanaged ablation
+        // baseline must not pay the analysis walk it is measured against
+        let lt = match memory {
+            Some(_) => Lifetimes::analyze(plan, pins),
+            None => Lifetimes::default(),
+        };
+        let lt = &lt;
 
         // --- dependency counting -------------------------------------
         // An input is either produced by some task in this plan, already
@@ -239,10 +351,16 @@ impl RealExecutor {
         let mut never_satisfied: HashSet<ObjectId> = HashSet::new();
         for (i, t) in plan.tasks.iter().enumerate() {
             for &obj in &t.inputs {
+                // resident = in some store, or paged out to a spill file
+                // the manager can read back (still satisfiable)
+                let resident = match memory {
+                    Some(m) => m.holds(stores, obj),
+                    None => stores.fetch(obj).is_some(),
+                };
                 if will_produce.contains(&obj) {
                     deps[i] += 1;
                     consumers.entry(obj).or_default().push(i);
-                } else if stores.fetch(obj).is_some() {
+                } else if resident {
                     produced.insert(obj);
                 } else {
                     // never satisfied -> task stays blocked, deadlock names it
@@ -257,6 +375,25 @@ impl RealExecutor {
             .iter()
             .map(|t| self.topo.node_of(t.target))
             .collect();
+        // locality scoring table, read only by the stealing pick path
+        let input_bytes: Vec<Vec<(ObjectId, u64)>> = if self.stealing {
+            plan.tasks
+                .iter()
+                .map(|t| {
+                    t.inputs
+                        .iter()
+                        .zip(&t.in_shapes)
+                        .map(|(&o, s)| (o, s.iter().map(|&d| d as u64).product::<u64>() * 8))
+                        .collect()
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let live = match memory {
+            Some(m) if m.lifetime_gc => lt.live_counts(),
+            _ => HashMap::new(),
+        };
 
         let shared = Shared {
             state: Mutex::new(ExecState {
@@ -268,12 +405,14 @@ impl RealExecutor {
                 remaining: n_tasks,
                 running: 0,
                 stats: vec![NodeExecStats::default(); k],
+                live,
             }),
             cv: Condvar::new(),
             failed: Mutex::new(None),
             consumers,
             never_satisfied,
             task_node,
+            input_bytes,
             stealing: self.stealing,
             spill_threshold: (2 * self.threads_per_node).max(2),
         };
@@ -308,7 +447,7 @@ impl RealExecutor {
                                 shared.cv.notify_all();
                                 return;
                             }
-                            let Some(idx) = shared.pick(&mut st, me) else {
+                            let Some(idx) = shared.pick(&mut st, me, stores) else {
                                 // idle. Provably stuck? (nothing queued
                                 // anywhere, nothing running, work left)
                                 let all_empty = st.overflow.is_empty()
@@ -357,18 +496,35 @@ impl RealExecutor {
 
                             let task = &plan.tasks[idx];
                             let stolen = shared.task_node[idx] != me;
-                            // pull missing inputs to this node (real bytes;
-                            // a stolen task pays its cross-node transfers)
+                            // collect inputs on this node (real bytes; a
+                            // stolen task pays its cross-node transfers;
+                            // the manager pages spilled inputs back in)
                             let mut moved = 0u64;
                             let mut vanished = None;
+                            let mut inputs: Vec<Arc<Block>> =
+                                Vec::with_capacity(task.inputs.len());
                             for &obj in &task.inputs {
-                                if !stores.contains(me, obj) {
-                                    match stores.locate(obj, me) {
-                                        Some(src) => moved += stores.transfer(src, me, obj),
-                                        None => {
-                                            vanished = Some(obj);
-                                            break;
+                                let got = match memory {
+                                    Some(mgr) => mgr
+                                        .acquire(stores, me, obj, &|o| lt.spillable(o))
+                                        .map(|(b, m)| {
+                                            moved += m;
+                                            b
+                                        }),
+                                    None => {
+                                        if !stores.contains(me, obj) {
+                                            if let Some(src) = stores.locate(obj, me) {
+                                                moved += stores.transfer(src, me, obj);
+                                            }
                                         }
+                                        stores.get(me, obj)
+                                    }
+                                };
+                                match got {
+                                    Some(b) => inputs.push(b),
+                                    None => {
+                                        vanished = Some(obj);
+                                        break;
                                     }
                                 }
                             }
@@ -381,11 +537,6 @@ impl RealExecutor {
                                 shared.state.lock().unwrap().running -= 1;
                                 return;
                             }
-                            let inputs: Vec<Arc<Block>> = task
-                                .inputs
-                                .iter()
-                                .map(|&o| stores.get(me, o).unwrap())
-                                .collect();
                             let in_refs: Vec<&Block> =
                                 inputs.iter().map(|b| b.as_ref()).collect();
                             // catch kernel panics (e.g. cholesky on an
@@ -410,7 +561,17 @@ impl RealExecutor {
                             match executed {
                                 Ok(outs) => {
                                     for ((obj, _), block) in task.outputs.iter().zip(outs) {
-                                        stores.put(me, *obj, Arc::new(block));
+                                        let block = Arc::new(block);
+                                        match memory {
+                                            Some(mgr) => mgr.insert(
+                                                stores,
+                                                me,
+                                                *obj,
+                                                block,
+                                                &|o| lt.spillable(o),
+                                            ),
+                                            None => stores.put(me, *obj, block),
+                                        }
                                     }
                                     let mut st = shared.state.lock().unwrap();
                                     st.completed[idx] = true;
@@ -440,8 +601,27 @@ impl RealExecutor {
                                             }
                                         }
                                     }
+                                    // lifetime GC: inputs whose last
+                                    // consumer just finished are dead
+                                    let mut dead: Vec<ObjectId> = Vec::new();
+                                    for &obj in &task.inputs {
+                                        if let Some(c) = st.live.get_mut(&obj) {
+                                            *c -= 1;
+                                            if *c == 0 {
+                                                st.live.remove(&obj);
+                                                dead.push(obj);
+                                            }
+                                        }
+                                    }
                                     drop(st);
                                     shared.cv.notify_all();
+                                    if let Some(mgr) = memory {
+                                        // outside the state lock: release
+                                        // takes manager + store locks
+                                        for obj in dead {
+                                            mgr.release(stores, obj);
+                                        }
+                                    }
                                 }
                                 Err(e) => {
                                     // fail first, then release `running`
@@ -464,11 +644,21 @@ impl RealExecutor {
             return Err(anyhow!(err));
         }
         let stats = shared.state.lock().unwrap().stats.clone();
+        let mem_stats = match (memory, mem_start) {
+            (Some(m), Some(s0)) => m
+                .stats()
+                .iter()
+                .zip(&s0)
+                .map(|(now, start)| now.delta(start))
+                .collect(),
+            _ => Vec::new(),
+        };
         Ok(RealReport {
             wall_secs: sw.secs(),
             tasks: plan.len(),
             store_snapshot: stores.snapshot(),
             node_stats: stats,
+            mem_stats,
         })
     }
 }
@@ -577,6 +767,122 @@ mod tests {
         let err = format!("{}", ex.run(&plan, &stores).unwrap_err());
         assert!(err.contains("panic"), "{err}");
         assert!(err.contains("Cholesky"), "{err}");
+    }
+
+    #[test]
+    fn best_victim_prefers_local_inputs_then_depth() {
+        // three candidate victims; the missing-bytes oracle says task 20
+        // (node 2's back task) is fully resident on the thief
+        let mk = |v: &[usize]| v.iter().copied().collect::<VecDeque<usize>>();
+        let ready = vec![mk(&[]), mk(&[10, 11]), mk(&[20]), mk(&[30, 31, 32])];
+        let miss = |t: usize| match t {
+            20 => 0u64,
+            _ => 800,
+        };
+        assert_eq!(best_victim(&ready, 0, miss), Some(2));
+        // equal misses: the deeper deque wins
+        assert_eq!(best_victim(&ready, 0, |_| 64), Some(3));
+        // nothing to steal
+        assert_eq!(best_victim(&[mk(&[]), mk(&[])], 0, |_| 0), None);
+        // never steals from itself
+        assert_eq!(best_victim(&[mk(&[1]), mk(&[])], 0, |_| 0), None);
+    }
+
+    #[test]
+    fn managed_run_releases_dead_intermediates_and_lowers_peak() {
+        // chain seeded(1) -> 10 -> 11 -> ... on one node: without GC every
+        // intermediate stays resident; with GC only ~2 blocks live at once
+        let chain_len = 8usize;
+        let n = 32usize;
+        let mk_plan = || Plan {
+            tasks: (0..chain_len)
+                .map(|i| Task {
+                    kernel: Kernel::Scale(1.5),
+                    inputs: vec![if i == 0 { 1 } else { 9 + i as u64 }],
+                    in_shapes: vec![vec![n, n]],
+                    outputs: vec![(10 + i as u64, vec![n, n])],
+                    target: 0,
+                    transfers: vec![],
+                })
+                .collect(),
+        };
+        let run = |managed: bool| {
+            let topo = Topology::new(1, 1, SystemMode::Ray);
+            let mut ex = RealExecutor::new(topo, Arc::new(Backend::native()));
+            ex.threads_per_node = 1;
+            if managed {
+                ex = ex.with_memory(crate::store::MemoryManager::new(1, None, true));
+            }
+            let stores = StoreSet::new(1);
+            stores.put(0, 1, Arc::new(Block::filled(&[n, n], 2.0)));
+            let rep = ex.run(&mk_plan(), &stores).unwrap();
+            let last = 9 + chain_len as u64;
+            let out = match &ex.memory {
+                Some(m) => m.fetch(&stores, last).unwrap(),
+                None => stores.fetch(last).unwrap(),
+            };
+            // pinned terminal outputs must stay resident (not just
+            // recoverable from a spill file)
+            let terminal_resident = stores.contains(0, last);
+            (rep, out.as_ref().clone(), terminal_resident)
+        };
+        let (plain, out_plain, _) = run(false);
+        let (managed, out_managed, terminal_resident) = run(true);
+        assert_eq!(out_plain.max_abs_diff(&out_managed), 0.0);
+        let block_bytes = (n * n * 8) as u64;
+        // unmanaged: seed + all chain outputs resident at peak
+        assert_eq!(plain.store_snapshot[0].1, (chain_len as u64 + 1) * block_bytes);
+        // managed: seed (external, never released) + at most two chain
+        // blocks (current input + output) at any instant
+        assert!(
+            managed.store_snapshot[0].1 <= 3 * block_bytes,
+            "GC peak {} > 3 blocks",
+            managed.store_snapshot[0].1
+        );
+        assert!(managed.store_snapshot[0].1 < plain.store_snapshot[0].1);
+        let freed: u64 = managed.mem_stats.iter().map(|s| s.gc_freed_bytes).sum();
+        assert_eq!(freed, (chain_len as u64 - 1) * block_bytes);
+        assert!(terminal_resident, "pinned terminal output was paged out");
+    }
+
+    #[test]
+    fn managed_run_with_budget_spills_and_reads_back() {
+        // 6 producers then a consumption fold: under a 3-block budget the
+        // cold producer outputs spill and are read back for the adds
+        let n = 16usize;
+        let k = 6usize;
+        let block_bytes = (n * n * 8) as u64;
+        let (plan, acc) = crate::bench::harness::produce_fold_plan(k, n);
+        let run = |budget: Option<u64>| {
+            let topo = Topology::new(1, 1, SystemMode::Ray);
+            let mut ex = RealExecutor::new(topo, Arc::new(Backend::native()));
+            ex.threads_per_node = 1;
+            ex = ex.with_memory(crate::store::MemoryManager::new(1, budget, true));
+            let stores = StoreSet::new(1);
+            stores.put(0, 1, Arc::new(Block::filled(&[n, n], 1.0)));
+            let rep = ex.run(&plan, &stores).unwrap();
+            let out = ex
+                .memory
+                .as_ref()
+                .unwrap()
+                .fetch(&stores, acc)
+                .expect("final output must be fetchable");
+            (rep, out.as_ref().clone())
+        };
+        let (free_rep, free_out) = run(None);
+        let (tight_rep, tight_out) = run(Some(3 * block_bytes));
+        assert_eq!(free_out.max_abs_diff(&tight_out), 0.0, "spill changed numerics");
+        assert_eq!(free_rep.mem_stats[0].spilled_bytes, 0);
+        assert!(
+            tight_rep.mem_stats[0].spilled_bytes > 0,
+            "a 3-block budget over a 6-producer plan must spill"
+        );
+        assert!(
+            tight_rep.mem_stats[0].readback_bytes > 0,
+            "consumed spilled inputs must be read back"
+        );
+        // the budget held for resident bytes (peak includes the seed)
+        assert!(tight_rep.store_snapshot[0].1 <= 4 * block_bytes);
     }
 
     #[test]

@@ -19,9 +19,30 @@
 //! input is produced, idle workers steal ready tasks from other nodes
 //! (paying the input transfers), and per-node
 //! `(tasks_run, tasks_stolen, steal_bytes)` counters surface in
-//! [`exec::RealReport`]. `SessionConfig::stealing` (default `true`)
-//! toggles stealing per session — `false` reproduces strict node-affinity
-//! FIFO execution for ablations. Kernel thread budgets are explicit: every
+//! [`exec::RealReport`]. Steals are locality-aware (the victim whose next
+//! task needs the fewest bytes pulled wins) and batched (a deeply-skewed
+//! victim loses half its deque in one steal). `SessionConfig::stealing`
+//! (default `true`) toggles stealing per session — `false` reproduces
+//! strict node-affinity FIFO execution for ablations.
+//!
+//! ## Memory model
+//!
+//! The real executor owns a cluster [`store::MemoryManager`]. Before a
+//! run, [`exec::Lifetimes`] computes per-object consumer refcounts over
+//! the plan and pins the graph's outputs; task completion decrements the
+//! counts and dead intermediates are evicted from every node immediately,
+//! so per-node `peak_bytes` reflects the schedule's working set (the
+//! §8.1 "memory load") rather than total allocation
+//! (`SessionConfig::lifetime_gc`, default on). Under a per-node byte
+//! budget (`SessionConfig::mem_budget_bytes`) the manager sheds load by
+//! evicting replica copies first (cross-node pulls register the
+//! destination copy as a replica), then spilling the coldest unpinned
+//! blocks to per-node temp files and transparently reading them back on
+//! access — the real-execution counterpart of the sim executor's spill
+//! model, with per-run `(spilled, readback, evicted-replica, gc-freed)`
+//! bytes in `RealReport::mem_stats`.
+//!
+//! Kernel thread budgets are explicit: every
 //! `Backend::execute` call takes a [`runtime::ExecContext`], so there is
 //! no process-global parallelism state and concurrent sessions cannot
 //! clobber each other. `NUMS_MATMUL_THREADS=N` overrides the budget of

@@ -1,0 +1,639 @@
+//! Distributed memory manager: replica-aware eviction and real
+//! spill-to-disk for the real executor's per-node object stores.
+//!
+//! Half of LSHS's objective (Eq. 2) is minimizing the *maximum memory
+//! load* on any node — §8.1's headline is 4× less memory than Ray's
+//! dynamic scheduler. The sim executor models that with refcount GC and
+//! an object-spilling penalty; this module gives the real executor the
+//! same machinery with actual bytes and actual disk I/O, so per-node
+//! `peak_bytes` measures scheduling quality rather than total allocation.
+//!
+//! Mapping to the paper's §8.1 terms:
+//!
+//! * **memory load** — `ObjectStore::bytes` / `peak_bytes` per node; the
+//!   manager's evictions and spills are what make the real-run peak
+//!   comparable to the sim trace of Fig. 15.
+//! * **object spilling** — when a `put` would push a node's store past
+//!   `budget` bytes (`SessionConfig::mem_budget_bytes`), the coldest
+//!   unpinned blocks are written to per-node temp files
+//!   (`NodeMemStats::spilled_bytes`) and transparently read back on the
+//!   next access (`readback_bytes`) — the real-execution counterpart of
+//!   the DES `spill_penalty`/`spill_readback` model, so the two can be
+//!   diffed.
+//! * **replicas** — a cross-node pull (work stealing, remote inputs)
+//!   leaves a copy on the destination. The manager registers that copy as
+//!   a *replica* whose primary lives elsewhere; replicas of still-live
+//!   objects are the first thing evicted under pressure
+//!   (`evicted_replica_bytes`) since dropping them never loses data.
+//! * **reference counting** — [`crate::exec::Lifetimes`] computes plan
+//!   consumer refcounts; the executor calls [`MemoryManager::release`]
+//!   when an intermediate's count hits zero, which evicts it from every
+//!   node and deletes its spill file (`gc_freed_bytes`).
+//!
+//! Lock order: one manager node lock at a time, store locks strictly
+//! inside manager node locks, and the executor's state lock never held
+//! across a manager call that takes locks — so the three lock families
+//! (exec → store, manager → store) cannot form a cycle.
+
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::block::Block;
+use super::object_store::{ObjectId, StoreSet};
+
+/// Per-node memory-management counters for one run (all cumulative; the
+/// executor reports per-run deltas via [`NodeMemStats::delta`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NodeMemStats {
+    /// Bytes written to this node's spill files.
+    pub spilled_bytes: u64,
+    /// Bytes read back from spill files on access.
+    pub readback_bytes: u64,
+    /// Bytes reclaimed by evicting replica copies (primary elsewhere).
+    pub evicted_replica_bytes: u64,
+    /// Bytes reclaimed by lifetime GC (dead intermediates).
+    pub gc_freed_bytes: u64,
+}
+
+impl NodeMemStats {
+    /// Counters accumulated since `earlier` (same node, later snapshot).
+    pub fn delta(&self, earlier: &NodeMemStats) -> NodeMemStats {
+        NodeMemStats {
+            spilled_bytes: self.spilled_bytes.saturating_sub(earlier.spilled_bytes),
+            readback_bytes: self.readback_bytes.saturating_sub(earlier.readback_bytes),
+            evicted_replica_bytes: self
+                .evicted_replica_bytes
+                .saturating_sub(earlier.evicted_replica_bytes),
+            gc_freed_bytes: self.gc_freed_bytes.saturating_sub(earlier.gc_freed_bytes),
+        }
+    }
+}
+
+/// A primary block paged out to disk: raw little-endian f64 data in
+/// `path`, shape kept in memory.
+#[derive(Debug)]
+struct Spilled {
+    path: PathBuf,
+    shape: Vec<usize>,
+    bytes: u64,
+}
+
+/// Per-node manager state (one mutex per node, like the stores).
+#[derive(Default)]
+struct NodeMem {
+    /// LRU clock: bumped on every touch; smallest = coldest.
+    clock: u64,
+    /// Resident ids this manager placed, by last access tick.
+    last_touch: HashMap<ObjectId, u64>,
+    /// Resident ids whose primary copy lives on another node.
+    replicas: HashSet<ObjectId>,
+    /// Primary blocks paged out to disk (replicas are evicted, never
+    /// spilled — their primary still holds the data).
+    spilled: HashMap<ObjectId, Spilled>,
+    stats: NodeMemStats,
+}
+
+impl NodeMem {
+    fn touch(&mut self, id: ObjectId) {
+        self.clock += 1;
+        let c = self.clock;
+        self.last_touch.insert(id, c);
+    }
+
+    fn forget(&mut self, id: ObjectId) {
+        self.last_touch.remove(&id);
+        self.replicas.remove(&id);
+    }
+}
+
+/// Distinguishes spill-dir names across managers within one process.
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Attempts [`MemoryManager::acquire`] makes before declaring an object
+/// unobtainable (bounds eviction/pull livelock under absurd budgets).
+const MAX_ACQUIRE_ATTEMPTS: usize = 64;
+
+/// Cluster-wide memory manager owned by [`crate::exec::RealExecutor`].
+pub struct MemoryManager {
+    /// Per-node resident-byte budget; `None` = unlimited (no spilling;
+    /// replica eviction and lifetime GC still run).
+    pub budget: Option<u64>,
+    /// Whether the executor should run plan-lifetime GC through this
+    /// manager (`SessionConfig::lifetime_gc`).
+    pub lifetime_gc: bool,
+    nodes: Vec<Mutex<NodeMem>>,
+    spill_root: PathBuf,
+    /// False when the spill directory could not be created: pressure then
+    /// falls back to replica eviction only.
+    spill_ok: bool,
+}
+
+impl MemoryManager {
+    pub fn new(num_nodes: usize, budget: Option<u64>, lifetime_gc: bool) -> Self {
+        let spill_root = std::env::temp_dir().join(format!(
+            "nums-spill-{}-{}",
+            std::process::id(),
+            SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let spill_ok = std::fs::create_dir_all(&spill_root).is_ok();
+        Self {
+            budget,
+            lifetime_gc,
+            nodes: (0..num_nodes).map(|_| Mutex::new(NodeMem::default())).collect(),
+            spill_root,
+            spill_ok,
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The per-node temp directory spill files live in (tests).
+    pub fn spill_dir(&self) -> &Path {
+        &self.spill_root
+    }
+
+    /// Cumulative per-node counters.
+    pub fn stats(&self) -> Vec<NodeMemStats> {
+        self.nodes
+            .iter()
+            .map(|n| n.lock().unwrap().stats.clone())
+            .collect()
+    }
+
+    fn spill_path(&self, node: usize, id: ObjectId) -> PathBuf {
+        self.spill_root.join(format!("n{node}_o{id}.bin"))
+    }
+
+    /// Insert a primary block on `node` (task output or creation data),
+    /// then shed load until the node is back under budget. Replica
+    /// copies are registered by [`MemoryManager::acquire`]'s pull path,
+    /// not here. `spillable` says which ids may be paged out (pinned run
+    /// outputs may not — the driver reads them after the run).
+    pub fn insert(
+        &self,
+        stores: &StoreSet,
+        node: usize,
+        id: ObjectId,
+        block: Arc<Block>,
+        spillable: &dyn Fn(ObjectId) -> bool,
+    ) {
+        let mut nm = self.nodes[node].lock().unwrap();
+        // a re-put supersedes any stale spill file for this id
+        if let Some(sp) = nm.spilled.remove(&id) {
+            let _ = std::fs::remove_file(&sp.path);
+        }
+        stores.put(node, id, block);
+        nm.touch(id);
+        // producing a fresh copy makes this node a primary holder
+        nm.replicas.remove(&id);
+        self.enforce_budget(stores, node, &mut nm, spillable);
+    }
+
+    /// Shed resident bytes on `node` until it fits the budget: evict the
+    /// coldest replicas first (free — a primary copy exists elsewhere),
+    /// then spill the coldest unpinned primaries to disk. Pinned ids and
+    /// blocks the manager has never touched (raw `StoreSet::put`s that
+    /// were never `acquire`d — a first acquire registers them) are never
+    /// victims; if only those remain, the node stays over budget.
+    /// Callers that hand a block to a kernel clone its `Arc` before
+    /// calling this, so spilling even the hottest id never invalidates
+    /// in-flight work.
+    fn enforce_budget(
+        &self,
+        stores: &StoreSet,
+        node: usize,
+        nm: &mut MutexGuard<'_, NodeMem>,
+        spillable: &dyn Fn(ObjectId) -> bool,
+    ) {
+        let Some(budget) = self.budget else { return };
+        if stores.node_bytes(node) <= budget {
+            return;
+        }
+        // One coldest-first snapshot suffices: we hold the node lock, so
+        // no new candidates can appear while shedding.
+        let mut order: Vec<(u64, ObjectId)> = nm
+            .last_touch
+            .iter()
+            .map(|(&o, &c)| (c, o))
+            .collect();
+        order.sort_unstable();
+        // pass 1 — coldest replicas: eviction loses nothing
+        for &(_, o) in &order {
+            if stores.node_bytes(node) <= budget {
+                return;
+            }
+            if !nm.replicas.contains(&o) {
+                continue;
+            }
+            if let Some(b) = stores.remove(node, o) {
+                nm.stats.evicted_replica_bytes += b.bytes();
+            }
+            nm.forget(o);
+        }
+        if !self.spill_ok {
+            return;
+        }
+        // pass 2 — coldest spillable primaries -> disk
+        for &(_, o) in &order {
+            if stores.node_bytes(node) <= budget {
+                return;
+            }
+            if !spillable(o) || nm.spilled.contains_key(&o) || !nm.last_touch.contains_key(&o) {
+                continue;
+            }
+            let Some(b) = stores.get(node, o) else {
+                nm.forget(o); // stale entry (removed behind our back)
+                continue;
+            };
+            if b.is_phantom() {
+                nm.forget(o); // sim blocks carry no data to page out
+                continue;
+            }
+            let path = self.spill_path(node, o);
+            if write_spill(&path, b.buf()).is_err() {
+                return; // disk trouble: keep the block resident
+            }
+            stores.remove(node, o);
+            nm.stats.spilled_bytes += b.bytes();
+            nm.spilled.insert(
+                o,
+                Spilled {
+                    path,
+                    shape: b.shape.clone(),
+                    bytes: b.bytes(),
+                },
+            );
+            nm.forget(o);
+        }
+        // snapshot exhausted while still over budget: everything left is
+        // pinned, unmanaged, or already spilled — stay over, soft budget
+    }
+
+    /// Read a spilled block back into `node`'s store. Caller holds the
+    /// node lock; returns `None` if the id is not spilled here or the
+    /// file is unreadable (the entry survives a failed read, so a
+    /// transient error can be retried).
+    fn readback_locked(
+        &self,
+        stores: &StoreSet,
+        node: usize,
+        nm: &mut MutexGuard<'_, NodeMem>,
+        id: ObjectId,
+    ) -> Option<Arc<Block>> {
+        // read first, drop the entry only on success: a transient read
+        // failure must not orphan the only record of a spilled primary
+        let (path, shape, bytes) = {
+            let sp = nm.spilled.get(&id)?;
+            (sp.path.clone(), sp.shape.clone(), sp.bytes)
+        };
+        let data = read_spill(&path, bytes)?;
+        nm.spilled.remove(&id);
+        let _ = std::fs::remove_file(&path);
+        let block = Arc::new(Block::from_vec(&shape, data));
+        stores.put(node, id, block.clone());
+        nm.stats.readback_bytes += bytes;
+        nm.touch(id);
+        Some(block)
+    }
+
+    /// Obtain `id` on `node` for kernel input: resident copy, spill
+    /// read-back, or cross-node pull (registering the new copy as a
+    /// replica). Returns the block plus the bytes moved over the "NIC".
+    /// `None` means no store and no spill file holds the object.
+    pub fn acquire(
+        &self,
+        stores: &StoreSet,
+        node: usize,
+        id: ObjectId,
+        spillable: &dyn Fn(ObjectId) -> bool,
+    ) -> Option<(Arc<Block>, u64)> {
+        let mut moved = 0u64;
+        // consecutive scans that found the object nowhere: a transient
+        // total miss can happen while a read-back transitions an entry
+        // from `spilled` to the store, but it cannot persist across
+        // scans, so a few repeats conclude "gone" without burning all
+        // MAX_ACQUIRE_ATTEMPTS on lock traffic
+        let mut total_misses = 0usize;
+        for _ in 0..MAX_ACQUIRE_ATTEMPTS {
+            {
+                let mut nm = self.nodes[node].lock().unwrap();
+                if let Some(b) = stores.get(node, id) {
+                    nm.touch(id);
+                    return Some((b, moved));
+                }
+                if nm.spilled.contains_key(&id) {
+                    if let Some(b) = self.readback_locked(stores, node, &mut nm, id) {
+                        self.enforce_budget(stores, node, &mut nm, spillable);
+                        return Some((b, moved));
+                    }
+                    // unreadable local spill file: fall through — a live
+                    // copy may still exist on another node
+                }
+            }
+            // remote copy: resident or spilled on some other node. A miss
+            // here retries rather than aborting immediately: a concurrent
+            // read-back clears the spilled entry before the store copy
+            // appears, so an unlucky interleaving of the two checks can
+            // transiently see neither.
+            let Some(src) = (0..self.nodes.len()).find(|&n| {
+                n != node
+                    && (stores.contains(n, id)
+                        || self.nodes[n].lock().unwrap().spilled.contains_key(&id))
+            }) else {
+                total_misses += 1;
+                if total_misses >= 3 {
+                    return None; // nowhere, repeatedly: genuinely gone
+                }
+                std::thread::yield_now();
+                continue;
+            };
+            total_misses = 0;
+            {
+                let mut nms = self.nodes[src].lock().unwrap();
+                if !stores.contains(src, id) {
+                    // un-spill at the source so the transfer can read it.
+                    // Deliberately no enforce_budget here: shedding at the
+                    // source could page this very object straight back out
+                    // (when everything else there is pinned) and livelock
+                    // the pull; the source sheds on its own next insert.
+                    if self.readback_locked(stores, src, &mut nms, id).is_none() {
+                        continue; // lost a race or bad file: rescan
+                    }
+                }
+            }
+            match stores.try_transfer(src, node, id) {
+                Some(n) => {
+                    moved += n;
+                    let mut nm = self.nodes[node].lock().unwrap();
+                    if let Some(b) = stores.get(node, id) {
+                        nm.replicas.insert(id);
+                        nm.touch(id);
+                        self.enforce_budget(stores, node, &mut nm, spillable);
+                        return Some((b, moved));
+                    }
+                    // evicted between transfer and get (budget thrash): retry
+                }
+                None => continue, // source lost the copy mid-flight: rescan
+            }
+        }
+        None
+    }
+
+    /// Whether any node holds `id`, resident or spilled (dependency
+    /// counting must not call a paged-out input "missing").
+    pub fn holds(&self, stores: &StoreSet, id: ObjectId) -> bool {
+        (0..self.nodes.len()).any(|n| {
+            stores.contains(n, id) || self.nodes[n].lock().unwrap().spilled.contains_key(&id)
+        })
+    }
+
+    /// Driver-side gather: fetch `id` wherever it lives. Spilled blocks
+    /// are read from disk without changing residency (a gather should not
+    /// trigger pressure on the node it reads from), and deliberately do
+    /// not count toward `readback_bytes` — that counter measures
+    /// budget-induced executor read-backs, which the ablations report.
+    pub fn fetch(&self, stores: &StoreSet, id: ObjectId) -> Option<Arc<Block>> {
+        // two passes: a concurrent read-back clears the spilled entry
+        // before the store copy appears, so a single store-then-spill
+        // sweep can transiently see neither
+        for _ in 0..2 {
+            if let Some(b) = stores.fetch(id) {
+                return Some(b);
+            }
+            for n in 0..self.nodes.len() {
+                let nm = self.nodes[n].lock().unwrap();
+                let found = nm
+                    .spilled
+                    .get(&id)
+                    .map(|sp| (sp.path.clone(), sp.shape.clone(), sp.bytes));
+                drop(nm);
+                if let Some((path, shape, bytes)) = found {
+                    if let Some(data) = read_spill(&path, bytes) {
+                        return Some(Arc::new(Block::from_vec(&shape, data)));
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Refcount release: the object is dead — evict every resident copy
+    /// and delete any spill file. The executor calls this when lifetime
+    /// analysis says the last consumer completed.
+    pub fn release(&self, stores: &StoreSet, id: ObjectId) {
+        for n in 0..self.nodes.len() {
+            let mut nm = self.nodes[n].lock().unwrap();
+            if let Some(b) = stores.remove(n, id) {
+                nm.stats.gc_freed_bytes += b.bytes();
+            }
+            if let Some(sp) = nm.spilled.remove(&id) {
+                let _ = std::fs::remove_file(&sp.path);
+                nm.stats.gc_freed_bytes += sp.bytes;
+            }
+            nm.forget(id);
+        }
+    }
+}
+
+impl Drop for MemoryManager {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.spill_root);
+    }
+}
+
+/// Elements per encode chunk: the spill path runs exactly when the node
+/// is over its memory budget, so the transient encode buffer must stay
+/// O(chunk), never a second full copy of the block.
+const SPILL_CHUNK_ELEMS: usize = 1 << 15; // 256 KiB of f64
+
+fn write_spill(path: &Path, data: &[f64]) -> std::io::Result<()> {
+    use std::io::Write;
+    let file = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(file);
+    let mut buf = Vec::with_capacity(SPILL_CHUNK_ELEMS.min(data.len()) * 8);
+    for chunk in data.chunks(SPILL_CHUNK_ELEMS) {
+        buf.clear();
+        for v in chunk {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    w.flush()
+}
+
+/// Chunked decode for the same reason as [`write_spill`]: the read-back
+/// happens on a node already near its budget, so the transient raw-byte
+/// buffer stays O(chunk) instead of a full second copy of the block.
+fn read_spill(path: &Path, bytes: u64) -> Option<Vec<f64>> {
+    use std::io::Read;
+    let mut file = std::fs::File::open(path).ok()?;
+    if file.metadata().ok()?.len() != bytes {
+        return None; // truncated or clobbered spill file
+    }
+    let mut out = Vec::with_capacity((bytes / 8) as usize);
+    let mut buf = vec![0u8; (SPILL_CHUNK_ELEMS * 8).min(bytes.max(8) as usize)];
+    let mut remaining = bytes as usize;
+    while remaining > 0 {
+        let take = remaining.min(buf.len());
+        file.read_exact(&mut buf[..take]).ok()?;
+        for c in buf[..take].chunks_exact(8) {
+            out.push(f64::from_le_bytes(c.try_into().unwrap()));
+        }
+        remaining -= take;
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blk(n: usize, fill: f64) -> Arc<Block> {
+        Arc::new(Block::filled(&[n, 1], fill))
+    }
+
+    fn all(_: ObjectId) -> bool {
+        true
+    }
+    const ALL: &dyn Fn(ObjectId) -> bool = &all;
+
+    #[test]
+    fn insert_spills_coldest_beyond_budget_and_acquire_reads_back() {
+        let stores = StoreSet::new(1);
+        // budget = 2 blocks of 80 bytes
+        let mgr = MemoryManager::new(1, Some(160), true);
+        for id in 0..4u64 {
+            mgr.insert(&stores, 0, id, blk(10, id as f64), ALL);
+        }
+        // residency never exceeded the budget; the two coldest spilled
+        assert!(stores.node_bytes(0) <= 160);
+        let st = &mgr.stats()[0];
+        assert_eq!(st.spilled_bytes, 160, "two 80-byte blocks paged out");
+        assert!(!stores.contains(0, 0) && !stores.contains(0, 1));
+        // acquire a spilled block: read back bit-identically
+        let (b, moved) = mgr.acquire(&stores, 0, 0, ALL).unwrap();
+        assert_eq!(moved, 0, "read-back is disk, not network");
+        assert!(b.buf().iter().all(|&v| v == 0.0));
+        assert_eq!(b.shape, vec![10, 1]);
+        assert_eq!(mgr.stats()[0].readback_bytes, 80);
+    }
+
+    #[test]
+    fn spill_roundtrip_preserves_exact_bits() {
+        let stores = StoreSet::new(1);
+        let mgr = MemoryManager::new(1, Some(80), true);
+        let mut rng = crate::util::rng::Rng::seed_from_u64(0x5B111);
+        let mut v = vec![0.0; 10];
+        rng.fill_normal(&mut v);
+        let original = v.clone();
+        mgr.insert(&stores, 0, 1, Arc::new(Block::from_vec(&[10, 1], v)), ALL);
+        // a second insert pushes object 1 to disk
+        mgr.insert(&stores, 0, 2, blk(10, 2.0), ALL);
+        assert!(!stores.contains(0, 1), "object 1 must have spilled");
+        let (b, _) = mgr.acquire(&stores, 0, 1, ALL).unwrap();
+        for (a, w) in b.buf().iter().zip(&original) {
+            assert_eq!(a.to_bits(), w.to_bits(), "spill round-trip changed bits");
+        }
+    }
+
+    #[test]
+    fn pinned_blocks_never_spill() {
+        let stores = StoreSet::new(1);
+        let mgr = MemoryManager::new(1, Some(80), true);
+        let pinned = |o: ObjectId| o != 7; // 7 is pinned (not spillable)
+        mgr.insert(&stores, 0, 7, blk(10, 7.0), &pinned);
+        mgr.insert(&stores, 0, 8, blk(10, 8.0), &pinned);
+        // 8 (the only spillable block) pages out even though 7 is colder
+        assert!(stores.contains(0, 7), "pinned block evicted");
+        assert!(!stores.contains(0, 8));
+    }
+
+    #[test]
+    fn replicas_evicted_before_any_spill_and_primary_survives() {
+        let stores = StoreSet::new(2);
+        let mgr = MemoryManager::new(2, Some(160), true);
+        mgr.insert(&stores, 0, 1, blk(10, 1.0), ALL);
+        // pull object 1 to node 1: now a replica there
+        let (_, moved) = mgr.acquire(&stores, 1, 1, ALL).unwrap();
+        assert_eq!(moved, 80, "cross-node pull pays bytes");
+        assert!(stores.contains(1, 1));
+        // pressure node 1 past its budget: the replica goes first, free
+        mgr.insert(&stores, 1, 2, blk(10, 2.0), ALL);
+        mgr.insert(&stores, 1, 3, blk(10, 3.0), ALL);
+        let st = &mgr.stats()[1];
+        assert_eq!(st.evicted_replica_bytes, 80, "replica evicted, not spilled");
+        assert_eq!(st.spilled_bytes, 0);
+        assert!(!stores.contains(1, 1), "replica gone from node 1");
+        assert!(stores.contains(0, 1), "primary intact on node 0");
+        // and the object is still acquirable on node 1 (re-pull)
+        let (b, moved2) = mgr.acquire(&stores, 1, 1, ALL).unwrap();
+        assert_eq!(moved2, 80);
+        assert_eq!(b.buf()[0], 1.0);
+    }
+
+    #[test]
+    fn release_evicts_everywhere_and_deletes_spill_files() {
+        let stores = StoreSet::new(2);
+        let mgr = MemoryManager::new(2, Some(80), true);
+        mgr.insert(&stores, 0, 1, blk(10, 1.0), ALL);
+        mgr.insert(&stores, 0, 2, blk(10, 2.0), ALL); // spills 1
+        assert!(mgr.holds(&stores, 1));
+        let spill_file = mgr.spill_path(0, 1);
+        assert!(spill_file.exists(), "spill file must be on disk");
+        mgr.release(&stores, 1);
+        mgr.release(&stores, 2);
+        assert!(!mgr.holds(&stores, 1));
+        assert!(!spill_file.exists(), "release must delete the spill file");
+        assert_eq!(stores.node_bytes(0), 0);
+        assert!(mgr.stats()[0].gc_freed_bytes >= 160);
+    }
+
+    #[test]
+    fn fetch_reads_spilled_blocks_without_changing_residency() {
+        let stores = StoreSet::new(1);
+        let mgr = MemoryManager::new(1, Some(80), true);
+        mgr.insert(&stores, 0, 1, blk(10, 4.5), ALL);
+        mgr.insert(&stores, 0, 2, blk(10, 2.0), ALL); // spills 1
+        let b = mgr.fetch(&stores, 1).expect("spilled block fetchable");
+        assert!(b.buf().iter().all(|&v| v == 4.5));
+        assert!(!stores.contains(0, 1), "gather must not re-admit the block");
+        assert!(mgr.fetch(&stores, 99).is_none());
+    }
+
+    #[test]
+    fn no_budget_means_no_spill() {
+        let stores = StoreSet::new(1);
+        let mgr = MemoryManager::new(1, None, true);
+        for id in 0..16u64 {
+            mgr.insert(&stores, 0, id, blk(100, id as f64), ALL);
+        }
+        let st = &mgr.stats()[0];
+        assert_eq!(st.spilled_bytes, 0);
+        assert_eq!(stores.node_bytes(0), 16 * 800);
+    }
+
+    #[test]
+    fn stats_delta_subtracts() {
+        let a = NodeMemStats {
+            spilled_bytes: 100,
+            readback_bytes: 50,
+            evicted_replica_bytes: 10,
+            gc_freed_bytes: 7,
+        };
+        let b = NodeMemStats {
+            spilled_bytes: 40,
+            readback_bytes: 50,
+            evicted_replica_bytes: 0,
+            gc_freed_bytes: 7,
+        };
+        let d = a.delta(&b);
+        assert_eq!(d.spilled_bytes, 60);
+        assert_eq!(d.readback_bytes, 0);
+        assert_eq!(d.evicted_replica_bytes, 10);
+        assert_eq!(d.gc_freed_bytes, 0);
+    }
+}

@@ -1,7 +1,10 @@
-//! Blocks and per-node object stores — the object substrate of §3.
+//! Blocks, per-node object stores, and the distributed memory manager —
+//! the object substrate of §3 plus the §8.1 memory-load machinery.
 
 pub mod block;
+pub mod memory;
 pub mod object_store;
 
 pub use block::{Block, BlockData};
+pub use memory::{MemoryManager, NodeMemStats};
 pub use object_store::{IdGen, ObjectId, ObjectStore, StoreSet};

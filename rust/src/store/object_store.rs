@@ -29,10 +29,13 @@ pub struct ObjectStore {
 impl ObjectStore {
     pub fn put(&mut self, id: ObjectId, block: Arc<Block>) {
         let sz = block.bytes();
-        if self.objects.insert(id, block).is_none() {
-            self.bytes += sz;
-            self.peak_bytes = self.peak_bytes.max(self.bytes);
+        // a re-put replaces the old block: swap its size out of the
+        // resident count instead of silently keeping the stale figure
+        match self.objects.insert(id, block) {
+            Some(old) => self.bytes = self.bytes - old.bytes() + sz,
+            None => self.bytes += sz,
         }
+        self.peak_bytes = self.peak_bytes.max(self.bytes);
     }
 
     pub fn get(&self, id: ObjectId) -> Option<Arc<Block>> {
@@ -89,6 +92,17 @@ impl StoreSet {
         self.stores[node].lock().unwrap().contains(id)
     }
 
+    /// Resident bytes on one node right now.
+    pub fn node_bytes(&self, node: usize) -> u64 {
+        self.stores[node].lock().unwrap().bytes
+    }
+
+    /// Drop an object from one node's store (eviction/spill bookkeeping
+    /// is the memory manager's job; this just removes the copy).
+    pub fn remove(&self, node: usize, id: ObjectId) -> Option<Arc<Block>> {
+        self.stores[node].lock().unwrap().remove(id)
+    }
+
     /// Locate any node holding `id` (preferring `hint` first).
     pub fn locate(&self, id: ObjectId, hint: usize) -> Option<usize> {
         if self.contains(hint, id) {
@@ -101,25 +115,33 @@ impl StoreSet {
     /// No-op (and no accounting) if already resident at `dst`. The
     /// residency check happens under the destination lock, so two workers
     /// racing to pull the same object account its bytes exactly once.
+    /// Panics if `src` does not hold the object; the memory manager uses
+    /// [`StoreSet::try_transfer`] instead, because under a byte budget a
+    /// source copy can be legitimately paged out mid-pull.
     pub fn transfer(&self, src: usize, dst: usize, id: ObjectId) -> u64 {
+        self.try_transfer(src, dst, id)
+            .unwrap_or_else(|| panic!("transfer: object {id} not on node {src}"))
+    }
+
+    /// [`StoreSet::transfer`], but `None` (instead of a panic) when the
+    /// source no longer holds the object.
+    pub fn try_transfer(&self, src: usize, dst: usize, id: ObjectId) -> Option<u64> {
         if src == dst || self.contains(dst, id) {
-            return 0;
+            return Some(0);
         }
-        let block = self
-            .get(src, id)
-            .unwrap_or_else(|| panic!("transfer: object {id} not on node {src}"));
+        let block = self.get(src, id)?;
         let sz = block.bytes();
         {
             let mut d = self.stores[dst].lock().unwrap();
             if d.contains(id) {
-                return 0; // lost the race: the other puller accounted it
+                return Some(0); // lost the race: the other puller accounted it
             }
             d.net_in_bytes += sz;
             d.put(id, block);
         }
         let mut s = self.stores[src].lock().unwrap();
         s.net_out_bytes += sz;
-        sz
+        Some(sz)
     }
 
     /// Snapshot (bytes, peak, net_in, net_out) for each node.
@@ -143,12 +165,6 @@ impl StoreSet {
         None
     }
 
-    /// Drop an object from every node (refcount release).
-    pub fn evict_everywhere(&self, id: ObjectId) {
-        for s in &self.stores {
-            s.lock().unwrap().remove(id);
-        }
-    }
 }
 
 /// Monotonic object-id allocator shared by the driver.
@@ -187,6 +203,30 @@ mod tests {
         s.put(1, b.clone());
         s.put(1, b);
         assert_eq!(s.bytes, 80);
+    }
+
+    #[test]
+    fn reput_with_different_size_adjusts_byte_count() {
+        let mut s = ObjectStore::default();
+        s.put(1, blk(10)); // 80 bytes
+        s.put(1, blk(30)); // replaced by 240 bytes
+        assert_eq!(s.bytes, 240, "old size must be swapped out, not kept");
+        assert_eq!(s.peak_bytes, 240);
+        s.put(1, blk(5)); // shrink to 40 bytes
+        assert_eq!(s.bytes, 40);
+        assert_eq!(s.peak_bytes, 240);
+        s.remove(1);
+        assert_eq!(s.bytes, 0, "remove must free the *current* size");
+    }
+
+    #[test]
+    fn try_transfer_reports_missing_source() {
+        let set = StoreSet::new(2);
+        assert_eq!(set.try_transfer(0, 1, 42), None);
+        set.put(0, 42, blk(4));
+        assert_eq!(set.try_transfer(0, 1, 42), Some(32));
+        // already at dst: accounted once
+        assert_eq!(set.try_transfer(0, 1, 42), Some(0));
     }
 
     #[test]

@@ -1,0 +1,373 @@
+//! Memory-manager suites: lifetime GC, replica eviction and
+//! spill-to-disk must be pure memory optimizations — results bit-identical
+//! with the manager on or off, per-node `peak_bytes` never higher with
+//! GC, and budget-constrained runs completing correctly with nonzero
+//! spill/read-back traffic reported.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use nums::api::ops;
+use nums::exec::{Plan, RealExecutor, Task};
+use nums::glm::data::classification_data;
+use nums::glm::newton_fit;
+use nums::prelude::*;
+use nums::runtime::native;
+use nums::store::{MemoryManager, StoreSet};
+use nums::util::prop::forall_res;
+
+/// Sequential oracle: run the plan in order, single process, no stores.
+fn run_sequential(plan: &Plan, seeds: &HashMap<u64, Block>) -> HashMap<u64, Block> {
+    let mut env: HashMap<u64, Block> = seeds.clone();
+    for t in &plan.tasks {
+        let refs: Vec<&Block> = t.inputs.iter().map(|o| &env[o]).collect();
+        let outs = native::execute(&t.kernel, &refs).unwrap();
+        for ((obj, _), b) in t.outputs.iter().zip(outs) {
+            env.insert(*obj, b);
+        }
+    }
+    env
+}
+
+/// Random-but-valid plan spec (same scheme as `tests/exec_steal.rs`):
+/// decoded against earlier outputs so plans are executable and ordered.
+#[derive(Debug)]
+struct PlanSpec {
+    nodes: usize,
+    threads_per_node: usize,
+    stealing: bool,
+    n_seeds: usize,
+    tasks: Vec<(u8, usize, usize, usize)>,
+}
+
+const SHAPE: [usize; 2] = [4, 4];
+const BLOCK_BYTES: u64 = (SHAPE[0] * SHAPE[1] * 8) as u64;
+
+fn decode(spec: &PlanSpec) -> (Plan, HashMap<u64, Block>) {
+    let mut rng = Rng::seed_from_u64(0x3E3 ^ spec.tasks.len() as u64);
+    let mut seeds = HashMap::new();
+    let mut avail: Vec<u64> = Vec::new();
+    for s in 0..spec.n_seeds {
+        let mut v = vec![0.0; SHAPE[0] * SHAPE[1]];
+        rng.fill_normal(&mut v);
+        seeds.insert(s as u64, Block::from_vec(&SHAPE, v));
+        avail.push(s as u64);
+    }
+    let mut tasks = Vec::new();
+    for (i, &(kind, p1, p2, tgt)) in spec.tasks.iter().enumerate() {
+        let out = 1000 + i as u64;
+        let (kernel, inputs) = match kind % 5 {
+            0 => (Kernel::Ew(BinOp::Add), vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+            1 => (Kernel::Ew(BinOp::Mul), vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+            2 => (Kernel::Neg, vec![avail[p1 % avail.len()]]),
+            3 => (Kernel::Scale(0.5), vec![avail[p1 % avail.len()]]),
+            _ => (Kernel::Matmul, vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+        };
+        let in_shapes = vec![SHAPE.to_vec(); inputs.len()];
+        tasks.push(Task {
+            kernel,
+            inputs,
+            in_shapes,
+            outputs: vec![(out, SHAPE.to_vec())],
+            target: tgt % spec.nodes,
+            transfers: vec![],
+        });
+        avail.push(out);
+    }
+    (Plan { tasks }, seeds)
+}
+
+fn seeded_stores(spec: &PlanSpec, seeds: &HashMap<u64, Block>) -> StoreSet {
+    let stores = StoreSet::new(spec.nodes);
+    for (obj, b) in seeds {
+        stores.put((*obj as usize) % spec.nodes, *obj, Arc::new(b.clone()));
+    }
+    stores
+}
+
+#[test]
+fn prop_gc_and_spill_preserve_bit_identity_and_release_intermediates() {
+    forall_res(
+        0x6C6C,
+        25,
+        |r| PlanSpec {
+            nodes: 1 + r.usize(3),
+            threads_per_node: 1 + r.usize(3),
+            stealing: r.usize(2) == 1,
+            n_seeds: 2 + r.usize(4),
+            tasks: (0..1 + r.usize(20))
+                .map(|_| (r.usize(256) as u8, r.usize(1 << 16), r.usize(1 << 16), r.usize(1 << 16)))
+                .collect(),
+        },
+        |spec| {
+            let (plan, seeds) = decode(spec);
+            let want = run_sequential(&plan, &seeds);
+
+            let topo = Topology::new(spec.nodes, 2, SystemMode::Ray);
+            let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+                .with_stealing(spec.stealing)
+                // GC on plus a tight 4-block budget: the worst case
+                .with_memory(MemoryManager::new(spec.nodes, Some(4 * BLOCK_BYTES), true));
+            exec.threads_per_node = spec.threads_per_node;
+            let stores = seeded_stores(spec, &seeds);
+            exec.run(&plan, &stores)
+                .map_err(|e| format!("managed executor failed: {e}"))?;
+            let mgr = exec.memory.as_ref().unwrap();
+
+            let consumed: HashSet<u64> =
+                plan.tasks.iter().flat_map(|t| t.inputs.iter().copied()).collect();
+            for i in 0..plan.tasks.len() {
+                let obj = 1000 + i as u64;
+                if consumed.contains(&obj) {
+                    // consumed intermediate: refcount GC must have
+                    // released it from every store and spill file
+                    if mgr.holds(&stores, obj) {
+                        return Err(format!("dead intermediate {obj} still held"));
+                    }
+                    continue;
+                }
+                // terminal output: implicitly pinned, bit-identical
+                let got = mgr
+                    .fetch(&stores, obj)
+                    .ok_or_else(|| format!("terminal output {obj} missing"))?;
+                let w = &want[&obj];
+                if got.shape != w.shape {
+                    return Err(format!("shape mismatch on {obj}"));
+                }
+                if got.buf().iter().zip(w.buf()).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err(format!("output {obj} differs from sequential oracle"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_peak_bytes_with_gc_never_higher_than_without() {
+    forall_res(
+        0x9EA6,
+        20,
+        |r| PlanSpec {
+            nodes: 1 + r.usize(3),
+            threads_per_node: 1 + r.usize(2),
+            stealing: false, // fixed placement: per-node byte adds identical
+            n_seeds: 2 + r.usize(4),
+            tasks: (0..2 + r.usize(20))
+                .map(|_| (r.usize(256) as u8, r.usize(1 << 16), r.usize(1 << 16), r.usize(1 << 16)))
+                .collect(),
+        },
+        |spec| {
+            let (plan, seeds) = decode(spec);
+            let run = |managed: bool| {
+                let topo = Topology::new(spec.nodes, 2, SystemMode::Ray);
+                let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+                    .with_stealing(false);
+                if managed {
+                    exec = exec.with_memory(MemoryManager::new(spec.nodes, None, true));
+                }
+                exec.threads_per_node = spec.threads_per_node;
+                let stores = seeded_stores(spec, &seeds);
+                let rep = exec.run(&plan, &stores).unwrap();
+                rep.store_snapshot
+                    .iter()
+                    .map(|&(_, peak, _, _)| peak)
+                    .collect::<Vec<u64>>()
+            };
+            let peak_nogc = run(false);
+            let peak_gc = run(true);
+            for (n, (g, p)) in peak_gc.iter().zip(&peak_nogc).enumerate() {
+                if g > p {
+                    return Err(format!("node {n}: GC peak {g} > plain peak {p}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn skewed_matmul_chain_gc_strictly_lowers_peak() {
+    // A@B chains targeted at one node: without GC every product stays
+    // resident; with GC only the rolling pair lives. Deterministic (one
+    // node, one worker), so strict inequality is guaranteed.
+    let n = 48usize;
+    let chain = 10usize;
+    let block_bytes = (n * n * 8) as u64;
+    let mut rng = Rng::seed_from_u64(0xC4A1);
+    let mut av = vec![0.0; n * n];
+    rng.fill_normal(&mut av);
+    let mut bv = vec![0.0; n * n];
+    rng.fill_normal(&mut bv);
+    let plan = Plan {
+        tasks: (0..chain)
+            .map(|i| Task {
+                kernel: Kernel::Matmul,
+                inputs: vec![if i == 0 { 0 } else { 99 + i as u64 }, 1],
+                in_shapes: vec![vec![n, n], vec![n, n]],
+                outputs: vec![(100 + i as u64, vec![n, n])],
+                target: 0,
+                transfers: vec![],
+            })
+            .collect(),
+    };
+    let run = |managed: bool| {
+        let topo = Topology::new(1, 1, SystemMode::Ray);
+        let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()));
+        exec.threads_per_node = 1;
+        if managed {
+            exec = exec.with_memory(MemoryManager::new(1, None, true));
+        }
+        let stores = StoreSet::new(1);
+        stores.put(0, 0, Arc::new(Block::from_vec(&[n, n], av.clone())));
+        stores.put(0, 1, Arc::new(Block::from_vec(&[n, n], bv.clone())));
+        let rep = exec.run(&plan, &stores).unwrap();
+        let last = 99 + chain as u64;
+        let out = match &exec.memory {
+            Some(m) => m.fetch(&stores, last).unwrap(),
+            None => stores.fetch(last).unwrap(),
+        };
+        (rep.store_snapshot[0].1, out.as_ref().clone())
+    };
+    let (peak_plain, out_plain) = run(false);
+    let (peak_gc, out_gc) = run(true);
+    assert_eq!(out_plain.max_abs_diff(&out_gc), 0.0, "GC changed numerics");
+    assert_eq!(peak_plain, (chain as u64 + 2) * block_bytes);
+    assert!(
+        peak_gc < peak_plain,
+        "GC peak {peak_gc} must be strictly below {peak_plain}"
+    );
+    // rolling working set: 2 seeds + current product + previous product
+    assert!(peak_gc <= 4 * block_bytes, "GC peak {peak_gc}");
+}
+
+#[test]
+fn glm_newton_with_gc_strictly_lowers_session_peak() {
+    // acceptance: a multi-iteration GLM shows strictly lower per-node
+    // peak_bytes with the memory manager's lifetime GC than without
+    let run = |gc: bool| {
+        let cfg = SessionConfig::real_small(2, 2)
+            .with_stealing(false)
+            .with_lifetime_gc(gc);
+        let mut sess = Session::new(cfg);
+        let (x, y) = classification_data(&mut sess, 512, 8, 8, 17);
+        let res = newton_fit(&mut sess, &x, &y, 3, 0.0).unwrap();
+        let beta = sess.fetch(&res.beta).unwrap();
+        let last_real = res
+            .reports
+            .last()
+            .and_then(|r| r.real.as_ref())
+            .expect("real mode");
+        let max_peak = last_real
+            .store_snapshot
+            .iter()
+            .map(|&(_, p, _, _)| p)
+            .max()
+            .unwrap();
+        let gc_freed: u64 = res
+            .reports
+            .iter()
+            .filter_map(|r| r.real.as_ref())
+            .flat_map(|r| r.mem_stats.iter().map(|m| m.gc_freed_bytes))
+            .sum();
+        (beta, max_peak, gc_freed)
+    };
+    let (beta_plain, peak_plain, freed_plain) = run(false);
+    let (beta_gc, peak_gc, freed_gc) = run(true);
+    assert_eq!(
+        beta_plain.max_abs_diff(&beta_gc),
+        0.0,
+        "lifetime GC changed GLM numerics"
+    );
+    assert_eq!(freed_plain, 0, "GC off must free nothing");
+    assert!(freed_gc > 0, "3 Newton iterations must free intermediates");
+    assert!(
+        peak_gc < peak_plain,
+        "GC peak {peak_gc} must be strictly below {peak_plain}"
+    );
+}
+
+#[test]
+fn constrained_budget_session_completes_with_spill_and_readback() {
+    // acceptance: a session whose data exceeds mem_budget_bytes completes
+    // correctly and reports nonzero spill/read-back traffic
+    let block_bytes = (64 * 32 * 8) as u64; // 16 KiB creation blocks
+    let run = |budget: Option<u64>| {
+        let mut cfg = SessionConfig::real_small(1, 1).with_stealing(false);
+        cfg.mem_budget_bytes = budget;
+        let mut sess = Session::new(cfg);
+        let x = sess.randn(&[1024, 32], &[16, 1]); // 16 blocks, 256 KiB
+        let y = sess.randn(&[1024, 32], &[16, 1]);
+        let (out, rep) = ops::add(&mut sess, &x, &y).unwrap();
+        let dense = sess.fetch(&out).unwrap();
+        (dense, rep.real.unwrap())
+    };
+    let (want, free_rep) = run(None);
+    let (got, tight_rep) = run(Some(4 * block_bytes));
+    assert_eq!(want.max_abs_diff(&got), 0.0, "spilling changed results");
+    assert_eq!(free_rep.mem_stats.iter().map(|m| m.spilled_bytes).sum::<u64>(), 0);
+    let spilled: u64 = tight_rep.mem_stats.iter().map(|m| m.spilled_bytes).sum();
+    let readback: u64 = tight_rep.mem_stats.iter().map(|m| m.readback_bytes).sum();
+    assert!(spilled > 0, "a 4-block budget over 32 blocks must spill");
+    assert!(readback > 0, "spilled operands must be read back for the add");
+}
+
+#[test]
+fn stolen_input_replicas_are_evicted_under_pressure() {
+    // skewed plan + tight budget on a 2-node cluster: thieves accumulate
+    // replica copies of node 0's inputs, and pressure must reclaim them
+    // via replica eviction (stolen-input cleanup), never losing data
+    let n = 32usize;
+    let k_tasks = 24usize;
+    let block_bytes = (n * n * 8) as u64;
+    let mut rng = Rng::seed_from_u64(0xEB1C);
+    let mut seeds = HashMap::new();
+    for i in 0..2 * k_tasks as u64 {
+        let mut v = vec![0.0; n * n];
+        rng.fill_normal(&mut v);
+        seeds.insert(i, Block::from_vec(&[n, n], v));
+    }
+    let plan = Plan {
+        tasks: (0..k_tasks)
+            .map(|i| Task {
+                kernel: Kernel::Matmul,
+                inputs: vec![(2 * i) as u64, (2 * i + 1) as u64],
+                in_shapes: vec![vec![n, n], vec![n, n]],
+                outputs: vec![(1000 + i as u64, vec![n, n])],
+                target: 0,
+                transfers: vec![],
+            })
+            .collect(),
+    };
+    let want = run_sequential(&plan, &seeds);
+    let topo = Topology::new(2, 2, SystemMode::Ray);
+    let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+        .with_stealing(true)
+        .with_memory(MemoryManager::new(2, Some(8 * block_bytes), true));
+    exec.threads_per_node = 2;
+    let stores = StoreSet::new(2);
+    for (obj, b) in &seeds {
+        stores.put(0, *obj, Arc::new(b.clone()));
+    }
+    let rep = exec.run(&plan, &stores).unwrap();
+    let stolen: usize = rep.node_stats.iter().map(|s| s.tasks_stolen).sum();
+    assert!(stolen > 0, "skewed plan must trigger stealing");
+    let replica_evicted: u64 = rep
+        .mem_stats
+        .iter()
+        .map(|m| m.evicted_replica_bytes)
+        .sum();
+    assert!(
+        replica_evicted > 0,
+        "pressure on the thief must reclaim stolen-input replicas: {:?}",
+        rep.mem_stats
+    );
+    // every terminal output still correct
+    let mgr = exec.memory.as_ref().unwrap();
+    for i in 0..k_tasks {
+        let obj = 1000 + i as u64;
+        let got = mgr.fetch(&stores, obj).unwrap();
+        let w = &want[&obj];
+        assert_eq!(got.max_abs_diff(w), 0.0, "output {obj} wrong");
+    }
+}
