@@ -22,8 +22,8 @@ use std::sync::Arc;
 
 use nums::api::{ops, Policy, RunReport, Session, SessionConfig};
 use nums::bench::harness::{
-    emit_json, glm_mem_run, max_peak_bytes, mem_summary, print_series, produce_fold_plan,
-    steal_summary, PerfRecord,
+    emit_json, glm_mem_run, max_peak_bytes, mem_summary, prefetch_summary, print_series,
+    produce_fold_plan, steal_summary, PerfRecord,
 };
 use nums::exec::{Plan, RealExecutor, Task};
 use nums::linalg::dense;
@@ -378,6 +378,125 @@ fn memory_ablation(records: &mut Vec<PerfRecord>, smoke: bool) {
     }
 }
 
+/// Communication-overlap ablation (the PR 4 tentpole): prefetch on/off on
+/// two communication-heavy layouts. (a) Cross-node matmul pipeline: every
+/// input lives on node 0 but the tasks are spread over all nodes, so each
+/// remote task must move two blocks before it can run — with prefetching
+/// the transfer threads move them while earlier kernels compute. (b) A
+/// skewed GLM fit on a real 2-node session (LSHS placement, stealing on).
+/// Outputs are asserted bit-identical across both modes, and the per-node
+/// `(prefetch, hits, demand, async-spill)` counters land in
+/// `BENCH_fig09.json` (bytes = prefetch_bytes, gflops = hits).
+fn overlap_ablation(records: &mut Vec<PerfRecord>, smoke: bool) {
+    let nodes = 4usize;
+    let n = if smoke { 96usize } else { 256usize };
+    let k_tasks = if smoke { 12usize } else { 40usize };
+    println!(
+        "## Fig 9 (ext): communication-overlap ablation ({k_tasks} cross-node {n}x{n} \
+         matmuls, inputs on node 0, tasks over {nodes} nodes)"
+    );
+    let mut rng = Rng::seed_from_u64(0x0E1A);
+    let operands: Vec<(Block, Block)> = (0..k_tasks)
+        .map(|_| {
+            let mut av = vec![0.0; n * n];
+            rng.fill_normal(&mut av);
+            let mut bv = vec![0.0; n * n];
+            rng.fill_normal(&mut bv);
+            (Block::from_vec(&[n, n], av), Block::from_vec(&[n, n], bv))
+        })
+        .collect();
+    let plan = Plan {
+        tasks: (0..k_tasks)
+            .map(|i| Task {
+                kernel: Kernel::Matmul,
+                inputs: vec![(2 * i) as u64, (2 * i + 1) as u64],
+                in_shapes: vec![vec![n, n], vec![n, n]],
+                outputs: vec![(1000 + i as u64, vec![n, n])],
+                target: i % nodes,
+                transfers: vec![],
+            })
+            .collect(),
+    };
+    let mut walls = Vec::new();
+    let mut outputs: Vec<Vec<Block>> = Vec::new();
+    for prefetch in [false, true] {
+        let topo = Topology::new(nodes, 1, SystemMode::Ray);
+        // stealing off isolates the overlap effect: placement is fixed,
+        // only *when* the bytes move changes
+        let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+            .with_stealing(false)
+            .with_prefetch(prefetch);
+        exec.threads_per_node = 1;
+        let stores = StoreSet::new(nodes);
+        for (i, (a, b)) in operands.iter().enumerate() {
+            stores.put(0, (2 * i) as u64, Arc::new(a.clone()));
+            stores.put(0, (2 * i + 1) as u64, Arc::new(b.clone()));
+        }
+        let rep = exec.run(&plan, &stores).unwrap();
+        println!(
+            "  prefetch={prefetch:<5} wall={:.4}s  {}",
+            rep.wall_secs,
+            prefetch_summary(&rep)
+        );
+        walls.push(rep.wall_secs);
+        outputs.push(
+            (0..k_tasks)
+                .map(|i| stores.fetch(1000 + i as u64).unwrap().as_ref().clone())
+                .collect(),
+        );
+        records.push(PerfRecord {
+            op: format!("xnode_matmul_prefetch_{prefetch}"),
+            bytes: (3 * n * n * 8 * k_tasks) as u64,
+            secs: rep.wall_secs,
+            gflops: 2.0 * (n as f64).powi(3) * k_tasks as f64 / rep.wall_secs / 1e9,
+        });
+        for (nid, p) in rep.prefetch_stats.iter().enumerate() {
+            records.push(PerfRecord {
+                op: format!("xnode_matmul_prefetch_{prefetch}_node{nid}"),
+                bytes: p.prefetch_bytes,
+                secs: 0.0,
+                gflops: p.prefetch_hits as f64,
+            });
+        }
+    }
+    for (o0, o1) in outputs[0].iter().zip(&outputs[1]) {
+        assert_eq!(o0.max_abs_diff(o1), 0.0, "prefetch must not change numerics");
+    }
+    println!(
+        "  outputs bit-identical; prefetch speedup: {:.2}x",
+        walls[0] / walls[1]
+    );
+
+    // (b) skewed GLM on a real session: LSHS placement, real kernels
+    let (rows, d, q, steps) = if smoke { (512, 8, 4, 2) } else { (2048, 16, 8, 3) };
+    let mut betas: Vec<Block> = Vec::new();
+    for prefetch in [false, true] {
+        let cfg = SessionConfig::real_small(2, 2).with_prefetch(prefetch);
+        let mut sess = Session::new(cfg);
+        let (x, y) = nums::glm::classification_data(&mut sess, rows, d, q, 15);
+        let sw = Stopwatch::start();
+        let res = nums::glm::newton_fit(&mut sess, &x, &y, steps, 0.0).unwrap();
+        let secs = sw.secs();
+        let last = res.reports.last().and_then(|r| r.real.clone()).expect("real mode");
+        println!(
+            "  glm  prefetch={prefetch:<5} wall={secs:.4}s  {}",
+            prefetch_summary(&last)
+        );
+        betas.push(sess.fetch(&res.beta).unwrap());
+        records.push(PerfRecord {
+            op: format!("glm_newton{steps}_prefetch_{prefetch}"),
+            bytes: (rows * d * 8) as u64,
+            secs,
+            gflops: 0.0,
+        });
+    }
+    assert_eq!(
+        betas[0].max_abs_diff(&betas[1]),
+        0.0,
+        "prefetch must not change GLM numerics"
+    );
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     // 64 GB-shape operands (2^27 x 64 f64) — modeled time, phantom blocks.
@@ -406,6 +525,7 @@ fn main() {
     kernel_shootout(&mut records, smoke);
     stealing_ablation(&mut records, smoke);
     memory_ablation(&mut records, smoke);
+    overlap_ablation(&mut records, smoke);
     emit_json("BENCH_fig09.json", &records).expect("write BENCH_fig09.json");
     println!("wrote BENCH_fig09.json ({} records)", records.len());
 }

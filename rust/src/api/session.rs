@@ -74,6 +74,16 @@ pub struct SessionConfig {
     /// ablation in `benches/fig09_micro.rs`. Per-node steal counters land
     /// in `RealReport::node_stats`.
     pub stealing: bool,
+    /// Overlap communication with compute during real execution: one
+    /// transfer thread per node prefetches the remote inputs of
+    /// near-ready tasks (guided by the scheduler's committed transfer
+    /// decisions in the plan) and absorbs the memory manager's spill
+    /// writes, so workers rarely pay transfer or spill latency on the
+    /// hot path. On by default; off is the ablation baseline where every
+    /// byte moves synchronously (demand pulls, blocking spill writes).
+    /// Per-node `(prefetch_bytes, prefetch_hits, demand_pull_bytes,
+    /// async_spill_bytes)` land in `RealReport::prefetch_stats`.
+    pub prefetch: bool,
     /// Release dead intermediates eagerly during real execution: a
     /// pre-run lifetime pass over the plan counts per-object consumers,
     /// and the executor evicts an unpinned intermediate from every node
@@ -108,6 +118,7 @@ impl SessionConfig {
             record_trace: false,
             fusion: true,
             stealing: true,
+            prefetch: true,
             lifetime_gc: true,
             mem_budget_bytes: None,
         }
@@ -128,6 +139,7 @@ impl SessionConfig {
             record_trace: false,
             fusion: true,
             stealing: true,
+            prefetch: true,
             lifetime_gc: true,
             mem_budget_bytes: None,
         }
@@ -146,6 +158,13 @@ impl SessionConfig {
     /// Toggle real-executor work stealing (see [`SessionConfig::stealing`]).
     pub fn with_stealing(mut self, on: bool) -> Self {
         self.stealing = on;
+        self
+    }
+
+    /// Toggle communication/compute overlap
+    /// (see [`SessionConfig::prefetch`]).
+    pub fn with_prefetch(mut self, on: bool) -> Self {
+        self.prefetch = on;
         self
     }
 
@@ -235,6 +254,7 @@ impl Session {
             Some(
                 RealExecutor::new(topo.clone(), Arc::clone(&backend))
                     .with_stealing(cfg.stealing)
+                    .with_prefetch(cfg.prefetch)
                     .with_memory(memory),
             )
         } else {
@@ -405,9 +425,26 @@ impl Session {
             None => None,
         };
 
-        // register new outputs as resident objects for subsequent runs
+        // lifetime GC freed dead intermediates during the run: make the
+        // scheduler's load model forget them too, so the next schedule()
+        // on this session does not count dead bytes in the Eq. 2 memory
+        // term (and they never enter the sim-seed object list below)
+        let dead: std::collections::HashSet<ObjectId> = match &real {
+            Some(r) => {
+                for &obj in &r.gc_released {
+                    self.state.forget(obj);
+                }
+                r.gc_released.iter().copied().collect()
+            }
+            None => Default::default(),
+        };
+
+        // register surviving outputs as resident objects for later runs
         for task in &plan.tasks {
             for (obj, shape) in &task.outputs {
+                if dead.contains(obj) {
+                    continue;
+                }
                 let bytes: u64 = shape.iter().map(|&d| d as u64).product::<u64>() * 8;
                 self.objects.push((*obj, task.target, bytes));
             }

@@ -168,6 +168,31 @@ pub fn mem_summary(report: &RealReport) -> String {
         .join(" | ")
 }
 
+/// One-line per-node communication-overlap summary of a real run:
+/// `node0: pf 1.2 MB (3 hits), demand 64 KB, async-spill 0 B | ...` —
+/// what the fig09 prefetch ablation prints next to wall time.
+pub fn prefetch_summary(report: &RealReport) -> String {
+    use crate::util::fmt::human_bytes;
+    if report.prefetch_stats.is_empty() {
+        return "prefetch off".into();
+    }
+    report
+        .prefetch_stats
+        .iter()
+        .enumerate()
+        .map(|(n, p)| {
+            format!(
+                "node{n}: pf {} ({} hits), demand {}, async-spill {}",
+                human_bytes(p.prefetch_bytes as f64),
+                p.prefetch_hits,
+                human_bytes(p.demand_pull_bytes as f64),
+                human_bytes(p.async_spill_bytes as f64),
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
+
 /// Max per-node peak resident bytes of a real run (the paper's headline
 /// "memory load" axis).
 pub fn max_peak_bytes(report: &RealReport) -> u64 {
@@ -305,6 +330,7 @@ mod tests {
                 readback_bytes: 1024,
                 evicted_replica_bytes: 0,
                 gc_freed_bytes: 256,
+                spill_reuse_bytes: 0,
             },
             crate::store::NodeMemStats::default(),
         ];
@@ -316,6 +342,25 @@ mod tests {
         // mem_stats may be absent (no manager): still renders
         rep.mem_stats.clear();
         assert!(mem_summary(&rep).contains("node0"));
+    }
+
+    #[test]
+    fn prefetch_summary_formats_per_node() {
+        let mut rep = RealReport::default();
+        assert_eq!(prefetch_summary(&rep), "prefetch off");
+        rep.prefetch_stats = vec![
+            crate::exec::PrefetchStats {
+                prefetch_bytes: 2048,
+                prefetch_hits: 3,
+                demand_pull_bytes: 512,
+                async_spill_bytes: 0,
+            },
+            crate::exec::PrefetchStats::default(),
+        ];
+        let s = prefetch_summary(&rep);
+        assert!(s.contains("node0: pf 2.00 KiB (3 hits)"), "{s}");
+        assert!(s.contains("demand 512 B"), "{s}");
+        assert!(s.contains("node1: pf 0 B"), "{s}");
     }
 
     #[test]

@@ -13,14 +13,20 @@
 //! nothing queued, work left) on a `deadlock_timeout` heartbeat and fail
 //! the run naming the blocking `ObjectId`s. Kernel parallelism is granted
 //! per task via [`crate::runtime::ExecContext`] — no process-global
-//! parallelism state exists.
+//! parallelism state exists. Communication overlaps compute: per-node
+//! transfer threads ([`prefetch::Prefetcher`]) pull near-ready tasks'
+//! remote inputs in the background and absorb the memory manager's spill
+//! writes, so workers mostly find inputs resident and never block on
+//! file I/O.
 
 pub mod lifetime;
+pub mod prefetch;
 pub mod real_exec;
 pub mod sim_exec;
 pub mod task;
 
 pub use lifetime::Lifetimes;
+pub use prefetch::{PrefetchStats, Prefetcher};
 pub use real_exec::{NodeExecStats, RealExecutor, RealReport};
 pub use sim_exec::{SimExecutor, SimReport, TraceEvent};
 pub use task::{Plan, Task, Transfer};

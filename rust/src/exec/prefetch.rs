@@ -1,0 +1,370 @@
+//! Communication/compute overlap: per-node transfer threads.
+//!
+//! The paper's whole argument (§5, Eq. 2) is that execution time on
+//! task-based systems is dominated by data movement, not FLOPs — yet a
+//! demand-pull executor pays every cross-node input transfer
+//! synchronously on the worker hot path. LSHS already committed every
+//! transfer at plan time (`PlacementSim::pulls` land in
+//! [`crate::exec::Task::transfers`]), so the executor has perfect
+//! foreknowledge of what will move where. This module spends that
+//! knowledge: one transfer thread per node drains a queue of *pull* jobs
+//! (move an input to the node that will run its consumer) and *spill
+//! sweep* jobs (complete the memory manager's queued asynchronous spill
+//! writes), so by the time a worker dequeues a task its remote inputs are
+//! usually resident and spill file I/O never blocks a kernel.
+//!
+//! Protocol with [`crate::exec::RealExecutor`]:
+//!
+//! * a task whose unmet-dependency count drops to ≤ 1 has its inputs
+//!   posted to its target node's queue (the plan's `Transfer::src` is the
+//!   locate hint); duplicates are deduped per `(node, object)`;
+//! * a *stolen* task re-routes: the thief posts the stolen task's inputs
+//!   to its own queue, so batched steals warm up behind the first task;
+//! * workers never wait on a prefetch — a miss simply falls back to the
+//!   demand pull they always did, and the racing double-pull is resolved
+//!   (and accounted once) under the destination store lock;
+//! * a pull for an object that is not yet available (producer still
+//!   running) or no longer wanted (lifetime GC released it) is dropped
+//!   and un-deduped so a later warm trigger may re-request it.
+//!
+//! Per-node counters land in [`crate::exec::RealReport::prefetch_stats`]:
+//! `prefetch_bytes` (moved by transfer threads) + `demand_pull_bytes`
+//! (moved on the worker hot path) add up to exactly the node's
+//! `net_in_bytes` for the run — the property suite in
+//! `tests/exec_overlap.rs` asserts that identity — while `prefetch_hits`
+//! counts worker input acquisitions satisfied by a completed prefetch and
+//! `async_spill_bytes` counts spill-file bytes written off the hot path.
+
+use std::collections::{HashSet, VecDeque};
+use std::sync::{Condvar, Mutex};
+
+use crate::store::{MemoryManager, ObjectId, StoreSet};
+
+/// Per-node communication-overlap counters for one run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PrefetchStats {
+    /// Bytes pulled to this node by its transfer thread (background).
+    pub prefetch_bytes: u64,
+    /// Worker input acquisitions that found the object resident thanks
+    /// to a completed prefetch (no bytes paid on the hot path).
+    pub prefetch_hits: u64,
+    /// Bytes pulled to this node on the worker hot path (prefetch miss,
+    /// stolen-task pulls, or prefetch disabled paths).
+    pub demand_pull_bytes: u64,
+    /// Spill-file bytes written by this node's transfer thread (the
+    /// memory manager's asynchronous spill pipeline).
+    pub async_spill_bytes: u64,
+}
+
+enum Job {
+    /// Move `obj` to this queue's node. `hint` is the source node the
+    /// scheduler's load model committed to (`Transfer::src`), used to
+    /// short-circuit the locate scan on unmanaged stores.
+    Pull { obj: ObjectId, hint: Option<usize> },
+    /// Complete the memory manager's queued spill writes for this node.
+    SpillSweep,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct NodeQueue {
+    q: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct Track {
+    /// Objects with a queued or completed pull (request dedup).
+    requested: HashSet<ObjectId>,
+    /// Objects whose pull completed with the object resident here.
+    done: HashSet<ObjectId>,
+}
+
+/// Per-run transfer-thread coordinator: one job queue, dedup table and
+/// counter block per node. The executor spawns one `serve` loop per node
+/// inside its worker scope and calls [`Prefetcher::shutdown`] after the
+/// workers join — `serve` drains its remaining queue (the async-spill
+/// write barrier) before exiting, so by the time the scope closes every
+/// queued transfer and spill write has completed.
+pub struct Prefetcher {
+    queues: Vec<NodeQueue>,
+    track: Vec<Mutex<Track>>,
+    stats: Vec<Mutex<PrefetchStats>>,
+}
+
+impl Prefetcher {
+    pub fn new(num_nodes: usize) -> Self {
+        Self {
+            queues: (0..num_nodes)
+                .map(|_| NodeQueue {
+                    q: Mutex::new(QueueState {
+                        jobs: VecDeque::new(),
+                        shutdown: false,
+                    }),
+                    cv: Condvar::new(),
+                })
+                .collect(),
+            track: (0..num_nodes).map(|_| Mutex::new(Track::default())).collect(),
+            stats: (0..num_nodes)
+                .map(|_| Mutex::new(PrefetchStats::default()))
+                .collect(),
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Queue a background pull of `obj` to `node` (deduped; dropped after
+    /// shutdown — the demand path covers whatever never got queued).
+    pub fn request_pull(&self, node: usize, obj: ObjectId, hint: Option<usize>) {
+        {
+            let mut t = self.track[node].lock().unwrap();
+            if !t.requested.insert(obj) {
+                return;
+            }
+        }
+        let nq = &self.queues[node];
+        let mut q = nq.q.lock().unwrap();
+        if q.shutdown {
+            return;
+        }
+        q.jobs.push_back(Job::Pull { obj, hint });
+        drop(q);
+        nq.cv.notify_one();
+    }
+
+    /// Wake `node`'s transfer thread to complete queued spill writes.
+    /// Always enqueued (even mid-shutdown-drain): a pending spill entry
+    /// must be finalized or swept, never silently forgotten.
+    pub fn notify_spill(&self, node: usize) {
+        let nq = &self.queues[node];
+        let mut q = nq.q.lock().unwrap();
+        q.jobs.push_back(Job::SpillSweep);
+        drop(q);
+        nq.cv.notify_one();
+    }
+
+    /// Has a completed prefetch made `obj` resident on `node`? (Hit
+    /// accounting on the worker acquire path.)
+    pub fn was_prefetched(&self, node: usize, obj: ObjectId) -> bool {
+        self.track[node].lock().unwrap().done.contains(&obj)
+    }
+
+    /// Worker-side counters: bytes pulled on the hot path.
+    pub fn add_demand(&self, node: usize, bytes: u64) {
+        self.stats[node].lock().unwrap().demand_pull_bytes += bytes;
+    }
+
+    /// Worker-side counters: an input served by a completed prefetch.
+    pub fn add_hit(&self, node: usize) {
+        self.stats[node].lock().unwrap().prefetch_hits += 1;
+    }
+
+    pub fn stats(&self) -> Vec<PrefetchStats> {
+        self.stats.iter().map(|s| s.lock().unwrap().clone()).collect()
+    }
+
+    /// Tell every transfer thread to drain its queue and exit. Called
+    /// after the worker threads join; the scope join after this call is
+    /// the pipeline's write-completion barrier.
+    pub fn shutdown(&self) {
+        for nq in &self.queues {
+            nq.q.lock().unwrap().shutdown = true;
+            nq.cv.notify_all();
+        }
+    }
+
+    fn mark_done(&self, node: usize, obj: ObjectId) {
+        self.track[node].lock().unwrap().done.insert(obj);
+    }
+
+    fn unrequest(&self, node: usize, obj: ObjectId) {
+        self.track[node].lock().unwrap().requested.remove(&obj);
+    }
+
+    /// Transfer-thread body for `node`: drains jobs until shutdown *and*
+    /// an empty queue. `spillable` is the run's lifetime-pass pin oracle
+    /// (what the manager may page out); `wanted` reports whether an
+    /// object still has pending consumers (a pull of a GC-released
+    /// intermediate would resurrect dead bytes, so it is dropped).
+    pub fn serve(
+        &self,
+        node: usize,
+        stores: &StoreSet,
+        memory: Option<&MemoryManager>,
+        spillable: &(dyn Fn(ObjectId) -> bool + Sync),
+        wanted: &(dyn Fn(ObjectId) -> bool + Sync),
+    ) {
+        loop {
+            let job = {
+                let nq = &self.queues[node];
+                let mut q = nq.q.lock().unwrap();
+                loop {
+                    if let Some(j) = q.jobs.pop_front() {
+                        // the drain barrier exists for spill writes; a
+                        // pull whose consumers have all exited (shutdown
+                        // = workers joined) would move bytes nobody
+                        // reads — discard it
+                        if q.shutdown && matches!(j, Job::Pull { .. }) {
+                            continue;
+                        }
+                        break Some(j);
+                    }
+                    if q.shutdown {
+                        break None;
+                    }
+                    q = nq.cv.wait(q).unwrap();
+                }
+            };
+            let Some(job) = job else { return };
+            match job {
+                Job::Pull { obj, hint } => {
+                    self.pull(node, obj, hint, stores, memory, spillable, wanted)
+                }
+                Job::SpillSweep => {
+                    if let Some(m) = memory {
+                        let written = m.process_pending_spills(stores, node);
+                        if written > 0 {
+                            self.stats[node].lock().unwrap().async_spill_bytes += written;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn pull(
+        &self,
+        node: usize,
+        obj: ObjectId,
+        hint: Option<usize>,
+        stores: &StoreSet,
+        memory: Option<&MemoryManager>,
+        spillable: &(dyn Fn(ObjectId) -> bool + Sync),
+        wanted: &(dyn Fn(ObjectId) -> bool + Sync),
+    ) {
+        if stores.contains(node, obj) {
+            // already local (placement, a demand pull, or an earlier pull
+            // that marked itself): nothing moved, so deliberately NOT
+            // marked done — prefetch_hits must only credit acquisitions
+            // this thread actually made resident
+            return;
+        }
+        if !wanted(obj) {
+            // released mid-queue: pulling would resurrect dead bytes
+            self.unrequest(node, obj);
+            return;
+        }
+        let (landed, bytes) = match memory {
+            Some(m) => {
+                let (b, n) = m.acquire(stores, node, obj, spillable);
+                (b.is_some(), n)
+            }
+            None => match stores
+                .locate(obj, hint.unwrap_or(node))
+                .and_then(|src| stores.try_transfer(src, node, obj))
+            {
+                Some(n) => (true, n),
+                None => (false, 0),
+            },
+        };
+        if bytes > 0 {
+            // counted even when the pull then lost its copy to eviction:
+            // the traffic happened, and the per-node byte identity
+            // (prefetch + demand == net_in) must see it
+            self.stats[node].lock().unwrap().prefetch_bytes += bytes;
+        }
+        if landed {
+            self.mark_done(node, obj);
+        } else {
+            // producer not finished yet, or the object is gone: let a
+            // later warm trigger (or the demand path) handle it
+            self.unrequest(node, obj);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::Block;
+    use std::sync::Arc;
+
+    fn yes(_: ObjectId) -> bool {
+        true
+    }
+
+    /// Bounded poll (≤ 5s) so a lost wakeup fails loudly, never hangs CI.
+    fn wait_for(cond: impl Fn() -> bool, what: &str) {
+        for _ in 0..50_000 {
+            if cond() {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+        panic!("timed out waiting for {what}");
+    }
+
+    #[test]
+    fn pull_moves_remote_object_and_counts_bytes() {
+        let stores = StoreSet::new(2);
+        stores.put(0, 7, Arc::new(Block::filled(&[4, 4], 2.0)));
+        let pf = Prefetcher::new(2);
+        std::thread::scope(|s| {
+            s.spawn(|| pf.serve(1, &stores, None, &yes, &yes));
+            pf.request_pull(1, 7, Some(0));
+            wait_for(|| stores.contains(1, 7), "prefetch of object 7");
+            // duplicate request: deduped away, no second transfer
+            pf.request_pull(1, 7, None);
+            // shutdown drains whatever is still queued before serve exits
+            pf.shutdown();
+        });
+        assert!(pf.was_prefetched(1, 7));
+        assert_eq!(pf.stats()[1].prefetch_bytes, 128);
+        assert_eq!(stores.snapshot()[1].2, 128, "exactly one transfer");
+    }
+
+    #[test]
+    fn unavailable_pull_is_dropped_and_rerequestable() {
+        let stores = StoreSet::new(2);
+        stores.put(0, 50, Arc::new(Block::filled(&[2, 2], 5.0)));
+        let pf = Prefetcher::new(2);
+        std::thread::scope(|s| {
+            s.spawn(|| pf.serve(1, &stores, None, &yes, &yes));
+            pf.request_pull(1, 42, None); // exists nowhere yet
+            pf.request_pull(1, 50, Some(0)); // FIFO marker behind it
+            wait_for(|| stores.contains(1, 50), "marker pull");
+            // 42 was processed (FIFO) and dropped, not completed
+            assert!(!pf.was_prefetched(1, 42));
+            assert_eq!(pf.stats()[1].prefetch_bytes, 32);
+            // the drop un-deduped it: once the object exists, a
+            // re-request goes through instead of being swallowed
+            stores.put(0, 42, Arc::new(Block::filled(&[2, 2], 1.0)));
+            pf.request_pull(1, 42, Some(0));
+            wait_for(|| stores.contains(1, 42), "re-requested pull");
+            pf.shutdown();
+        });
+        assert!(pf.was_prefetched(1, 42));
+    }
+
+    #[test]
+    fn unwanted_pull_is_skipped() {
+        let stores = StoreSet::new(2);
+        stores.put(0, 9, Arc::new(Block::filled(&[2, 2], 3.0)));
+        let pf = Prefetcher::new(2);
+        fn no(_: ObjectId) -> bool {
+            false
+        }
+        std::thread::scope(|s| {
+            s.spawn(|| pf.serve(1, &stores, None, &yes, &no));
+            pf.request_pull(1, 9, Some(0));
+            pf.shutdown();
+        });
+        assert!(!stores.contains(1, 9), "dead objects must not be pulled");
+    }
+}

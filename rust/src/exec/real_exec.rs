@@ -19,6 +19,17 @@
 //! node, and a deeply-skewed victim loses half its deque in one steal so
 //! the thief's node (and its own siblings) amortize the migration.
 //!
+//! Communication overlaps compute ([`super::prefetch::Prefetcher`],
+//! `RealExecutor::prefetch`, default on): one transfer thread per node
+//! pulls the remote inputs of near-ready tasks (unmet deps ≤ 1) in the
+//! background, guided by the plan's scheduler-committed transfer
+//! decisions, so workers usually find inputs resident and only fall back
+//! to demand pulls on a miss. Stolen tasks re-route their prefetches to
+//! the thief's node, and the memory manager's spill writes ride the same
+//! transfer threads (asynchronous spill with a write-completion barrier).
+//! Per-node `(prefetch_bytes, prefetch_hits, demand_pull_bytes,
+//! async_spill_bytes)` land in [`RealReport::prefetch_stats`].
+//!
 //! Memory: when the executor owns a [`MemoryManager`]
 //! (`RealExecutor::memory`, wired up by `api::Session`), each run first
 //! computes plan lifetimes ([`super::lifetime::Lifetimes`]) — consumer
@@ -54,6 +65,7 @@ use crate::util::Stopwatch;
 use std::sync::Arc;
 
 use super::lifetime::Lifetimes;
+use super::prefetch::{PrefetchStats, Prefetcher};
 use super::task::Plan;
 
 /// Per-node load-balance counters for one run.
@@ -78,6 +90,17 @@ pub struct RealReport {
     /// Per-node memory-manager counters for *this run* (spill, read-back,
     /// replica eviction, GC frees). Empty when no manager is attached.
     pub mem_stats: Vec<NodeMemStats>,
+    /// Per-node communication-overlap counters (see [`PrefetchStats`]).
+    /// Empty when prefetching is disabled. Per node,
+    /// `prefetch_bytes + demand_pull_bytes` equals the run's `net_in`
+    /// bytes — every cross-node byte is accounted exactly once, to
+    /// either the background or the hot path.
+    pub prefetch_stats: Vec<PrefetchStats>,
+    /// Objects lifetime GC released during this run (dead intermediates),
+    /// in completion order. The session uses this to make the
+    /// scheduler's load model forget dead bytes
+    /// ([`crate::scheduler::ClusterState::forget`]).
+    pub gc_released: Vec<ObjectId>,
 }
 
 /// `NUMS_DEADLOCK_TIMEOUT_SECS` parsing (non-positive/garbage/absurd -> 30s).
@@ -113,6 +136,8 @@ struct ExecState {
     /// Remaining-consumer counts for refcount-releasable intermediates
     /// (empty unless a memory manager with lifetime GC is attached).
     live: HashMap<ObjectId, usize>,
+    /// Intermediates lifetime GC released so far (completion order).
+    released: Vec<ObjectId>,
 }
 
 struct Shared {
@@ -183,8 +208,17 @@ impl Shared {
     /// Next task for a worker on `me`: local front, then overflow, then a
     /// locality-aware steal — prefer the victim whose back task's inputs
     /// are already resident here, and strip half of a deeply-skewed
-    /// victim's deque in one steal.
-    fn pick(&self, st: &mut ExecState, me: usize, stores: &StoreSet) -> Option<usize> {
+    /// victim's deque in one steal. Batched-stolen tasks that land in
+    /// `me`'s deque (not run immediately) are appended to `reroute` so
+    /// the caller can re-route their in-flight prefetches to this node
+    /// once the state lock is dropped.
+    fn pick(
+        &self,
+        st: &mut ExecState,
+        me: usize,
+        stores: &StoreSet,
+        reroute: &mut Vec<usize>,
+    ) -> Option<usize> {
         if let Some(i) = st.ready[me].pop_front() {
             return Some(i);
         }
@@ -209,6 +243,7 @@ impl Shared {
             let mut it = batch.into_iter();
             let first = it.next();
             for t in it {
+                reroute.push(t);
                 st.ready[me].push_back(t);
             }
             // this node's deque just became stealable: wake parked workers
@@ -272,6 +307,12 @@ pub struct RealExecutor {
     /// Work stealing on/off (off = strict node-affinity FIFO; the
     /// ablation baseline for `SessionConfig::stealing`).
     pub stealing: bool,
+    /// Communication/compute overlap on/off: per-node transfer threads
+    /// prefetch near-ready tasks' remote inputs and absorb the memory
+    /// manager's spill writes (off = every byte is paid synchronously on
+    /// the worker hot path; the ablation baseline for
+    /// `SessionConfig::prefetch`).
+    pub prefetch: bool,
     /// Cluster memory manager: lifetime GC, replica eviction, and
     /// spill-to-disk (`None` = unmanaged, the pre-manager behavior).
     pub memory: Option<MemoryManager>,
@@ -291,12 +332,20 @@ impl RealExecutor {
             threads_per_node,
             deadlock_timeout,
             stealing: true,
+            prefetch: true,
             memory: None,
         }
     }
 
     pub fn with_stealing(mut self, on: bool) -> Self {
         self.stealing = on;
+        self
+    }
+
+    /// Toggle the communication-overlap pipeline (transfer threads:
+    /// input prefetching + async spill writes).
+    pub fn with_prefetch(mut self, on: bool) -> Self {
+        self.prefetch = on;
         self
     }
 
@@ -406,6 +455,7 @@ impl RealExecutor {
                 running: 0,
                 stats: vec![NodeExecStats::default(); k],
                 live,
+                released: Vec::new(),
             }),
             cv: Condvar::new(),
             failed: Mutex::new(None),
@@ -429,12 +479,74 @@ impl RealExecutor {
         let total_workers = k * self.threads_per_node;
         let deadlock_timeout = self.deadlock_timeout;
         let backend = self.backend.as_ref();
+        let topo = &self.topo;
         let shared = &shared;
+
+        // --- communication overlap ------------------------------------
+        // One transfer thread per node: background input pulls plus the
+        // memory manager's async spill writes. The Arc exists because the
+        // manager's spill-sink callback outlives this stack frame's
+        // borrows (it is detached before the Arc drops).
+        let prefetcher = self.prefetch.then(|| Arc::new(Prefetcher::new(k)));
+        let prefetcher_ref: Option<&Prefetcher> = prefetcher.as_deref();
+        if let (Some(mgr), Some(pf)) = (memory, &prefetcher) {
+            let pf2 = Arc::clone(pf);
+            mgr.attach_spill_sink(Arc::new(move |node| pf2.notify_spill(node)));
+        }
+        let gc_live = memory.map_or(false, |m| m.lifetime_gc);
+        // pulling a GC-released intermediate would resurrect dead bytes:
+        // the transfer threads check liveness right before moving data
+        let wanted = move |o: ObjectId| -> bool {
+            !gc_live
+                || !lt.evictable(o)
+                || shared.state.lock().unwrap().live.contains_key(&o)
+        };
+        let spill_oracle = move |o: ObjectId| lt.spillable(o);
+        // warm-start: near-ready tasks (≤ 1 unmet dep) can have their
+        // *available* remote inputs moved before any kernel runs — the
+        // unmet input cannot exist yet, so posting it would only send
+        // the transfer thread on a guaranteed-miss cluster scan
+        if let Some(pf) = prefetcher_ref {
+            if k > 1 {
+                let mut warm: Vec<(usize, ObjectId)> = Vec::new();
+                {
+                    let st = shared.state.lock().unwrap();
+                    for i in 0..n_tasks {
+                        if st.deps[i] > 1 {
+                            continue;
+                        }
+                        for &obj in &plan.tasks[i].inputs {
+                            if st.produced.contains(&obj) {
+                                warm.push((i, obj));
+                            }
+                        }
+                    }
+                }
+                for (i, obj) in warm {
+                    pf.request_pull(
+                        shared.task_node[i],
+                        obj,
+                        transfer_hint(plan, topo, i, obj),
+                    );
+                }
+            }
+        }
+
         std::thread::scope(|scope| {
+            if let Some(pf) = prefetcher_ref {
+                for node in 0..k {
+                    let wanted = &wanted;
+                    let spill_oracle = &spill_oracle;
+                    scope.spawn(move || {
+                        pf.serve(node, stores, memory, spill_oracle, wanted)
+                    });
+                }
+            }
+            let mut workers = Vec::with_capacity(total_workers);
             for node in 0..k {
                 for _ in 0..self.threads_per_node {
                     let stealing = self.stealing;
-                    scope.spawn(move || {
+                    workers.push(scope.spawn(move || {
                         let me = node;
                         let ctx = ExecContext::shared(total_workers, me, stealing);
                         loop {
@@ -447,7 +559,9 @@ impl RealExecutor {
                                 shared.cv.notify_all();
                                 return;
                             }
-                            let Some(idx) = shared.pick(&mut st, me, stores) else {
+                            let mut reroute = Vec::new();
+                            let Some(idx) = shared.pick(&mut st, me, stores, &mut reroute)
+                            else {
                                 // idle. Provably stuck? (nothing queued
                                 // anywhere, nothing running, work left)
                                 let all_empty = st.overflow.is_empty()
@@ -493,6 +607,13 @@ impl RealExecutor {
                             };
                             st.running += 1;
                             drop(st);
+                            // batched-stolen tasks now queued on this node:
+                            // re-route their in-flight prefetches here
+                            if let Some(pf) = prefetcher_ref {
+                                for &t in &reroute {
+                                    post_prefetch(pf, plan, topo, me, t);
+                                }
+                            }
 
                             let task = &plan.tasks[idx];
                             let stolen = shared.task_node[idx] != me;
@@ -504,13 +625,14 @@ impl RealExecutor {
                             let mut inputs: Vec<Arc<Block>> =
                                 Vec::with_capacity(task.inputs.len());
                             for &obj in &task.inputs {
+                                let before = moved;
                                 let got = match memory {
-                                    Some(mgr) => mgr
-                                        .acquire(stores, me, obj, &|o| lt.spillable(o))
-                                        .map(|(b, m)| {
-                                            moved += m;
-                                            b
-                                        }),
+                                    Some(mgr) => {
+                                        let (b, m) =
+                                            mgr.acquire(stores, me, obj, &|o| lt.spillable(o));
+                                        moved += m;
+                                        b
+                                    }
                                     None => {
                                         if !stores.contains(me, obj) {
                                             if let Some(src) = stores.locate(obj, me) {
@@ -521,11 +643,28 @@ impl RealExecutor {
                                     }
                                 };
                                 match got {
-                                    Some(b) => inputs.push(b),
+                                    Some(b) => {
+                                        if let Some(pf) = prefetcher_ref {
+                                            // resident without paying bytes,
+                                            // and a prefetch completed here:
+                                            // the overlap did its job
+                                            if moved == before
+                                                && pf.was_prefetched(me, obj)
+                                            {
+                                                pf.add_hit(me);
+                                            }
+                                        }
+                                        inputs.push(b)
+                                    }
                                     None => {
                                         vanished = Some(obj);
                                         break;
                                     }
+                                }
+                            }
+                            if let Some(pf) = prefetcher_ref {
+                                if moved > 0 {
+                                    pf.add_demand(me, moved);
                                 }
                             }
                             if let Some(obj) = vanished {
@@ -582,6 +721,11 @@ impl RealExecutor {
                                         st.stats[me].tasks_stolen += 1;
                                         st.stats[me].steal_bytes += moved;
                                     }
+                                    // tasks brought within ≤ 1 unmet dep:
+                                    // their available inputs can start
+                                    // moving now (the still-unmet one
+                                    // cannot exist yet — not posted)
+                                    let mut warm: Vec<(usize, ObjectId)> = Vec::new();
                                     for (obj, _) in &task.outputs {
                                         st.produced.insert(*obj);
                                         if let Some(cs) = shared.consumers.get(obj) {
@@ -596,6 +740,20 @@ impl RealExecutor {
                                                     st.deps[c] -= 1;
                                                     if st.deps[c] == 0 {
                                                         shared.enqueue(&mut st, c);
+                                                    }
+                                                    if prefetcher_ref.is_some()
+                                                        && k > 1
+                                                        && st.deps[c] <= 1
+                                                    {
+                                                        for &inp in
+                                                            &plan.tasks[c].inputs
+                                                        {
+                                                            if st.produced
+                                                                .contains(&inp)
+                                                            {
+                                                                warm.push((c, inp));
+                                                            }
+                                                        }
                                                     }
                                                 }
                                             }
@@ -613,8 +771,18 @@ impl RealExecutor {
                                             }
                                         }
                                     }
+                                    st.released.extend_from_slice(&dead);
                                     drop(st);
                                     shared.cv.notify_all();
+                                    if let Some(pf) = prefetcher_ref {
+                                        for &(c, obj) in &warm {
+                                            pf.request_pull(
+                                                shared.task_node[c],
+                                                obj,
+                                                transfer_hint(plan, topo, c, obj),
+                                            );
+                                        }
+                                    }
                                     if let Some(mgr) = memory {
                                         // outside the state lock: release
                                         // takes manager + store locks
@@ -635,15 +803,53 @@ impl RealExecutor {
                                 }
                             }
                         }
-                    });
+                    }));
                 }
+            }
+            // join the workers first, then stop the transfer threads:
+            // serve() drains its whole queue before exiting, so the scope
+            // join below is the async-spill write-completion barrier. A
+            // worker panic (an executor bug, not a kernel panic — those
+            // are caught) is re-raised only after the transfer threads
+            // are told to stop, so the scope can still close.
+            let mut panicked = None;
+            for w in workers {
+                if let Err(p) = w.join() {
+                    panicked.get_or_insert(p);
+                }
+            }
+            if let Some(pf) = prefetcher_ref {
+                pf.shutdown();
+            }
+            if let Some(p) = panicked {
+                std::panic::resume_unwind(p);
             }
         });
 
+        // overlap teardown: the transfer threads are gone, so detach the
+        // spill sink (back to synchronous writes) and finalize any spill
+        // entry that slipped past the drain
+        if prefetcher_ref.is_some() {
+            if let Some(mgr) = memory {
+                mgr.detach_spill_sink();
+                mgr.sweep_pending_spills(stores);
+            }
+        }
         if let Some(err) = shared.failed.lock().unwrap().take() {
             return Err(anyhow!(err));
         }
-        let stats = shared.state.lock().unwrap().stats.clone();
+        let (stats, released) = {
+            let st = shared.state.lock().unwrap();
+            (st.stats.clone(), st.released.clone())
+        };
+        if let Some(mgr) = memory {
+            // a prefetch racing a release can resurrect a dead
+            // intermediate as a replica; with the transfer threads
+            // quiesced, a second release is deterministic and final
+            for &obj in &released {
+                mgr.release(stores, obj);
+            }
+        }
         let mem_stats = match (memory, mem_start) {
             (Some(m), Some(s0)) => m
                 .stats()
@@ -653,13 +859,38 @@ impl RealExecutor {
                 .collect(),
             _ => Vec::new(),
         };
+        let prefetch_stats = prefetcher_ref.map(|p| p.stats()).unwrap_or_default();
         Ok(RealReport {
             wall_secs: sw.secs(),
             tasks: plan.len(),
             store_snapshot: stores.snapshot(),
             node_stats: stats,
             mem_stats,
+            prefetch_stats,
+            gc_released: released,
         })
+    }
+}
+
+/// Source-node hint for pulling input `obj` of task `i`: the
+/// scheduler's committed transfer decision ([`crate::exec::Transfer`]),
+/// whose `src` is a placement target, mapped to its physical node.
+fn transfer_hint(plan: &Plan, topo: &Topology, i: usize, obj: ObjectId) -> Option<usize> {
+    plan.tasks[i]
+        .transfers
+        .iter()
+        .find(|tr| tr.obj == obj)
+        .map(|tr| topo.node_of(tr.src))
+}
+
+/// Queue background pulls for every input of a *ready* task `i` toward
+/// `node` (used when a batch steal migrates queued tasks to a thief —
+/// deps == 0, so every input exists somewhere). Local or
+/// already-requested inputs are filtered by the transfer thread / the
+/// dedup table.
+fn post_prefetch(pf: &Prefetcher, plan: &Plan, topo: &Topology, node: usize, i: usize) {
+    for &obj in &plan.tasks[i].inputs {
+        pf.request_pull(node, obj, transfer_hint(plan, topo, i, obj));
     }
 }
 

@@ -10,12 +10,22 @@ use crate::runtime::kernel::Kernel;
 use crate::store::ObjectId;
 
 /// One data movement committed by the scheduler: `obj` from `src` target
-/// to the task's target.
+/// to the task's target. These are the load model's `PlacementSim::pulls`
+/// threaded through the plan — the real executor's prefetcher uses them
+/// as source hints to move each task's inputs *before* the task runs
+/// (`exec::prefetch`), and the DES charges them as modeled NIC time.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Transfer {
     pub obj: ObjectId,
     pub src: usize,
     pub elems: u64,
+}
+
+impl Transfer {
+    /// Bytes this movement puts on both NICs (f64 elements).
+    pub fn bytes(&self) -> u64 {
+        self.elems * 8
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -71,7 +81,7 @@ impl Plan {
         self.tasks
             .iter()
             .flat_map(|t| &t.transfers)
-            .map(|tr| tr.elems * 8)
+            .map(Transfer::bytes)
             .sum()
     }
 

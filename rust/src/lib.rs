@@ -25,6 +25,22 @@
 //! (default `true`) toggles stealing per session — `false` reproduces
 //! strict node-affinity FIFO execution for ablations.
 //!
+//! Communication overlaps compute ([`exec::Prefetcher`],
+//! `SessionConfig::prefetch`, default on): each node runs a transfer
+//! thread that pulls the remote inputs of *near-ready* tasks — unmet
+//! dependency count ≤ 1, using the scheduler's committed per-task
+//! transfer decisions carried in the [`exec::Plan`] as source hints — so
+//! by the time a worker dequeues a task its inputs are usually resident.
+//! A prefetch miss just falls back to the demand pull; a stolen task
+//! re-routes its in-flight prefetches to the thief's node; and the
+//! memory manager's spill writes ride the same transfer threads
+//! (asynchronous spill with a write-completion barrier, so a reader can
+//! never observe a half-written spill file). Per-node
+//! `(prefetch_bytes, prefetch_hits, demand_pull_bytes,
+//! async_spill_bytes)` land in `RealReport::prefetch_stats`, and
+//! `prefetch_bytes + demand_pull_bytes` accounts every cross-node byte
+//! of the run exactly once.
+//!
 //! ## Memory model
 //!
 //! The real executor owns a cluster [`store::MemoryManager`]. Before a

@@ -81,6 +81,24 @@ impl ClusterState {
             .unwrap_or(&[])
     }
 
+    /// Drop a dead object from the load model: the real executor's
+    /// lifetime GC freed it, so later `schedule()` calls on this session
+    /// must not count its bytes in the Eq. 2 memory term. Every copy's
+    /// elements leave `mem` and the cached maximum is recomputed (the
+    /// network terms stay — they model cumulative traffic, which really
+    /// happened). No-op for unknown ids.
+    pub fn forget(&mut self, obj: ObjectId) {
+        let Some(elems) = self.sizes.remove(&obj) else { return };
+        if let Some(locs) = self.locations.remove(&obj) {
+            // one entry per copy: placement_cost never pulls to a target
+            // already in the list, so entries are distinct
+            for t in locs {
+                self.mem[t] -= elems;
+            }
+        }
+        self.max_mem = self.mem.iter().cloned().fold(0.0, f64::max);
+    }
+
     pub fn size_of(&self, obj: ObjectId) -> f64 {
         *self.sizes.get(&obj).unwrap_or(&0.0)
     }
@@ -244,6 +262,30 @@ mod tests {
         s.locations.entry(1).or_default().push(1);
         let sim1 = s.placement_cost(2, &[1], 0.0);
         assert_eq!(sim1.pulls[0].1, 1); // cheaper source chosen
+    }
+
+    #[test]
+    fn forget_removes_every_copy_and_lowers_the_memory_term() {
+        let mut s = ClusterState::new(ray_topo(2));
+        s.register(1, 50.0, 0);
+        s.register(2, 30.0, 0);
+        // pull object 1 to node 1: two copies in the model
+        let sim = s.placement_cost(1, &[1], 10.0);
+        s.apply(1, &sim, &[(3, 10.0)]);
+        assert_eq!(s.mem[0], 80.0);
+        assert_eq!(s.mem[1], 60.0);
+        s.forget(1);
+        assert_eq!(s.mem[0], 30.0, "primary copy forgotten");
+        assert_eq!(s.mem[1], 10.0, "replica copy forgotten");
+        assert!(s.locations_of(1).is_empty());
+        assert_eq!(s.size_of(1), 0.0);
+        // the cached maximum follows the decrements, so the next
+        // placement decision sees the real (lower) load
+        let after = s.placement_cost(0, &[2], 0.0);
+        assert!((after.cost - (30.0 + 50.0 + 50.0)).abs() < 1e-9);
+        // unknown ids are a no-op
+        s.forget(99);
+        assert_eq!(s.mem[0], 30.0);
     }
 
     #[test]

@@ -83,12 +83,14 @@ pub mod pool {
     }
 
     /// Return a transient buffer to the pool (dropped if the pool is full
-    /// or the buffer is oversized).
+    /// or the buffer is oversized). Safe to call from any drop context:
+    /// if this thread's pool has already been torn down (TLS destruction
+    /// order), the buffer is simply freed.
     pub fn recycle(v: Vec<f64>) {
         if v.capacity() == 0 || v.capacity() > MAX_ELEMS {
             return;
         }
-        FREE.with(|p| {
+        let _ = FREE.try_with(|p| {
             let mut p = p.borrow_mut();
             let pooled: usize = p.iter().map(|b| b.capacity()).sum();
             if p.len() < MAX_POOLED && pooled + v.capacity() <= MAX_TOTAL_ELEMS {
@@ -187,8 +189,9 @@ impl Block {
         }
     }
 
-    pub fn into_vec(self) -> Vec<f64> {
-        match self.data {
+    pub fn into_vec(mut self) -> Vec<f64> {
+        // swap the buffer out so the pool-recycling Drop sees a phantom
+        match std::mem::replace(&mut self.data, BlockData::Phantom) {
             BlockData::Real(v) => v,
             BlockData::Phantom => panic!("into_vec() on phantom block"),
         }
@@ -257,6 +260,20 @@ impl Block {
     pub fn max_abs_diff(&self, other: &Block) -> f64 {
         assert_eq!(self.shape, other.shape);
         crate::util::stats::max_abs_diff(self.buf(), other.buf())
+    }
+}
+
+/// Pool-aware drop: a dying block's backing buffer goes back to this
+/// thread's pool instead of the allocator, so stored task outputs —
+/// released by lifetime GC, eviction, or store teardown — feed the next
+/// task's allocation (the other half of the `pool` story; kernels
+/// already recycle their scratch explicitly). The pool's size caps bound
+/// the resident waste; oversized or capacity-less buffers free as usual.
+impl Drop for Block {
+    fn drop(&mut self) {
+        if let BlockData::Real(v) = &mut self.data {
+            pool::recycle(std::mem::take(v));
+        }
     }
 }
 
@@ -346,6 +363,25 @@ mod tests {
             assert_eq!(tiny, vec![1.0, 2.0, 3.0]);
             assert!(tiny.capacity() < cap, "over-sized reuse must be refused");
             assert_eq!(pool::stats().0, 1);
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn dropping_a_block_recycles_its_buffer() {
+        std::thread::spawn(|| {
+            let b = Block::from_vec(&[8, 8], vec![1.0; 64]);
+            drop(b);
+            assert_eq!(pool::stats().0, 1, "dropped block must feed the pool");
+            // and the recycled buffer comes back zeroed
+            let v = pool::alloc_zeroed(64);
+            assert!(v.iter().all(|&x| x == 0.0));
+            assert_eq!(pool::stats().0, 0);
+            // into_vec opts out: the caller owns the buffer, nothing pooled
+            let w = Block::from_vec(&[2, 2], vec![2.0; 4]).into_vec();
+            assert_eq!(w, vec![2.0; 4]);
+            assert_eq!(pool::stats().0, 0);
         })
         .join()
         .unwrap();

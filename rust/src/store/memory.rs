@@ -19,7 +19,15 @@
 //!   (`NodeMemStats::spilled_bytes`) and transparently read back on the
 //!   next access (`readback_bytes`) — the real-execution counterpart of
 //!   the DES `spill_penalty`/`spill_readback` model, so the two can be
-//!   diffed.
+//!   diffed. With a spill sink attached (the real executor's per-node
+//!   transfer threads, [`crate::exec::Prefetcher`]) the file write is
+//!   *asynchronous*: the victim leaves the store immediately, its block
+//!   is parked on the spill entry (`pending`) until the transfer thread
+//!   completes the write, and every reader checks the entry first — so
+//!   `acquire` can never observe a half-written file. A spill file is
+//!   kept until its object is released or re-put; re-spilling an object
+//!   whose on-disk copy is still current skips the write entirely
+//!   (`spill_reuse_bytes`).
 //! * **replicas** — a cross-node pull (work stealing, remote inputs)
 //!   leaves a copy on the destination. The manager registers that copy as
 //!   a *replica* whose primary lives elsewhere; replicas of still-live
@@ -47,14 +55,18 @@ use super::object_store::{ObjectId, StoreSet};
 /// executor reports per-run deltas via [`NodeMemStats::delta`]).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct NodeMemStats {
-    /// Bytes written to this node's spill files.
+    /// Bytes written to this node's spill files (sync or async writes).
     pub spilled_bytes: u64,
-    /// Bytes read back from spill files on access.
+    /// Bytes restored from spill on access: disk reads, plus restores of
+    /// a still-pending block whose async write had not finished yet.
     pub readback_bytes: u64,
     /// Bytes reclaimed by evicting replica copies (primary elsewhere).
     pub evicted_replica_bytes: u64,
     /// Bytes reclaimed by lifetime GC (dead intermediates).
     pub gc_freed_bytes: u64,
+    /// Bytes shed by re-spilling an unchanged object whose on-disk copy
+    /// was still current — no file write happened (spill-file reuse).
+    pub spill_reuse_bytes: u64,
 }
 
 impl NodeMemStats {
@@ -67,18 +79,35 @@ impl NodeMemStats {
                 .evicted_replica_bytes
                 .saturating_sub(earlier.evicted_replica_bytes),
             gc_freed_bytes: self.gc_freed_bytes.saturating_sub(earlier.gc_freed_bytes),
+            spill_reuse_bytes: self
+                .spill_reuse_bytes
+                .saturating_sub(earlier.spill_reuse_bytes),
         }
     }
 }
 
-/// A primary block paged out to disk: raw little-endian f64 data in
-/// `path`, shape kept in memory.
+/// A primary block with a spill copy: raw little-endian f64 data in
+/// `path` once `on_disk`, shape kept in memory. While an asynchronous
+/// write is queued the block itself is parked in `pending` — readers use
+/// it directly, which is what makes a half-written `path` unobservable.
+/// The entry survives read-back (the file stays current until the object
+/// is released or re-put), so a later re-spill of the unchanged object
+/// reuses the file instead of rewriting it.
 #[derive(Debug)]
 struct Spilled {
     path: PathBuf,
     shape: Vec<usize>,
     bytes: u64,
+    /// In-memory copy awaiting its async write (`None` once on disk).
+    pending: Option<Arc<Block>>,
+    /// `path` holds a complete, current copy of the object.
+    on_disk: bool,
 }
+
+/// Callback the real executor installs so budget pressure can hand spill
+/// writes to the per-node transfer threads instead of blocking a worker:
+/// invoked with the node id whenever async spill work is queued.
+pub type SpillSink = Arc<dyn Fn(usize) + Send + Sync>;
 
 /// Per-node manager state (one mutex per node, like the stores).
 #[derive(Default)]
@@ -89,8 +118,12 @@ struct NodeMem {
     last_touch: HashMap<ObjectId, u64>,
     /// Resident ids whose primary copy lives on another node.
     replicas: HashSet<ObjectId>,
-    /// Primary blocks paged out to disk (replicas are evicted, never
-    /// spilled — their primary still holds the data).
+    /// Spill copies of primaries (replicas are evicted, never spilled —
+    /// their primary still holds the data). An entry means "a current
+    /// copy exists outside the store": parked in memory awaiting its
+    /// async write, on disk while the object is paged out, or on disk
+    /// as the *clean* twin of a read-back resident object (kept so a
+    /// re-spill is free).
     spilled: HashMap<ObjectId, Spilled>,
     stats: NodeMemStats,
 }
@@ -128,6 +161,9 @@ pub struct MemoryManager {
     /// False when the spill directory could not be created: pressure then
     /// falls back to replica eviction only.
     spill_ok: bool,
+    /// Async spill sink (the executor's transfer threads). `None` =
+    /// synchronous writes, the standalone/creation-time behavior.
+    sink: Mutex<Option<SpillSink>>,
 }
 
 impl MemoryManager {
@@ -144,7 +180,23 @@ impl MemoryManager {
             nodes: (0..num_nodes).map(|_| Mutex::new(NodeMem::default())).collect(),
             spill_root,
             spill_ok,
+            sink: Mutex::new(None),
         }
+    }
+
+    /// Route spill writes through `sink` (the executor's per-node
+    /// transfer threads) for the duration of a run. The executor must
+    /// guarantee every notification is eventually followed by a
+    /// [`MemoryManager::process_pending_spills`] on that node.
+    pub fn attach_spill_sink(&self, sink: SpillSink) {
+        *self.sink.lock().unwrap() = Some(sink);
+    }
+
+    /// Back to synchronous spill writes (run teardown). Callers should
+    /// [`MemoryManager::sweep_pending_spills`] afterwards so no entry is
+    /// left parked in memory.
+    pub fn detach_spill_sink(&self) {
+        *self.sink.lock().unwrap() = None;
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -182,7 +234,10 @@ impl MemoryManager {
         spillable: &dyn Fn(ObjectId) -> bool,
     ) {
         let mut nm = self.nodes[node].lock().unwrap();
-        // a re-put supersedes any stale spill file for this id
+        // a re-put supersedes any spill copy for this id: drop the entry
+        // (clean bit, pending block and all) and delete the stale file.
+        // An async write still in flight detects the superseded entry at
+        // finalize time (Arc identity mismatch) and deletes its output.
         if let Some(sp) = nm.spilled.remove(&id) {
             let _ = std::fs::remove_file(&sp.path);
         }
@@ -237,12 +292,16 @@ impl MemoryManager {
         if !self.spill_ok {
             return;
         }
-        // pass 2 — coldest spillable primaries -> disk
+        let sink = self.sink.lock().unwrap().clone();
+        let mut queued = false;
+        // pass 2 — coldest spillable primaries -> disk (async when a sink
+        // is attached: the victim leaves the store now, the file write
+        // happens on a transfer thread)
         for &(_, o) in &order {
             if stores.node_bytes(node) <= budget {
-                return;
+                break;
             }
-            if !spillable(o) || nm.spilled.contains_key(&o) || !nm.last_touch.contains_key(&o) {
+            if !spillable(o) || !nm.last_touch.contains_key(&o) {
                 continue;
             }
             let Some(b) = stores.get(node, o) else {
@@ -253,30 +312,142 @@ impl MemoryManager {
                 nm.forget(o); // sim blocks carry no data to page out
                 continue;
             }
-            let path = self.spill_path(node, o);
-            if write_spill(&path, b.buf()).is_err() {
-                return; // disk trouble: keep the block resident
+            // a current spill copy may already exist: parked in memory
+            // (in-flight async write) or clean on disk. The `on_disk`
+            // bit is trustworthy — a failed read-back clears it — so
+            // shedding the resident copy costs nothing and no file is
+            // rewritten (spill-file reuse).
+            let spill_copy = nm
+                .spilled
+                .get(&o)
+                .map(|sp| (sp.pending.is_some() || sp.on_disk, sp.path.clone()));
+            if let Some((usable, stale_path)) = spill_copy {
+                if usable {
+                    stores.remove(node, o);
+                    nm.stats.spill_reuse_bytes += b.bytes();
+                    nm.forget(o);
+                    continue;
+                }
+                // dead entry (read failed, write never completed):
+                // discard it and fall through to a fresh write
+                let _ = std::fs::remove_file(&stale_path);
+                nm.spilled.remove(&o);
             }
-            stores.remove(node, o);
-            nm.stats.spilled_bytes += b.bytes();
-            nm.spilled.insert(
-                o,
-                Spilled {
-                    path,
-                    shape: b.shape.clone(),
-                    bytes: b.bytes(),
-                },
-            );
-            nm.forget(o);
+            let path = self.spill_path(node, o);
+            match &sink {
+                Some(_) => {
+                    // async: park the block on the entry, free the store
+                    // immediately, let the transfer thread write the file
+                    stores.remove(node, o);
+                    nm.spilled.insert(
+                        o,
+                        Spilled {
+                            path,
+                            shape: b.shape.clone(),
+                            bytes: b.bytes(),
+                            pending: Some(b),
+                            on_disk: false,
+                        },
+                    );
+                    nm.forget(o);
+                    queued = true;
+                }
+                None => {
+                    if write_spill(&path, b.buf()).is_err() {
+                        return; // disk trouble: keep the block resident
+                    }
+                    stores.remove(node, o);
+                    nm.stats.spilled_bytes += b.bytes();
+                    nm.spilled.insert(
+                        o,
+                        Spilled {
+                            path,
+                            shape: b.shape.clone(),
+                            bytes: b.bytes(),
+                            pending: None,
+                            on_disk: true,
+                        },
+                    );
+                    nm.forget(o);
+                }
+            }
+        }
+        if queued {
+            if let Some(notify) = &sink {
+                notify(node);
+            }
         }
         // snapshot exhausted while still over budget: everything left is
         // pinned, unmanaged, or already spilled — stay over, soft budget
     }
 
-    /// Read a spilled block back into `node`'s store. Caller holds the
-    /// node lock; returns `None` if the id is not spilled here or the
+    /// Complete `node`'s queued asynchronous spill writes; returns the
+    /// bytes written. Runs on the executor's transfer thread (or inline
+    /// from [`MemoryManager::sweep_pending_spills`] at teardown). Each
+    /// file write happens outside the node lock; at finalize time the
+    /// entry must still hold the very block that was written (Arc
+    /// identity), otherwise the entry was superseded or released
+    /// mid-write and the stale file is deleted instead.
+    pub fn process_pending_spills(&self, stores: &StoreSet, node: usize) -> u64 {
+        let mut written = 0u64;
+        loop {
+            let next = {
+                let nm = self.nodes[node].lock().unwrap();
+                nm.spilled.iter().find_map(|(&o, sp)| {
+                    sp.pending
+                        .as_ref()
+                        .map(|b| (o, sp.path.clone(), Arc::clone(b), sp.bytes))
+                })
+            };
+            let Some((obj, path, block, bytes)) = next else {
+                return written;
+            };
+            let ok = write_spill(&path, block.buf()).is_ok();
+            let mut nm = self.nodes[node].lock().unwrap();
+            match nm.spilled.get_mut(&obj) {
+                Some(sp)
+                    if sp
+                        .pending
+                        .as_ref()
+                        .map_or(false, |b| Arc::ptr_eq(b, &block)) =>
+                {
+                    if ok {
+                        sp.pending = None;
+                        sp.on_disk = true;
+                        nm.stats.spilled_bytes += bytes;
+                        written += bytes;
+                    } else {
+                        // disk trouble: reinstate the block (over budget
+                        // beats losing the only copy — same policy as the
+                        // synchronous path)
+                        nm.spilled.remove(&obj);
+                        stores.put(node, obj, block);
+                        nm.touch(obj);
+                    }
+                }
+                _ => {
+                    // superseded (re-put) or released mid-write: whatever
+                    // we just wrote is stale
+                    let _ = std::fs::remove_file(&path);
+                }
+            }
+        }
+    }
+
+    /// Inline [`MemoryManager::process_pending_spills`] over every node —
+    /// run-teardown safety net so no entry stays parked in memory.
+    pub fn sweep_pending_spills(&self, stores: &StoreSet) -> u64 {
+        (0..self.nodes.len())
+            .map(|n| self.process_pending_spills(stores, n))
+            .sum()
+    }
+
+    /// Restore a spilled block into `node`'s store. Caller holds the
+    /// node lock; returns `None` if the id has no spill copy here or the
     /// file is unreadable (the entry survives a failed read, so a
-    /// transient error can be retried).
+    /// transient error can be retried). The entry itself is *kept*: a
+    /// pending async write completes into a clean on-disk copy, and a
+    /// clean copy makes the next re-spill of the unchanged object free.
     fn readback_locked(
         &self,
         stores: &StoreSet,
@@ -284,16 +455,34 @@ impl MemoryManager {
         nm: &mut MutexGuard<'_, NodeMem>,
         id: ObjectId,
     ) -> Option<Arc<Block>> {
-        // read first, drop the entry only on success: a transient read
-        // failure must not orphan the only record of a spilled primary
-        let (path, shape, bytes) = {
+        let (path, shape, bytes, pending) = {
             let sp = nm.spilled.get(&id)?;
-            (sp.path.clone(), sp.shape.clone(), sp.bytes)
+            (sp.path.clone(), sp.shape.clone(), sp.bytes, sp.pending.clone())
         };
-        let data = read_spill(&path, bytes)?;
-        nm.spilled.remove(&id);
-        let _ = std::fs::remove_file(&path);
-        let block = Arc::new(Block::from_vec(&shape, data));
+        let block = match pending {
+            // async write still in flight: the parked block *is* the
+            // object — no disk involved, and never a half-written file
+            Some(b) => b,
+            None => match read_spill(&path, bytes) {
+                Some(data) => {
+                    // a fresh successful read re-earns the clean bit (a
+                    // transient earlier failure may have cleared it)
+                    if let Some(sp) = nm.spilled.get_mut(&id) {
+                        sp.on_disk = true;
+                    }
+                    Arc::new(Block::from_vec(&shape, data))
+                }
+                None => {
+                    // unreadable file: clear the clean bit so the
+                    // spill-reuse path never trusts this copy with the
+                    // only resident bytes (retries may still succeed)
+                    if let Some(sp) = nm.spilled.get_mut(&id) {
+                        sp.on_disk = false;
+                    }
+                    return None;
+                }
+            },
+        };
         stores.put(node, id, block.clone());
         nm.stats.readback_bytes += bytes;
         nm.touch(id);
@@ -302,43 +491,48 @@ impl MemoryManager {
 
     /// Obtain `id` on `node` for kernel input: resident copy, spill
     /// read-back, or cross-node pull (registering the new copy as a
-    /// replica). Returns the block plus the bytes moved over the "NIC".
-    /// `None` means no store and no spill file holds the object.
+    /// replica). Returns the block (`None` when no store and no spill
+    /// file holds the object) plus the bytes moved over the "NIC" — the
+    /// bytes are reported even on failure, because a pull that succeeded
+    /// and then lost its copy to eviction still put real traffic on the
+    /// network (the executor's byte-accounting identity depends on it).
     pub fn acquire(
         &self,
         stores: &StoreSet,
         node: usize,
         id: ObjectId,
         spillable: &dyn Fn(ObjectId) -> bool,
-    ) -> Option<(Arc<Block>, u64)> {
+    ) -> (Option<Arc<Block>>, u64) {
         let mut moved = 0u64;
         // consecutive scans that found the object nowhere: a transient
-        // total miss can happen while a read-back transitions an entry
-        // from `spilled` to the store, but it cannot persist across
-        // scans, so a few repeats conclude "gone" without burning all
-        // MAX_ACQUIRE_ATTEMPTS on lock traffic
+        // total miss can happen while a copy is between homes — e.g. a
+        // replica evicted on one node between our store and spill checks
+        // while the primary moves on another — but it cannot persist
+        // across scans, so a few repeats conclude "gone" without burning
+        // all MAX_ACQUIRE_ATTEMPTS on lock traffic
         let mut total_misses = 0usize;
         for _ in 0..MAX_ACQUIRE_ATTEMPTS {
             {
                 let mut nm = self.nodes[node].lock().unwrap();
                 if let Some(b) = stores.get(node, id) {
                     nm.touch(id);
-                    return Some((b, moved));
+                    return (Some(b), moved);
                 }
                 if nm.spilled.contains_key(&id) {
                     if let Some(b) = self.readback_locked(stores, node, &mut nm, id) {
                         self.enforce_budget(stores, node, &mut nm, spillable);
-                        return Some((b, moved));
+                        return (Some(b), moved);
                     }
                     // unreadable local spill file: fall through — a live
                     // copy may still exist on another node
                 }
             }
             // remote copy: resident or spilled on some other node. A miss
-            // here retries rather than aborting immediately: a concurrent
-            // read-back clears the spilled entry before the store copy
-            // appears, so an unlucky interleaving of the two checks can
-            // transiently see neither.
+            // here retries rather than aborting immediately: eviction can
+            // remove a node's replica between our per-node store and
+            // spill checks while another node still holds (or is about to
+            // re-hold) a copy, so one unlucky sweep can transiently see
+            // neither.
             let Some(src) = (0..self.nodes.len()).find(|&n| {
                 n != node
                     && (stores.contains(n, id)
@@ -346,7 +540,7 @@ impl MemoryManager {
             }) else {
                 total_misses += 1;
                 if total_misses >= 3 {
-                    return None; // nowhere, repeatedly: genuinely gone
+                    return (None, moved); // nowhere, repeatedly: gone
                 }
                 std::thread::yield_now();
                 continue;
@@ -373,14 +567,14 @@ impl MemoryManager {
                         nm.replicas.insert(id);
                         nm.touch(id);
                         self.enforce_budget(stores, node, &mut nm, spillable);
-                        return Some((b, moved));
+                        return (Some(b), moved);
                     }
                     // evicted between transfer and get (budget thrash): retry
                 }
                 None => continue, // source lost the copy mid-flight: rescan
             }
         }
-        None
+        (None, moved)
     }
 
     /// Whether any node holds `id`, resident or spilled (dependency
@@ -409,9 +603,14 @@ impl MemoryManager {
                 let found = nm
                     .spilled
                     .get(&id)
-                    .map(|sp| (sp.path.clone(), sp.shape.clone(), sp.bytes));
+                    .map(|sp| (sp.pending.clone(), sp.path.clone(), sp.shape.clone(), sp.bytes));
                 drop(nm);
-                if let Some((path, shape, bytes)) = found {
+                if let Some((pending, path, shape, bytes)) = found {
+                    // an in-flight async write: the parked block is the
+                    // object (the file may be half-written — never read it)
+                    if let Some(b) = pending {
+                        return Some(b);
+                    }
                     if let Some(data) = read_spill(&path, bytes) {
                         return Some(Arc::new(Block::from_vec(&shape, data)));
                     }
@@ -427,12 +626,17 @@ impl MemoryManager {
     pub fn release(&self, stores: &StoreSet, id: ObjectId) {
         for n in 0..self.nodes.len() {
             let mut nm = self.nodes[n].lock().unwrap();
-            if let Some(b) = stores.remove(n, id) {
+            let resident = stores.remove(n, id);
+            if let Some(b) = &resident {
                 nm.stats.gc_freed_bytes += b.bytes();
             }
             if let Some(sp) = nm.spilled.remove(&id) {
                 let _ = std::fs::remove_file(&sp.path);
-                nm.stats.gc_freed_bytes += sp.bytes;
+                // a clean-on-disk copy of a *resident* object is the same
+                // bytes twice — count the free once
+                if resident.is_none() {
+                    nm.stats.gc_freed_bytes += sp.bytes;
+                }
             }
             nm.forget(id);
         }
@@ -515,7 +719,8 @@ mod tests {
         assert_eq!(st.spilled_bytes, 160, "two 80-byte blocks paged out");
         assert!(!stores.contains(0, 0) && !stores.contains(0, 1));
         // acquire a spilled block: read back bit-identically
-        let (b, moved) = mgr.acquire(&stores, 0, 0, ALL).unwrap();
+        let (b, moved) = mgr.acquire(&stores, 0, 0, ALL);
+        let b = b.unwrap();
         assert_eq!(moved, 0, "read-back is disk, not network");
         assert!(b.buf().iter().all(|&v| v == 0.0));
         assert_eq!(b.shape, vec![10, 1]);
@@ -534,7 +739,8 @@ mod tests {
         // a second insert pushes object 1 to disk
         mgr.insert(&stores, 0, 2, blk(10, 2.0), ALL);
         assert!(!stores.contains(0, 1), "object 1 must have spilled");
-        let (b, _) = mgr.acquire(&stores, 0, 1, ALL).unwrap();
+        let (b, _) = mgr.acquire(&stores, 0, 1, ALL);
+        let b = b.unwrap();
         for (a, w) in b.buf().iter().zip(&original) {
             assert_eq!(a.to_bits(), w.to_bits(), "spill round-trip changed bits");
         }
@@ -558,7 +764,8 @@ mod tests {
         let mgr = MemoryManager::new(2, Some(160), true);
         mgr.insert(&stores, 0, 1, blk(10, 1.0), ALL);
         // pull object 1 to node 1: now a replica there
-        let (_, moved) = mgr.acquire(&stores, 1, 1, ALL).unwrap();
+        let (b, moved) = mgr.acquire(&stores, 1, 1, ALL);
+        assert!(b.is_some());
         assert_eq!(moved, 80, "cross-node pull pays bytes");
         assert!(stores.contains(1, 1));
         // pressure node 1 past its budget: the replica goes first, free
@@ -570,9 +777,9 @@ mod tests {
         assert!(!stores.contains(1, 1), "replica gone from node 1");
         assert!(stores.contains(0, 1), "primary intact on node 0");
         // and the object is still acquirable on node 1 (re-pull)
-        let (b, moved2) = mgr.acquire(&stores, 1, 1, ALL).unwrap();
+        let (b, moved2) = mgr.acquire(&stores, 1, 1, ALL);
         assert_eq!(moved2, 80);
-        assert_eq!(b.buf()[0], 1.0);
+        assert_eq!(b.unwrap().buf()[0], 1.0);
     }
 
     #[test]
@@ -623,17 +830,115 @@ mod tests {
             readback_bytes: 50,
             evicted_replica_bytes: 10,
             gc_freed_bytes: 7,
+            spill_reuse_bytes: 5,
         };
         let b = NodeMemStats {
             spilled_bytes: 40,
             readback_bytes: 50,
             evicted_replica_bytes: 0,
             gc_freed_bytes: 7,
+            spill_reuse_bytes: 5,
         };
         let d = a.delta(&b);
         assert_eq!(d.spilled_bytes, 60);
         assert_eq!(d.readback_bytes, 0);
         assert_eq!(d.evicted_replica_bytes, 10);
         assert_eq!(d.gc_freed_bytes, 0);
+        assert_eq!(d.spill_reuse_bytes, 0);
+    }
+
+    #[test]
+    fn respill_of_unchanged_object_reuses_the_file() {
+        // budget = 1 block: objects 1 and 2 keep displacing each other.
+        // Each must be *written* exactly once; later spills of the same
+        // unchanged object just drop the resident copy (clean bit).
+        let stores = StoreSet::new(1);
+        let mgr = MemoryManager::new(1, Some(80), true);
+        mgr.insert(&stores, 0, 1, blk(10, 1.0), ALL);
+        mgr.insert(&stores, 0, 2, blk(10, 2.0), ALL); // writes 1
+        assert_eq!(mgr.stats()[0].spilled_bytes, 80);
+        let spill_file = mgr.spill_path(0, 1);
+        assert!(spill_file.exists());
+        // read 1 back: 2 pages out (first write for 2), and 1's file is
+        // kept — its resident copy is now clean
+        let (b1, _) = mgr.acquire(&stores, 0, 1, ALL);
+        assert_eq!(b1.unwrap().buf()[0], 1.0);
+        assert!(spill_file.exists(), "read-back must keep the spill file");
+        assert_eq!(mgr.stats()[0].spilled_bytes, 160, "2 paged out, one write");
+        // read 2 back: 1 is re-spilled, but its file is current — no write
+        let (b2, _) = mgr.acquire(&stores, 0, 2, ALL);
+        assert_eq!(b2.unwrap().buf()[0], 2.0);
+        let st = &mgr.stats()[0];
+        assert_eq!(st.spilled_bytes, 160, "unchanged object must not rewrite");
+        assert_eq!(st.spill_reuse_bytes, 80, "re-spill of 1 reused its file");
+        // and the reused copy still reads back bit-correct
+        let (b1b, _) = mgr.acquire(&stores, 0, 1, ALL);
+        assert_eq!(b1b.unwrap().buf()[0], 1.0);
+    }
+
+    #[test]
+    fn reput_invalidates_the_clean_spill_copy() {
+        let stores = StoreSet::new(1);
+        let mgr = MemoryManager::new(1, Some(80), true);
+        mgr.insert(&stores, 0, 1, blk(10, 1.0), ALL);
+        mgr.insert(&stores, 0, 2, blk(10, 2.0), ALL); // writes 1
+        mgr.acquire(&stores, 0, 1, ALL).0.unwrap(); // 1 clean-resident
+        // new contents for 1: the old file must die with the clean bit
+        mgr.insert(&stores, 0, 1, blk(10, 9.0), ALL);
+        // pressure 1 out again: this must be a fresh write, not a reuse
+        mgr.acquire(&stores, 0, 2, ALL).0.unwrap();
+        let (b, _) = mgr.acquire(&stores, 0, 1, ALL);
+        assert_eq!(b.unwrap().buf()[0], 9.0, "stale spill file served after re-put");
+        assert_eq!(mgr.stats()[0].spill_reuse_bytes, 0);
+    }
+
+    #[test]
+    fn async_spill_parks_pending_blocks_until_swept() {
+        // sink attached but never serviced: victims leave the store
+        // instantly, data stays readable from the pending entry, and the
+        // write-completion sweep finalizes files + counters
+        let stores = StoreSet::new(1);
+        let mgr = MemoryManager::new(1, Some(80), true);
+        let notified = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let n2 = Arc::clone(&notified);
+        mgr.attach_spill_sink(Arc::new(move |_node| {
+            n2.fetch_add(1, Ordering::Relaxed);
+        }));
+        mgr.insert(&stores, 0, 1, blk(10, 1.0), ALL);
+        mgr.insert(&stores, 0, 2, blk(10, 2.0), ALL); // queues 1
+        assert!(notified.load(Ordering::Relaxed) >= 1, "sink must be notified");
+        assert!(!stores.contains(0, 1), "victim leaves the store immediately");
+        assert_eq!(mgr.stats()[0].spilled_bytes, 0, "write not performed yet");
+        assert!(
+            !mgr.spill_path(0, 1).exists(),
+            "no file before the transfer thread runs"
+        );
+        // acquire while pending: served from the parked block, no disk
+        let (b, moved) = mgr.acquire(&stores, 0, 1, ALL);
+        assert_eq!(moved, 0);
+        assert_eq!(b.unwrap().buf()[0], 1.0);
+        // the barrier: sweep completes whatever write is still queued
+        // (re-acquiring 1 displaced 2, so 2 is pending now)
+        let written = mgr.sweep_pending_spills(&stores);
+        assert!(written > 0, "sweep must perform the queued writes");
+        assert_eq!(mgr.stats()[0].spilled_bytes, written);
+        mgr.detach_spill_sink();
+        let (b2, _) = mgr.acquire(&stores, 0, 2, ALL);
+        assert_eq!(b2.unwrap().buf()[0], 2.0, "swept file must read back correctly");
+    }
+
+    #[test]
+    fn release_of_pending_spill_drops_the_parked_block() {
+        let stores = StoreSet::new(1);
+        let mgr = MemoryManager::new(1, Some(80), true);
+        mgr.attach_spill_sink(Arc::new(|_| {}));
+        mgr.insert(&stores, 0, 1, blk(10, 1.0), ALL);
+        mgr.insert(&stores, 0, 2, blk(10, 2.0), ALL); // queues 1
+        mgr.release(&stores, 1);
+        assert!(!mgr.holds(&stores, 1));
+        // the queued write finds its entry gone and must not leave a file
+        assert_eq!(mgr.sweep_pending_spills(&stores), 0);
+        assert!(!mgr.spill_path(0, 1).exists());
+        assert_eq!(mgr.stats()[0].gc_freed_bytes, 80);
     }
 }

@@ -1,0 +1,418 @@
+//! Communication/compute-overlap suites: prefetching and the async spill
+//! pipeline must be pure latency optimizations — outputs bit-identical to
+//! sequential plan-order execution (and to the prefetch-off executor) for
+//! every random graph, node count, thread count, stealing mode and memory
+//! budget — and every cross-node byte must be accounted exactly once:
+//! per node, `prefetch_bytes + demand_pull_bytes == net_in` (the
+//! steal-adjusted transfer bytes the stores themselves counted).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use nums::api::ops;
+use nums::exec::{Plan, RealExecutor, RealReport, Task};
+use nums::prelude::*;
+use nums::runtime::native;
+use nums::store::{MemoryManager, StoreSet};
+use nums::util::prop::forall_res;
+
+/// Sequential oracle: run the plan in order, single process, no stores.
+fn run_sequential(plan: &Plan, seeds: &HashMap<u64, Block>) -> HashMap<u64, Block> {
+    let mut env: HashMap<u64, Block> = seeds.clone();
+    for t in &plan.tasks {
+        let refs: Vec<&Block> = t.inputs.iter().map(|o| &env[o]).collect();
+        let outs = native::execute(&t.kernel, &refs).unwrap();
+        for ((obj, _), b) in t.outputs.iter().zip(outs) {
+            env.insert(*obj, b);
+        }
+    }
+    env
+}
+
+/// Random-but-valid plan spec (same scheme as `tests/exec_steal.rs`):
+/// decoded against earlier outputs so plans are executable and ordered.
+#[derive(Debug)]
+struct PlanSpec {
+    nodes: usize,
+    threads_per_node: usize,
+    stealing: bool,
+    /// Tight 4-block per-node byte budget (eviction/spill churn under
+    /// prefetch pressure) vs unlimited.
+    budgeted: bool,
+    n_seeds: usize,
+    tasks: Vec<(u8, usize, usize, usize)>,
+}
+
+const SHAPE: [usize; 2] = [4, 4];
+const BLOCK_BYTES: u64 = (SHAPE[0] * SHAPE[1] * 8) as u64;
+
+fn decode(spec: &PlanSpec) -> (Plan, HashMap<u64, Block>) {
+    let mut rng = Rng::seed_from_u64(0x0E1A ^ spec.tasks.len() as u64);
+    let mut seeds = HashMap::new();
+    let mut avail: Vec<u64> = Vec::new();
+    for s in 0..spec.n_seeds {
+        let mut v = vec![0.0; SHAPE[0] * SHAPE[1]];
+        rng.fill_normal(&mut v);
+        seeds.insert(s as u64, Block::from_vec(&SHAPE, v));
+        avail.push(s as u64);
+    }
+    let mut tasks = Vec::new();
+    for (i, &(kind, p1, p2, tgt)) in spec.tasks.iter().enumerate() {
+        let out = 1000 + i as u64;
+        let (kernel, inputs) = match kind % 5 {
+            0 => (Kernel::Ew(BinOp::Add), vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+            1 => (Kernel::Ew(BinOp::Mul), vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+            2 => (Kernel::Neg, vec![avail[p1 % avail.len()]]),
+            3 => (Kernel::Scale(0.5), vec![avail[p1 % avail.len()]]),
+            _ => (Kernel::Matmul, vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+        };
+        let in_shapes = vec![SHAPE.to_vec(); inputs.len()];
+        tasks.push(Task {
+            kernel,
+            inputs,
+            in_shapes,
+            outputs: vec![(out, SHAPE.to_vec())],
+            target: tgt % spec.nodes,
+            transfers: vec![],
+        });
+        avail.push(out);
+    }
+    (Plan { tasks }, seeds)
+}
+
+fn seeded_stores(nodes: usize, seeds: &HashMap<u64, Block>) -> StoreSet {
+    let stores = StoreSet::new(nodes);
+    for (obj, b) in seeds {
+        stores.put((*obj as usize) % nodes, *obj, Arc::new(b.clone()));
+    }
+    stores
+}
+
+/// Per-node `prefetch_bytes + demand_pull_bytes == net_in` — every
+/// cross-node byte accounted exactly once, whichever path moved it.
+fn check_byte_identity(rep: &RealReport, nodes: usize) -> Result<(), String> {
+    if rep.prefetch_stats.len() != nodes {
+        return Err(format!(
+            "expected {nodes} prefetch stat blocks, got {}",
+            rep.prefetch_stats.len()
+        ));
+    }
+    for n in 0..nodes {
+        let net_in = rep.store_snapshot[n].2;
+        let p = &rep.prefetch_stats[n];
+        let accounted = p.prefetch_bytes + p.demand_pull_bytes;
+        if accounted != net_in {
+            return Err(format!(
+                "node {n}: prefetch {} + demand {} = {accounted} != net_in {net_in}",
+                p.prefetch_bytes, p.demand_pull_bytes
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_prefetch_preserves_bit_identity_and_accounts_every_byte() {
+    forall_res(
+        0x0F37C4,
+        25,
+        |r| PlanSpec {
+            nodes: 1 + r.usize(4),
+            threads_per_node: 1 + r.usize(3),
+            stealing: r.usize(2) == 1,
+            budgeted: r.usize(2) == 1,
+            n_seeds: 2 + r.usize(4),
+            tasks: (0..1 + r.usize(20))
+                .map(|_| (r.usize(256) as u8, r.usize(1 << 16), r.usize(1 << 16), r.usize(1 << 16)))
+                .collect(),
+        },
+        |spec| {
+            let (plan, seeds) = decode(spec);
+            let want = run_sequential(&plan, &seeds);
+            let consumed: HashSet<u64> =
+                plan.tasks.iter().flat_map(|t| t.inputs.iter().copied()).collect();
+            for prefetch in [false, true] {
+                let topo = Topology::new(spec.nodes, 2, SystemMode::Ray);
+                let budget = if spec.budgeted { Some(4 * BLOCK_BYTES) } else { None };
+                let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+                    .with_stealing(spec.stealing)
+                    .with_prefetch(prefetch)
+                    .with_memory(MemoryManager::new(spec.nodes, budget, true));
+                exec.threads_per_node = spec.threads_per_node;
+                let stores = seeded_stores(spec.nodes, &seeds);
+                let rep = exec
+                    .run(&plan, &stores)
+                    .map_err(|e| format!("prefetch={prefetch}: executor failed: {e}"))?;
+                let mgr = exec.memory.as_ref().unwrap();
+                for i in 0..plan.tasks.len() {
+                    let obj = 1000 + i as u64;
+                    if consumed.contains(&obj) {
+                        // dead intermediate: GC must have released it even
+                        // with prefetch pulls racing the releases
+                        if mgr.holds(&stores, obj) {
+                            return Err(format!(
+                                "prefetch={prefetch}: dead intermediate {obj} still held"
+                            ));
+                        }
+                        continue;
+                    }
+                    let got = mgr
+                        .fetch(&stores, obj)
+                        .ok_or_else(|| format!("prefetch={prefetch}: output {obj} missing"))?;
+                    let w = &want[&obj];
+                    if got.shape != w.shape {
+                        return Err(format!("prefetch={prefetch}: shape mismatch on {obj}"));
+                    }
+                    if got.buf().iter().zip(w.buf()).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                        return Err(format!(
+                            "prefetch={prefetch}: output {obj} differs from oracle"
+                        ));
+                    }
+                }
+                if prefetch {
+                    check_byte_identity(&rep, spec.nodes)?;
+                } else if !rep.prefetch_stats.is_empty() {
+                    return Err("prefetch off must report no prefetch stats".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prefetch_warms_remote_inputs_while_workers_compute() {
+    // pipeline: every input lives on node 0, every task targets node 1,
+    // one worker per node, stealing off. The first task demand-pulls; the
+    // transfer thread moves later inputs while each matmul runs, so most
+    // acquisitions are prefetch hits that pay zero bytes on the hot path.
+    let n = 128usize;
+    let k_tasks = 8usize;
+    let mut rng = Rng::seed_from_u64(0xF37);
+    let mut seeds = HashMap::new();
+    for i in 0..2 * k_tasks as u64 {
+        let mut v = vec![0.0; n * n];
+        rng.fill_normal(&mut v);
+        seeds.insert(i, Block::from_vec(&[n, n], v));
+    }
+    let plan = Plan {
+        tasks: (0..k_tasks)
+            .map(|i| Task {
+                kernel: Kernel::Matmul,
+                inputs: vec![(2 * i) as u64, (2 * i + 1) as u64],
+                in_shapes: vec![vec![n, n], vec![n, n]],
+                outputs: vec![(1000 + i as u64, vec![n, n])],
+                target: 1,
+                transfers: vec![],
+            })
+            .collect(),
+    };
+    let want = run_sequential(&plan, &seeds);
+    let topo = Topology::new(2, 1, SystemMode::Ray);
+    let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+        .with_stealing(false)
+        .with_prefetch(true);
+    exec.threads_per_node = 1;
+    let stores = StoreSet::new(2);
+    for (obj, b) in &seeds {
+        stores.put(0, *obj, Arc::new(b.clone()));
+    }
+    let rep = exec.run(&plan, &stores).unwrap();
+    check_byte_identity(&rep, 2).unwrap();
+    let p1 = &rep.prefetch_stats[1];
+    assert!(
+        p1.prefetch_bytes > 0,
+        "transfer thread moved nothing: {p1:?}"
+    );
+    assert!(p1.prefetch_hits > 0, "no acquisition hit a prefetch: {p1:?}");
+    // all bytes entered node 1 one way or the other
+    assert_eq!(
+        rep.store_snapshot[1].2,
+        (2 * k_tasks) as u64 * (n * n * 8) as u64
+    );
+    for i in 0..k_tasks {
+        let obj = 1000 + i as u64;
+        let got = stores.fetch(obj).unwrap();
+        assert_eq!(got.max_abs_diff(&want[&obj]), 0.0, "output {obj} wrong");
+    }
+}
+
+#[test]
+fn stolen_tasks_reroute_prefetches_and_keep_the_byte_identity() {
+    // the canonical skew: everything targeted at node 0 of 4 nodes, so
+    // thieves batch-steal and re-route queued prefetches to themselves
+    let n = 128usize;
+    let k_tasks = 40usize;
+    let mut rng = Rng::seed_from_u64(0x57E41);
+    let mut seeds = HashMap::new();
+    for i in 0..2 * k_tasks as u64 {
+        let mut v = vec![0.0; n * n];
+        rng.fill_normal(&mut v);
+        seeds.insert(i, Block::from_vec(&[n, n], v));
+    }
+    let plan = Plan {
+        tasks: (0..k_tasks)
+            .map(|i| Task {
+                kernel: Kernel::Matmul,
+                inputs: vec![(2 * i) as u64, (2 * i + 1) as u64],
+                in_shapes: vec![vec![n, n], vec![n, n]],
+                outputs: vec![(1000 + i as u64, vec![n, n])],
+                target: 0,
+                transfers: vec![],
+            })
+            .collect(),
+    };
+    let want = run_sequential(&plan, &seeds);
+    let topo = Topology::new(4, 2, SystemMode::Ray);
+    let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+        .with_stealing(true)
+        .with_prefetch(true);
+    exec.threads_per_node = 2;
+    let stores = StoreSet::new(4);
+    for (obj, b) in &seeds {
+        stores.put(0, *obj, Arc::new(b.clone()));
+    }
+    let rep = exec.run(&plan, &stores).unwrap();
+    // the identity is the reroute correctness claim: every byte a thief
+    // pulled — demand on the hot path or re-routed prefetch in the
+    // background — is accounted exactly once against its store's net_in
+    check_byte_identity(&rep, 4).unwrap();
+    let stolen: usize = rep.node_stats.iter().map(|s| s.tasks_stolen).sum();
+    assert!(stolen > 0, "skewed plan must trigger stealing");
+    for i in 0..k_tasks {
+        let obj = 1000 + i as u64;
+        let got = stores.fetch(obj).unwrap();
+        assert_eq!(got.max_abs_diff(&want[&obj]), 0.0, "output {obj} wrong");
+    }
+}
+
+#[test]
+fn prefetch_racing_eviction_never_deadlocks_or_double_accounts() {
+    // tight budget + shared hot inputs: node 1 keeps pulling the same 4
+    // seed blocks from node 0 while its budget keeps evicting them. The
+    // run must terminate (no livelock between prefetcher and evictor),
+    // every byte must be accounted exactly once, and results must match.
+    let n = 32usize;
+    let k_tasks = 24usize;
+    let block_bytes = (n * n * 8) as u64;
+    let mut rng = Rng::seed_from_u64(0xEB1C7);
+    let mut seeds = HashMap::new();
+    for i in 0..4u64 {
+        let mut v = vec![0.0; n * n];
+        rng.fill_normal(&mut v);
+        seeds.insert(i, Block::from_vec(&[n, n], v));
+    }
+    let plan = Plan {
+        tasks: (0..k_tasks)
+            .map(|i| Task {
+                kernel: Kernel::Ew(BinOp::Add),
+                inputs: vec![(i % 4) as u64, ((i + 1) % 4) as u64],
+                in_shapes: vec![vec![n, n], vec![n, n]],
+                outputs: vec![(1000 + i as u64, vec![n, n])],
+                target: 1,
+                transfers: vec![],
+            })
+            .collect(),
+    };
+    let want = run_sequential(&plan, &seeds);
+    let topo = Topology::new(2, 2, SystemMode::Ray);
+    let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+        .with_stealing(false)
+        .with_prefetch(true)
+        .with_memory(MemoryManager::new(2, Some(2 * block_bytes), true));
+    exec.threads_per_node = 2;
+    let stores = StoreSet::new(2);
+    for (obj, b) in &seeds {
+        stores.put(0, *obj, Arc::new(b.clone()));
+    }
+    let rep = exec.run(&plan, &stores).unwrap();
+    check_byte_identity(&rep, 2).unwrap();
+    // pressure really happened on the destination node
+    let shed = rep.mem_stats[1].evicted_replica_bytes + rep.mem_stats[1].spilled_bytes;
+    assert!(shed > 0, "a 2-block budget must shed load: {:?}", rep.mem_stats);
+    let mgr = exec.memory.as_ref().unwrap();
+    for i in 0..k_tasks {
+        let obj = 1000 + i as u64;
+        let got = mgr.fetch(&stores, obj).expect("terminal output");
+        assert_eq!(got.max_abs_diff(&want[&obj]), 0.0, "output {obj} wrong");
+    }
+}
+
+#[test]
+fn async_spill_runs_on_transfer_threads_and_preserves_results() {
+    // produce-then-fold under a tight budget: with prefetch on, every
+    // spill write of the run flows through the transfer thread
+    // (async_spill_bytes) and none through a worker; results match the
+    // synchronous-spill baseline bit for bit.
+    let n = 16usize;
+    let k = 8usize;
+    let block_bytes = (n * n * 8) as u64;
+    let (plan, acc) = nums::bench::harness::produce_fold_plan(k, n);
+    let run = |prefetch: bool| {
+        let topo = Topology::new(1, 1, SystemMode::Ray);
+        let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+            .with_prefetch(prefetch)
+            .with_memory(MemoryManager::new(1, Some(3 * block_bytes), true));
+        exec.threads_per_node = 1;
+        let stores = StoreSet::new(1);
+        stores.put(0, 1, Arc::new(Block::filled(&[n, n], 1.0)));
+        let rep = exec.run(&plan, &stores).unwrap();
+        let out = exec
+            .memory
+            .as_ref()
+            .unwrap()
+            .fetch(&stores, acc)
+            .expect("final output")
+            .as_ref()
+            .clone();
+        (rep, out)
+    };
+    let (sync_rep, sync_out) = run(false);
+    let (async_rep, async_out) = run(true);
+    assert_eq!(sync_out.max_abs_diff(&async_out), 0.0, "async spill changed bits");
+    assert!(sync_rep.mem_stats[0].spilled_bytes > 0, "baseline must spill");
+    let spilled = async_rep.mem_stats[0].spilled_bytes;
+    assert!(spilled > 0, "async run must spill too");
+    assert_eq!(
+        async_rep.prefetch_stats[0].async_spill_bytes, spilled,
+        "every spill write of the run must ride the transfer thread"
+    );
+}
+
+#[test]
+fn session_prefetch_flows_counters_and_forgets_dead_bytes() {
+    // end-to-end: a real session reports overlap counters, GC'd
+    // intermediates leave the scheduler's load model, and the ablation
+    // toggle produces bit-identical results
+    let run = |prefetch: bool| {
+        let mut sess = Session::new(SessionConfig::real_small(2, 2).with_prefetch(prefetch));
+        let x = sess.randn(&[128, 128], &[2, 2]);
+        let y = sess.randn(&[128, 128], &[2, 2]);
+        let (out, rep) = ops::matmul(&mut sess, &x, &y).unwrap();
+        let dense = sess.fetch(&out).unwrap();
+        let real = rep.real.expect("real mode");
+        // the forget hook: every released intermediate is gone from the
+        // Eq. 2 load model (later schedules must not count dead bytes)
+        assert!(
+            !real.gc_released.is_empty(),
+            "a 2x2 matmul has partial products to release"
+        );
+        for &obj in &real.gc_released {
+            assert!(
+                sess.state.locations_of(obj).is_empty(),
+                "released object {obj} still in the load model"
+            );
+            assert_eq!(sess.state.size_of(obj), 0.0);
+        }
+        // and the session still schedules/executes correctly afterwards
+        let (out2, _) = ops::add(&mut sess, &out, &out).unwrap();
+        let dense2 = sess.fetch(&out2).unwrap();
+        (dense, dense2, real)
+    };
+    let (a1, a2, real_off) = run(false);
+    let (b1, b2, real_on) = run(true);
+    assert_eq!(a1.max_abs_diff(&b1), 0.0, "prefetch changed matmul bits");
+    assert_eq!(a2.max_abs_diff(&b2), 0.0, "prefetch changed follow-up bits");
+    assert!(real_off.prefetch_stats.is_empty(), "off = no counters");
+    assert_eq!(real_on.prefetch_stats.len(), 2, "on = one block per node");
+}
