@@ -98,8 +98,19 @@ pub struct SessionConfig {
     /// coldest unpinned blocks to per-node temp files, reading them back
     /// transparently on access. `None` (default) = unlimited. Per-node
     /// `(spilled, readback, evicted-replica)` bytes land in
-    /// `RealReport::mem_stats`.
+    /// `RealReport::mem_stats`. The prefetcher's queued-pull lookahead is
+    /// bounded to half this budget, so overlap never pulls what pressure
+    /// would immediately evict.
     pub mem_budget_bytes: Option<u64>,
+    /// Close the plan↔runtime loop: fold each real run's observed
+    /// [`crate::exec::RuntimeFeedback`] — steal migrations, demand-pull
+    /// misses, spill pressure, unplanned NIC traffic, runtime replica
+    /// copies — into the scheduler's [`ClusterState`] before the next
+    /// `run()`, so the next plan's Eq. 2 simulation starts from where
+    /// load actually landed. On by default; off is the ablation baseline
+    /// (the planner only ever sees its own committed decisions) measured
+    /// by the fig09 feedback ablation.
+    pub feedback: bool,
 }
 
 impl SessionConfig {
@@ -121,6 +132,7 @@ impl SessionConfig {
             prefetch: true,
             lifetime_gc: true,
             mem_budget_bytes: None,
+            feedback: true,
         }
     }
 
@@ -142,6 +154,7 @@ impl SessionConfig {
             prefetch: true,
             lifetime_gc: true,
             mem_budget_bytes: None,
+            feedback: true,
         }
     }
 
@@ -178,6 +191,13 @@ impl SessionConfig {
     /// (see [`SessionConfig::mem_budget_bytes`]).
     pub fn with_mem_budget(mut self, bytes: u64) -> Self {
         self.mem_budget_bytes = Some(bytes);
+        self
+    }
+
+    /// Toggle the plan↔runtime feedback loop
+    /// (see [`SessionConfig::feedback`]).
+    pub fn with_feedback(mut self, on: bool) -> Self {
+        self.feedback = on;
         self
     }
 
@@ -316,10 +336,24 @@ impl Session {
         &mut self,
         shape: &[usize],
         grid: &[usize],
-        mut gen: impl FnMut(&mut Rng, &[usize], &[usize]) -> Vec<f64>,
+        gen: impl FnMut(&mut Rng, &[usize], &[usize]) -> Vec<f64>,
     ) -> DistArray {
         let g = ArrayGrid::new(shape, grid);
         let targets = self.scheduler.place_creation(&g, &mut self.state);
+        self.create_placed(g, targets, gen)
+    }
+
+    /// Shared creation body: register every block of `g` at its target in
+    /// the load model, materialize data (real mode) with the per-block
+    /// deterministic seeding, and assemble the [`DistArray`]. Placement
+    /// comes from the caller — the policy's layout ([`Session::create_with`])
+    /// or a deliberate skew ([`Session::create_at`]).
+    fn create_placed(
+        &mut self,
+        g: ArrayGrid,
+        targets: Vec<usize>,
+        mut gen: impl FnMut(&mut Rng, &[usize], &[usize]) -> Vec<f64>,
+    ) -> DistArray {
         let mut blocks = Vec::with_capacity(g.num_blocks());
         for (f, coords) in g.iter_coords().enumerate() {
             let obj = self.ids.next();
@@ -341,6 +375,35 @@ impl Session {
         }
         let _ = &mut self.data_rng;
         DistArray::new(g, blocks, targets)
+    }
+
+    /// [`Session::create_with`], but with every block deliberately placed
+    /// at one `target` instead of the policy's layout — the canonical way
+    /// to build *skewed* layouts for scheduling experiments (the fig09
+    /// stealing/feedback ablations and the feedback test suite). The load
+    /// model registers the blocks where they really are, so the first
+    /// plan over them sees exactly the skew the experiment intends.
+    pub fn create_at(
+        &mut self,
+        shape: &[usize],
+        grid: &[usize],
+        target: usize,
+        gen: impl FnMut(&mut Rng, &[usize], &[usize]) -> Vec<f64>,
+    ) -> DistArray {
+        assert!(target < self.topo.targets(), "target out of range");
+        let g = ArrayGrid::new(shape, grid);
+        let targets = vec![target; g.num_blocks()];
+        self.create_placed(g, targets, gen)
+    }
+
+    /// Skewed [`Session::randn`]: every block on one target
+    /// (see [`Session::create_at`]).
+    pub fn randn_at(&mut self, shape: &[usize], grid: &[usize], target: usize) -> DistArray {
+        self.create_at(shape, grid, target, |rng, bs, _| {
+            let mut v = vec![0.0; bs.iter().product::<usize>()];
+            rng.fill_normal(&mut v);
+            v
+        })
     }
 
     pub fn zeros(&mut self, shape: &[usize], grid: &[usize]) -> DistArray {
@@ -424,6 +487,18 @@ impl Session {
             }
             None => None,
         };
+
+        // close the plan↔runtime loop: fold what the executor observed
+        // but the plan never committed (steal migrations, demand pulls,
+        // spill pressure, runtime replicas) into the load model, so the
+        // next schedule() simulates against where load actually landed.
+        // Absorbed *before* the forget pass below — replicas of dead
+        // intermediates must be unwound again, not survive it.
+        if self.cfg.feedback {
+            if let Some(r) = &real {
+                self.state.absorb_feedback(&r.feedback);
+            }
+        }
 
         // lifetime GC freed dead intermediates during the run: make the
         // scheduler's load model forget them too, so the next schedule()

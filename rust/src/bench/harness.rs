@@ -193,6 +193,30 @@ pub fn prefetch_summary(report: &RealReport) -> String {
         .join(" | ")
 }
 
+/// One-line per-node plan↔runtime feedback summary of a real run:
+/// `node0: stolen 3 (1.2 KB), demand 64 KB, unplanned in 64 KB / out 0 B | ...`
+/// — what the fig09 feedback ablation prints next to wall time.
+pub fn feedback_summary(report: &RealReport) -> String {
+    use crate::util::fmt::human_bytes;
+    report
+        .feedback
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(n, f)| {
+            format!(
+                "node{n}: stolen {} ({}), demand {}, unplanned in {} / out {}",
+                f.tasks_stolen,
+                human_bytes(f.steal_bytes as f64),
+                human_bytes(f.demand_pull_bytes as f64),
+                human_bytes(f.unplanned_in_bytes as f64),
+                human_bytes(f.unplanned_out_bytes as f64),
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
+
 /// Max per-node peak resident bytes of a real run (the paper's headline
 /// "memory load" axis).
 pub fn max_peak_bytes(report: &RealReport) -> u64 {
@@ -361,6 +385,25 @@ mod tests {
         assert!(s.contains("node0: pf 2.00 KiB (3 hits)"), "{s}");
         assert!(s.contains("demand 512 B"), "{s}");
         assert!(s.contains("node1: pf 0 B"), "{s}");
+    }
+
+    #[test]
+    fn feedback_summary_formats_per_node() {
+        let mut rep = RealReport::default();
+        rep.feedback.nodes = vec![
+            crate::exec::NodeFeedback {
+                tasks_stolen: 3,
+                steal_bytes: 1024,
+                demand_pull_bytes: 2048,
+                unplanned_in_bytes: 2048,
+                ..Default::default()
+            },
+            crate::exec::NodeFeedback::default(),
+        ];
+        let s = feedback_summary(&rep);
+        assert!(s.contains("node0: stolen 3 (1.00 KiB)"), "{s}");
+        assert!(s.contains("demand 2.00 KiB"), "{s}");
+        assert!(s.contains("node1: stolen 0"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,266 @@
+//! Runtime feedback: what the executor observed that the planner never
+//! committed.
+//!
+//! LSHS plans by *simulating* load (Eq. 2, §5) — but the real executor
+//! makes placement-relevant decisions after the plan is fixed: work
+//! stealing migrates tasks to other nodes (and pulls their inputs there),
+//! prefetch misses turn into demand pulls, and budget pressure spills
+//! primaries to disk. None of that appears in the scheduler's
+//! [`crate::scheduler::ClusterState`] unless it is fed back, so on a
+//! session's *next* `schedule()` the simulation would diverge further and
+//! further from where load actually landed — exactly the gap that makes
+//! purely reactive schedulers (Dask-style re-planning) pay extra network
+//! traffic.
+//!
+//! [`RuntimeFeedback`] closes the loop. After each run the executor
+//! reconciles the plan against observation:
+//!
+//! * **unplanned traffic** — per node, the real store NIC deltas minus
+//!   the bytes the plan's committed [`crate::exec::Transfer`]s account
+//!   for. Steal pulls, eviction re-pulls, and every other byte the
+//!   simulation never saw, clamped at zero (a committed transfer that
+//!   turned out to be unnecessary is not *negative* traffic);
+//! * **steal migrations** — per-node stolen task counts and the input
+//!   bytes thieves pulled ([`crate::exec::NodeExecStats`]);
+//! * **demand-pull misses** — hot-path bytes from
+//!   [`crate::exec::PrefetchStats`] (with prefetch disabled, every
+//!   inbound byte is a demand pull);
+//! * **spill pressure** — bytes the memory manager paged out under the
+//!   byte budget ([`crate::store::NodeMemStats`]): the planner
+//!   oversubscribed that node's memory;
+//! * **runtime replicas** — objects that now hold a copy on a node the
+//!   plan never placed them on (sorted for determinism). Registering
+//!   these in the load model both corrects the Eq. 2 memory term and
+//!   *expands the next plan's placement options* — LSHS only considers
+//!   targets that hold some input copy, so without this the planner can
+//!   never discover that stolen work warmed another node.
+//!
+//! `api::Session` folds the feedback into its `ClusterState` between
+//! runs via [`crate::scheduler::ClusterState::absorb_feedback`], gated by
+//! `SessionConfig::feedback` (default on; off is the ablation baseline
+//! measured in `benches/fig09_micro.rs`).
+
+use crate::scheduler::Topology;
+use crate::store::{NodeMemStats, ObjectId};
+
+use super::prefetch::PrefetchStats;
+use super::real_exec::NodeExecStats;
+use super::task::Plan;
+
+/// One node's observed-vs-planned load for a single run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NodeFeedback {
+    /// Tasks this node ran whose plan target was another node.
+    pub tasks_stolen: usize,
+    /// Input bytes pulled cross-node for those stolen tasks.
+    pub steal_bytes: u64,
+    /// Bytes pulled on the worker hot path (prefetch misses and stolen
+    /// task inputs; with prefetch off, all inbound bytes).
+    pub demand_pull_bytes: u64,
+    /// Bytes the memory manager paged out to disk on this node — the
+    /// planner's Eq. 2 memory term undercounted this node's working set.
+    pub spilled_bytes: u64,
+    /// Real inbound NIC bytes beyond what the plan's committed transfers
+    /// predicted for this node (clamped at zero).
+    pub unplanned_in_bytes: u64,
+    /// Real outbound NIC bytes beyond the plan's committed transfers
+    /// (clamped at zero).
+    pub unplanned_out_bytes: u64,
+}
+
+/// Everything one real run observed that the plan did not commit; see the
+/// module docs for the feedback semantics of each part.
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeFeedback {
+    /// Per physical node, observed-vs-planned load.
+    pub nodes: Vec<NodeFeedback>,
+    /// `(object, node)` copies the runtime materialized on nodes the plan
+    /// never placed them on, still resident at run end. Sorted by
+    /// `(object, node)` so absorbing them is deterministic.
+    pub replicas: Vec<(ObjectId, usize)>,
+}
+
+impl RuntimeFeedback {
+    /// Bytes the plan's committed transfers put on each node's NICs:
+    /// per-node `(in, out)`, with same-node movements skipped exactly as
+    /// the stores skip them.
+    fn planned_nic_bytes(plan: &Plan, topo: &Topology) -> Vec<(u64, u64)> {
+        let mut nic = vec![(0u64, 0u64); topo.nodes];
+        for t in &plan.tasks {
+            let dst = topo.node_of(t.target);
+            for tr in &t.transfers {
+                let src = topo.node_of(tr.src);
+                if src == dst {
+                    continue;
+                }
+                nic[dst].0 += tr.bytes();
+                nic[src].1 += tr.bytes();
+            }
+        }
+        nic
+    }
+
+    /// Reconcile one run: store snapshots before/after (the
+    /// `(resident, peak, net_in, net_out)` tuples of
+    /// [`crate::store::StoreSet::snapshot`]), the run's per-node executor
+    /// and overlap counters, the per-run memory-manager deltas, and the
+    /// replica copies still resident at run end.
+    #[allow(clippy::too_many_arguments)]
+    pub fn collect(
+        plan: &Plan,
+        topo: &Topology,
+        snap_before: &[(u64, u64, u64, u64)],
+        snap_after: &[(u64, u64, u64, u64)],
+        node_stats: &[NodeExecStats],
+        prefetch_stats: &[PrefetchStats],
+        mem_stats: &[NodeMemStats],
+        mut replicas: Vec<(ObjectId, usize)>,
+    ) -> Self {
+        let planned = Self::planned_nic_bytes(plan, topo);
+        let nodes = (0..topo.nodes)
+            .map(|n| {
+                let in_delta = snap_after[n].2.saturating_sub(snap_before[n].2);
+                let out_delta = snap_after[n].3.saturating_sub(snap_before[n].3);
+                NodeFeedback {
+                    tasks_stolen: node_stats.get(n).map_or(0, |s| s.tasks_stolen),
+                    steal_bytes: node_stats.get(n).map_or(0, |s| s.steal_bytes),
+                    demand_pull_bytes: prefetch_stats
+                        .get(n)
+                        .map_or(in_delta, |p| p.demand_pull_bytes),
+                    spilled_bytes: mem_stats.get(n).map_or(0, |m| m.spilled_bytes),
+                    unplanned_in_bytes: in_delta.saturating_sub(planned[n].0),
+                    unplanned_out_bytes: out_delta.saturating_sub(planned[n].1),
+                }
+            })
+            .collect();
+        replicas.sort_unstable();
+        replicas.dedup();
+        Self { nodes, replicas }
+    }
+
+    /// True when the run behaved exactly as planned — nothing to absorb.
+    pub fn is_quiet(&self) -> bool {
+        self.replicas.is_empty()
+            && self.nodes.iter().all(|n| {
+                n.tasks_stolen == 0
+                    && n.steal_bytes == 0
+                    && n.spilled_bytes == 0
+                    && n.unplanned_in_bytes == 0
+                    && n.unplanned_out_bytes == 0
+            })
+    }
+
+    /// Total hot-path demand bytes across nodes (ablation headline).
+    pub fn total_demand_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.demand_pull_bytes).sum()
+    }
+
+    /// Total stolen-input bytes across nodes (ablation headline).
+    pub fn total_steal_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.steal_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::task::{Task, Transfer};
+    use crate::net::model::SystemMode;
+    use crate::runtime::kernel::{BinOp, Kernel};
+
+    fn plan_with_transfer() -> Plan {
+        Plan {
+            tasks: vec![Task {
+                kernel: Kernel::Ew(BinOp::Add),
+                inputs: vec![1, 2],
+                in_shapes: vec![vec![4, 4], vec![4, 4]],
+                outputs: vec![(3, vec![4, 4])],
+                target: 1,
+                // one committed pull: obj 1, node 0 -> node 1, 16 elems
+                transfers: vec![Transfer {
+                    obj: 1,
+                    src: 0,
+                    elems: 16,
+                }],
+            }],
+        }
+    }
+
+    #[test]
+    fn unplanned_traffic_is_observed_minus_committed() {
+        let topo = Topology::new(2, 1, SystemMode::Ray);
+        let plan = plan_with_transfer();
+        // node 1 really received 128 B planned + 256 B unplanned; node 0
+        // really sent the same 384 B
+        let before = vec![(0, 0, 0, 0), (0, 0, 0, 0)];
+        let after = vec![(0, 0, 0, 384), (0, 0, 384, 0)];
+        let stats = vec![NodeExecStats::default(); 2];
+        let fb = RuntimeFeedback::collect(
+            &plan, &topo, &before, &after, &stats, &[], &[], vec![],
+        );
+        assert_eq!(fb.nodes[1].unplanned_in_bytes, 384 - 128);
+        assert_eq!(fb.nodes[0].unplanned_out_bytes, 384 - 128);
+        assert_eq!(fb.nodes[0].unplanned_in_bytes, 0);
+        // no prefetch stats: every inbound byte is a demand pull
+        assert_eq!(fb.nodes[1].demand_pull_bytes, 384);
+        assert!(!fb.is_quiet());
+    }
+
+    #[test]
+    fn planned_traffic_is_quiet() {
+        let topo = Topology::new(2, 1, SystemMode::Ray);
+        let plan = plan_with_transfer();
+        let before = vec![(0, 0, 0, 0), (0, 0, 0, 0)];
+        // exactly the committed 128 B moved
+        let after = vec![(0, 0, 0, 128), (0, 0, 128, 0)];
+        let stats = vec![NodeExecStats::default(); 2];
+        let pf = vec![PrefetchStats::default(); 2];
+        let fb = RuntimeFeedback::collect(
+            &plan, &topo, &before, &after, &stats, &pf, &[], vec![],
+        );
+        assert!(fb.is_quiet(), "{fb:?}");
+        assert_eq!(fb.total_demand_bytes(), 0);
+    }
+
+    #[test]
+    fn replicas_are_sorted_and_deduped() {
+        let topo = Topology::new(2, 1, SystemMode::Ray);
+        let plan = Plan::default();
+        let snap = vec![(0, 0, 0, 0), (0, 0, 0, 0)];
+        let fb = RuntimeFeedback::collect(
+            &plan,
+            &topo,
+            &snap,
+            &snap,
+            &[],
+            &[],
+            &[],
+            vec![(9, 1), (2, 0), (9, 1), (2, 1)],
+        );
+        assert_eq!(fb.replicas, vec![(2, 0), (2, 1), (9, 1)]);
+        assert!(!fb.is_quiet(), "replicas count as feedback");
+    }
+
+    #[test]
+    fn dask_mode_aggregates_transfers_per_physical_node() {
+        // worker targets 0,1 share node 0; a worker-to-worker transfer on
+        // the same node must not count as NIC traffic
+        let topo = Topology::new(2, 2, SystemMode::Dask);
+        let plan = Plan {
+            tasks: vec![Task {
+                kernel: Kernel::Neg,
+                inputs: vec![1],
+                in_shapes: vec![vec![2, 2]],
+                outputs: vec![(2, vec![2, 2])],
+                target: 1, // worker 1, node 0
+                transfers: vec![Transfer {
+                    obj: 1,
+                    src: 0, // worker 0, node 0: same physical node
+                    elems: 4,
+                }],
+            }],
+        };
+        let nic = RuntimeFeedback::planned_nic_bytes(&plan, &topo);
+        assert_eq!(nic, vec![(0, 0), (0, 0)]);
+    }
+}

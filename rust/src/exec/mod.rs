@@ -15,16 +15,25 @@
 //! per task via [`crate::runtime::ExecContext`] — no process-global
 //! parallelism state exists. Communication overlaps compute: per-node
 //! transfer threads ([`prefetch::Prefetcher`]) pull near-ready tasks'
-//! remote inputs in the background and absorb the memory manager's spill
-//! writes, so workers mostly find inputs resident and never block on
-//! file I/O.
+//! remote inputs in the background — in topological-depth priority
+//! order, under a lookahead byte budget — and absorb the memory
+//! manager's spill writes, so workers mostly find inputs resident and
+//! never block on file I/O.
+//!
+//! Each run also produces a [`feedback::RuntimeFeedback`]: the
+//! reconciliation of plan against observation (steal migrations, demand
+//! pulls, spill pressure, runtime replicas) that the session folds back
+//! into the scheduler's load model, so the *next* plan's Eq. 2
+//! simulation sees where load actually landed.
 
+pub mod feedback;
 pub mod lifetime;
 pub mod prefetch;
 pub mod real_exec;
 pub mod sim_exec;
 pub mod task;
 
+pub use feedback::{NodeFeedback, RuntimeFeedback};
 pub use lifetime::Lifetimes;
 pub use prefetch::{PrefetchStats, Prefetcher};
 pub use real_exec::{NodeExecStats, RealExecutor, RealReport};

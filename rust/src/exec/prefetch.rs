@@ -13,13 +13,34 @@
 //! writes), so by the time a worker dequeues a task its remote inputs are
 //! usually resident and spill file I/O never blocks a kernel.
 //!
+//! The pull queue is a **priority queue**, not a FIFO: jobs are ordered
+//! by the consumer task's topological depth in the plan (ties broken
+//! first-come-first-served), so the inputs of the *next-to-run* tasks
+//! move before the inputs of work that is many dependency levels away.
+//! Spill sweeps always run before pulls — finishing a queued spill frees
+//! memory, pulling consumes it. Queued pulls are also bounded by a
+//! **byte budget** (the executor derives it from
+//! `SessionConfig::mem_budget_bytes`): a request that would push the
+//! queued-pull backlog past the budget is declined (and un-deduped, so
+//! the demand path or a later, shorter queue can still fetch it) — there
+//! is no point pulling blocks that memory pressure would immediately
+//! evict.
+//!
 //! Protocol with [`crate::exec::RealExecutor`]:
 //!
 //! * a task whose unmet-dependency count drops to ≤ 1 has its inputs
-//!   posted to its target node's queue (the plan's `Transfer::src` is the
-//!   locate hint); duplicates are deduped per `(node, object)`;
-//! * a *stolen* task re-routes: the thief posts the stolen task's inputs
-//!   to its own queue, so batched steals warm up behind the first task;
+//!   posted to its target node's queue at its topo-depth priority (the
+//!   plan's `Transfer::src` is the locate hint); requests are deduped
+//!   per `(node, object)` by *requester-task set* — one queued job
+//!   serves every interested task, re-registering the same
+//!   `(task, object)` is idempotent (warm triggers fire more than once
+//!   per consumer), and cancellation is per requester;
+//! * a *stolen* task first **cancels** its queued pulls on the victim's
+//!   node ([`Prefetcher::cancel_pull`]): if no other task on the victim
+//!   still wants the object, the queued job is dropped at pop time and
+//!   never moves (or accounts) a byte. The thief then re-posts only the
+//!   inputs not already resident on its own node, so batched steals warm
+//!   up behind the first task without re-pulling what they already have;
 //! * workers never wait on a prefetch — a miss simply falls back to the
 //!   demand pull they always did, and the racing double-pull is resolved
 //!   (and accounted once) under the destination store lock;
@@ -30,12 +51,15 @@
 //! Per-node counters land in [`crate::exec::RealReport::prefetch_stats`]:
 //! `prefetch_bytes` (moved by transfer threads) + `demand_pull_bytes`
 //! (moved on the worker hot path) add up to exactly the node's
-//! `net_in_bytes` for the run — the property suite in
-//! `tests/exec_overlap.rs` asserts that identity — while `prefetch_hits`
-//! counts worker input acquisitions satisfied by a completed prefetch and
-//! `async_spill_bytes` counts spill-file bytes written off the hot path.
+//! `net_in_bytes` for the run — the property suites in
+//! `tests/exec_overlap.rs` and `tests/feedback.rs` assert that identity
+//! (cancelled and declined pulls never account bytes, because they never
+//! move any) — while `prefetch_hits` counts worker input acquisitions
+//! satisfied by a completed prefetch and `async_spill_bytes` counts
+//! spill-file bytes written off the hot path.
 
-use std::collections::{HashSet, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::sync::{Condvar, Mutex};
 
 use crate::store::{MemoryManager, ObjectId, StoreSet};
@@ -56,17 +80,34 @@ pub struct PrefetchStats {
     pub async_spill_bytes: u64,
 }
 
+/// One queued background pull. Min-ordered by `(prio, seq)`: the
+/// executor passes the consumer task's topological depth as `prio`, so
+/// next-to-run inputs move first and equal depths stay FIFO.
+#[derive(Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct PullJob {
+    prio: u64,
+    seq: u64,
+    obj: ObjectId,
+    bytes: u64,
+    /// Source node the scheduler's load model committed to
+    /// (`Transfer::src`), short-circuiting the locate scan.
+    hint: Option<usize>,
+}
+
 enum Job {
-    /// Move `obj` to this queue's node. `hint` is the source node the
-    /// scheduler's load model committed to (`Transfer::src`), used to
-    /// short-circuit the locate scan on unmanaged stores.
-    Pull { obj: ObjectId, hint: Option<usize> },
+    Pull(PullJob),
     /// Complete the memory manager's queued spill writes for this node.
     SpillSweep,
 }
 
 struct QueueState {
-    jobs: VecDeque<Job>,
+    /// Min-heap of queued pulls (`Reverse` turns the max-heap around).
+    pulls: BinaryHeap<Reverse<PullJob>>,
+    /// Outstanding spill sweeps; always served before any pull.
+    sweeps: usize,
+    /// Bytes represented by the queued pulls (the budget gate).
+    queued_bytes: u64,
+    seq: u64,
     shutdown: bool,
 }
 
@@ -77,31 +118,47 @@ struct NodeQueue {
 
 #[derive(Default)]
 struct Track {
-    /// Objects with a queued or completed pull (request dedup).
-    requested: HashSet<ObjectId>,
+    /// obj -> the *requester task ids* with an outstanding interest
+    /// (queued, in flight, or completed). Tracking requesters — not a
+    /// bare count — makes registration idempotent per `(task, object)`
+    /// (warm triggers legitimately fire more than once for the same
+    /// consumer, and a task may list the same input twice), and makes
+    /// [`Prefetcher::cancel_pull`] surgical: a steal removes exactly the
+    /// migrated task's interest, never another task's. The empty→nonempty
+    /// transition queues the single shared job; an entry emptied by
+    /// cancellation makes the queued job stale (skipped at pop time).
+    requested: HashMap<ObjectId, HashSet<usize>>,
     /// Objects whose pull completed with the object resident here.
     done: HashSet<ObjectId>,
 }
 
-/// Per-run transfer-thread coordinator: one job queue, dedup table and
-/// counter block per node. The executor spawns one `serve` loop per node
-/// inside its worker scope and calls [`Prefetcher::shutdown`] after the
-/// workers join — `serve` drains its remaining queue (the async-spill
-/// write barrier) before exiting, so by the time the scope closes every
-/// queued transfer and spill write has completed.
+/// Per-run transfer-thread coordinator: one priority job queue, dedup
+/// table and counter block per node. The executor spawns one `serve`
+/// loop per node inside its worker scope and calls
+/// [`Prefetcher::shutdown`] after the workers join — `serve` drains its
+/// remaining queue (the async-spill write barrier) before exiting, so by
+/// the time the scope closes every queued transfer and spill write has
+/// completed.
 pub struct Prefetcher {
     queues: Vec<NodeQueue>,
     track: Vec<Mutex<Track>>,
     stats: Vec<Mutex<PrefetchStats>>,
+    /// Cap on each node's queued-pull backlog, in bytes (`None` =
+    /// unbounded). Derived from the session's memory budget so the
+    /// pipeline never runs further ahead than pressure allows.
+    byte_budget: Option<u64>,
 }
 
 impl Prefetcher {
-    pub fn new(num_nodes: usize) -> Self {
+    pub fn new(num_nodes: usize, byte_budget: Option<u64>) -> Self {
         Self {
             queues: (0..num_nodes)
                 .map(|_| NodeQueue {
                     q: Mutex::new(QueueState {
-                        jobs: VecDeque::new(),
+                        pulls: BinaryHeap::new(),
+                        sweeps: 0,
+                        queued_bytes: 0,
+                        seq: 0,
                         shutdown: false,
                     }),
                     cv: Condvar::new(),
@@ -111,6 +168,7 @@ impl Prefetcher {
             stats: (0..num_nodes)
                 .map(|_| Mutex::new(PrefetchStats::default()))
                 .collect(),
+            byte_budget,
         }
     }
 
@@ -118,32 +176,103 @@ impl Prefetcher {
         self.queues.len()
     }
 
-    /// Queue a background pull of `obj` to `node` (deduped; dropped after
-    /// shutdown — the demand path covers whatever never got queued).
-    pub fn request_pull(&self, node: usize, obj: ObjectId, hint: Option<usize>) {
+    /// Bytes currently queued (not yet executed) on `node`'s pull queue —
+    /// introspection for tests and the budget gate.
+    pub fn queued_pull_bytes(&self, node: usize) -> u64 {
+        self.queues[node].q.lock().unwrap().queued_bytes
+    }
+
+    /// Queue a background pull of `obj` (`bytes` large) to `node`, at
+    /// priority `prio` (lower = sooner; the executor passes the consumer
+    /// task's topological depth), on behalf of consumer task `requester`.
+    /// Requests are deduped per `(node, object)` by requester-task set —
+    /// registering the same `(task, object)` twice is idempotent — and
+    /// only the empty→nonempty transition queues a job. The request is
+    /// *declined* — the whole registration is dropped, so the demand
+    /// path or a later re-request (against a shorter queue) covers it —
+    /// when the node's queued-pull backlog would exceed the byte budget,
+    /// or after shutdown.
+    pub fn request_pull(
+        &self,
+        node: usize,
+        obj: ObjectId,
+        hint: Option<usize>,
+        prio: u64,
+        bytes: u64,
+        requester: usize,
+    ) {
         {
             let mut t = self.track[node].lock().unwrap();
-            if !t.requested.insert(obj) {
-                return;
+            let reqs = t.requested.entry(obj).or_default();
+            let first = reqs.is_empty();
+            reqs.insert(requester);
+            if !first {
+                return; // a queued/in-flight/completed job covers this too
             }
         }
         let nq = &self.queues[node];
         let mut q = nq.q.lock().unwrap();
-        if q.shutdown {
+        let mut declined = q.shutdown
+            || self
+                .byte_budget
+                .map_or(false, |b| q.queued_bytes + bytes > b);
+        if declined && !q.shutdown {
+            // over budget: the backlog may be padded with cancelled jobs
+            // (their bytes stay charged until popped) or with pulls for
+            // much deeper consumers than this one — reclaim both before
+            // giving up, so cancellations can't starve the budget and a
+            // next-to-run input always outranks far-future work
+            declined = !self.make_room(node, &mut q, prio, bytes);
+        }
+        if declined {
+            drop(q);
+            // drop the registration outright (ours and any racer's that
+            // piggybacked on it): no job exists, so a surviving entry
+            // would permanently swallow every later request for this
+            // object — the demand path covers the racer
+            self.unrequest(node, obj);
             return;
         }
-        q.jobs.push_back(Job::Pull { obj, hint });
+        q.seq += 1;
+        let seq = q.seq;
+        q.queued_bytes += bytes;
+        q.pulls.push(Reverse(PullJob {
+            prio,
+            seq,
+            obj,
+            bytes,
+            hint,
+        }));
         drop(q);
         nq.cv.notify_one();
     }
 
+    /// Withdraw `requester`'s interest in `obj`'s pull to `node` (a steal
+    /// moved that consumer elsewhere). When the last interested task
+    /// withdraws, the queued job is cancelled: it is skipped at pop time
+    /// and never moves or accounts a byte. Removing an absent requester
+    /// is a no-op, so cancelling a task whose warm trigger never fired —
+    /// or one whose request was already declined — is harmless and can
+    /// never cancel another task's pull.
+    pub fn cancel_pull(&self, node: usize, obj: ObjectId, requester: usize) {
+        let mut t = self.track[node].lock().unwrap();
+        if let Some(reqs) = t.requested.get_mut(&obj) {
+            reqs.remove(&requester);
+            if reqs.is_empty() {
+                t.requested.remove(&obj);
+            }
+        }
+    }
+
     /// Wake `node`'s transfer thread to complete queued spill writes.
     /// Always enqueued (even mid-shutdown-drain): a pending spill entry
-    /// must be finalized or swept, never silently forgotten.
+    /// must be finalized or swept, never silently forgotten. Sweeps run
+    /// before any queued pull — completing a spill frees memory, a pull
+    /// consumes it.
     pub fn notify_spill(&self, node: usize) {
         let nq = &self.queues[node];
         let mut q = nq.q.lock().unwrap();
-        q.jobs.push_back(Job::SpillSweep);
+        q.sweeps += 1;
         drop(q);
         nq.cv.notify_one();
     }
@@ -178,12 +307,87 @@ impl Prefetcher {
         }
     }
 
+    /// Try to free backlog budget for an incoming `(prio, bytes)` pull:
+    /// drop jobs cancelled while queued (no live requester — their bytes
+    /// are still charged until popped), then evict queued jobs whose
+    /// consumers are *strictly deeper* than the incoming one, deepest
+    /// first (their registrations are dropped so they can re-request
+    /// later; the demand path covers them meanwhile). Returns whether
+    /// `bytes` now fits. Caller holds the queue lock; the track lock is
+    /// taken inside it — the same queue→track order `take_job` uses.
+    fn make_room(
+        &self,
+        node: usize,
+        q: &mut QueueState,
+        prio: u64,
+        bytes: u64,
+    ) -> bool {
+        let Some(budget) = self.byte_budget else { return true };
+        let mut t = self.track[node].lock().unwrap();
+        let mut jobs: Vec<PullJob> = q.pulls.drain().map(|Reverse(j)| j).collect();
+        // pass 1 — shed stale (cancelled) jobs: they would never execute
+        jobs.retain(|j| t.requested.contains_key(&j.obj));
+        let mut total: u64 = jobs.iter().map(|j| j.bytes).sum();
+        // pass 2 — evict deepest-first while the newcomer still won't
+        // fit. Skipped entirely for a request no amount of eviction can
+        // admit (bytes > budget): wiping other tasks' prefetches for
+        // zero gain would only convert them into demand pulls.
+        if bytes <= budget {
+            jobs.sort_unstable();
+            while total + bytes > budget
+                && jobs.last().map_or(false, |j| j.prio > prio)
+            {
+                let evicted = jobs.pop().unwrap();
+                total -= evicted.bytes;
+                t.requested.remove(&evicted.obj);
+            }
+        }
+        q.queued_bytes = total;
+        q.pulls.extend(jobs.into_iter().map(Reverse));
+        total + bytes <= budget
+    }
+
     fn mark_done(&self, node: usize, obj: ObjectId) {
         self.track[node].lock().unwrap().done.insert(obj);
     }
 
     fn unrequest(&self, node: usize, obj: ObjectId) {
         self.track[node].lock().unwrap().requested.remove(&obj);
+    }
+
+    /// Dequeue the next job for `node`, or `None` at shutdown with an
+    /// empty queue. Blocks while idle. Spill sweeps first; then queued
+    /// pulls in `(prio, seq)` order, lazily discarding cancelled jobs
+    /// (no live requester) and — after shutdown — all pulls (workers
+    /// have joined; only spill writes still matter).
+    fn take_job(&self, node: usize) -> Option<Job> {
+        let nq = &self.queues[node];
+        let mut q = nq.q.lock().unwrap();
+        loop {
+            if q.sweeps > 0 {
+                q.sweeps -= 1;
+                return Some(Job::SpillSweep);
+            }
+            if let Some(Reverse(job)) = q.pulls.pop() {
+                q.queued_bytes -= job.bytes;
+                if q.shutdown {
+                    continue; // nobody left to consume the pull
+                }
+                if !self.track[node]
+                    .lock()
+                    .unwrap()
+                    .requested
+                    .contains_key(&job.obj)
+                {
+                    continue; // cancelled while queued: never touches bytes
+                }
+                return Some(Job::Pull(job));
+            }
+            if q.shutdown {
+                return None;
+            }
+            q = nq.cv.wait(q).unwrap();
+        }
     }
 
     /// Transfer-thread body for `node`: drains jobs until shutdown *and*
@@ -199,31 +403,10 @@ impl Prefetcher {
         spillable: &(dyn Fn(ObjectId) -> bool + Sync),
         wanted: &(dyn Fn(ObjectId) -> bool + Sync),
     ) {
-        loop {
-            let job = {
-                let nq = &self.queues[node];
-                let mut q = nq.q.lock().unwrap();
-                loop {
-                    if let Some(j) = q.jobs.pop_front() {
-                        // the drain barrier exists for spill writes; a
-                        // pull whose consumers have all exited (shutdown
-                        // = workers joined) would move bytes nobody
-                        // reads — discard it
-                        if q.shutdown && matches!(j, Job::Pull { .. }) {
-                            continue;
-                        }
-                        break Some(j);
-                    }
-                    if q.shutdown {
-                        break None;
-                    }
-                    q = nq.cv.wait(q).unwrap();
-                }
-            };
-            let Some(job) = job else { return };
+        while let Some(job) = self.take_job(node) {
             match job {
-                Job::Pull { obj, hint } => {
-                    self.pull(node, obj, hint, stores, memory, spillable, wanted)
+                Job::Pull(j) => {
+                    self.pull(node, j.obj, j.hint, stores, memory, spillable, wanted)
                 }
                 Job::SpillSweep => {
                     if let Some(m) = memory {
@@ -314,38 +497,39 @@ mod tests {
     fn pull_moves_remote_object_and_counts_bytes() {
         let stores = StoreSet::new(2);
         stores.put(0, 7, Arc::new(Block::filled(&[4, 4], 2.0)));
-        let pf = Prefetcher::new(2);
+        let pf = Prefetcher::new(2, None);
         std::thread::scope(|s| {
             s.spawn(|| pf.serve(1, &stores, None, &yes, &yes));
-            pf.request_pull(1, 7, Some(0));
+            pf.request_pull(1, 7, Some(0), 0, 128, 100);
             wait_for(|| stores.contains(1, 7), "prefetch of object 7");
-            // duplicate request: deduped away, no second transfer
-            pf.request_pull(1, 7, None);
+            // another requester: deduped away, no second transfer
+            pf.request_pull(1, 7, None, 0, 128, 101);
             // shutdown drains whatever is still queued before serve exits
             pf.shutdown();
         });
         assert!(pf.was_prefetched(1, 7));
         assert_eq!(pf.stats()[1].prefetch_bytes, 128);
         assert_eq!(stores.snapshot()[1].2, 128, "exactly one transfer");
+        assert_eq!(pf.queued_pull_bytes(1), 0, "executed job left the backlog");
     }
 
     #[test]
     fn unavailable_pull_is_dropped_and_rerequestable() {
         let stores = StoreSet::new(2);
         stores.put(0, 50, Arc::new(Block::filled(&[2, 2], 5.0)));
-        let pf = Prefetcher::new(2);
+        let pf = Prefetcher::new(2, None);
         std::thread::scope(|s| {
             s.spawn(|| pf.serve(1, &stores, None, &yes, &yes));
-            pf.request_pull(1, 42, None); // exists nowhere yet
-            pf.request_pull(1, 50, Some(0)); // FIFO marker behind it
+            pf.request_pull(1, 42, None, 0, 32, 100); // exists nowhere yet
+            pf.request_pull(1, 50, Some(0), 1, 32, 101); // deeper marker behind it
             wait_for(|| stores.contains(1, 50), "marker pull");
-            // 42 was processed (FIFO) and dropped, not completed
+            // 42 was processed first (lower priority value) and dropped
             assert!(!pf.was_prefetched(1, 42));
             assert_eq!(pf.stats()[1].prefetch_bytes, 32);
             // the drop un-deduped it: once the object exists, a
             // re-request goes through instead of being swallowed
             stores.put(0, 42, Arc::new(Block::filled(&[2, 2], 1.0)));
-            pf.request_pull(1, 42, Some(0));
+            pf.request_pull(1, 42, Some(0), 0, 32, 102);
             wait_for(|| stores.contains(1, 42), "re-requested pull");
             pf.shutdown();
         });
@@ -356,15 +540,183 @@ mod tests {
     fn unwanted_pull_is_skipped() {
         let stores = StoreSet::new(2);
         stores.put(0, 9, Arc::new(Block::filled(&[2, 2], 3.0)));
-        let pf = Prefetcher::new(2);
+        let pf = Prefetcher::new(2, None);
         fn no(_: ObjectId) -> bool {
             false
         }
         std::thread::scope(|s| {
             s.spawn(|| pf.serve(1, &stores, None, &yes, &no));
-            pf.request_pull(1, 9, Some(0));
+            pf.request_pull(1, 9, Some(0), 0, 32, 100);
             pf.shutdown();
         });
         assert!(!stores.contains(1, 9), "dead objects must not be pulled");
+    }
+
+    #[test]
+    fn pulls_dequeue_in_topo_depth_order_then_fifo() {
+        // queue before any server runs, then drain with take_job directly
+        let pf = Prefetcher::new(1, None);
+        pf.request_pull(0, 30, None, 3, 8, 1);
+        pf.request_pull(0, 10, None, 1, 8, 2);
+        pf.request_pull(0, 11, None, 1, 8, 3);
+        pf.request_pull(0, 20, None, 2, 8, 4);
+        assert_eq!(pf.queued_pull_bytes(0), 32);
+        let mut order = Vec::new();
+        for _ in 0..4 {
+            match pf.take_job(0) {
+                Some(Job::Pull(j)) => order.push(j.obj),
+                other => panic!(
+                    "expected a pull, got {:?}",
+                    matches!(other, Some(Job::SpillSweep))
+                ),
+            }
+        }
+        // depth order, FIFO within equal depth
+        assert_eq!(order, vec![10, 11, 20, 30]);
+        assert_eq!(pf.queued_pull_bytes(0), 0);
+    }
+
+    #[test]
+    fn spill_sweeps_preempt_queued_pulls() {
+        let pf = Prefetcher::new(1, None);
+        pf.request_pull(0, 1, None, 0, 8, 1);
+        pf.notify_spill(0);
+        assert!(matches!(pf.take_job(0), Some(Job::SpillSweep)));
+        assert!(matches!(pf.take_job(0), Some(Job::Pull(_))));
+    }
+
+    #[test]
+    fn byte_budget_declines_and_undedups_overflowing_requests() {
+        let stores = StoreSet::new(2);
+        stores.put(0, 1, Arc::new(Block::filled(&[4, 4], 1.0))); // 128 B
+        stores.put(0, 2, Arc::new(Block::filled(&[4, 4], 2.0))); // 128 B
+        let pf = Prefetcher::new(2, Some(128));
+        pf.request_pull(1, 1, Some(0), 0, 128, 100);
+        // backlog full: this request is declined, not queued
+        pf.request_pull(1, 2, Some(0), 0, 128, 101);
+        assert_eq!(pf.queued_pull_bytes(1), 128, "second pull must be declined");
+        std::thread::scope(|s| {
+            s.spawn(|| pf.serve(1, &stores, None, &yes, &yes));
+            wait_for(|| stores.contains(1, 1), "budgeted pull");
+            // declined = un-deduped: once the backlog drained, the same
+            // object can be requested again and goes through
+            wait_for(|| pf.queued_pull_bytes(1) == 0, "backlog drain");
+            pf.request_pull(1, 2, Some(0), 0, 128, 101);
+            wait_for(|| stores.contains(1, 2), "re-requested declined pull");
+            pf.shutdown();
+        });
+        // the declined attempt never moved bytes; the two executed pulls
+        // account exactly their traffic
+        assert_eq!(pf.stats()[1].prefetch_bytes, 256);
+        assert_eq!(stores.snapshot()[1].2, 256);
+    }
+
+    #[test]
+    fn cancelled_jobs_release_their_budget_on_the_next_request() {
+        // obj 1 fills the budget, then is cancelled; its bytes are still
+        // charged (lazy) — but a new request must reclaim them instead of
+        // being declined against a phantom backlog
+        let pf = Prefetcher::new(1, Some(128));
+        pf.request_pull(0, 1, None, 0, 128, 7);
+        pf.cancel_pull(0, 1, 7);
+        assert_eq!(pf.queued_pull_bytes(0), 128, "stale bytes charged lazily");
+        pf.request_pull(0, 2, None, 0, 128, 8);
+        assert_eq!(
+            pf.queued_pull_bytes(0),
+            128,
+            "stale job pruned, live job admitted"
+        );
+        match pf.take_job(0) {
+            Some(Job::Pull(j)) => assert_eq!(j.obj, 2, "only the live job remains"),
+            _ => panic!("expected the admitted pull"),
+        }
+        assert_eq!(pf.queued_pull_bytes(0), 0);
+    }
+
+    #[test]
+    fn shallower_requests_evict_deeper_queued_pulls() {
+        // far-future (depth 9) work fills the budget; a next-to-run
+        // (depth 0) input must displace it, and the evicted registration
+        // is dropped so the deep task can re-request later
+        let pf = Prefetcher::new(1, Some(128));
+        pf.request_pull(0, 1, None, 9, 128, 7);
+        pf.request_pull(0, 2, None, 0, 128, 8);
+        match pf.take_job(0) {
+            Some(Job::Pull(j)) => assert_eq!(j.obj, 2, "depth-0 displaced depth-9"),
+            _ => panic!("expected the shallow pull"),
+        }
+        assert_eq!(pf.queued_pull_bytes(0), 0);
+        // the evicted deep pull was un-deduped: it can come back
+        pf.request_pull(0, 1, None, 9, 128, 7);
+        assert_eq!(pf.queued_pull_bytes(0), 128);
+        // but an equal-depth request never evicts (strictly-deeper rule)
+        pf.request_pull(0, 3, None, 9, 128, 9);
+        assert_eq!(pf.queued_pull_bytes(0), 128, "equal depth must not evict");
+    }
+
+    #[test]
+    fn cancelled_pulls_never_move_or_account_bytes() {
+        let stores = StoreSet::new(2);
+        stores.put(0, 5, Arc::new(Block::filled(&[4, 4], 5.0)));
+        stores.put(0, 6, Arc::new(Block::filled(&[4, 4], 6.0)));
+        let pf = Prefetcher::new(2, None);
+        // obj 5 queued at depth 0 (pops first), then cancelled; the depth-9
+        // marker behind it proves the queue was really drained past it
+        pf.request_pull(1, 5, Some(0), 0, 128, 7);
+        pf.request_pull(1, 6, Some(0), 9, 128, 8);
+        pf.cancel_pull(1, 5, 7);
+        std::thread::scope(|s| {
+            s.spawn(|| pf.serve(1, &stores, None, &yes, &yes));
+            wait_for(|| stores.contains(1, 6), "marker pull");
+            pf.shutdown();
+        });
+        assert!(!stores.contains(1, 5), "cancelled pull must not move data");
+        assert_eq!(pf.stats()[1].prefetch_bytes, 128, "only the marker counted");
+        assert_eq!(stores.snapshot()[1].2, 128);
+        assert!(!pf.was_prefetched(1, 5));
+    }
+
+    #[test]
+    fn requester_set_survives_other_tasks_cancel() {
+        let stores = StoreSet::new(2);
+        stores.put(0, 5, Arc::new(Block::filled(&[4, 4], 5.0)));
+        let pf = Prefetcher::new(2, None);
+        // two consumer tasks on node 1 want obj 5; task 7 re-registers
+        // (idempotent: warm triggers fire more than once per consumer)
+        // and is then stolen away — task 8's interest must survive
+        pf.request_pull(1, 5, Some(0), 0, 128, 7);
+        pf.request_pull(1, 5, Some(0), 0, 128, 7);
+        pf.request_pull(1, 5, Some(0), 2, 128, 8);
+        pf.cancel_pull(1, 5, 7);
+        // cancelling an absent requester must not touch task 8's interest
+        pf.cancel_pull(1, 5, 99);
+        std::thread::scope(|s| {
+            s.spawn(|| pf.serve(1, &stores, None, &yes, &yes));
+            wait_for(|| stores.contains(1, 5), "surviving requester's pull");
+            pf.shutdown();
+        });
+        assert!(pf.was_prefetched(1, 5));
+        assert_eq!(pf.stats()[1].prefetch_bytes, 128);
+    }
+
+    #[test]
+    fn double_registration_then_one_cancel_fully_cancels() {
+        // the same (task, object) registered twice is ONE interest: a
+        // single cancel (the task was stolen) must kill the queued job
+        let stores = StoreSet::new(2);
+        stores.put(0, 5, Arc::new(Block::filled(&[4, 4], 5.0)));
+        stores.put(0, 6, Arc::new(Block::filled(&[4, 4], 6.0)));
+        let pf = Prefetcher::new(2, None);
+        pf.request_pull(1, 5, Some(0), 0, 128, 7);
+        pf.request_pull(1, 5, Some(0), 0, 128, 7); // duplicate warm trigger
+        pf.request_pull(1, 6, Some(0), 9, 128, 8); // drain marker
+        pf.cancel_pull(1, 5, 7);
+        std::thread::scope(|s| {
+            s.spawn(|| pf.serve(1, &stores, None, &yes, &yes));
+            wait_for(|| stores.contains(1, 6), "marker pull");
+            pf.shutdown();
+        });
+        assert!(!stores.contains(1, 5), "stale job must not execute");
+        assert_eq!(pf.stats()[1].prefetch_bytes, 128, "only the marker counted");
     }
 }

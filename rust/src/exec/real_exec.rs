@@ -16,8 +16,13 @@
 //!
 //! Stealing is locality-aware and batched: the victim is the sibling
 //! whose next-stealable task needs the fewest bytes pulled to the thief's
-//! node, and a deeply-skewed victim loses half its deque in one steal so
-//! the thief's node (and its own siblings) amortize the migration.
+//! node (scored *outside* the executor's state lock — candidates are
+//! snapshotted, the lock dropped while store residency is checked, and
+//! the steal re-validated under the lock), and a victim whose deque is
+//! deep *relative to the observed mean ready depth* loses half its deque
+//! in one steal (`batch_steal_threshold`) so the thief's node (and its
+//! own siblings) amortize the migration — near-balanced queues steal
+//! singly instead.
 //!
 //! Communication overlaps compute ([`super::prefetch::Prefetcher`],
 //! `RealExecutor::prefetch`, default on): one transfer thread per node
@@ -27,8 +32,19 @@
 //! to demand pulls on a miss. Stolen tasks re-route their prefetches to
 //! the thief's node, and the memory manager's spill writes ride the same
 //! transfer threads (asynchronous spill with a write-completion barrier).
-//! Per-node `(prefetch_bytes, prefetch_hits, demand_pull_bytes,
+//! The transfer queues are priority queues ordered by the consumer
+//! task's topological depth (next-to-run inputs first), bounded by a
+//! lookahead byte budget derived from the memory budget, and a steal
+//! cancels the victim's queued pulls for the migrated tasks. Per-node
+//! `(prefetch_bytes, prefetch_hits, demand_pull_bytes,
 //! async_spill_bytes)` land in [`RealReport::prefetch_stats`].
+//!
+//! Every run also reconciles plan against observation into a
+//! [`RuntimeFeedback`] ([`RealReport::feedback`]): steal migrations,
+//! demand-pull misses, spill pressure, unplanned NIC traffic, and the
+//! replica copies the runtime materialized. `api::Session` folds it into
+//! the scheduler's load model between runs, closing the plan↔runtime
+//! loop (`SessionConfig::feedback`).
 //!
 //! Memory: when the executor owns a [`MemoryManager`]
 //! (`RealExecutor::memory`, wired up by `api::Session`), each run first
@@ -64,6 +80,7 @@ use crate::util::Stopwatch;
 
 use std::sync::Arc;
 
+use super::feedback::RuntimeFeedback;
 use super::lifetime::Lifetimes;
 use super::prefetch::{PrefetchStats, Prefetcher};
 use super::task::Plan;
@@ -101,6 +118,12 @@ pub struct RealReport {
     /// scheduler's load model forget dead bytes
     /// ([`crate::scheduler::ClusterState::forget`]).
     pub gc_released: Vec<ObjectId>,
+    /// Observed-vs-planned load for this run: steal migrations, demand
+    /// pulls, spill pressure, unplanned NIC traffic and runtime replica
+    /// copies. The session folds it into the scheduler's
+    /// [`crate::scheduler::ClusterState`] between runs
+    /// (`SessionConfig::feedback`, default on).
+    pub feedback: RuntimeFeedback,
 }
 
 /// `NUMS_DEADLOCK_TIMEOUT_SECS` parsing (non-positive/garbage/absurd -> 30s).
@@ -159,40 +182,69 @@ struct Shared {
     spill_threshold: usize,
 }
 
-/// Deque depth at which a steal takes half the victim's queue instead of
-/// one task (the ROADMAP "deep skew" batch steal).
-const DEEP_SKEW_DEQUE: usize = 4;
+/// Floor of the adaptive batch-steal trigger: deques shallower than this
+/// are always stolen from one task at a time.
+const MIN_BATCH_STEAL: usize = 2;
 
-/// Choose the steal victim: the sibling whose next-stealable
-/// (back-of-deque) task needs the fewest bytes moved to `me`; ties go to
-/// the deeper deque. `None` when no sibling has ready work.
+/// Adaptive batch-steal trigger: a victim loses half its deque in one
+/// steal only when its depth is at least twice the mean ready depth per
+/// node observed *right now* (never below [`MIN_BATCH_STEAL`]). Deep
+/// skew amortizes the migration in one move; near-balanced queues steal
+/// singly so a batch steal cannot itself create the next imbalance.
+/// Floor division matters: with ceiling, full skew of an odd task count
+/// onto one of two nodes would sit exactly one task under the trigger —
+/// the canonical case batching exists for. (Replaces the old hardcoded
+/// depth-≥-4 rule.)
+fn batch_steal_threshold(total_ready: usize, nodes: usize) -> usize {
+    (2 * (total_ready / nodes.max(1))).max(MIN_BATCH_STEAL)
+}
+
+/// Choose the steal victim among snapshotted `candidates` — `(node,
+/// back-of-deque task, deque len)` — as the one whose next-stealable
+/// task needs the fewest bytes moved to the thief; ties go to the deeper
+/// deque. Runs *without* the executor state lock (the snapshot was taken
+/// under it, residency is scored against the stores afterwards, and the
+/// steal itself re-validates under the lock), so store locks are never
+/// nested inside the state lock.
 fn best_victim(
-    ready: &[VecDeque<usize>],
-    me: usize,
+    candidates: &[(usize, usize, usize)],
     missing_bytes: impl Fn(usize) -> u64,
 ) -> Option<usize> {
-    // single candidate (the common deep-skew case): no scoring needed —
-    // keeps store-lock traffic out of the state-lock critical section
-    let mut candidates = ready
-        .iter()
-        .enumerate()
-        .filter(|&(n, q)| n != me && !q.is_empty());
-    let first = candidates.next()?;
-    let Some(second) = candidates.next() else {
-        return Some(first.0);
-    };
-    let mut best: Option<(usize, u64)> = None;
-    for (n, q) in [first, second].into_iter().chain(candidates) {
-        let miss = missing_bytes(*q.back().unwrap());
+    let mut best: Option<(usize, u64, usize)> = None;
+    for &(n, task, len) in candidates {
+        let miss = missing_bytes(task);
         let better = match best {
             None => true,
-            Some((bn, bm)) => miss < bm || (miss == bm && q.len() > ready[bn].len()),
+            Some((_, bm, bl)) => miss < bm || (miss == bm && len > bl),
         };
         if better {
-            best = Some((n, miss));
+            best = Some((n, miss, len));
         }
     }
-    best.map(|(n, _)| n)
+    best.map(|(n, _, _)| n)
+}
+
+/// Outcome of one ready-queue poll (see [`Shared::pick`]).
+enum Pick {
+    /// Run this task now (local front or overflow).
+    Run(usize),
+    /// Exactly one sibling has stealable work: steal from it directly.
+    Steal(usize),
+    /// Several candidates: score `(node, back task, len)` residency with
+    /// the state lock *dropped*, then steal from the winner.
+    Score(Vec<(usize, usize, usize)>),
+    /// Nothing to run or steal.
+    Idle,
+}
+
+/// One completed steal: the tasks migrated from `victim` to the thief.
+/// `first` runs immediately; `queued` landed in the thief's deque. The
+/// worker uses this (after dropping the state lock) to cancel the
+/// victim's queued prefetches and re-route the batch's pulls.
+struct StealInfo {
+    victim: usize,
+    first: usize,
+    queued: Vec<usize>,
 }
 
 impl Shared {
@@ -205,52 +257,81 @@ impl Shared {
         }
     }
 
-    /// Next task for a worker on `me`: local front, then overflow, then a
-    /// locality-aware steal — prefer the victim whose back task's inputs
-    /// are already resident here, and strip half of a deeply-skewed
-    /// victim's deque in one steal. Batched-stolen tasks that land in
-    /// `me`'s deque (not run immediately) are appended to `reroute` so
-    /// the caller can re-route their in-flight prefetches to this node
-    /// once the state lock is dropped.
-    fn pick(
-        &self,
-        st: &mut ExecState,
-        me: usize,
-        stores: &StoreSet,
-        reroute: &mut Vec<usize>,
-    ) -> Option<usize> {
+    /// Next move for a worker on `me`: local front, then overflow, then
+    /// stealing. With several stealable siblings this returns a
+    /// [`Pick::Score`] snapshot instead of scoring inline — the locality
+    /// score reads store residency, and store locks must never nest
+    /// inside the state lock (the ROADMAP contention wart). A single
+    /// candidate (the common deep-skew case) is stolen from directly.
+    fn pick(&self, st: &mut ExecState, me: usize) -> Pick {
         if let Some(i) = st.ready[me].pop_front() {
-            return Some(i);
+            return Pick::Run(i);
         }
         if !self.stealing {
-            return None;
+            return Pick::Idle;
         }
         if let Some(i) = st.overflow.pop_front() {
-            return Some(i);
+            return Pick::Run(i);
         }
-        let victim = best_victim(&st.ready, me, |t| {
-            self.input_bytes[t]
-                .iter()
-                .filter(|&&(o, _)| !stores.contains(me, o))
-                .map(|&(_, b)| b)
-                .sum()
-        })?;
+        let candidates: Vec<(usize, usize, usize)> = st
+            .ready
+            .iter()
+            .enumerate()
+            .filter(|&(n, q)| n != me && !q.is_empty())
+            .map(|(n, q)| (n, *q.back().unwrap(), q.len()))
+            .collect();
+        match candidates.len() {
+            0 => Pick::Idle,
+            1 => Pick::Steal(candidates[0].0),
+            _ => Pick::Score(candidates),
+        }
+    }
+
+    /// Take work from `victim`'s deque for a thief on `me`: one task, or
+    /// — when the victim's depth crosses the adaptive
+    /// [`batch_steal_threshold`] — the back half of the deque in one
+    /// steal (the earliest of the batch runs now, the rest queue
+    /// locally). Returns `None` when the deque drained while the thief
+    /// was scoring (the caller re-picks). On success `info` records the
+    /// migration so the caller can fix up prefetches after unlocking.
+    fn steal_from(
+        &self,
+        st: &mut ExecState,
+        victim: usize,
+        me: usize,
+        info: &mut Option<StealInfo>,
+    ) -> Option<usize> {
         let vlen = st.ready[victim].len();
-        if vlen >= DEEP_SKEW_DEQUE {
+        if vlen == 0 {
+            return None; // raced away while the state lock was dropped
+        }
+        let total: usize =
+            st.ready.iter().map(|q| q.len()).sum::<usize>() + st.overflow.len();
+        let first;
+        let mut queued = Vec::new();
+        if vlen >= batch_steal_threshold(total, st.ready.len()) {
             // deep skew: migrate the back half in one steal, run the
             // earliest of the batch now and queue the rest locally
             let batch: Vec<usize> = st.ready[victim].drain(vlen - vlen / 2..).collect();
             let mut it = batch.into_iter();
-            let first = it.next();
+            first = it.next()?;
             for t in it {
-                reroute.push(t);
+                queued.push(t);
                 st.ready[me].push_back(t);
             }
-            // this node's deque just became stealable: wake parked workers
-            self.cv.notify_all();
-            return first;
+            if !queued.is_empty() {
+                // this node's deque just became stealable: wake workers
+                self.cv.notify_all();
+            }
+        } else {
+            first = st.ready[victim].pop_back()?;
         }
-        st.ready[victim].pop_back()
+        *info = Some(StealInfo {
+            victim,
+            first,
+            queued,
+        });
+        Some(first)
     }
 
     fn fail(&self, msg: String) {
@@ -376,6 +457,9 @@ impl RealExecutor {
         let n_tasks = plan.tasks.len();
         let memory = self.memory.as_ref();
         let mem_start = memory.map(|m| m.stats());
+        // NIC baseline for the run's plan-vs-observed reconciliation
+        // ([`RuntimeFeedback`]): the store counters are cumulative
+        let snap_start = stores.snapshot();
         // only the managed paths read lifetimes: the unmanaged ablation
         // baseline must not pay the analysis walk it is measured against
         let lt = match memory {
@@ -486,9 +570,35 @@ impl RealExecutor {
         // One transfer thread per node: background input pulls plus the
         // memory manager's async spill writes. The Arc exists because the
         // manager's spill-sink callback outlives this stack frame's
-        // borrows (it is detached before the Arc drops).
-        let prefetcher = self.prefetch.then(|| Arc::new(Prefetcher::new(k)));
+        // borrows (it is detached before the Arc drops). The queued-pull
+        // lookahead is capped at half the node byte budget — pulling
+        // further ahead than pressure allows only feeds the evictor.
+        let pf_budget = memory.and_then(|m| m.budget).map(|b| (b / 2).max(1));
+        let prefetcher = self
+            .prefetch
+            .then(|| Arc::new(Prefetcher::new(k, pf_budget)));
         let prefetcher_ref: Option<&Prefetcher> = prefetcher.as_deref();
+        // topological depth per task (plan order is topological): the
+        // transfer threads' pull priority — next-to-run inputs move first
+        let depth: Vec<u64> = if self.prefetch {
+            let mut producer_depth: HashMap<ObjectId, u64> = HashMap::new();
+            let mut d = vec![0u64; n_tasks];
+            for (i, t) in plan.tasks.iter().enumerate() {
+                d[i] = t
+                    .inputs
+                    .iter()
+                    .filter_map(|o| producer_depth.get(o))
+                    .max()
+                    .map_or(0, |m| m + 1);
+                for (o, _) in &t.outputs {
+                    producer_depth.insert(*o, d[i]);
+                }
+            }
+            d
+        } else {
+            Vec::new()
+        };
+        let depth = &depth;
         if let (Some(mgr), Some(pf)) = (memory, &prefetcher) {
             let pf2 = Arc::clone(pf);
             mgr.attach_spill_sink(Arc::new(move |node| pf2.notify_spill(node)));
@@ -527,6 +637,9 @@ impl RealExecutor {
                         shared.task_node[i],
                         obj,
                         transfer_hint(plan, topo, i, obj),
+                        depth[i],
+                        input_bytes_of(plan, i, obj),
+                        i,
                     );
                 }
             }
@@ -559,9 +672,39 @@ impl RealExecutor {
                                 shared.cv.notify_all();
                                 return;
                             }
-                            let mut reroute = Vec::new();
-                            let Some(idx) = shared.pick(&mut st, me, stores, &mut reroute)
-                            else {
+                            let mut steal_info: Option<StealInfo> = None;
+                            let picked = match shared.pick(&mut st, me) {
+                                Pick::Run(i) => Some(i),
+                                Pick::Steal(v) => {
+                                    shared.steal_from(&mut st, v, me, &mut steal_info)
+                                }
+                                Pick::Score(cands) => {
+                                    // lock-ordering fix (ROADMAP): score
+                                    // store residency with the state lock
+                                    // dropped; the steal re-validates
+                                    drop(st);
+                                    let victim = best_victim(&cands, |t| {
+                                        shared.input_bytes[t]
+                                            .iter()
+                                            .filter(|&&(o, _)| !stores.contains(me, o))
+                                            .map(|&(_, b)| b)
+                                            .sum()
+                                    });
+                                    st = shared.state.lock().unwrap();
+                                    let got = victim.and_then(|v| {
+                                        shared.steal_from(&mut st, v, me, &mut steal_info)
+                                    });
+                                    if got.is_none() {
+                                        // the snapshot went stale while the
+                                        // lock was down: re-pick, don't park
+                                        drop(st);
+                                        continue;
+                                    }
+                                    got
+                                }
+                                Pick::Idle => None,
+                            };
+                            let Some(idx) = picked else {
                                 // idle. Provably stuck? (nothing queued
                                 // anywhere, nothing running, work left)
                                 let all_empty = st.overflow.is_empty()
@@ -607,11 +750,24 @@ impl RealExecutor {
                             };
                             st.running += 1;
                             drop(st);
-                            // batched-stolen tasks now queued on this node:
-                            // re-route their in-flight prefetches here
-                            if let Some(pf) = prefetcher_ref {
-                                for &t in &reroute {
-                                    post_prefetch(pf, plan, topo, me, t);
+                            if let (Some(pf), Some(si)) = (prefetcher_ref, &steal_info) {
+                                // the migrated tasks' pulls toward the
+                                // victim are dead weight now: withdraw
+                                // exactly their interest (a job with no
+                                // surviving requester is dropped
+                                // unexecuted and never accounts a byte;
+                                // other tasks' requests are untouched) ...
+                                for &t in si.queued.iter().chain(std::iter::once(&si.first)) {
+                                    for &obj in &plan.tasks[t].inputs {
+                                        pf.cancel_pull(si.victim, obj, t);
+                                    }
+                                }
+                                // ... then re-route the still-queued batch
+                                // here, skipping inputs already resident on
+                                // this node (those are cancelled outright,
+                                // not re-queued)
+                                for &t in &si.queued {
+                                    post_prefetch(pf, plan, topo, me, t, depth[t], Some(stores));
                                 }
                             }
 
@@ -780,6 +936,9 @@ impl RealExecutor {
                                                 shared.task_node[c],
                                                 obj,
                                                 transfer_hint(plan, topo, c, obj),
+                                                depth[c],
+                                                input_bytes_of(plan, c, obj),
+                                                c,
                                             );
                                         }
                                     }
@@ -825,6 +984,10 @@ impl RealExecutor {
                 std::panic::resume_unwind(p);
             }
         });
+        // execution (workers + transfer threads) is over: sample the wall
+        // clock before teardown/reconciliation bookkeeping, so ablation
+        // wall times measure execution, not feedback collection
+        let wall_secs = sw.secs();
 
         // overlap teardown: the transfer threads are gone, so detach the
         // spill sink (back to synchronous writes) and finalize any spill
@@ -860,14 +1023,31 @@ impl RealExecutor {
             _ => Vec::new(),
         };
         let prefetch_stats = prefetcher_ref.map(|p| p.stats()).unwrap_or_default();
+        // reconcile plan vs observation (steals, demand misses, spill
+        // pressure, replicas) so the session can feed the next plan
+        let store_snapshot = stores.snapshot();
+        let replicas = memory
+            .map(|m| m.resident_replicas(stores))
+            .unwrap_or_default();
+        let feedback = RuntimeFeedback::collect(
+            plan,
+            &self.topo,
+            &snap_start,
+            &store_snapshot,
+            &stats,
+            &prefetch_stats,
+            &mem_stats,
+            replicas,
+        );
         Ok(RealReport {
-            wall_secs: sw.secs(),
+            wall_secs,
             tasks: plan.len(),
-            store_snapshot: stores.snapshot(),
+            store_snapshot,
             node_stats: stats,
             mem_stats,
             prefetch_stats,
             gc_released: released,
+            feedback,
         })
     }
 }
@@ -883,14 +1063,37 @@ fn transfer_hint(plan: &Plan, topo: &Topology, i: usize, obj: ObjectId) -> Optio
         .map(|tr| topo.node_of(tr.src))
 }
 
+/// Bytes of input `obj` of task `i` (first matching input position).
+fn input_bytes_of(plan: &Plan, i: usize, obj: ObjectId) -> u64 {
+    let t = &plan.tasks[i];
+    t.inputs
+        .iter()
+        .position(|&o| o == obj)
+        .map(|p| t.in_shapes[p].iter().map(|&d| d as u64).product::<u64>() * 8)
+        .unwrap_or(0)
+}
+
 /// Queue background pulls for every input of a *ready* task `i` toward
-/// `node` (used when a batch steal migrates queued tasks to a thief —
-/// deps == 0, so every input exists somewhere). Local or
-/// already-requested inputs are filtered by the transfer thread / the
-/// dedup table.
-fn post_prefetch(pf: &Prefetcher, plan: &Plan, topo: &Topology, node: usize, i: usize) {
-    for &obj in &plan.tasks[i].inputs {
-        pf.request_pull(node, obj, transfer_hint(plan, topo, i, obj));
+/// `node` at priority `prio` (used when a batch steal migrates queued
+/// tasks to a thief — deps == 0, so every input exists somewhere). With
+/// `stores`, inputs already resident at `node` are skipped outright;
+/// already-requested inputs are deduped by the prefetcher.
+fn post_prefetch(
+    pf: &Prefetcher,
+    plan: &Plan,
+    topo: &Topology,
+    node: usize,
+    i: usize,
+    prio: u64,
+    stores: Option<&StoreSet>,
+) {
+    let t = &plan.tasks[i];
+    for (&obj, shape) in t.inputs.iter().zip(&t.in_shapes) {
+        if stores.map_or(false, |s| s.contains(node, obj)) {
+            continue;
+        }
+        let bytes = shape.iter().map(|&d| d as u64).product::<u64>() * 8;
+        pf.request_pull(node, obj, transfer_hint(plan, topo, i, obj), prio, bytes, i);
     }
 }
 
@@ -1002,21 +1205,36 @@ mod tests {
 
     #[test]
     fn best_victim_prefers_local_inputs_then_depth() {
-        // three candidate victims; the missing-bytes oracle says task 20
-        // (node 2's back task) is fully resident on the thief
-        let mk = |v: &[usize]| v.iter().copied().collect::<VecDeque<usize>>();
-        let ready = vec![mk(&[]), mk(&[10, 11]), mk(&[20]), mk(&[30, 31, 32])];
+        // three snapshotted candidates (node, back task, deque len); the
+        // missing-bytes oracle says task 20 is fully resident on the thief
+        let cands = [(1usize, 11usize, 2usize), (2, 20, 1), (3, 32, 3)];
         let miss = |t: usize| match t {
             20 => 0u64,
             _ => 800,
         };
-        assert_eq!(best_victim(&ready, 0, miss), Some(2));
+        assert_eq!(best_victim(&cands, miss), Some(2));
         // equal misses: the deeper deque wins
-        assert_eq!(best_victim(&ready, 0, |_| 64), Some(3));
+        assert_eq!(best_victim(&cands, |_| 64), Some(3));
         // nothing to steal
-        assert_eq!(best_victim(&[mk(&[]), mk(&[])], 0, |_| 0), None);
-        // never steals from itself
-        assert_eq!(best_victim(&[mk(&[1]), mk(&[])], 0, |_| 0), None);
+        assert_eq!(best_victim(&[], |_| 0u64), None);
+    }
+
+    #[test]
+    fn batch_steal_threshold_tracks_observed_imbalance() {
+        // canonical skew: 40 ready tasks on 4 nodes -> mean 10, batch at 20
+        assert_eq!(batch_steal_threshold(40, 4), 20);
+        // near-balanced: 4 tasks per node -> threshold above any deque, so
+        // steals stay single-task (the old hardcoded 4 would batch here)
+        assert_eq!(batch_steal_threshold(16, 4), 8);
+        // odd full skew on 2 nodes must still batch: threshold ≤ vlen
+        // (ceiling division would put it at vlen + 1 and never batch)
+        assert_eq!(batch_steal_threshold(7, 2), 6);
+        assert!(batch_steal_threshold(7, 2) <= 7);
+        // tiny skew: everything on one node still batches early
+        assert_eq!(batch_steal_threshold(3, 4), 2);
+        // floor: never below MIN_BATCH_STEAL, even when almost empty
+        assert_eq!(batch_steal_threshold(0, 4), MIN_BATCH_STEAL);
+        assert_eq!(batch_steal_threshold(1, 1), MIN_BATCH_STEAL);
     }
 
     #[test]

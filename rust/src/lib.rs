@@ -31,15 +31,29 @@
 //! dependency count ≤ 1, using the scheduler's committed per-task
 //! transfer decisions carried in the [`exec::Plan`] as source hints — so
 //! by the time a worker dequeues a task its inputs are usually resident.
-//! A prefetch miss just falls back to the demand pull; a stolen task
-//! re-routes its in-flight prefetches to the thief's node; and the
-//! memory manager's spill writes ride the same transfer threads
-//! (asynchronous spill with a write-completion barrier, so a reader can
-//! never observe a half-written spill file). Per-node
+//! The transfer queues are priority queues ordered by the consumer
+//! task's topological depth (next-to-run inputs move first), bounded by
+//! a queued-pull byte budget derived from the memory budget, and a
+//! steal *cancels* the victim's queued pulls for the migrated tasks. A
+//! prefetch miss just falls back to the demand pull; the memory
+//! manager's spill writes ride the same transfer threads (asynchronous
+//! spill with a write-completion barrier, so a reader can never observe
+//! a half-written spill file). Per-node
 //! `(prefetch_bytes, prefetch_hits, demand_pull_bytes,
 //! async_spill_bytes)` land in `RealReport::prefetch_stats`, and
 //! `prefetch_bytes + demand_pull_bytes` accounts every cross-node byte
 //! of the run exactly once.
+//!
+//! The loop closes in the other direction too
+//! ([`exec::RuntimeFeedback`], `SessionConfig::feedback`, default on):
+//! after every real run the executor reconciles the plan against what
+//! actually happened — steal migrations and their bytes, demand-pull
+//! misses, spill pressure, NIC traffic the plan never committed, and
+//! the replica copies stolen work left behind — and the session folds
+//! that into the scheduler's [`scheduler::ClusterState`]
+//! ([`scheduler::ClusterState::absorb_feedback`]). The next plan's
+//! Eq. 2 simulation therefore starts from where load really landed,
+//! and runtime replicas widen its placement options.
 //!
 //! ## Memory model
 //!
@@ -68,8 +82,9 @@
 //! queued, work left), which fails the run naming the blocking object
 //! ids — running kernels are never interrupted, however slow.
 //!
-//! See DESIGN.md for the system inventory and the per-experiment index,
-//! and EXPERIMENTS.md for paper-vs-measured results.
+//! See the repository's `README.md` for the quick-start, bench and
+//! toggle reference, and `docs/ARCHITECTURE.md` for the paper-section →
+//! module map and the plan → execute → GC dataflow walkthrough.
 
 pub mod api;
 pub mod bench;

@@ -1,4 +1,4 @@
-//! Load traces and report writers (Fig. 15, EXPERIMENTS.md tables).
+//! Load traces and report writers (the Fig. 15 load-over-time data).
 
 pub mod trace;
 

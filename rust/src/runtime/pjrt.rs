@@ -11,7 +11,7 @@
 //! The interchange format is HLO *text* (`HloModuleProto::from_text_file`):
 //! jax ≥ 0.5 emits serialized protos with 64-bit instruction ids that
 //! xla_extension 0.5.1 rejects, while the text parser reassigns ids (see
-//! /opt/xla-example/README.md and DESIGN.md §4.3).
+//! /opt/xla-example/README.md).
 //!
 //! Executables are compiled lazily per manifest entry and cached. A process
 //! has one `PjRtClient::cpu()`; the client and compiled executables are

@@ -11,6 +11,13 @@
 //! discounted by `intra_discount` (the paper's footnote 1 coefficient);
 //! Ray-mode targets are nodes, where intra-node movement is free via the
 //! shared-memory store.
+//!
+//! The model is kept honest against the real executor from both sides:
+//! [`ClusterState::forget`] removes objects the runtime's lifetime GC
+//! freed, and [`ClusterState::absorb_feedback`] folds in the load the
+//! runtime created that the plan never committed — steal traffic, spill
+//! pressure, and the replica copies stolen work left behind
+//! ([`crate::exec::RuntimeFeedback`]).
 
 use std::collections::HashMap;
 
@@ -180,6 +187,74 @@ impl ClusterState {
         self.max_mem = self.max_mem.max(self.mem[target]);
     }
 
+    /// Record that the runtime materialized a copy of `obj` on physical
+    /// `node` that planning never committed (a steal pull, a demand
+    /// miss, a prefetch to a thief). The copy joins the location map —
+    /// expanding the next plan's placement options, since LSHS only
+    /// considers targets holding some input copy — and its elements join
+    /// the node's memory term, exactly as [`ClusterState::apply`] counts
+    /// a committed pull. In Dask mode the copy is booked on the node's
+    /// first worker target (feedback is per physical node; the store
+    /// that holds it is node-shared anyway). No-op for objects the model
+    /// no longer tracks (forgotten/dead) or already-known locations.
+    pub fn add_replica(&mut self, obj: ObjectId, node: usize) {
+        if self
+            .locations_of(obj)
+            .iter()
+            .any(|&l| self.topo.node_of(l) == node)
+        {
+            return;
+        }
+        let Some(&elems) = self.sizes.get(&obj) else { return };
+        let Some(t) = (0..self.targets()).find(|&t| self.topo.node_of(t) == node) else {
+            return;
+        };
+        self.locations.entry(obj).or_default().push(t);
+        self.mem[t] += elems;
+        self.max_mem = self.max_mem.max(self.mem[t]);
+    }
+
+    /// Fold one real run's [`crate::exec::RuntimeFeedback`] into the load
+    /// model, so the next `schedule()`'s Eq. 2 simulation starts from
+    /// where load *actually* landed instead of where the last plan said
+    /// it would:
+    ///
+    /// * unplanned NIC traffic (steal pulls, eviction re-pulls) joins the
+    ///   cumulative `net_in`/`net_out` terms, spread over the node's
+    ///   targets — traffic-hot nodes repel further load;
+    /// * spill pressure joins the memory term as phantom elements: the
+    ///   planner oversubscribed that node, and the Eq. 2 max-memory
+    ///   objective should keep seeing the oversubscription it caused;
+    /// * runtime replicas join the location map ([`ClusterState::add_replica`]).
+    ///
+    /// Byte counters convert at 8 bytes/element (f64), matching how every
+    /// other model term is counted. Gated by `SessionConfig::feedback`.
+    pub fn absorb_feedback(&mut self, fb: &crate::exec::RuntimeFeedback) {
+        for (node, nf) in fb.nodes.iter().enumerate().take(self.topo.nodes) {
+            let targets: Vec<usize> = (0..self.targets())
+                .filter(|&t| self.topo.node_of(t) == node)
+                .collect();
+            if targets.is_empty() {
+                continue;
+            }
+            let per = targets.len() as f64;
+            let in_share = nf.unplanned_in_bytes as f64 / 8.0 / per;
+            let out_share = nf.unplanned_out_bytes as f64 / 8.0 / per;
+            let spill_share = nf.spilled_bytes as f64 / 8.0 / per;
+            for &t in &targets {
+                self.net_in[t] += in_share;
+                self.net_out[t] += out_share;
+                self.mem[t] += spill_share;
+                self.max_in = self.max_in.max(self.net_in[t]);
+                self.max_out = self.max_out.max(self.net_out[t]);
+                self.max_mem = self.max_mem.max(self.mem[t]);
+            }
+        }
+        for &(obj, node) in &fb.replicas {
+            self.add_replica(obj, node);
+        }
+    }
+
     /// Per-physical-node (mem, in, out) aggregation for reporting (Fig. 15).
     pub fn per_node_loads(&self) -> Vec<(f64, f64, f64)> {
         let mut out = vec![(0.0, 0.0, 0.0); self.topo.nodes];
@@ -286,6 +361,84 @@ mod tests {
         // unknown ids are a no-op
         s.forget(99);
         assert_eq!(s.mem[0], 30.0);
+    }
+
+    #[test]
+    fn add_replica_expands_locations_and_memory_once() {
+        let mut s = ClusterState::new(ray_topo(2));
+        s.register(1, 50.0, 0);
+        s.add_replica(1, 1);
+        assert_eq!(s.locations_of(1), &[0, 1]);
+        assert_eq!(s.mem[1], 50.0);
+        // idempotent: the copy is already known
+        s.add_replica(1, 1);
+        assert_eq!(s.locations_of(1), &[0, 1]);
+        assert_eq!(s.mem[1], 50.0);
+        // unknown (forgotten/dead) objects are a no-op
+        s.add_replica(99, 1);
+        assert_eq!(s.mem[1], 50.0);
+        // a consumer placed on node 1 now pulls nothing
+        assert!(s.placement_cost(1, &[1], 0.0).pulls.is_empty());
+        // and forget() unwinds the replica copy too
+        s.forget(1);
+        assert_eq!(s.mem[1], 0.0);
+        assert!(s.locations_of(1).is_empty());
+    }
+
+    #[test]
+    fn absorb_feedback_charges_unplanned_traffic_and_spill_pressure() {
+        use crate::exec::{NodeFeedback, RuntimeFeedback};
+        let mut s = ClusterState::new(ray_topo(2));
+        s.register(1, 100.0, 0);
+        let fb = RuntimeFeedback {
+            nodes: vec![
+                NodeFeedback {
+                    unplanned_out_bytes: 800, // 100 elems left node 0
+                    spilled_bytes: 400,       // 50 elems paged out there
+                    ..Default::default()
+                },
+                NodeFeedback {
+                    tasks_stolen: 3,
+                    steal_bytes: 800,
+                    demand_pull_bytes: 800,
+                    unplanned_in_bytes: 800, // 100 elems arrived at node 1
+                    ..Default::default()
+                },
+            ],
+            replicas: vec![(1, 1)],
+        };
+        s.absorb_feedback(&fb);
+        assert_eq!(s.net_out[0], 100.0);
+        assert_eq!(s.net_in[1], 100.0);
+        assert_eq!(s.mem[0], 150.0, "spill pressure joins the memory term");
+        assert_eq!(s.mem[1], 100.0, "replica elems counted on the thief");
+        assert_eq!(s.locations_of(1), &[0, 1]);
+        // the cached maxima moved with the terms
+        assert!((s.objective() - (150.0 + 100.0 + 100.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn absorb_feedback_spreads_over_dask_worker_targets() {
+        use crate::exec::{NodeFeedback, RuntimeFeedback};
+        let topo = Topology::new(2, 2, SystemMode::Dask); // 4 worker targets
+        let mut s = ClusterState::new(topo);
+        s.register(7, 40.0, 0); // worker 0, node 0
+        let fb = RuntimeFeedback {
+            nodes: vec![
+                NodeFeedback::default(),
+                NodeFeedback {
+                    unplanned_in_bytes: 1600, // 200 elems over 2 workers
+                    ..Default::default()
+                },
+            ],
+            replicas: vec![(7, 1)],
+        };
+        s.absorb_feedback(&fb);
+        assert_eq!(s.net_in[2], 100.0);
+        assert_eq!(s.net_in[3], 100.0);
+        // the replica books on node 1's first worker target
+        assert_eq!(s.locations_of(7), &[0, 2]);
+        assert_eq!(s.mem[2], 40.0);
     }
 
     #[test]

@@ -150,7 +150,7 @@ impl Scheduler for Lshs {
         plan: &mut Plan,
     ) {
         self.pin_outputs(graph);
-        // Incremental frontier (perf pass, EXPERIMENTS.md §Perf L3):
+        // Incremental frontier:
         // rescanning every vertex per step is O(V²); instead track the
         // candidate set and wake parents when a child resolves to a leaf.
         let eligible = |graph: &Graph, v: usize| -> bool {

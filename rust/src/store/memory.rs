@@ -620,6 +620,29 @@ impl MemoryManager {
         None
     }
 
+    /// Replica copies currently resident, as sorted `(object, node)`
+    /// pairs — objects whose primary lives on another node but which a
+    /// cross-node pull (work stealing, prefetch, demand miss) left a copy
+    /// of here. This is the location part of the executor's
+    /// [`crate::exec::RuntimeFeedback`]: the planner never committed
+    /// these copies, so without feedback its location map (and therefore
+    /// its placement option set) cannot know about them. Sorted so
+    /// absorbing the list is deterministic across runs.
+    pub fn resident_replicas(&self, stores: &StoreSet) -> Vec<(ObjectId, usize)> {
+        let mut out = Vec::new();
+        for n in 0..self.nodes.len() {
+            // lock order: store reads strictly inside the manager node lock
+            let nm = self.nodes[n].lock().unwrap();
+            for &id in &nm.replicas {
+                if stores.contains(n, id) {
+                    out.push((id, n));
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
     /// Refcount release: the object is dead — evict every resident copy
     /// and delete any spill file. The executor calls this when lifetime
     /// analysis says the last consumer completed.

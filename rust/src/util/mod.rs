@@ -1,7 +1,7 @@
 //! Zero-dependency utility substrate: PRNG, CLI parsing, statistics,
 //! property testing, table formatting. These replace `rand`, `clap`,
 //! `criterion`'s stats and `proptest`, none of which are available in the
-//! offline build image (see DESIGN.md §1).
+//! offline build image (see README.md, "Offline build").
 
 pub mod cli;
 pub mod fmt;

@@ -1,0 +1,342 @@
+//! Plan↔runtime feedback suites.
+//!
+//! Executor level: adaptive batch stealing, priority-ordered prefetching
+//! with steal cancellation, and the queued-pull byte budget must all be
+//! pure scheduling/latency optimizations — outputs bit-identical to
+//! sequential plan-order execution for every random graph, node count,
+//! thread count, stealing/prefetch mode and memory budget, with the
+//! per-node byte-accounting identity (`prefetch + demand == net_in`)
+//! intact even when steals cancel queued pulls mid-flight.
+//!
+//! Session level: with `SessionConfig::feedback` on, the ClusterState a
+//! session plans its *next* run against must contain the load the
+//! executor actually observed — unplanned steal/demand traffic in the
+//! Eq. 2 network terms, runtime replica copies in the location map —
+//! and with it off, the model must contain exactly the load the plans
+//! committed, nothing more.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use nums::api::{ops, Session, SessionConfig};
+use nums::exec::{Plan, RealExecutor, RealReport, Task};
+use nums::prelude::*;
+use nums::runtime::native;
+use nums::store::{MemoryManager, StoreSet};
+use nums::util::prop::forall_res;
+
+/// Sequential oracle: run the plan in order, single process, no stores.
+fn run_sequential(plan: &Plan, seeds: &HashMap<u64, Block>) -> HashMap<u64, Block> {
+    let mut env: HashMap<u64, Block> = seeds.clone();
+    for t in &plan.tasks {
+        let refs: Vec<&Block> = t.inputs.iter().map(|o| &env[o]).collect();
+        let outs = native::execute(&t.kernel, &refs).unwrap();
+        for ((obj, _), b) in t.outputs.iter().zip(outs) {
+            env.insert(*obj, b);
+        }
+    }
+    env
+}
+
+/// Random-but-valid plan spec (same scheme as `tests/exec_overlap.rs`),
+/// with a skew knob: when set, every task targets node 0, maximizing
+/// batch-steal and prefetch-cancellation traffic.
+#[derive(Debug)]
+struct PlanSpec {
+    nodes: usize,
+    threads_per_node: usize,
+    stealing: bool,
+    prefetch: bool,
+    budgeted: bool,
+    skewed: bool,
+    n_seeds: usize,
+    tasks: Vec<(u8, usize, usize, usize)>,
+}
+
+const SHAPE: [usize; 2] = [4, 4];
+const BLOCK_BYTES: u64 = (SHAPE[0] * SHAPE[1] * 8) as u64;
+
+fn decode(spec: &PlanSpec) -> (Plan, HashMap<u64, Block>) {
+    let mut rng = Rng::seed_from_u64(0xFEEDB ^ spec.tasks.len() as u64);
+    let mut seeds = HashMap::new();
+    let mut avail: Vec<u64> = Vec::new();
+    for s in 0..spec.n_seeds {
+        let mut v = vec![0.0; SHAPE[0] * SHAPE[1]];
+        rng.fill_normal(&mut v);
+        seeds.insert(s as u64, Block::from_vec(&SHAPE, v));
+        avail.push(s as u64);
+    }
+    let mut tasks = Vec::new();
+    for (i, &(kind, p1, p2, tgt)) in spec.tasks.iter().enumerate() {
+        let out = 1000 + i as u64;
+        let (kernel, inputs) = match kind % 5 {
+            0 => (Kernel::Ew(BinOp::Add), vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+            1 => (Kernel::Ew(BinOp::Mul), vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+            2 => (Kernel::Neg, vec![avail[p1 % avail.len()]]),
+            3 => (Kernel::Scale(0.5), vec![avail[p1 % avail.len()]]),
+            _ => (Kernel::Matmul, vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+        };
+        let in_shapes = vec![SHAPE.to_vec(); inputs.len()];
+        tasks.push(Task {
+            kernel,
+            inputs,
+            in_shapes,
+            outputs: vec![(out, SHAPE.to_vec())],
+            target: if spec.skewed { 0 } else { tgt % spec.nodes },
+            transfers: vec![],
+        });
+        avail.push(out);
+    }
+    (Plan { tasks }, seeds)
+}
+
+/// Per-node `prefetch_bytes + demand_pull_bytes == net_in` for this run.
+fn check_byte_identity(rep: &RealReport, nodes: usize) -> Result<(), String> {
+    for n in 0..nodes {
+        let net_in = rep.store_snapshot[n].2;
+        let p = &rep.prefetch_stats[n];
+        let accounted = p.prefetch_bytes + p.demand_pull_bytes;
+        if accounted != net_in {
+            return Err(format!(
+                "node {n}: prefetch {} + demand {} = {accounted} != net_in {net_in}",
+                p.prefetch_bytes, p.demand_pull_bytes
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_adaptive_steal_and_cancellation_match_sequential_bit_for_bit() {
+    forall_res(
+        0xADA97,
+        25,
+        |r| PlanSpec {
+            nodes: 1 + r.usize(4),
+            threads_per_node: 1 + r.usize(3),
+            stealing: r.usize(4) != 0, // bias on: the paths under test
+            prefetch: r.usize(4) != 0,
+            budgeted: r.usize(2) == 1,
+            skewed: r.usize(2) == 1,
+            n_seeds: 2 + r.usize(4),
+            tasks: (0..1 + r.usize(24))
+                .map(|_| (r.usize(256) as u8, r.usize(1 << 16), r.usize(1 << 16), r.usize(1 << 16)))
+                .collect(),
+        },
+        |spec| {
+            let (plan, seeds) = decode(spec);
+            let want = run_sequential(&plan, &seeds);
+            let topo = Topology::new(spec.nodes, 2, SystemMode::Ray);
+            let budget = if spec.budgeted { Some(4 * BLOCK_BYTES) } else { None };
+            let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+                .with_stealing(spec.stealing)
+                .with_prefetch(spec.prefetch)
+                .with_memory(MemoryManager::new(spec.nodes, budget, true));
+            exec.threads_per_node = spec.threads_per_node;
+            let stores = StoreSet::new(spec.nodes);
+            for (obj, b) in &seeds {
+                stores.put((*obj as usize) % spec.nodes, *obj, Arc::new(b.clone()));
+            }
+            let rep = exec
+                .run(&plan, &stores)
+                .map_err(|e| format!("executor failed: {e}"))?;
+            if spec.prefetch {
+                check_byte_identity(&rep, spec.nodes)?;
+            }
+            // the reconciliation must internally agree with the counters
+            for (n, f) in rep.feedback.nodes.iter().enumerate() {
+                if f.steal_bytes != rep.node_stats[n].steal_bytes {
+                    return Err(format!("node {n}: feedback steal bytes diverge"));
+                }
+                // an empty plan-transfer list means every inbound byte is
+                // unplanned — the reconciliation may never undercount it
+                if f.unplanned_in_bytes != rep.store_snapshot[n].2 {
+                    return Err(format!(
+                        "node {n}: unplanned_in {} != net_in {} on a plan with \
+                         no committed transfers",
+                        f.unplanned_in_bytes, rep.store_snapshot[n].2
+                    ));
+                }
+            }
+            let mgr = exec.memory.as_ref().unwrap();
+            let consumed: std::collections::HashSet<u64> =
+                plan.tasks.iter().flat_map(|t| t.inputs.iter().copied()).collect();
+            for i in 0..plan.tasks.len() {
+                let obj = 1000 + i as u64;
+                if consumed.contains(&obj) {
+                    continue; // dead intermediate, GC-released
+                }
+                let got = mgr
+                    .fetch(&stores, obj)
+                    .ok_or_else(|| format!("output {obj} missing"))?;
+                let w = &want[&obj];
+                if got.shape != w.shape {
+                    return Err(format!("shape mismatch on {obj}"));
+                }
+                if got.buf().iter().zip(w.buf()).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err(format!("output {obj} differs from oracle"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Build one deliberately skewed 2-node session: every creation block on
+/// node 0, so the first plan packs node 0 and stealing must migrate.
+fn skewed_session(feedback: bool) -> (Session, DistArray, DistArray) {
+    let cfg = SessionConfig::real_small(2, 2).with_feedback(feedback);
+    let mut sess = Session::new(cfg);
+    let x = sess.randn_at(&[256, 256], &[4, 4], 0);
+    let y = sess.randn_at(&[256, 256], &[4, 4], 0);
+    (sess, x, y)
+}
+
+#[test]
+fn feedback_absorbs_observed_load_and_off_stays_plan_exact() {
+    let run = |feedback: bool| {
+        let (mut sess, x, y) = skewed_session(feedback);
+        let (out, rep) = ops::matmul(&mut sess, &x, &y).unwrap();
+        let dense = sess.fetch(&out).unwrap();
+        (sess, dense, rep)
+    };
+    let (sess_off, out_off, rep_off) = run(false);
+    let (sess_on, out_on, rep_on) = run(true);
+    // run 1 plans before any feedback exists: identical plans, identical
+    // execution order constraints, bit-identical numerics
+    assert_eq!(rep_off.tasks, rep_on.tasks);
+    assert_eq!(out_off.max_abs_diff(&out_on), 0.0, "first runs must match");
+
+    // OFF: the model's inbound-traffic term is exactly what the plans
+    // committed — runtime traffic (steals, demand misses) never enters
+    let committed_elems = rep_off.transfer_bytes as f64 / 8.0;
+    let off_in: f64 = sess_off.state.net_in.iter().sum();
+    assert!(
+        (off_in - committed_elems).abs() < 1e-6,
+        "feedback off: net_in {off_in} != committed {committed_elems}"
+    );
+
+    // ON: everything the executor reconciled is in the model
+    let real = rep_on.real.as_ref().expect("real mode");
+    let fb = &real.feedback;
+    let on_in: f64 = sess_on.state.net_in.iter().sum();
+    let unplanned_elems: f64 = fb
+        .nodes
+        .iter()
+        .map(|n| n.unplanned_in_bytes as f64 / 8.0)
+        .sum();
+    assert!(
+        (on_in - (committed_elems + unplanned_elems)).abs() < 1e-6,
+        "feedback on: net_in {on_in} != committed {committed_elems} + observed {unplanned_elems}"
+    );
+    // every still-live runtime replica joined the location map
+    for &(obj, node) in &fb.replicas {
+        if sess_on.state.size_of(obj) == 0.0 {
+            continue; // released after collection: forgotten again
+        }
+        assert!(
+            sess_on
+                .state
+                .locations_of(obj)
+                .iter()
+                .any(|&t| sess_on.topo.node_of(t) == node),
+            "replica ({obj}, {node}) missing from the load model"
+        );
+    }
+}
+
+#[test]
+fn second_plan_uses_runtime_replicas_when_feedback_is_on() {
+    let (mut sess, x, y) = skewed_session(true);
+    let (_, rep1) = ops::matmul(&mut sess, &x, &y).unwrap();
+    let real1 = rep1.real.as_ref().expect("real mode");
+    if real1.feedback.replicas.is_empty() {
+        eprintln!("skipping: no steal/replica traffic on this host");
+        return;
+    }
+    // acceptance: the second of two identical skewed-layout runs plans
+    // against a ClusterState that includes the observed load — every
+    // seed-block replica the executor reported is a placement option now
+    let mut widened = 0usize;
+    for &(obj, node) in &real1.feedback.replicas {
+        if sess.state.size_of(obj) == 0.0 {
+            continue;
+        }
+        if sess
+            .state
+            .locations_of(obj)
+            .iter()
+            .any(|&t| sess.topo.node_of(t) == node)
+        {
+            widened += 1;
+        }
+    }
+    assert!(widened > 0, "no replica widened the location map");
+    // the second identical run completes and plans from the updated state
+    let (out2, rep2) = ops::matmul(&mut sess, &x, &y).unwrap();
+    assert_eq!(rep2.tasks, rep1.tasks);
+    let dense = sess.fetch(&out2).unwrap();
+    assert_eq!(dense.shape, vec![256, 256]);
+}
+
+#[test]
+fn feedback_toggle_is_bit_transparent_for_elementwise_pipelines() {
+    // element-wise ops are block-local: placement can never change their
+    // numerics, so across *multiple* runs (where feedback does alter
+    // plans) the toggle must stay bit-transparent
+    let run = |feedback: bool| {
+        let (mut sess, x, y) = skewed_session(feedback);
+        let (a, _) = ops::add(&mut sess, &x, &y).unwrap();
+        let (b, _) = ops::mul(&mut sess, &a, &x).unwrap();
+        let (c, _) = ops::neg(&mut sess, &b).unwrap();
+        sess.fetch(&c).unwrap()
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.max_abs_diff(&on), 0.0, "feedback changed elementwise bits");
+}
+
+#[test]
+fn skewed_glm_model_tracks_committed_plus_observed_traffic() {
+    // the bench asserts the perf claim (strictly fewer demand pulls in
+    // the fig09 feedback ablation, which is timing-sensitive); the test
+    // bar is the deterministic wiring: across a whole multi-run Newton
+    // fit, the OFF model's inbound term equals exactly the bytes its
+    // plans committed, while the ON model equals committed plus every
+    // clamped unplanned byte the executor reported — run by run
+    let fit = |feedback: bool| {
+        let cfg = SessionConfig::real_small(2, 2).with_feedback(feedback);
+        let mut sess = Session::new(cfg);
+        let x = sess.randn_at(&[512, 8], &[8, 1], 0);
+        let y = sess.create_at(&[512, 1], &[8, 1], 0, |rng, bs, _| {
+            (0..bs.iter().product::<usize>())
+                .map(|_| if rng.bool(0.5) { 1.0 } else { 0.0 })
+                .collect()
+        });
+        let res = nums::glm::newton_fit(&mut sess, &x, &y, 3, 1e-6).unwrap();
+        let committed: u64 = res.reports.iter().map(|r| r.transfer_bytes).sum();
+        let unplanned: u64 = res
+            .reports
+            .iter()
+            .filter_map(|r| r.real.as_ref())
+            .flat_map(|r| r.feedback.nodes.iter())
+            .map(|n| n.unplanned_in_bytes)
+            .sum();
+        let model_in: f64 = sess.state.net_in.iter().sum();
+        (committed, unplanned, model_in, *res.losses.last().unwrap())
+    };
+    let (c_off, _, in_off, loss_off) = fit(false);
+    let (c_on, u_on, in_on, loss_on) = fit(true);
+    assert!(loss_off.is_finite() && loss_off < 0.8, "off arm diverged: {loss_off}");
+    assert!(loss_on.is_finite() && loss_on < 0.8, "on arm diverged: {loss_on}");
+    assert!(
+        (in_off - c_off as f64 / 8.0).abs() < 1e-6,
+        "feedback off: model in {in_off} != committed {} elems",
+        c_off as f64 / 8.0
+    );
+    let want_on = (c_on + u_on) as f64 / 8.0;
+    assert!(
+        (in_on - want_on).abs() < 1e-6,
+        "feedback on: model in {in_on} != committed+observed {want_on} elems"
+    );
+}
