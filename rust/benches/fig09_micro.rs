@@ -9,7 +9,9 @@
 //!
 //! Extended sections (this repo's perf work): the element-wise-chain
 //! fusion ablation (fusion on/off over modeled cluster + real execution),
-//! the blocked-vs-naive dense matmul kernel shootout, the work-stealing
+//! the naive/blocked/SIMD dense matmul kernel shootout, the
+//! contraction-epilogue fusion ablation (Scale/Neg folded into
+//! `ScaledMatmul` writeback), the work-stealing
 //! ablation (a deliberately skewed plan with stealing on/off, per-node
 //! steal counters included), the memory-manager and
 //! communication-overlap ablations, and the plan↔runtime feedback
@@ -216,7 +218,81 @@ fn kernel_shootout(records: &mut Vec<PerfRecord>, smoke: bool) {
     };
     let blocked = secs_of("matmul_blocked", dense::matmul);
     let naive = secs_of("matmul_naive", dense::matmul_naive);
-    println!("  speedup: {:.2}x", naive / blocked);
+    // packed-panel AVX2+FMA tier (degrades to scalar where unavailable —
+    // the row then just duplicates matmul_blocked)
+    let simd = secs_of("matmul_simd", |a, b| {
+        dense::matmul_tier(
+            a,
+            b,
+            1.0,
+            ExecContext::host_default().kernel_threads,
+            KernelTier::simd_if_available(),
+        )
+    });
+    println!(
+        "  blocked/naive speedup: {:.2}x, simd/blocked: {:.2}x (simd tier: {})",
+        naive / blocked,
+        blocked / simd,
+        KernelTier::simd_if_available().name()
+    );
+}
+
+/// Contraction-epilogue fusion ablation (the PR 6 satellite): `-2·(X@W)`
+/// built as an explicit Scale∘Matmul graph, run with fusion off (separate
+/// Scale tasks) and on (the Scale folds into `ScaledMatmul`, α applied in
+/// the C-writeback — see `graph::fuse::fuse_epilogues`). Strict sessions
+/// keep the fold bit-exact, which the arm asserts; a third relaxed arm
+/// times the same folded plan on the SIMD tier.
+fn epilogue_ablation(records: &mut Vec<PerfRecord>, smoke: bool) {
+    println!("## Fig 9 (ext): contraction-epilogue fusion ablation (-2·(X@W))");
+    let m = if smoke { 512usize } else { 2048usize };
+    let (k, n, q) = (256usize, 128usize, 4usize);
+    let build_graph = |sess: &mut Session| -> (DistArray, Graph) {
+        let x = sess.randn(&[m, k], &[q, 1]);
+        let w = sess.randn(&[k, n], &[1, 1]);
+        let mut g = Graph::new();
+        let roots: Vec<(usize, usize)> = (0..q)
+            .map(|i| {
+                let la = g.leaf(x.obj_at(&[i, 0]), &x.grid.block_shape(&[i, 0]));
+                let lw = g.leaf(w.obj_at(&[0, 0]), &[k, n]);
+                let mm = g.op(Kernel::Matmul, vec![(la, 0), (lw, 0)]);
+                (g.op(Kernel::Scale(-2.0), vec![(mm, 0)]), 0)
+            })
+            .collect();
+        g.add_output(ArrayGrid::new(&[m, n], &[q, 1]), roots);
+        (x, g)
+    };
+    let mut outs: Vec<Block> = Vec::new();
+    for (label, fusion, strict) in [
+        ("unfused/strict", false, true),
+        ("folded/strict", true, true),
+        ("folded/simd", true, false),
+    ] {
+        let cfg = SessionConfig::real_small(2, 2)
+            .with_fusion(fusion)
+            .with_strict_kernels(strict);
+        let mut sess = Session::new(cfg);
+        let (_, mut g) = build_graph(&mut sess);
+        let sw = Stopwatch::start();
+        let (arrs, rep) = sess.run(&mut g).unwrap();
+        let secs = sw.secs();
+        println!(
+            "  {label:<15} tasks={:<3} fused_ops={:<2} wall={secs:.4}s",
+            rep.tasks, rep.fused_ops
+        );
+        outs.push(sess.fetch(&arrs[0]).unwrap());
+        records.push(PerfRecord {
+            op: format!("scaled_matmul_{}", label.replace('/', "_")),
+            bytes: ((m * k + k * n + m * n) * 8) as u64,
+            secs,
+            gflops: 2.0 * (m * k * n) as f64 / secs / 1e9,
+        });
+    }
+    assert_eq!(
+        outs[0].max_abs_diff(&outs[1]),
+        0.0,
+        "epilogue fold must be bit-exact on the strict tier"
+    );
 }
 
 /// Work-stealing ablation: K independent matmuls all *targeted* at node 0
@@ -647,6 +723,7 @@ fn main() {
     let mut records = Vec::new();
     chain_ablation(&mut records, smoke);
     kernel_shootout(&mut records, smoke);
+    epilogue_ablation(&mut records, smoke);
     stealing_ablation(&mut records, smoke);
     memory_ablation(&mut records, smoke);
     overlap_ablation(&mut records, smoke);

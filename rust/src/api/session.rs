@@ -15,7 +15,7 @@ use crate::exec::{Plan, RealExecutor, RealReport, SimExecutor, SimReport};
 use crate::graph::{DistArray, Graph};
 use crate::grid::{softmax_grid, ArrayGrid, NodeGrid};
 use crate::net::model::{ComputeParams, NetParams, SystemMode};
-use crate::runtime::Backend;
+use crate::runtime::{Backend, KernelTier};
 use crate::scheduler::baselines::{BottomUp, RandomPlace, RoundRobin};
 use crate::scheduler::{ClusterState, Lshs, Scheduler, Topology};
 use crate::store::{Block, IdGen, MemoryManager, ObjectId, StoreSet};
@@ -74,6 +74,15 @@ pub struct SessionConfig {
     /// ablation in `benches/fig09_micro.rs`. Per-node steal counters land
     /// in `RealReport::node_stats`.
     pub stealing: bool,
+    /// Pin the real executor's kernels to the portable scalar tier
+    /// (`runtime::KernelTier::Scalar`), which is bit-for-bit identical to
+    /// the `matmul_naive` oracle and across thread counts. On by default
+    /// so every exact-equality property contract holds; benches flip it
+    /// off (`with_strict_kernels(false)`) to dispatch the packed
+    /// AVX2+FMA microkernels, whose results differ from scalar only
+    /// within the documented epsilon bound (`tests/kernel_tier.rs`). The
+    /// `NUMS_KERNEL_TIER=scalar` env override still wins either way.
+    pub strict_kernels: bool,
     /// Overlap communication with compute during real execution: one
     /// transfer thread per node prefetches the remote inputs of
     /// near-ready tasks (guided by the scheduler's committed transfer
@@ -129,6 +138,7 @@ impl SessionConfig {
             record_trace: false,
             fusion: true,
             stealing: true,
+            strict_kernels: true,
             prefetch: true,
             lifetime_gc: true,
             mem_budget_bytes: None,
@@ -151,6 +161,7 @@ impl SessionConfig {
             record_trace: false,
             fusion: true,
             stealing: true,
+            strict_kernels: true,
             prefetch: true,
             lifetime_gc: true,
             mem_budget_bytes: None,
@@ -165,6 +176,13 @@ impl SessionConfig {
 
     pub fn with_fusion(mut self, on: bool) -> Self {
         self.fusion = on;
+        self
+    }
+
+    /// Toggle strict (scalar, bit-reproducible) kernels
+    /// (see [`SessionConfig::strict_kernels`]).
+    pub fn with_strict_kernels(mut self, on: bool) -> Self {
+        self.strict_kernels = on;
         self
     }
 
@@ -271,10 +289,16 @@ impl Session {
         let real_exec = if cfg.exec == ExecMode::Real {
             let memory =
                 MemoryManager::new(topo.nodes, cfg.mem_budget_bytes, cfg.lifetime_gc);
+            let tier = if cfg.strict_kernels {
+                KernelTier::Scalar
+            } else {
+                KernelTier::detect()
+            };
             Some(
                 RealExecutor::new(topo.clone(), Arc::clone(&backend))
                     .with_stealing(cfg.stealing)
                     .with_prefetch(cfg.prefetch)
+                    .with_tier(tier)
                     .with_memory(memory),
             )
         } else {
@@ -456,10 +480,15 @@ impl Session {
     /// [`DistArray`] per graph output plus the run report.
     pub fn run(&mut self, graph: &mut Graph) -> Result<(Vec<DistArray>, RunReport)> {
         let sw = crate::util::Stopwatch::start();
-        // planning step 1: collapse element-wise chains (one task, one
-        // placement decision, zero intermediates per chain)
+        // planning step 1: fold Scale/Neg epilogues into their contraction
+        // (α applied during C-writeback), then collapse the remaining
+        // element-wise chains (one task, one placement decision, zero
+        // intermediates per chain)
         let fuse_stats = if self.cfg.fusion {
-            crate::graph::fuse::fuse_elementwise(graph)
+            let folded = crate::graph::fuse::fuse_epilogues(graph);
+            let mut st = crate::graph::fuse::fuse_elementwise(graph);
+            st.absorbed += folded;
+            st
         } else {
             crate::graph::fuse::FuseStats::default()
         };

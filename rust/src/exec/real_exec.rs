@@ -73,7 +73,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::{Backend, ExecContext};
+use crate::runtime::{Backend, ExecContext, KernelTier};
 use crate::scheduler::Topology;
 use crate::store::{Block, MemoryManager, NodeMemStats, ObjectId, StoreSet};
 use crate::util::Stopwatch;
@@ -397,6 +397,11 @@ pub struct RealExecutor {
     /// Cluster memory manager: lifetime GC, replica eviction, and
     /// spill-to-disk (`None` = unmanaged, the pre-manager behavior).
     pub memory: Option<MemoryManager>,
+    /// Microkernel tier every worker's [`ExecContext`] carries: `Scalar`
+    /// is bit-reproducible against the naive oracle, `Simd` dispatches
+    /// the packed AVX2+FMA path (epsilon-bounded). Resolved once here —
+    /// workers never re-run feature detection.
+    pub tier: KernelTier,
 }
 
 impl RealExecutor {
@@ -415,11 +420,21 @@ impl RealExecutor {
             stealing: true,
             prefetch: true,
             memory: None,
+            tier: KernelTier::detect(),
         }
     }
 
     pub fn with_stealing(mut self, on: bool) -> Self {
         self.stealing = on;
+        self
+    }
+
+    /// Pin the microkernel tier for every worker (see
+    /// [`RealExecutor::tier`]). A `Simd` request still degrades to
+    /// `Scalar` when the host lacks AVX2+FMA or `NUMS_KERNEL_TIER=scalar`
+    /// is set ([`KernelTier::resolve`]).
+    pub fn with_tier(mut self, tier: KernelTier) -> Self {
+        self.tier = KernelTier::resolve(tier);
         self
     }
 
@@ -659,9 +674,11 @@ impl RealExecutor {
             for node in 0..k {
                 for _ in 0..self.threads_per_node {
                     let stealing = self.stealing;
+                    let tier = self.tier;
                     workers.push(scope.spawn(move || {
                         let me = node;
-                        let ctx = ExecContext::shared(total_workers, me, stealing);
+                        let ctx =
+                            ExecContext::shared(total_workers, me, stealing).with_tier(tier);
                         loop {
                             if shared.has_failed() {
                                 return;

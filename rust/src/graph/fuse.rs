@@ -34,6 +34,18 @@
 //! * **Shape** — element-wise kernels are shape-preserving and `Ew`
 //!   requires equal operand shapes, so every input of a fused vertex has
 //!   the output's shape; `Kernel::FusedEw::out_shapes` re-asserts this.
+//!
+//! [`fuse_epilogues`] is the contraction-side companion: a `Scale`/`Neg`
+//! chain sitting directly on a `Matmul`/`MatmulNT`/`Gram` output folds
+//! into the contraction itself (`Kernel::ScaledMatmul(α)` & co.), so the
+//! backend applies α during C-writeback instead of re-traversing the
+//! output block in a separate task. At most **one** `Scale` is folded per
+//! chain — `α·(c·x)` and `(α·c)·x` round differently, while any number of
+//! `Neg`s are exact sign flips — so the folded result stays bit-identical
+//! to the unfused pipeline (`α = (−1)^negs · c`). It runs before
+//! [`fuse_elementwise`] in `Session::run`; whatever epilogue tail the
+//! fold rejects (a second `Scale`, a `Sigmoid`, …) is still fair game for
+//! element-wise fusion afterwards.
 
 use crate::runtime::kernel::{BinOp, EwStep, Kernel};
 
@@ -172,6 +184,119 @@ pub fn fuse_elementwise(g: &mut Graph) -> FuseStats {
     stats
 }
 
+/// Fold `Scale`/`Neg` epilogue chains into the contraction they decorate.
+///
+/// For every unconstrained, single-consumer `Matmul` / `MatmulNT` / `Gram`
+/// vertex whose consumer chain is made of unary `Neg` and `Scale` vertices,
+/// the chain's top vertex is rewritten in place as the matching
+/// `ScaledMatmul(α)` / `ScaledMatmulNT(α)` / `ScaledGram(α)` with
+/// `α = (−1)^negs · c`; the contraction and the interior epilogues become
+/// inert leaves. Rewriting the *top* in place keeps output roots and any
+/// downstream consumer edges valid, exactly like [`fuse_elementwise`].
+///
+/// Folding rules (all preserve bit-identity with the unfused pipeline —
+/// see the module doc):
+/// * at most one `Scale` per chain; a second `Scale` ends the chain,
+/// * any number of `Neg`s (exact sign flips),
+/// * interior chain members must be single-consumer and unconstrained,
+/// * the top vertex keeps its own constraint and consumers,
+/// * a constrained or multi-consumer contraction is never folded.
+///
+/// Returns the number of epilogue vertices folded away (tasks removed).
+pub fn fuse_epilogues(g: &mut Graph) -> usize {
+    let n = g.vertices.len();
+
+    // Sole consuming vertex per vertex, or None when the count isn't
+    // exactly one op edge (output roots count as consumers but cannot
+    // absorb anything — the root's block must materialize as produced).
+    let mut consumers = vec![0usize; n];
+    let mut consumer_of: Vec<Option<usize>> = vec![None; n];
+    for (vid, v) in g.vertices.iter().enumerate() {
+        for &(c, _) in v.children() {
+            consumers[c] += 1;
+            consumer_of[c] = Some(vid);
+        }
+    }
+    for out in &g.outputs {
+        for &(r, _) in &out.roots {
+            consumers[r] += 1;
+            consumer_of[r] = None;
+        }
+    }
+    for (c, slot) in consumer_of.iter_mut().enumerate() {
+        if consumers[c] != 1 {
+            *slot = None;
+        }
+    }
+
+    let inert = || Vertex::Leaf {
+        objs: Vec::new(),
+        shapes: Vec::new(),
+    };
+
+    let mut folded = 0usize;
+    for vid in 0..n {
+        let base = match &g.vertices[vid] {
+            Vertex::Op {
+                kernel: kernel @ (Kernel::Matmul | Kernel::MatmulNT | Kernel::Gram),
+                constraint: None,
+                ..
+            } => kernel.clone(),
+            _ => continue,
+        };
+
+        // Climb the consumer chain while it stays a foldable epilogue.
+        // Chains are vertex-disjoint (every link is a unique single
+        // consumer), so no vertex is rewritten twice.
+        let mut chain: Vec<usize> = Vec::new();
+        let mut scale: Option<f64> = None;
+        let mut negs = 0usize;
+        let mut cur = vid;
+        loop {
+            // extending past `cur` absorbs it, which a constraint forbids
+            // (the contraction itself was already checked above)
+            if g.vertices[cur].constraint().is_some() {
+                break;
+            }
+            let Some(next) = consumer_of[cur] else { break };
+            match &g.vertices[next] {
+                Vertex::Op {
+                    kernel: Kernel::Neg, ..
+                } => negs += 1,
+                Vertex::Op {
+                    kernel: Kernel::Scale(c),
+                    ..
+                } if scale.is_none() => scale = Some(*c),
+                _ => break,
+            }
+            chain.push(next);
+            cur = next;
+        }
+        let Some(&top) = chain.last() else { continue };
+
+        let alpha = if negs % 2 == 1 { -1.0 } else { 1.0 } * scale.unwrap_or(1.0);
+        let kernel = match base {
+            Kernel::Matmul => Kernel::ScaledMatmul(alpha),
+            Kernel::MatmulNT => Kernel::ScaledMatmulNT(alpha),
+            Kernel::Gram => Kernel::ScaledGram(alpha),
+            _ => unreachable!("guarded by the match above"),
+        };
+        let children = g.vertices[vid].children().to_vec();
+        let constraint = g.vertices[top].constraint();
+        g.vertices[top] = Vertex::Op {
+            kernel,
+            children,
+            constraint,
+        };
+        g.vertices[vid] = inert();
+        for &m in &chain[..chain.len() - 1] {
+            g.vertices[m] = inert();
+        }
+        folded += chain.len();
+    }
+    folded
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,5 +422,166 @@ mod tests {
         let st = fuse_elementwise(&mut g);
         assert_eq!(st.chains + st.absorbed, 0);
         assert_eq!(g.total_tasks(), before);
+    }
+
+    #[test]
+    fn epilogue_scale_folds_into_matmul() {
+        let mut g = Graph::new();
+        let a = g.leaf(0, &[4, 3]);
+        let b = g.leaf(1, &[3, 5]);
+        let mm = g.op(Kernel::Matmul, vec![(a, 0), (b, 0)]);
+        let s = g.op(Kernel::Scale(2.5), vec![(mm, 0)]);
+        g.add_output(ArrayGrid::new(&[4, 5], &[1, 1]), vec![(s, 0)]);
+        assert_eq!(g.total_tasks(), 2);
+
+        let folded = fuse_epilogues(&mut g);
+        assert_eq!(folded, 1);
+        assert_eq!(g.total_tasks(), 1);
+        match &g.vertices[s] {
+            Vertex::Op {
+                kernel: Kernel::ScaledMatmul(alpha),
+                children,
+                ..
+            } => {
+                assert_eq!(*alpha, 2.5);
+                assert_eq!(children, &vec![(a, 0), (b, 0)]);
+            }
+            other => panic!("expected ScaledMatmul, got {other:?}"),
+        }
+        assert!(g.vertices[mm].is_leaf(), "contraction absorbed into top");
+    }
+
+    #[test]
+    fn epilogue_neg_scale_chain_combines_sign_into_alpha() {
+        // -(3·(Aᵀ·B)): one Scale plus one Neg → ScaledGram(-3).
+        let mut g = Graph::new();
+        let a = g.leaf(0, &[6, 2]);
+        let b = g.leaf(1, &[6, 4]);
+        let gr = g.op(Kernel::Gram, vec![(a, 0), (b, 0)]);
+        let s = g.op(Kernel::Scale(3.0), vec![(gr, 0)]);
+        let ng = g.op(Kernel::Neg, vec![(s, 0)]);
+        g.add_output(ArrayGrid::new(&[2, 4], &[1, 1]), vec![(ng, 0)]);
+
+        let folded = fuse_epilogues(&mut g);
+        assert_eq!(folded, 2);
+        assert_eq!(g.total_tasks(), 1);
+        match &g.vertices[ng] {
+            Vertex::Op {
+                kernel: Kernel::ScaledGram(alpha),
+                ..
+            } => assert_eq!(*alpha, -3.0),
+            other => panic!("expected ScaledGram, got {other:?}"),
+        }
+        assert!(g.vertices[gr].is_leaf());
+        assert!(g.vertices[s].is_leaf());
+    }
+
+    #[test]
+    fn second_scale_stops_the_epilogue_chain() {
+        // 2·(3·(A·B)): folding both scales would change rounding, so only
+        // the inner Scale folds and the outer one survives as a task.
+        let mut g = Graph::new();
+        let a = g.leaf(0, &[2, 2]);
+        let b = g.leaf(1, &[2, 2]);
+        let mm = g.op(Kernel::Matmul, vec![(a, 0), (b, 0)]);
+        let s1 = g.op(Kernel::Scale(3.0), vec![(mm, 0)]);
+        let s2 = g.op(Kernel::Scale(2.0), vec![(s1, 0)]);
+        g.add_output(ArrayGrid::new(&[2, 2], &[1, 1]), vec![(s2, 0)]);
+
+        let folded = fuse_epilogues(&mut g);
+        assert_eq!(folded, 1);
+        assert_eq!(g.total_tasks(), 2);
+        assert!(matches!(
+            &g.vertices[s1],
+            Vertex::Op {
+                kernel: Kernel::ScaledMatmul(alpha),
+                ..
+            } if *alpha == 3.0
+        ));
+        assert!(matches!(
+            &g.vertices[s2],
+            Vertex::Op {
+                kernel: Kernel::Scale(c),
+                ..
+            } if *c == 2.0
+        ));
+    }
+
+    #[test]
+    fn multi_consumer_contraction_is_not_folded() {
+        // The matmul result is both scaled and an output root: it must
+        // materialize, so the Scale stays a separate task.
+        let mut g = Graph::new();
+        let a = g.leaf(0, &[2, 2]);
+        let b = g.leaf(1, &[2, 2]);
+        let mm = g.op(Kernel::Matmul, vec![(a, 0), (b, 0)]);
+        let s = g.op(Kernel::Scale(2.0), vec![(mm, 0)]);
+        let grid = ArrayGrid::new(&[2, 2], &[1, 1]);
+        g.add_output(grid.clone(), vec![(mm, 0)]);
+        g.add_output(grid, vec![(s, 0)]);
+
+        assert_eq!(fuse_epilogues(&mut g), 0);
+        assert_eq!(g.total_tasks(), 2);
+    }
+
+    #[test]
+    fn constrained_contraction_is_not_folded() {
+        let mut g = Graph::new();
+        let a = g.leaf(0, &[2, 2]);
+        let b = g.leaf(1, &[2, 2]);
+        let mm = g.op(Kernel::Matmul, vec![(a, 0), (b, 0)]);
+        g.set_constraint(mm, 1); // pinned placement must survive
+        let s = g.op(Kernel::Scale(2.0), vec![(mm, 0)]);
+        g.add_output(ArrayGrid::new(&[2, 2], &[1, 1]), vec![(s, 0)]);
+
+        assert_eq!(fuse_epilogues(&mut g), 0);
+        assert_eq!(g.total_tasks(), 2);
+    }
+
+    #[test]
+    fn epilogue_top_keeps_its_constraint() {
+        let mut g = Graph::new();
+        let a = g.leaf(0, &[2, 2]);
+        let b = g.leaf(1, &[2, 2]);
+        let mm = g.op(Kernel::Matmul, vec![(a, 0), (b, 0)]);
+        let s = g.op(Kernel::Scale(2.0), vec![(mm, 0)]);
+        g.set_constraint(s, 3);
+        g.add_output(ArrayGrid::new(&[2, 2], &[1, 1]), vec![(s, 0)]);
+
+        assert_eq!(fuse_epilogues(&mut g), 1);
+        match &g.vertices[s] {
+            Vertex::Op {
+                kernel: Kernel::ScaledMatmul(_),
+                constraint,
+                ..
+            } => assert_eq!(*constraint, Some(3)),
+            other => panic!("expected ScaledMatmul, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn epilogue_fold_leaves_sigmoid_for_elementwise_fusion() {
+        // sigmoid(-(A·B)): the Neg folds into the contraction, the sigmoid
+        // does not (it is no α-epilogue) — and afterwards fuse_elementwise
+        // has nothing left to collapse (a single sigmoid is not a chain).
+        let mut g = Graph::new();
+        let a = g.leaf(0, &[2, 2]);
+        let b = g.leaf(1, &[2, 2]);
+        let mm = g.op(Kernel::Matmul, vec![(a, 0), (b, 0)]);
+        let ng = g.op(Kernel::Neg, vec![(mm, 0)]);
+        let sg = g.op(Kernel::Sigmoid, vec![(ng, 0)]);
+        g.add_output(ArrayGrid::new(&[2, 2], &[1, 1]), vec![(sg, 0)]);
+
+        assert_eq!(fuse_epilogues(&mut g), 1);
+        assert!(matches!(
+            &g.vertices[ng],
+            Vertex::Op {
+                kernel: Kernel::ScaledMatmul(alpha),
+                ..
+            } if *alpha == -1.0
+        ));
+        let st = fuse_elementwise(&mut g);
+        assert_eq!(st.chains, 0);
+        assert_eq!(g.total_tasks(), 2);
     }
 }

@@ -9,6 +9,6 @@ pub mod graph;
 pub mod vertex;
 
 pub use dist::DistArray;
-pub use fuse::{fuse_elementwise, FuseStats};
+pub use fuse::{fuse_elementwise, fuse_epilogues, FuseStats};
 pub use graph::{Graph, GraphArrayRef};
 pub use vertex::{Ref, Vertex, VertexId};

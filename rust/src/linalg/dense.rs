@@ -9,9 +9,11 @@
 //! reconstruction/identity properties in the tests below plus property
 //! suites in `rust/tests/prop_suites.rs`.
 
-use crate::runtime::ExecContext;
+use crate::runtime::{ExecContext, KernelTier};
 use crate::store::block::pool;
 use crate::store::Block;
+
+use super::microkernel;
 
 /// Depth of the B panel kept hot across a row sweep (KC·NC·8 B ≈ L2-sized).
 const KC: usize = 256;
@@ -27,7 +29,7 @@ const PAR_THRESHOLD: f64 = 3.2e7;
 /// Worker threads for a blocked kernel of `flops` total work over `rows`
 /// independent row slices, given the caller's thread `budget` (from an
 /// [`ExecContext`] — there is no process-global parallelism state).
-fn kernel_threads(flops: f64, rows: usize, budget: usize) -> usize {
+pub(crate) fn kernel_threads(flops: f64, rows: usize, budget: usize) -> usize {
     if flops < PAR_THRESHOLD || rows < 2 {
         return 1;
     }
@@ -35,8 +37,52 @@ fn kernel_threads(flops: f64, rows: usize, budget: usize) -> usize {
 }
 
 /// Ceiling division (rows per thread chunk).
-fn div_up(a: usize, b: usize) -> usize {
+pub(crate) fn div_up(a: usize, b: usize) -> usize {
     a / b + usize::from(a % b != 0)
+}
+
+/// Tier-dispatched `α · (A @ B)` — the entry `runtime::native` routes
+/// every Matmul/MatmulNT task through.
+///
+/// * [`KernelTier::Simd`] runs the packed-panel AVX2+FMA microkernel
+///   ([`microkernel::matmul_packed`]), applying α during the final
+///   panel's C-writeback.
+/// * [`KernelTier::Scalar`] keeps the bit-stable blocked kernel
+///   ([`matmul_with`], bit-identical to [`matmul_naive`]) and applies α
+///   as one sweep over the output — exactly what an unfused `Scale`
+///   (or, at α = −1, `Neg`) task computes, so folded epilogues change no
+///   bits in the strict tier.
+pub fn matmul_tier(a: &Block, b: &Block, alpha: f64, budget: usize, tier: KernelTier) -> Block {
+    match tier {
+        KernelTier::Simd => microkernel::matmul_packed(a, b, alpha, budget),
+        KernelTier::Scalar => {
+            let mut out = matmul_with(a, b, budget);
+            if alpha != 1.0 {
+                for v in out.buf_mut() {
+                    *v *= alpha;
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Tier-dispatched `α · (Aᵀ @ B)` (see [`matmul_tier`]). The Simd tier
+/// reuses the packed-panel path — Aᵀ strips are copied contiguously out
+/// of A's rows instead of the scalar kernel's per-row strided updates.
+pub fn gram_tier(a: &Block, b: &Block, alpha: f64, budget: usize, tier: KernelTier) -> Block {
+    match tier {
+        KernelTier::Simd => microkernel::gram_packed(a, b, alpha, budget),
+        KernelTier::Scalar => {
+            let mut out = gram_with(a, b, budget);
+            if alpha != 1.0 {
+                for v in out.buf_mut() {
+                    *v *= alpha;
+                }
+            }
+            out
+        }
+    }
 }
 
 /// C = A · B with a whole-host thread budget (standalone callers: driver
@@ -503,6 +549,41 @@ mod tests {
         let got = gram(&x, &y);
         let want = matmul_naive(&x.transposed(), &y);
         assert!(got.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn gram_self_product_is_exactly_symmetric() {
+        // every (i,j)/(j,i) pair runs the same i-ascending accumulation
+        // and f64 multiplication commutes, so Xᵀ·X symmetry is exact in
+        // the scalar kernel (the packed tier asserts the same in
+        // `microkernel::tests`)
+        let x = randn(&[200, 13], 90);
+        let g = gram(&x, &x);
+        for i in 0..13 {
+            for j in 0..13 {
+                assert_eq!(g.at2(i, j), g.at2(j, i), "exact symmetry at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn tier_dispatch_scalar_is_bit_identical_to_blocked() {
+        let a = randn(&[9, 33], 91);
+        let b = randn(&[33, 14], 92);
+        let plain = matmul_tier(&a, &b, 1.0, 1, KernelTier::Scalar);
+        assert_eq!(plain.max_abs_diff(&matmul(&a, &b)), 0.0);
+        // α in the scalar tier is one sweep — identical to a Scale pass
+        let scaled = matmul_tier(&a, &b, -2.0, 1, KernelTier::Scalar);
+        let mut want = matmul(&a, &b);
+        for v in want.buf_mut() {
+            *v *= -2.0;
+        }
+        assert_eq!(scaled.max_abs_diff(&want), 0.0);
+
+        let x = randn(&[50, 7], 93);
+        let y = randn(&[50, 5], 94);
+        let g = gram_tier(&x, &y, 1.0, 1, KernelTier::Scalar);
+        assert_eq!(g.max_abs_diff(&gram(&x, &y)), 0.0);
     }
 
     #[test]

@@ -1,0 +1,831 @@
+//! Packed-panel SIMD microkernels — the [`crate::runtime::KernelTier::Simd`]
+//! implementations behind `dense::matmul_tier` / `dense::gram_tier` and the
+//! fused element-wise interpreter.
+//!
+//! # Packing layout
+//!
+//! The contraction kernels follow the GotoBLAS panel decomposition. For
+//! each KC-deep panel of the contraction dimension, both operands are
+//! copied once into contiguous pool-backed buffers
+//! ([`crate::store::block::pool`]), then every register tile streams from
+//! those packs:
+//!
+//! * **A pack** — MR-interleaved row strips: strip `s` holds rows
+//!   `[s·MR, s·MR + mr)` as `apack[dk·mr + r]`, so the microkernel
+//!   broadcasts `mr` consecutive values per k-step from one cache line.
+//! * **B pack** — NR-contiguous column tiles: tile `t` holds columns
+//!   `[t·NR, t·NR + nr)` as `bpack[dk·nr + u]`, so each k-step loads two
+//!   `__m256d` vectors from consecutive addresses (unaligned loads; the
+//!   pool's `Vec<f64>` is 8-byte aligned).
+//!
+//! The register tile is MR×NR = 4×8: eight `__m256d` accumulators (half
+//! the AVX2 register file), two B loads and four A broadcasts per k-step,
+//! each feeding two `_mm256_fmadd_pd`.
+//!
+//! # Determinism policy
+//!
+//! Results must not depend on the thread split or on whether a row/column
+//! lands in a full or an edge tile. Every output element is therefore
+//! computed with the **identical** operation sequence: per KC panel, a
+//! local accumulator starts at zero and FMAs `a·b` in ascending-k order,
+//! then folds into C (`c += acc`, or `c = α·(c + acc)` on the final
+//! panel). The scalar edge path uses [`f64::mul_add`] — the same IEEE
+//! fused multiply-add the vector lanes execute — so edge tiles are
+//! bit-identical to full tiles and thread counts never change bits.
+//!
+//! What *does* change relative to the Scalar tier is FMA contraction (one
+//! rounding per multiply-add instead of two) and the per-panel
+//! accumulation grouping; the epsilon suite in `tests/kernel_tier.rs`
+//! bounds that error explicitly. The SIMD contraction path also assumes
+//! finite inputs: it does not replicate the scalar tier's zero-skip
+//! (which exists to keep `0·inf` out of the blocked kernel's oracle
+//! identity).
+//!
+//! The element-wise segment ops at the bottom are deliberately FMA-free:
+//! `_mm256_add_pd`-family instructions are per-lane IEEE identical to the
+//! scalar expressions, so fused-vs-unfused bit-identity holds in both
+//! tiers.
+
+use crate::runtime::kernel::BinOp;
+use crate::store::block::pool;
+use crate::store::Block;
+
+use super::dense::{div_up, kernel_threads};
+
+/// Register-tile rows (A-side broadcast count per k-step).
+pub(crate) const MR: usize = 4;
+/// Register-tile columns (two `__m256d` of f64 lanes).
+pub(crate) const NR: usize = 8;
+/// Panel depth kept hot across a strip sweep (matches `dense::KC`).
+const KC: usize = 256;
+/// Panel width packed per B sweep (matches `dense::NC`).
+const NC: usize = 512;
+
+// --------------------------------------------------------------- matmul
+
+/// `α · (A[m,k] @ B[k,n])` via the packed-panel FMA microkernel, with the
+/// scale epilogue applied during the final panel's C-writeback (no
+/// separate pass over the output). Parallel over disjoint row ranges;
+/// bit-stable across thread counts (see module docs).
+pub fn matmul_packed(a: &Block, b: &Block, alpha: f64, budget: usize) -> Block {
+    let (m, ka) = (a.rows(), a.cols());
+    let (kb, n) = (b.rows(), b.cols());
+    assert_eq!(ka, kb, "matmul {:?} x {:?}", a.shape, b.shape);
+    let mut out = pool::alloc_zeroed(m * n);
+    if m == 0 || n == 0 {
+        return Block::from_vec(&[m, n], out);
+    }
+    if ka == 0 {
+        // no panels run, but the epilogue still applies: α·0 keeps the
+        // sign semantics of an unfused Scale pass over zeros
+        scale_sweep(&mut out, alpha);
+        return Block::from_vec(&[m, n], out);
+    }
+    let (ab, bb) = (a.buf(), b.buf());
+    let threads = kernel_threads(2.0 * m as f64 * ka as f64 * n as f64, m, budget);
+    if threads <= 1 {
+        packed_rows(ab, bb, &mut out, 0, m, ka, n, alpha);
+    } else {
+        let rows_per = div_up(m, threads);
+        std::thread::scope(|scope| {
+            for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                let r0 = t * rows_per;
+                let r1 = r0 + chunk.len() / n;
+                scope.spawn(move || packed_rows(ab, bb, chunk, r0, r1, ka, n, alpha));
+            }
+        });
+    }
+    Block::from_vec(&[m, n], out)
+}
+
+/// One thread's share of the packed matmul: absolute rows `[r0, r1)`,
+/// `c` holding exactly those rows.
+fn packed_rows(
+    ab: &[f64],
+    bb: &[f64],
+    c: &mut [f64],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+    alpha: f64,
+) {
+    let rows = r1 - r0;
+    let kc_max = KC.min(k);
+    let mut apack = pool::alloc_zeroed(rows * kc_max);
+    let mut bpack = pool::alloc_zeroed(kc_max * div_up(NC.min(n), NR) * NR);
+    let mut kk = 0;
+    while kk < k {
+        let kend = (kk + KC).min(k);
+        let kc = kend - kk;
+        let last = kend == k;
+        // pack A: MR-interleaved strips for rows [r0, r1)
+        let mut off = 0;
+        let mut i = r0;
+        while i < r1 {
+            let mr = MR.min(r1 - i);
+            for dk in 0..kc {
+                for r in 0..mr {
+                    apack[off + dk * mr + r] = ab[(i + r) * k + kk + dk];
+                }
+            }
+            off += mr * kc;
+            i += mr;
+        }
+        let mut jj = 0;
+        while jj < n {
+            let jend = (jj + NC).min(n);
+            pack_b_tiles(bb, &mut bpack, kk, kc, jj, jend, n);
+            sweep_panel(kc, &apack, rows, &bpack, jj, jend, c, n, alpha, last);
+            jj = jend;
+        }
+        kk = kend;
+    }
+    pool::recycle(apack);
+    pool::recycle(bpack);
+}
+
+/// Pack B rows `[kk, kk+kc)` × columns `[jj, jend)` into NR-contiguous
+/// column tiles (`bpack[tile][dk·nr + u]`).
+fn pack_b_tiles(
+    bb: &[f64],
+    bpack: &mut [f64],
+    kk: usize,
+    kc: usize,
+    jj: usize,
+    jend: usize,
+    n: usize,
+) {
+    let mut off = 0;
+    let mut j = jj;
+    while j < jend {
+        let nr = NR.min(jend - j);
+        for dk in 0..kc {
+            let src = (kk + dk) * n + j;
+            bpack[off + dk * nr..off + dk * nr + nr].copy_from_slice(&bb[src..src + nr]);
+        }
+        off += nr * kc;
+        j += nr;
+    }
+}
+
+/// Sweep every packed A strip against every packed B tile of one
+/// (panel, jj-block), folding accumulators into `c` (row stride `n`,
+/// row 0 of the strips at `c[0]`).
+#[allow(clippy::too_many_arguments)]
+fn sweep_panel(
+    kc: usize,
+    apack: &[f64],
+    rows: usize,
+    bpack: &[f64],
+    jj: usize,
+    jend: usize,
+    c: &mut [f64],
+    n: usize,
+    alpha: f64,
+    last: bool,
+) {
+    let mut aoff = 0;
+    let mut i = 0;
+    while i < rows {
+        let mr = MR.min(rows - i);
+        let mut boff = 0;
+        let mut j = jj;
+        while j < jend {
+            let nr = NR.min(jend - j);
+            let ctile = &mut c[i * n + j..];
+            if mr == MR && nr == NR {
+                full_tile(kc, &apack[aoff..aoff + MR * kc], &bpack[boff..boff + NR * kc], ctile, n, alpha, last);
+            } else {
+                mk_edge(kc, &apack[aoff..aoff + mr * kc], &bpack[boff..boff + nr * kc], mr, nr, ctile, n, alpha, last);
+            }
+            boff += nr * kc;
+            j += nr;
+        }
+        aoff += mr * kc;
+        i += mr;
+    }
+}
+
+// ----------------------------------------------------------------- gram
+
+/// `α · (A[m,p]ᵀ @ B[m,q])` through the same packed-panel path — the Aᵀ
+/// strips are copied straight out of A's rows (`mr` *contiguous* values
+/// per k-step), replacing the strided per-tile re-reads of the streaming
+/// scalar kernel. Parallel over disjoint ranges of the contraction
+/// dimension with a deterministic in-order partial reduction, like
+/// `dense::gram_with`.
+pub fn gram_packed(a: &Block, b: &Block, alpha: f64, budget: usize) -> Block {
+    let (m, p) = (a.rows(), a.cols());
+    let (m2, q) = (b.rows(), b.cols());
+    assert_eq!(m, m2, "gram {:?}ᵀ x {:?}", a.shape, b.shape);
+    let (ab, bb) = (a.buf(), b.buf());
+    let threads = kernel_threads(2.0 * m as f64 * p as f64 * q as f64, m, budget);
+    if threads <= 1 {
+        let mut out = pool::alloc_zeroed(p * q);
+        gram_range(ab, bb, &mut out, 0, m, p, q, alpha);
+        return Block::from_vec(&[p, q], out);
+    }
+    let rows_per = div_up(m, threads);
+    let partials: Vec<Vec<f64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let r0 = t * rows_per;
+                let r1 = ((t + 1) * rows_per).min(m);
+                scope.spawn(move || {
+                    let mut part = pool::alloc_zeroed(p * q);
+                    gram_range(ab, bb, &mut part, r0, r1, p, q, 1.0);
+                    part
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut out = pool::alloc_zeroed(p * q);
+    for part in partials {
+        for (o, v) in out.iter_mut().zip(&part) {
+            *o += *v;
+        }
+        pool::recycle(part);
+    }
+    // α is one multiply of the final sum — the same single rounding the
+    // serial path applies on its last panel's writeback
+    scale_sweep(&mut out, alpha);
+    Block::from_vec(&[p, q], out)
+}
+
+/// Packed gram over contraction rows `[m0, m1)`, accumulating into the
+/// full `p×q` buffer `out`.
+#[allow(clippy::too_many_arguments)]
+fn gram_range(
+    ab: &[f64],
+    bb: &[f64],
+    out: &mut [f64],
+    m0: usize,
+    m1: usize,
+    p: usize,
+    q: usize,
+    alpha: f64,
+) {
+    if m1 == m0 || p == 0 || q == 0 {
+        scale_sweep(out, alpha);
+        return;
+    }
+    let kc_max = KC.min(m1 - m0);
+    let mut apack = pool::alloc_zeroed(p * kc_max);
+    let mut bpack = pool::alloc_zeroed(kc_max * div_up(NC.min(q), NR) * NR);
+    let mut i0 = m0;
+    while i0 < m1 {
+        let iend = (i0 + KC).min(m1);
+        let kc = iend - i0;
+        let last = iend == m1;
+        // pack Aᵀ strips: contiguous copies from A's rows, no strides
+        let mut off = 0;
+        let mut x = 0;
+        while x < p {
+            let mr = MR.min(p - x);
+            for dk in 0..kc {
+                let src = (i0 + dk) * p + x;
+                apack[off + dk * mr..off + dk * mr + mr].copy_from_slice(&ab[src..src + mr]);
+            }
+            off += mr * kc;
+            x += mr;
+        }
+        let mut jj = 0;
+        while jj < q {
+            let jend = (jj + NC).min(q);
+            pack_b_tiles(bb, &mut bpack, i0, kc, jj, jend, q);
+            sweep_panel(kc, &apack, p, &bpack, jj, jend, out, q, alpha, last);
+            jj = jend;
+        }
+        i0 = iend;
+    }
+    pool::recycle(apack);
+    pool::recycle(bpack);
+}
+
+/// `out *= α` (skipped when α = 1): the epilogue applied as a sweep where
+/// no panel writeback ran. `α·v` is exactly what a separate `Scale` task
+/// computes, so folded epilogues stay bit-identical to unfused ones.
+fn scale_sweep(out: &mut [f64], alpha: f64) {
+    if alpha != 1.0 {
+        for v in out.iter_mut() {
+            *v *= alpha;
+        }
+    }
+}
+
+// ------------------------------------------------------ register tiles
+
+/// Full MR×NR tile on AVX2+FMA.
+///
+/// Safety wrapper: the Simd tier only exists after `KernelTier::detect()`
+/// (or `simd_if_available()`) confirmed AVX2+FMA on this host.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn full_tile(kc: usize, ap: &[f64], bp: &[f64], c: &mut [f64], n: usize, alpha: f64, last: bool) {
+    unsafe { mk4x8(kc, ap.as_ptr(), bp.as_ptr(), c.as_mut_ptr(), n, alpha, last) }
+}
+
+/// Portable full tile: identical operation sequence via `f64::mul_add`.
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn full_tile(kc: usize, ap: &[f64], bp: &[f64], c: &mut [f64], n: usize, alpha: f64, last: bool) {
+    mk_edge(kc, ap, bp, MR, NR, c, n, alpha, last);
+}
+
+/// The 4×8 f64 register tile: 8 ymm accumulators over one KC panel.
+/// Writeback folds into C, applying the α epilogue on the final panel —
+/// `c = α·(c + acc)`, float-identical to a separate Scale pass over the
+/// finished output.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn mk4x8(
+    kc: usize,
+    ap: *const f64,
+    bp: *const f64,
+    c: *mut f64,
+    n: usize,
+    alpha: f64,
+    last: bool,
+) {
+    use core::arch::x86_64::*;
+    let mut acc00 = _mm256_setzero_pd();
+    let mut acc01 = _mm256_setzero_pd();
+    let mut acc10 = _mm256_setzero_pd();
+    let mut acc11 = _mm256_setzero_pd();
+    let mut acc20 = _mm256_setzero_pd();
+    let mut acc21 = _mm256_setzero_pd();
+    let mut acc30 = _mm256_setzero_pd();
+    let mut acc31 = _mm256_setzero_pd();
+    for dk in 0..kc {
+        let b0 = _mm256_loadu_pd(bp.add(dk * NR));
+        let b1 = _mm256_loadu_pd(bp.add(dk * NR + 4));
+        let a0 = _mm256_set1_pd(*ap.add(dk * MR));
+        acc00 = _mm256_fmadd_pd(a0, b0, acc00);
+        acc01 = _mm256_fmadd_pd(a0, b1, acc01);
+        let a1 = _mm256_set1_pd(*ap.add(dk * MR + 1));
+        acc10 = _mm256_fmadd_pd(a1, b0, acc10);
+        acc11 = _mm256_fmadd_pd(a1, b1, acc11);
+        let a2 = _mm256_set1_pd(*ap.add(dk * MR + 2));
+        acc20 = _mm256_fmadd_pd(a2, b0, acc20);
+        acc21 = _mm256_fmadd_pd(a2, b1, acc21);
+        let a3 = _mm256_set1_pd(*ap.add(dk * MR + 3));
+        acc30 = _mm256_fmadd_pd(a3, b0, acc30);
+        acc31 = _mm256_fmadd_pd(a3, b1, acc31);
+    }
+    let accs = [
+        [acc00, acc01],
+        [acc10, acc11],
+        [acc20, acc21],
+        [acc30, acc31],
+    ];
+    if last && alpha != 1.0 {
+        let av = _mm256_set1_pd(alpha);
+        for (r, pair) in accs.iter().enumerate() {
+            for (h, &acc) in pair.iter().enumerate() {
+                let p = c.add(r * n + h * 4);
+                let cur = _mm256_loadu_pd(p);
+                _mm256_storeu_pd(p, _mm256_mul_pd(av, _mm256_add_pd(cur, acc)));
+            }
+        }
+    } else {
+        for (r, pair) in accs.iter().enumerate() {
+            for (h, &acc) in pair.iter().enumerate() {
+                let p = c.add(r * n + h * 4);
+                let cur = _mm256_loadu_pd(p);
+                _mm256_storeu_pd(p, _mm256_add_pd(cur, acc));
+            }
+        }
+    }
+}
+
+/// Scalar twin of the vector tile for edge strips/tiles (`mr < MR` or
+/// `nr < NR`) — same packed operands, same per-element sequence:
+/// [`f64::mul_add`] is the same IEEE fused multiply-add the vector lanes
+/// execute, so a row's bits never depend on which tile shape the thread
+/// split put it in.
+#[allow(clippy::too_many_arguments)]
+fn mk_edge(
+    kc: usize,
+    ap: &[f64],
+    bp: &[f64],
+    mr: usize,
+    nr: usize,
+    c: &mut [f64],
+    n: usize,
+    alpha: f64,
+    last: bool,
+) {
+    for r in 0..mr {
+        for u in 0..nr {
+            let mut acc = 0.0f64;
+            for dk in 0..kc {
+                acc = ap[dk * mr + r].mul_add(bp[dk * nr + u], acc);
+            }
+            let cv = &mut c[r * n + u];
+            if last && alpha != 1.0 {
+                *cv = alpha * (*cv + acc);
+            } else {
+                *cv += acc;
+            }
+        }
+    }
+}
+
+// ----------------------------------------------- element-wise segments
+
+/// Lane-exact AVX2 negate: a sign-bit flip (`xor` with -0.0), exactly the
+/// scalar `-v` (note `0.0 - v` would get `-0.0` wrong).
+pub(crate) fn neg_segment(seg: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        neg_avx2(seg);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    for v in seg {
+        *v = -*v;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn neg_avx2(seg: &mut [f64]) {
+    use core::arch::x86_64::*;
+    let mask = _mm256_set1_pd(-0.0);
+    let p = seg.as_mut_ptr();
+    let lanes = seg.len() / 4 * 4;
+    let mut i = 0;
+    while i < lanes {
+        _mm256_storeu_pd(p.add(i), _mm256_xor_pd(_mm256_loadu_pd(p.add(i)), mask));
+        i += 4;
+    }
+    for v in &mut seg[lanes..] {
+        *v = -*v;
+    }
+}
+
+/// Lane-exact AVX2 scale: per-lane `c·v`, the scalar expression exactly.
+pub(crate) fn scale_segment(seg: &mut [f64], c: f64) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        scale_avx2(seg, c);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    for v in seg {
+        *v = c * *v;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scale_avx2(seg: &mut [f64], c: f64) {
+    use core::arch::x86_64::*;
+    let cv = _mm256_set1_pd(c);
+    let p = seg.as_mut_ptr();
+    let lanes = seg.len() / 4 * 4;
+    let mut i = 0;
+    while i < lanes {
+        _mm256_storeu_pd(p.add(i), _mm256_mul_pd(cv, _mm256_loadu_pd(p.add(i))));
+        i += 4;
+    }
+    for v in &mut seg[lanes..] {
+        *v = c * *v;
+    }
+}
+
+/// Lane-exact AVX2 binary segment: `acc ∘= rhs` (operands swapped when
+/// `rev`). Add/Sub/Mul/Div are per-lane IEEE operations — no FMA — so the
+/// Simd tier changes no bits in element-wise kernels and the
+/// fused-vs-unfused identity suites hold unchanged.
+pub(crate) fn bin_segment_simd(acc: &mut [f64], rhs: &[f64], op: BinOp, rev: bool) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        bin_avx2(acc, rhs, op, rev);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    for (a, &b) in acc.iter_mut().zip(rhs) {
+        let (x, y) = if rev { (b, *a) } else { (*a, b) };
+        *a = match op {
+            BinOp::Add => x + y,
+            BinOp::Sub => x - y,
+            BinOp::Mul => x * y,
+            BinOp::Div => x / y,
+        };
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn bin_avx2(acc: &mut [f64], rhs: &[f64], op: BinOp, rev: bool) {
+    use core::arch::x86_64::*;
+    let pa = acc.as_mut_ptr();
+    let pb = rhs.as_ptr();
+    let lanes = acc.len().min(rhs.len()) / 4 * 4;
+    let mut i = 0;
+    while i < lanes {
+        let a = _mm256_loadu_pd(pa.add(i));
+        let b = _mm256_loadu_pd(pb.add(i));
+        let (x, y) = if rev { (b, a) } else { (a, b) };
+        let r = match op {
+            BinOp::Add => _mm256_add_pd(x, y),
+            BinOp::Sub => _mm256_sub_pd(x, y),
+            BinOp::Mul => _mm256_mul_pd(x, y),
+            BinOp::Div => _mm256_div_pd(x, y),
+        };
+        _mm256_storeu_pd(pa.add(i), r);
+        i += 4;
+    }
+    for (a, &b) in acc[lanes..].iter_mut().zip(&rhs[lanes..]) {
+        let (x, y) = if rev { (b, *a) } else { (*a, b) };
+        *a = match op {
+            BinOp::Add => x + y,
+            BinOp::Sub => x - y,
+            BinOp::Mul => x * y,
+            BinOp::Div => x / y,
+        };
+    }
+}
+
+// --------------------------------------------------- GLM inner kernels
+
+/// FMA dot product (the GLM `xᵀβ` row kernel): 4-wide fused
+/// multiply-adds, a fixed-order horizontal reduction, and an FMA scalar
+/// tail. Deterministic (single code path), epsilon-close to the scalar
+/// accumulation.
+pub(crate) fn dot_fma(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        dot_avx2(a, b)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let mut acc = 0.0f64;
+        for (x, y) in a.iter().zip(b) {
+            acc = x.mul_add(*y, acc);
+        }
+        acc
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+    use core::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let lanes = n / 4 * 4;
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc = _mm256_setzero_pd();
+    let mut i = 0;
+    while i < lanes {
+        acc = _mm256_fmadd_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pb.add(i)), acc);
+        i += 4;
+    }
+    let mut l = [0.0f64; 4];
+    _mm256_storeu_pd(l.as_mut_ptr(), acc);
+    let mut s = (l[0] + l[1]) + (l[2] + l[3]);
+    for j in lanes..n {
+        s = a[j].mul_add(b[j], s);
+    }
+    s
+}
+
+/// FMA axpy (`y += a·x`) — the GLM gradient/Hessian row update.
+pub(crate) fn axpy_fma(y: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        axpy_avx2(y, a, x);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv = a.mul_add(xv, *yv);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_avx2(y: &mut [f64], a: f64, x: &[f64]) {
+    use core::arch::x86_64::*;
+    let n = y.len().min(x.len());
+    let lanes = n / 4 * 4;
+    let av = _mm256_set1_pd(a);
+    let (py, px) = (y.as_mut_ptr(), x.as_ptr());
+    let mut i = 0;
+    while i < lanes {
+        let r = _mm256_fmadd_pd(av, _mm256_loadu_pd(px.add(i)), _mm256_loadu_pd(py.add(i)));
+        _mm256_storeu_pd(py.add(i), r);
+        i += 4;
+    }
+    for j in lanes..n {
+        y[j] = a.mul_add(x[j], y[j]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense;
+    use crate::util::rng::Rng;
+
+    fn randn(shape: &[usize], seed: u64) -> Block {
+        let mut rng = Rng::seed_from_u64(seed);
+        let n: usize = shape.iter().product();
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v);
+        Block::from_vec(shape, v)
+    }
+
+    /// Per-element relative bound for an FMA-reordered k-term
+    /// contraction: `C·k·ε · (|A|·|B|)[i,j]` plus a tiny absolute floor.
+    fn contraction_bound(aabs: &Block, babs: &Block, k: usize) -> Block {
+        let mut mag = dense::matmul_naive(aabs, babs);
+        let c = 4.0 * k as f64 * f64::EPSILON;
+        for v in mag.buf_mut() {
+            *v = *v * c + 1e-300;
+        }
+        mag
+    }
+
+    fn assert_close(got: &Block, want: &Block, bound: &Block, ctx: &str) {
+        for ((g, w), b) in got.buf().iter().zip(want.buf()).zip(bound.buf()) {
+            assert!(
+                (g - w).abs() <= *b,
+                "{ctx}: |{g} - {w}| = {} > bound {b}",
+                (g - w).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn packed_matches_naive_within_fma_bound() {
+        // odd/prime/degenerate shapes: every edge-strip and edge-tile
+        // path, plus k crossing the KC panel boundary
+        for (m, k, n, seed) in [
+            (1, 1, 1, 50),
+            (1, 37, 1, 51),
+            (7, 11, 13, 52),
+            (4, 256, 8, 53),
+            (5, 300, 9, 54),
+            (64, 64, 64, 55),
+            (65, 257, 33, 56),
+        ] {
+            let a = randn(&[m, k], seed);
+            let b = randn(&[k, n], seed + 500);
+            let got = matmul_packed(&a, &b, 1.0, 1);
+            let want = dense::matmul_naive(&a, &b);
+            let aabs = Block::from_vec(&[m, k], a.buf().iter().map(|v| v.abs()).collect());
+            let babs = Block::from_vec(&[k, n], b.buf().iter().map(|v| v.abs()).collect());
+            let bound = contraction_bound(&aabs, &babs, k);
+            assert_close(&got, &want, &bound, &format!("packed {m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn packed_is_bit_stable_across_thread_budgets() {
+        // the determinism contract: thread splits move rows between full
+        // and edge strips, but the per-element FMA sequence is identical
+        // either way, so bits must not change. 2·400·300·200 = 4.8e7
+        // FLOPs sits above PAR_THRESHOLD, so the budgets really thread.
+        let a = randn(&[400, 300], 62);
+        let b = randn(&[300, 200], 63);
+        let one = matmul_packed(&a, &b, 1.0, 1);
+        for budget in [2, 3, 5, 8] {
+            let t = matmul_packed(&a, &b, 1.0, budget);
+            assert_eq!(
+                one.max_abs_diff(&t),
+                0.0,
+                "thread budget {budget} changed bits"
+            );
+        }
+    }
+
+    #[test]
+    fn alpha_epilogue_equals_separate_scale_pass() {
+        let a = randn(&[33, 47], 64);
+        let b = randn(&[47, 21], 65);
+        for alpha in [2.5, -1.0, 0.0] {
+            let fused = matmul_packed(&a, &b, alpha, 1);
+            let mut separate = matmul_packed(&a, &b, 1.0, 1);
+            for v in separate.buf_mut() {
+                *v *= alpha;
+            }
+            assert_eq!(
+                fused.max_abs_diff(&separate),
+                0.0,
+                "α={alpha} writeback must be float-identical to a Scale pass"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_k_matmul_applies_alpha_to_zeros() {
+        let a = Block::zeros(&[2, 0]);
+        let b = Block::zeros(&[0, 3]);
+        let c = matmul_packed(&a, &b, -2.0, 1);
+        assert_eq!(c.shape, vec![2, 3]);
+        assert!(c.buf().iter().all(|&v| v == 0.0)); // -0.0 == 0.0
+    }
+
+    #[test]
+    fn gram_packed_matches_transpose_matmul() {
+        for (m, p, q, seed) in [(1, 1, 1, 70), (40, 7, 9, 71), (300, 5, 6, 72), (257, 17, 11, 73)] {
+            let x = randn(&[m, p], seed);
+            let y = randn(&[m, q], seed + 500);
+            let got = gram_packed(&x, &y, 1.0, 1);
+            let want = dense::matmul_naive(&x.transposed(), &y);
+            let xabs = Block::from_vec(&[p, m], x.transposed().buf().iter().map(|v| v.abs()).collect());
+            let yabs = Block::from_vec(&[m, q], y.buf().iter().map(|v| v.abs()).collect());
+            let bound = contraction_bound(&xabs, &yabs, m);
+            assert_close(&got, &want, &bound, &format!("gram {m}x{p}x{q}"));
+        }
+    }
+
+    #[test]
+    fn gram_packed_self_product_is_exactly_symmetric() {
+        // (x,y) and (y,x) run the same i-ascending FMA sequence with the
+        // same panel grouping, and f64 multiplication commutes — so
+        // Xᵀ·X symmetry is exact, not approximate, in the packed path too
+        // 2·25000·26² = 3.4e7 FLOPs > PAR_THRESHOLD: budget 4 really
+        // threads, so the partial reduction is covered too
+        for budget in [1, 4] {
+            let x = randn(&[25000, 26], 74);
+            let g = gram_packed(&x, &x, 1.0, budget);
+            for i in 0..26 {
+                for j in 0..26 {
+                    assert_eq!(
+                        g.at2(i, j),
+                        g.at2(j, i),
+                        "gram symmetry must be exact at ({i},{j}), budget {budget}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ew_segments_match_scalar_bits() {
+        let mut rng = Rng::seed_from_u64(80);
+        let mut a = vec![0.0; 1027]; // odd length: exercises the lane tail
+        let mut b = vec![0.0; 1027];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut b);
+
+        let mut neg = a.clone();
+        neg_segment(&mut neg);
+        for (g, v) in neg.iter().zip(&a) {
+            assert_eq!(*g, -*v);
+        }
+        // sign-flip exactness on zeros (0.0 - v would get this wrong)
+        let mut z = vec![0.0, -0.0];
+        neg_segment(&mut z);
+        assert!(z[0].is_sign_negative() && z[1].is_sign_positive());
+
+        let mut sc = a.clone();
+        scale_segment(&mut sc, 3.25);
+        for (g, v) in sc.iter().zip(&a) {
+            assert_eq!(*g, 3.25 * *v);
+        }
+
+        for op in [BinOp::Add, BinOp::Sub, BinOp::Mul, BinOp::Div] {
+            for rev in [false, true] {
+                let mut acc = a.clone();
+                bin_segment_simd(&mut acc, &b, op, rev);
+                for ((g, &x), &y) in acc.iter().zip(&a).zip(&b) {
+                    let (l, r) = if rev { (y, x) } else { (x, y) };
+                    let want = match op {
+                        BinOp::Add => l + r,
+                        BinOp::Sub => l - r,
+                        BinOp::Mul => l * r,
+                        BinOp::Div => l / r,
+                    };
+                    assert!(
+                        (*g == want) || (g.is_nan() && want.is_nan()),
+                        "{op:?} rev={rev}: {g} != {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_and_axpy_are_epsilon_close_to_scalar() {
+        let mut rng = Rng::seed_from_u64(81);
+        let mut a = vec![0.0; 133];
+        let mut b = vec![0.0; 133];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut b);
+        let scalar: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let mag: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+        let got = dot_fma(&a, &b);
+        assert!((got - scalar).abs() <= 4.0 * 133.0 * f64::EPSILON * mag + 1e-300);
+
+        let mut y = b.clone();
+        axpy_fma(&mut y, 0.75, &a);
+        for ((g, &x), &y0) in y.iter().zip(&a).zip(&b) {
+            let want = 0.75 * x + y0;
+            assert!((g - want).abs() <= 4.0 * f64::EPSILON * (want.abs() + 1.0));
+        }
+    }
+}

@@ -2,4 +2,5 @@
 //! TSQR algorithms (§8.3).
 
 pub mod dense;
+pub mod microkernel;
 pub mod tsqr;

@@ -16,8 +16,11 @@
 //!
 //! `NUMS_MATMUL_THREADS` overrides the budget of any context at
 //! construction time (`1` forces serial kernels; useful on shared CI
-//! runners). This is the only environment knob; it is read when a context
-//! is built, never from kernel hot loops.
+//! runners). Like the budget, the kernel tier ([`KernelTier`]) is part of
+//! the context: resolved once at construction (`KernelTier::detect()` /
+//! `NUMS_KERNEL_TIER`), never re-detected from kernel hot loops.
+
+use super::tier::KernelTier;
 
 /// Hard cap on intra-kernel threads: beyond this the blocked kernels are
 /// memory-bound and extra threads only add spawn/join overhead.
@@ -42,6 +45,11 @@ pub struct ExecContext {
     /// Whether the owning executor runs with work stealing (so kernels
     /// and traces can report the mode they ran under).
     pub stealing: bool,
+    /// Which microkernel implementation contraction/element-wise kernels
+    /// dispatch to. Defaults to the process-wide [`KernelTier::detect`]
+    /// decision; sessions pin it to `Scalar` under
+    /// `SessionConfig::strict_kernels`.
+    pub tier: KernelTier,
 }
 
 impl ExecContext {
@@ -57,7 +65,16 @@ impl ExecContext {
             kernel_threads: budget,
             node,
             stealing,
+            tier: KernelTier::detect(),
         }
+    }
+
+    /// Pin this context to an explicit kernel tier (resolved against the
+    /// `NUMS_KERNEL_TIER` override and hardware capability — a `Simd`
+    /// request on a non-AVX2 host degrades to `Scalar`).
+    pub fn with_tier(mut self, tier: KernelTier) -> Self {
+        self.tier = KernelTier::resolve(tier);
+        self
     }
 
     /// Whole-host context for standalone kernel calls (benches, tests,
@@ -110,5 +127,16 @@ mod tests {
         let c = ExecContext::new(2, 5, true);
         assert_eq!(c.node, 5);
         assert!(c.stealing);
+        assert_eq!(c.tier, KernelTier::detect());
+    }
+
+    #[test]
+    fn with_tier_pins_scalar() {
+        // a scalar pin always sticks (strict sessions depend on this)
+        let c = ExecContext::host_default().with_tier(KernelTier::Scalar);
+        assert_eq!(c.tier, KernelTier::Scalar);
+        // a simd request resolves to at most what the host can run
+        let s = ExecContext::host_default().with_tier(KernelTier::Simd);
+        assert_eq!(s.tier, KernelTier::resolve(KernelTier::Simd));
     }
 }

@@ -59,6 +59,15 @@ pub enum Kernel {
     MatmulNT,
     /// A[k,m]^T @ B[k,n] (lazy-transpose inner product / Gram)
     Gram,
+    /// α · (A @ B): a contraction with a `Scale`/`Neg` epilogue folded in
+    /// by `graph::fuse::fuse_epilogues` — α is applied during the
+    /// microkernel's C-writeback (Simd tier) or as one sweep (Scalar
+    /// tier), never as a separate task over a materialized intermediate.
+    ScaledMatmul(f64),
+    /// α · (A @ Bᵀ) (see [`Kernel::ScaledMatmul`])
+    ScaledMatmulNT(f64),
+    /// α · (Aᵀ @ B) (see [`Kernel::ScaledMatmul`])
+    ScaledGram(f64),
     // --- reductions over one block (1 output) ---
     SumAxis0,
     SumAxis1,
@@ -142,15 +151,15 @@ impl Kernel {
                 }
                 vec![ins[0].clone()]
             }
-            Kernel::Matmul => {
+            Kernel::Matmul | Kernel::ScaledMatmul(_) => {
                 assert_eq!(ins[0][1], ins[1][0], "matmul {:?} @ {:?}", ins[0], ins[1]);
                 vec![vec![ins[0][0], ins[1][1]]]
             }
-            Kernel::MatmulNT => {
+            Kernel::MatmulNT | Kernel::ScaledMatmulNT(_) => {
                 assert_eq!(ins[0][1], ins[1][1], "matmul_nt {:?} {:?}", ins[0], ins[1]);
                 vec![vec![ins[0][0], ins[1][0]]]
             }
-            Kernel::Gram => {
+            Kernel::Gram | Kernel::ScaledGram(_) => {
                 assert_eq!(ins[0][0], ins[1][0], "gram {:?} {:?}", ins[0], ins[1]);
                 vec![vec![ins[0][1], ins[1][1]]]
             }
@@ -226,9 +235,15 @@ impl Kernel {
     pub fn flops(&self, ins: &[Vec<usize>]) -> f64 {
         let p = |s: &[usize]| s.iter().map(|&x| x as f64).product::<f64>();
         match self {
-            Kernel::Matmul => 2.0 * ins[0][0] as f64 * ins[0][1] as f64 * ins[1][1] as f64,
-            Kernel::MatmulNT => 2.0 * ins[0][0] as f64 * ins[0][1] as f64 * ins[1][0] as f64,
-            Kernel::Gram => 2.0 * ins[0][0] as f64 * ins[0][1] as f64 * ins[1][1] as f64,
+            Kernel::Matmul | Kernel::ScaledMatmul(_) => {
+                2.0 * ins[0][0] as f64 * ins[0][1] as f64 * ins[1][1] as f64
+            }
+            Kernel::MatmulNT | Kernel::ScaledMatmulNT(_) => {
+                2.0 * ins[0][0] as f64 * ins[0][1] as f64 * ins[1][0] as f64
+            }
+            Kernel::Gram | Kernel::ScaledGram(_) => {
+                2.0 * ins[0][0] as f64 * ins[0][1] as f64 * ins[1][1] as f64
+            }
             Kernel::GlmMu | Kernel::PredictBlock => 2.0 * p(&ins[0]),
             Kernel::GlmGrad => 2.0 * p(&ins[0]),
             Kernel::GlmHess => 2.0 * p(&ins[0]) * ins[0][1] as f64 / 2.0 + 2.0 * p(&ins[0]),
@@ -303,6 +318,9 @@ impl Kernel {
             Kernel::Matmul
                 | Kernel::MatmulNT
                 | Kernel::Gram
+                | Kernel::ScaledMatmul(_)
+                | Kernel::ScaledMatmulNT(_)
+                | Kernel::ScaledGram(_)
                 | Kernel::GlmMu
                 | Kernel::GlmGrad
                 | Kernel::GlmHess
@@ -324,8 +342,12 @@ impl Kernel {
 
 impl fmt::Display for Kernel {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        if let Kernel::FusedEw(steps) = self {
-            return write!(f, "fused_ew[{}]", steps.len());
+        match self {
+            Kernel::FusedEw(steps) => return write!(f, "fused_ew[{}]", steps.len()),
+            Kernel::ScaledMatmul(a) => return write!(f, "matmul·α[{a}]"),
+            Kernel::ScaledMatmulNT(a) => return write!(f, "matmul_nt·α[{a}]"),
+            Kernel::ScaledGram(a) => return write!(f, "gram·α[{a}]"),
+            _ => {}
         }
         match self.manifest_name() {
             Some(n) => write!(f, "{n}"),
@@ -373,6 +395,30 @@ mod tests {
             Kernel::TensordotJK.out_shapes(&[vec![4, 5, 6], vec![5, 6, 10]]),
             vec![vec![4, 10]]
         );
+    }
+
+    #[test]
+    fn scaled_contractions_share_the_base_contract() {
+        let ins = vec![vec![4, 8], vec![8, 3]];
+        let s = Kernel::ScaledMatmul(-2.0);
+        assert_eq!(s.out_shapes(&ins), Kernel::Matmul.out_shapes(&ins));
+        assert_eq!(s.flops(&ins), Kernel::Matmul.flops(&ins));
+        assert!(s.is_contraction());
+        assert_eq!(s.manifest_name(), None, "no AOT artifact: native-only");
+        assert_eq!(format!("{s}"), "matmul·α[-2]");
+
+        let g_ins = vec![vec![100, 4], vec![100, 6]];
+        assert_eq!(
+            Kernel::ScaledGram(0.5).out_shapes(&g_ins),
+            Kernel::Gram.out_shapes(&g_ins)
+        );
+        let nt_ins = vec![vec![4, 8], vec![5, 8]];
+        assert_eq!(
+            Kernel::ScaledMatmulNT(3.0).out_shapes(&nt_ins),
+            Kernel::MatmulNT.out_shapes(&nt_ins)
+        );
+        assert!(Kernel::ScaledGram(0.5).is_contraction());
+        assert!(Kernel::ScaledMatmulNT(3.0).is_contraction());
     }
 
     #[test]

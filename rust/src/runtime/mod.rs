@@ -8,9 +8,11 @@ pub mod kernel;
 pub mod manifest;
 pub mod native;
 pub mod pjrt;
+pub mod tier;
 
 pub use backend::Backend;
 pub use exec_ctx::ExecContext;
 pub use kernel::{BinOp, EwStep, Kernel};
+pub use tier::KernelTier;
 pub use manifest::{Manifest, ManifestEntry};
 pub use pjrt::PjrtRuntime;

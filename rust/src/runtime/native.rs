@@ -8,12 +8,13 @@
 
 use anyhow::{bail, Result};
 
-use crate::linalg::dense;
+use crate::linalg::{dense, microkernel};
 use crate::store::block::pool;
 use crate::store::Block;
 
 use super::exec_ctx::ExecContext;
 use super::kernel::{BinOp, EwStep, Kernel};
+use super::tier::KernelTier;
 
 /// Execute `kernel` with a whole-host thread budget. Convenience for
 /// driver-side math, benches and tests; the executors call
@@ -25,9 +26,13 @@ pub fn execute(kernel: &Kernel, inputs: &[&Block]) -> Result<Vec<Block>> {
 /// Execute `kernel` over real input blocks, producing real output blocks.
 /// `ctx.kernel_threads` bounds the intra-kernel parallelism of the
 /// compute-heavy kernels (matmul/gram/fused element-wise); everything else
-/// is single-threaded regardless.
+/// is single-threaded regardless. `ctx.tier` selects the microkernel
+/// implementation (blocked scalar vs packed-panel AVX2+FMA) — the tier
+/// was resolved once at context construction, so this dispatch is a plain
+/// enum match with no feature checks.
 pub fn execute_ctx(kernel: &Kernel, inputs: &[&Block], ctx: &ExecContext) -> Result<Vec<Block>> {
     let t = ctx.kernel_threads;
+    let tier = ctx.tier;
     let out = match kernel {
         Kernel::Neg => vec![map1(inputs[0], |v| -v)],
         Kernel::Sigmoid => vec![map1(inputs[0], |v| 1.0 / (1.0 + (-v).exp()))],
@@ -36,34 +41,49 @@ pub fn execute_ctx(kernel: &Kernel, inputs: &[&Block], ctx: &ExecContext) -> Res
             vec![map1(inputs[0], move |v| c * v)]
         }
         Kernel::Ew(op) => vec![map2(inputs[0], inputs[1], *op)?],
-        Kernel::FusedEw(steps) => vec![fused_ew(steps, inputs, t)?],
-        Kernel::Matmul => vec![dense::matmul_with(inputs[0], inputs[1], t)],
+        Kernel::FusedEw(steps) => vec![fused_ew(steps, inputs, t, tier)?],
+        Kernel::Matmul => vec![dense::matmul_tier(inputs[0], inputs[1], 1.0, t, tier)],
         // lazy transpose of the (usually much smaller) right operand, then
-        // the blocked kernel
-        Kernel::MatmulNT => vec![dense::matmul_with(inputs[0], &inputs[1].transposed(), t)],
-        // streaming Aᵀ·B — never materializes the transposed block
-        Kernel::Gram => vec![dense::gram_with(inputs[0], inputs[1], t)],
+        // the tiered kernel
+        Kernel::MatmulNT => {
+            vec![dense::matmul_tier(inputs[0], &inputs[1].transposed(), 1.0, t, tier)]
+        }
+        // Aᵀ·B without materializing the transposed block (streamed in the
+        // scalar tier, packed Aᵀ strips in the SIMD tier)
+        Kernel::Gram => vec![dense::gram_tier(inputs[0], inputs[1], 1.0, t, tier)],
+        // contractions with a folded Scale/Neg epilogue: α is applied in
+        // the C-writeback (Simd) or one output sweep (Scalar), never as a
+        // separate task
+        Kernel::ScaledMatmul(al) => vec![dense::matmul_tier(inputs[0], inputs[1], *al, t, tier)],
+        Kernel::ScaledMatmulNT(al) => {
+            vec![dense::matmul_tier(inputs[0], &inputs[1].transposed(), *al, t, tier)]
+        }
+        Kernel::ScaledGram(al) => vec![dense::gram_tier(inputs[0], inputs[1], *al, t, tier)],
         Kernel::SumAxis0 => vec![sum_axis0(inputs[0])],
         Kernel::SumAxis1 => vec![sum_axis1(inputs[0])],
         Kernel::SumAll => {
             let s: f64 = inputs[0].buf().iter().sum();
             vec![Block::from_vec(&[1, 1], vec![s])]
         }
-        Kernel::GlmMu | Kernel::PredictBlock => vec![glm_mu(inputs[0], inputs[1])],
-        Kernel::GlmGrad => vec![glm_grad(inputs[0], inputs[1], inputs[2])],
-        Kernel::GlmHess => vec![glm_hess(inputs[0], inputs[1])],
+        Kernel::GlmMu | Kernel::PredictBlock => vec![glm_mu(inputs[0], inputs[1], tier)],
+        Kernel::GlmGrad => vec![glm_grad(inputs[0], inputs[1], inputs[2], tier)],
+        Kernel::GlmHess => vec![glm_hess(inputs[0], inputs[1], tier)],
         Kernel::LogLoss => vec![logloss(inputs[0], inputs[1])],
         Kernel::NewtonBlock => {
             let (x, y, beta) = (inputs[0], inputs[1], inputs[2]);
-            let mu = glm_mu(x, beta);
-            let outs = vec![glm_grad(x, &mu, y), glm_hess(x, &mu), logloss(&mu, y)];
+            let mu = glm_mu(x, beta, tier);
+            let outs = vec![
+                glm_grad(x, &mu, y, tier),
+                glm_hess(x, &mu, tier),
+                logloss(&mu, y),
+            ];
             pool::recycle(mu.into_vec());
             outs
         }
         Kernel::LbfgsBlock => {
             let (x, y, beta) = (inputs[0], inputs[1], inputs[2]);
-            let mu = glm_mu(x, beta);
-            let outs = vec![glm_grad(x, &mu, y), logloss(&mu, y)];
+            let mu = glm_mu(x, beta, tier);
+            let outs = vec![glm_grad(x, &mu, y, tier), logloss(&mu, y)];
             pool::recycle(mu.into_vec());
             outs
         }
@@ -135,8 +155,11 @@ const FUSED_PAR_MIN: usize = 1 << 16;
 /// are bit-for-bit identical to the op-by-op oracle. Large blocks split
 /// into disjoint element ranges across up to `threads` workers — each
 /// element's value never depends on the split, so results are also
-/// bit-identical across thread counts.
-fn fused_ew(steps: &[EwStep], inputs: &[&Block], threads: usize) -> Result<Block> {
+/// bit-identical across thread counts. The Simd tier runs the add/mul/
+/// scale/neg segments through lane-exact AVX2 ops (no FMA), so the
+/// bit-identity contract holds in *both* tiers; Sigmoid stays scalar per
+/// element in every tier.
+fn fused_ew(steps: &[EwStep], inputs: &[&Block], threads: usize, tier: KernelTier) -> Result<Block> {
     if inputs.is_empty() {
         bail!("fused_ew: no inputs");
     }
@@ -175,13 +198,13 @@ fn fused_ew(steps: &[EwStep], inputs: &[&Block], threads: usize) -> Result<Block
         1
     };
     if t <= 1 {
-        fused_ew_range(steps, &plan, inputs, &mut out, 0);
+        fused_ew_range(steps, &plan, inputs, &mut out, 0, tier);
     } else {
         let per = n / t + usize::from(n % t != 0);
         let plan = &plan;
         std::thread::scope(|scope| {
             for (ci, chunk) in out.chunks_mut(per).enumerate() {
-                scope.spawn(move || fused_ew_range(steps, plan, inputs, chunk, ci * per));
+                scope.spawn(move || fused_ew_range(steps, plan, inputs, chunk, ci * per, tier));
             }
         });
     }
@@ -191,7 +214,15 @@ fn fused_ew(steps: &[EwStep], inputs: &[&Block], threads: usize) -> Result<Block
 /// Apply the fused chain to `out` (which holds elements `[base,
 /// base+out.len())` of input 0's copy), reading the side inputs at the
 /// same absolute offsets.
-fn fused_ew_range(steps: &[EwStep], plan: &[usize], inputs: &[&Block], out: &mut [f64], base: usize) {
+fn fused_ew_range(
+    steps: &[EwStep],
+    plan: &[usize],
+    inputs: &[&Block],
+    out: &mut [f64],
+    base: usize,
+    tier: KernelTier,
+) {
+    let simd = tier == KernelTier::Simd;
     let n = out.len();
     let mut lo = 0;
     while lo < n {
@@ -199,24 +230,40 @@ fn fused_ew_range(steps: &[EwStep], plan: &[usize], inputs: &[&Block], out: &mut
         for (step, &inp) in steps.iter().zip(plan) {
             let seg = &mut out[lo..hi];
             match *step {
+                EwStep::Neg if simd => microkernel::neg_segment(seg),
                 EwStep::Neg => {
                     for v in seg {
                         *v = -*v;
                     }
                 }
+                // sigmoid stays scalar per lane in every tier (exp has no
+                // lane-exact vector form here)
                 EwStep::Sigmoid => {
                     for v in seg {
                         *v = 1.0 / (1.0 + (-*v).exp());
                     }
                 }
+                EwStep::Scale(c) if simd => microkernel::scale_segment(seg, c),
                 EwStep::Scale(c) => {
                     for v in seg {
                         *v = c * *v;
                     }
                 }
+                EwStep::Bin(op) if simd => microkernel::bin_segment_simd(
+                    seg,
+                    &inputs[inp].buf()[base + lo..base + hi],
+                    op,
+                    false,
+                ),
                 EwStep::Bin(op) => {
                     bin_segment(seg, &inputs[inp].buf()[base + lo..base + hi], op, false)
                 }
+                EwStep::BinRev(op) if simd => microkernel::bin_segment_simd(
+                    seg,
+                    &inputs[inp].buf()[base + lo..base + hi],
+                    op,
+                    true,
+                ),
                 EwStep::BinRev(op) => {
                     bin_segment(seg, &inputs[inp].buf()[base + lo..base + hi], op, true)
                 }
@@ -277,35 +324,44 @@ fn sum_axis1(x: &Block) -> Block {
     Block::from_vec(&[m, 1], out)
 }
 
-fn glm_mu(x: &Block, beta: &Block) -> Block {
+fn glm_mu(x: &Block, beta: &Block, tier: KernelTier) -> Block {
     let (m, d) = (x.rows(), x.cols());
     assert_eq!(beta.shape, vec![d, 1]);
     let (xb, bb) = (x.buf(), beta.buf());
     let mut out = pool::alloc_zeroed(m);
     for i in 0..m {
-        let mut z = 0.0;
-        for j in 0..d {
-            z += xb[i * d + j] * bb[j];
-        }
+        let z = if tier == KernelTier::Simd {
+            microkernel::dot_fma(&xb[i * d..(i + 1) * d], bb)
+        } else {
+            let mut z = 0.0;
+            for j in 0..d {
+                z += xb[i * d + j] * bb[j];
+            }
+            z
+        };
         out[i] = 1.0 / (1.0 + (-z).exp());
     }
     Block::from_vec(&[m, 1], out)
 }
 
-fn glm_grad(x: &Block, mu: &Block, y: &Block) -> Block {
+fn glm_grad(x: &Block, mu: &Block, y: &Block, tier: KernelTier) -> Block {
     let (m, d) = (x.rows(), x.cols());
     let (xb, mb, yb) = (x.buf(), mu.buf(), y.buf());
     let mut out = vec![0.0; d];
     for i in 0..m {
         let r = mb[i] - yb[i];
-        for j in 0..d {
-            out[j] += xb[i * d + j] * r;
+        if tier == KernelTier::Simd {
+            microkernel::axpy_fma(&mut out, r, &xb[i * d..(i + 1) * d]);
+        } else {
+            for j in 0..d {
+                out[j] += xb[i * d + j] * r;
+            }
         }
     }
     Block::from_vec(&[d, 1], out)
 }
 
-fn glm_hess(x: &Block, mu: &Block) -> Block {
+fn glm_hess(x: &Block, mu: &Block, tier: KernelTier) -> Block {
     let (m, d) = (x.rows(), x.cols());
     let (xb, mb) = (x.buf(), mu.buf());
     let mut out = pool::alloc_zeroed(d * d);
@@ -314,8 +370,12 @@ fn glm_hess(x: &Block, mu: &Block) -> Block {
         let row = &xb[i * d..(i + 1) * d];
         for a in 0..d {
             let wa = w * row[a];
-            for b in 0..d {
-                out[a * d + b] += wa * row[b];
+            if tier == KernelTier::Simd {
+                microkernel::axpy_fma(&mut out[a * d..(a + 1) * d], wa, row);
+            } else {
+                for b in 0..d {
+                    out[a * d + b] += wa * row[b];
+                }
             }
         }
     }
@@ -497,7 +557,7 @@ mod tests {
     #[test]
     fn fused_ew_rejects_bad_arity() {
         let x = Block::from_vec(&[1, 2], vec![1., 2.]);
-        let err = fused_ew(&[EwStep::Bin(BinOp::Add)], &[&x], 1).unwrap_err();
+        let err = fused_ew(&[EwStep::Bin(BinOp::Add)], &[&x], 1, KernelTier::detect()).unwrap_err();
         assert!(format!("{err}").contains("arity"));
     }
 

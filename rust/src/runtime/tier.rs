@@ -1,0 +1,166 @@
+//! Kernel-tier selection: which microkernel implementation every
+//! [`crate::runtime::Backend::execute`] path dispatches to.
+//!
+//! The paper's per-node DGEMM numbers assume each worker runs near
+//! hardware peak; the blocked-scalar kernels in `linalg::dense` are
+//! cache-friendly but leave the vector units idle. [`KernelTier`] is the
+//! dispatch decision made **once at startup** — `is_x86_feature_detected!`
+//! is never consulted on the kernel hot path. The resolved tier is
+//! threaded through [`crate::runtime::ExecContext`], so executors, benches
+//! and driver-side math all agree on which implementation runs.
+//!
+//! Tiers:
+//!
+//! * [`KernelTier::Scalar`] — the blocked, register-tiled scalar kernels.
+//!   Bit-identical to `matmul_naive` and across thread counts; the oracle
+//!   tier every property suite pins via `SessionConfig::strict_kernels`.
+//! * [`KernelTier::Simd`] — packed-panel AVX2+FMA microkernels
+//!   (`linalg::microkernel`). FMA contracts `a·b + c` with a single
+//!   rounding, so contractions differ from the scalar tier by a bounded
+//!   relative error (`tests/kernel_tier.rs`); element-wise kernels stay
+//!   lane-exact (no FMA), so fusion bit-identity suites hold in both
+//!   tiers.
+//!
+//! `NUMS_KERNEL_TIER` overrides detection process-wide: `scalar` forces
+//! the portable tier everywhere (the CI fallback leg), `simd` requests
+//! the vector tier (granted only when the host supports AVX2+FMA),
+//! `auto`/unset means hardware detection. The variable is read once and
+//! cached.
+
+use std::sync::OnceLock;
+
+/// Which kernel implementation a dispatch site should run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Portable blocked-scalar kernels (bit-stable oracle tier).
+    Scalar,
+    /// Packed-panel AVX2+FMA microkernels (epsilon-bounded contractions).
+    Simd,
+}
+
+/// What `NUMS_KERNEL_TIER` asked for (parsed once, cached).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TierRequest {
+    Scalar,
+    Simd,
+    Auto,
+}
+
+/// Parse one `NUMS_KERNEL_TIER` value. Pure — unit-tested directly.
+fn parse_request(s: &str) -> Option<TierRequest> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "scalar" => Some(TierRequest::Scalar),
+        "simd" => Some(TierRequest::Simd),
+        "" | "auto" => Some(TierRequest::Auto),
+        _ => None,
+    }
+}
+
+fn env_request() -> TierRequest {
+    static REQ: OnceLock<TierRequest> = OnceLock::new();
+    *REQ.get_or_init(|| {
+        std::env::var("NUMS_KERNEL_TIER")
+            .ok()
+            .and_then(|s| parse_request(&s))
+            .unwrap_or(TierRequest::Auto)
+    })
+}
+
+impl KernelTier {
+    /// What the hardware can run: `Simd` only when the host has both AVX2
+    /// and FMA (the microkernel uses `_mm256_fmadd_pd`).
+    fn hardware() -> KernelTier {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return KernelTier::Simd;
+            }
+        }
+        KernelTier::Scalar
+    }
+
+    /// The process-wide default tier: `NUMS_KERNEL_TIER` if set, hardware
+    /// detection otherwise. Computed once, cached in a `OnceLock` — this
+    /// is the value every default-constructed [`crate::runtime::ExecContext`]
+    /// carries.
+    pub fn detect() -> KernelTier {
+        static TIER: OnceLock<KernelTier> = OnceLock::new();
+        *TIER.get_or_init(|| match env_request() {
+            TierRequest::Scalar => KernelTier::Scalar,
+            // an explicit `simd` request still needs the hardware
+            TierRequest::Simd | TierRequest::Auto => KernelTier::hardware(),
+        })
+    }
+
+    /// The vector tier when the host supports it, scalar otherwise —
+    /// ignores the env override. Used by the epsilon suite and benches to
+    /// exercise the SIMD path explicitly.
+    pub fn simd_if_available() -> KernelTier {
+        KernelTier::hardware()
+    }
+
+    /// Resolve an explicit tier choice against the environment:
+    /// `NUMS_KERNEL_TIER=scalar` is a global safety valve that wins over
+    /// any request, and a `Simd` request is granted only on capable
+    /// hardware. A `Scalar` request always sticks (correctness toggles
+    /// like `SessionConfig::strict_kernels` beat the perf env knob).
+    pub fn resolve(requested: KernelTier) -> KernelTier {
+        if env_request() == TierRequest::Scalar {
+            return KernelTier::Scalar;
+        }
+        match requested {
+            KernelTier::Scalar => KernelTier::Scalar,
+            KernelTier::Simd => KernelTier::hardware(),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Simd => "simd",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_recognizes_the_documented_values() {
+        assert_eq!(parse_request("scalar"), Some(TierRequest::Scalar));
+        assert_eq!(parse_request("SIMD"), Some(TierRequest::Simd));
+        assert_eq!(parse_request("auto"), Some(TierRequest::Auto));
+        assert_eq!(parse_request(""), Some(TierRequest::Auto));
+        assert_eq!(parse_request(" Scalar "), Some(TierRequest::Scalar));
+        assert_eq!(parse_request("avx512"), None);
+    }
+
+    #[test]
+    fn detect_is_stable_and_consistent() {
+        // cached: repeated calls agree (the whole point — one decision,
+        // no per-call feature checks)
+        let t = KernelTier::detect();
+        assert_eq!(KernelTier::detect(), t);
+        // detect can only grant Simd where the hardware tier grants it
+        if t == KernelTier::Simd {
+            assert_eq!(KernelTier::simd_if_available(), KernelTier::Simd);
+        }
+    }
+
+    #[test]
+    fn resolve_honors_scalar_requests() {
+        // a Scalar request is never upgraded, whatever the env says
+        assert_eq!(KernelTier::resolve(KernelTier::Scalar), KernelTier::Scalar);
+        // a Simd request is at most the hardware tier
+        let r = KernelTier::resolve(KernelTier::Simd);
+        assert!(r == KernelTier::simd_if_available() || r == KernelTier::Scalar);
+    }
+
+    #[test]
+    fn names_round_trip_through_parse() {
+        for t in [KernelTier::Scalar, KernelTier::Simd] {
+            assert!(parse_request(t.name()).is_some());
+        }
+    }
+}

@@ -1,0 +1,355 @@
+//! Kernel-tier epsilon suite: the explicit accuracy contract between the
+//! packed AVX2+FMA microkernels (`linalg::microkernel`) and the portable
+//! scalar tier.
+//!
+//! The policy (documented in `docs/ARCHITECTURE.md` and the microkernel
+//! module doc):
+//!
+//! * **Scalar tier** is *bit-for-bit* identical to the `matmul_naive`
+//!   oracle, across thread budgets, and under fused Scale/Neg epilogues.
+//!   Sessions default to it (`SessionConfig::strict_kernels = true`), so
+//!   every exact-equality property suite keeps its 0.0-tolerance
+//!   contract.
+//! * **Simd tier** may differ from scalar only through (a) FMA
+//!   contraction of the multiply-adds and (b) the packed panel grouping.
+//!   Both are bounded: each output element of an `m×k · k×n` product is a
+//!   length-`k` inner product whose FMA-vs-separate-rounding deviation is
+//!   at most `k` half-ulps per partial, giving the classical bound
+//!   `|simd − scalar| ≤ 4·k·ε·(|A|·|B|)[i,j]` (a ×4 safety factor over
+//!   the `γ_k = k·ε/(1−k·ε)` forward-error envelope). These tests assert
+//!   that bound element-wise on adversarial shapes: 1×k, k×1, primes,
+//!   non-multiples of the 4×8 register tile, and k crossing the KC=256
+//!   panel depth.
+//! * Element-wise segments (add/sub/mul/div/scale/neg) are *lane-exact*
+//!   in the Simd tier (no FMA), so fused element-wise chains stay
+//!   bit-identical across tiers — asserted at 0.0 here.
+
+use nums::api::{ops, Session, SessionConfig};
+use nums::graph::Graph;
+use nums::grid::ArrayGrid;
+use nums::linalg::dense;
+use nums::runtime::native;
+use nums::runtime::{BinOp, EwStep, ExecContext, Kernel, KernelTier};
+use nums::store::Block;
+use nums::util::rng::Rng;
+
+fn randn(shape: &[usize], seed: u64) -> Block {
+    let mut rng = Rng::seed_from_u64(seed);
+    let n: usize = shape.iter().product();
+    let mut v = vec![0.0; n];
+    rng.fill_normal(&mut v);
+    Block::from_vec(shape, v)
+}
+
+fn abs_block(x: &Block) -> Block {
+    Block::from_vec(&x.shape, x.buf().iter().map(|v| v.abs()).collect())
+}
+
+/// Element-wise error budget for a k-deep contraction:
+/// `4·k·ε·(|A|·|B|)[i,j]` plus a tiny absolute floor for zero products.
+fn contraction_bound(a: &Block, b: &Block) -> Block {
+    let k = a.shape[1] as f64;
+    let mags = dense::matmul_naive(&abs_block(a), &abs_block(b));
+    let c = 4.0 * k * f64::EPSILON;
+    Block::from_vec(
+        &mags.shape,
+        mags.buf().iter().map(|m| c * m + 1e-300).collect(),
+    )
+}
+
+fn assert_within(got: &Block, want: &Block, bound: &Block, label: &str) {
+    assert_eq!(got.shape, want.shape, "{label}: shape");
+    for (i, ((g, w), e)) in got
+        .buf()
+        .iter()
+        .zip(want.buf())
+        .zip(bound.buf())
+        .enumerate()
+    {
+        let d = (g - w).abs();
+        assert!(
+            d <= *e,
+            "{label}: elem {i} differs by {d:e}, bound {e:e} (got {g}, want {w})"
+        );
+    }
+}
+
+/// Adversarial shape set: degenerate rows/cols, primes off the 4×8 tile,
+/// and k values straddling the KC=256 packing panel.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 37, 1),
+    (1, 7, 9),
+    (5, 1, 3),
+    (7, 11, 13),
+    (4, 256, 8),
+    (5, 300, 9),
+    (64, 64, 64),
+    (65, 257, 33),
+];
+
+// ------------------------------------------------------- contraction tiers
+
+#[test]
+fn scalar_tier_is_bit_identical_to_naive_oracle() {
+    for &(m, k, n) in SHAPES {
+        let a = randn(&[m, k], 0x5EED ^ ((m as u64) << 8) ^ k as u64);
+        let b = randn(&[k, n], 0xB0B ^ ((n as u64) << 8) ^ k as u64);
+        let got = dense::matmul_tier(&a, &b, 1.0, 4, KernelTier::Scalar);
+        let want = dense::matmul_naive(&a, &b);
+        assert_eq!(
+            got.max_abs_diff(&want),
+            0.0,
+            "scalar tier must equal naive at {m}x{k}x{n}"
+        );
+    }
+}
+
+#[test]
+fn simd_tier_stays_within_the_fma_bound_of_scalar() {
+    // On hosts without AVX2+FMA (or with NUMS_KERNEL_TIER=scalar) the
+    // Simd request degrades to Scalar and the diff is exactly zero —
+    // the bound still holds, so the test is meaningful everywhere.
+    let tier = KernelTier::resolve(KernelTier::Simd);
+    for &(m, k, n) in SHAPES {
+        let a = randn(&[m, k], 0xA11CE ^ ((m as u64) << 16) ^ k as u64);
+        let b = randn(&[k, n], 0xFACADE ^ ((n as u64) << 16) ^ k as u64);
+        let got = dense::matmul_tier(&a, &b, 1.0, 4, tier);
+        let want = dense::matmul_tier(&a, &b, 1.0, 1, KernelTier::Scalar);
+        assert_within(&got, &want, &contraction_bound(&a, &b), "matmul simd");
+    }
+}
+
+#[test]
+fn simd_tier_is_bit_stable_across_thread_budgets() {
+    // determinism contract: the SIMD result is a pure function of the
+    // inputs — thread split and panel membership never change any bit
+    let tier = KernelTier::resolve(KernelTier::Simd);
+    let a = randn(&[400, 300], 0xD00D);
+    let b = randn(&[300, 200], 0xF00D);
+    let one = dense::matmul_tier(&a, &b, 1.0, 1, tier);
+    for budget in [2, 3, 5, 8] {
+        let t = dense::matmul_tier(&a, &b, 1.0, budget, tier);
+        assert_eq!(one.max_abs_diff(&t), 0.0, "budget {budget} changed bits");
+    }
+}
+
+#[test]
+fn gram_is_exactly_symmetric_in_both_tiers() {
+    for tier in [KernelTier::Scalar, KernelTier::resolve(KernelTier::Simd)] {
+        let x = randn(&[301, 17], 0x9A9A);
+        let g = dense::gram_tier(&x, &x, 1.0, 4, tier);
+        for i in 0..17 {
+            for j in 0..i {
+                assert_eq!(
+                    g.at2(i, j),
+                    g.at2(j, i),
+                    "gram(X,X) asymmetric at ({i},{j}) in {tier:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gram_simd_stays_within_the_fma_bound_of_scalar() {
+    let tier = KernelTier::resolve(KernelTier::Simd);
+    for &(m, k, n) in &[(1usize, 3usize, 1usize), (37, 5, 4), (257, 13, 9), (300, 26, 26)] {
+        // gram contracts over rows: A is m×k, B is m×n, out is k×n
+        let a = randn(&[m, k], 0x6AA6 ^ m as u64);
+        let b = randn(&[m, n], 0x7BB7 ^ m as u64);
+        let got = dense::gram_tier(&a, &b, 1.0, 4, tier);
+        let want = dense::gram_tier(&a, &b, 1.0, 1, KernelTier::Scalar);
+        let bound = contraction_bound(&abs_block(&a).transposed(), &abs_block(&b));
+        assert_within(&got, &want, &bound, "gram simd");
+    }
+}
+
+// --------------------------------------------------------- fused epilogues
+
+#[test]
+fn scaled_contraction_equals_separate_scale_pass_exactly() {
+    // the α-epilogue is applied as one multiply per output element — the
+    // same operation a separate Scale task would perform, so folding is
+    // bit-exact in BOTH tiers (this is what makes epilogue fusion safe
+    // under the strict-kernels contract)
+    let a = randn(&[9, 40], 0xEE1);
+    let b = randn(&[40, 7], 0xEE2);
+    for tier in [KernelTier::Scalar, KernelTier::resolve(KernelTier::Simd)] {
+        for alpha in [2.5, -1.0, 0.0, -3.75] {
+            let fused = dense::matmul_tier(&a, &b, alpha, 2, tier);
+            let base = dense::matmul_tier(&a, &b, 1.0, 2, tier);
+            let swept = Block::from_vec(
+                &base.shape,
+                base.buf().iter().map(|v| alpha * v).collect(),
+            );
+            assert_eq!(
+                fused.max_abs_diff(&swept),
+                0.0,
+                "alpha={alpha} epilogue not exact in {tier:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn scaled_kernels_match_their_unfused_pipelines_through_the_backend() {
+    let a = randn(&[12, 33], 0xAB1);
+    let b = randn(&[33, 8], 0xAB2);
+    let ctx = ExecContext::host_default().with_tier(KernelTier::Scalar);
+    let fused = native::execute_ctx(&Kernel::ScaledMatmul(-2.0), &[&a, &b], &ctx)
+        .unwrap()
+        .remove(0);
+    let mm = native::execute_ctx(&Kernel::Matmul, &[&a, &b], &ctx)
+        .unwrap()
+        .remove(0);
+    let want = native::execute_ctx(&Kernel::Scale(-2.0), &[&mm], &ctx)
+        .unwrap()
+        .remove(0);
+    assert_eq!(fused.max_abs_diff(&want), 0.0, "ScaledMatmul != Scale∘Matmul");
+
+    let x = randn(&[21, 6], 0xAB3);
+    let fused = native::execute_ctx(&Kernel::ScaledGram(0.5), &[&x, &x], &ctx)
+        .unwrap()
+        .remove(0);
+    let gr = native::execute_ctx(&Kernel::Gram, &[&x, &x], &ctx)
+        .unwrap()
+        .remove(0);
+    let want = native::execute_ctx(&Kernel::Scale(0.5), &[&gr], &ctx)
+        .unwrap()
+        .remove(0);
+    assert_eq!(fused.max_abs_diff(&want), 0.0, "ScaledGram != Scale∘Gram");
+}
+
+// ------------------------------------------------- element-wise lane-exact
+
+#[test]
+fn fused_ew_chains_are_bit_identical_across_tiers() {
+    // length crosses the 4096-element fused chunk AND leaves an odd
+    // 3-lane tail for the AVX2 segments
+    let x = randn(&[3, 2049], 0xC1);
+    let y = randn(&[3, 2049], 0xC2);
+    let w = randn(&[3, 2049], 0xC4);
+    let z = Block::from_vec(
+        &[3, 2049],
+        randn(&[3, 2049], 0xC3).buf().iter().map(|v| v.abs() + 1.0).collect(),
+    );
+    let steps = vec![
+        EwStep::Neg,
+        EwStep::Scale(3.0),
+        EwStep::Bin(BinOp::Add),
+        EwStep::BinRev(BinOp::Sub),
+        EwStep::Bin(BinOp::Div),
+        EwStep::Sigmoid,
+    ];
+    let kernel = Kernel::FusedEw(steps);
+    let scalar_ctx = ExecContext::host_default().with_tier(KernelTier::Scalar);
+    let simd_ctx = ExecContext::host_default().with_tier(KernelTier::Simd);
+    let s = native::execute_ctx(&kernel, &[&x, &y, &w, &z], &scalar_ctx)
+        .unwrap()
+        .remove(0);
+    let v = native::execute_ctx(&kernel, &[&x, &y, &w, &z], &simd_ctx)
+        .unwrap()
+        .remove(0);
+    assert_eq!(
+        s.max_abs_diff(&v),
+        0.0,
+        "element-wise segments must be lane-exact across tiers"
+    );
+}
+
+#[test]
+fn glm_composites_agree_across_tiers_within_tolerance() {
+    // GLM inner loops use FMA dot/axpy in the Simd tier: epsilon-bounded,
+    // not bit-identical — the same contract the distributed suites use.
+    let x = randn(&[64, 7], 0xD1);
+    let y = Block::from_vec(
+        &[64, 1],
+        randn(&[64, 1], 0xD2)
+            .buf()
+            .iter()
+            .map(|v| if *v > 0.0 { 1.0 } else { 0.0 })
+            .collect(),
+    );
+    let beta = Block::from_vec(
+        &[7, 1],
+        randn(&[7, 1], 0xD3).buf().iter().map(|v| 0.1 * v).collect(),
+    );
+    let scalar_ctx = ExecContext::host_default().with_tier(KernelTier::Scalar);
+    let simd_ctx = ExecContext::host_default().with_tier(KernelTier::Simd);
+    let s = native::execute_ctx(&Kernel::NewtonBlock, &[&x, &y, &beta], &scalar_ctx).unwrap();
+    let v = native::execute_ctx(&Kernel::NewtonBlock, &[&x, &y, &beta], &simd_ctx).unwrap();
+    for (a, b) in s.iter().zip(&v) {
+        assert!(
+            a.max_abs_diff(b) < 1e-10,
+            "NewtonBlock tier divergence {}",
+            a.max_abs_diff(b)
+        );
+    }
+}
+
+// ------------------------------------------------------------ session level
+
+#[test]
+fn strict_sessions_keep_the_bit_identity_contract() {
+    // strict (default) sessions pin workers to the scalar tier: a
+    // single-k-block distributed matmul must equal the host-side blocked
+    // kernel bit-for-bit, however the output is partitioned (each output
+    // block's elements see exactly the full-k scalar accumulation order)
+    for (xg, wg) in [([2, 1], [1, 1]), ([1, 1], [1, 2])] {
+        let mut sess = Session::new(SessionConfig::real_small(2, 2));
+        assert!(sess.cfg.strict_kernels, "strict must be the default");
+        let x = sess.randn(&[48, 16], &xg);
+        let w = sess.randn(&[16, 5], &wg);
+        let (out, _) = ops::matmul(&mut sess, &x, &w).unwrap();
+        let got = sess.fetch(&out).unwrap();
+        let want = dense::matmul(&sess.fetch(&x).unwrap(), &sess.fetch(&w).unwrap());
+        assert_eq!(
+            got.max_abs_diff(&want),
+            0.0,
+            "strict session grids {xg:?}x{wg:?}"
+        );
+    }
+}
+
+#[test]
+fn relaxed_sessions_stay_within_the_epsilon_bound() {
+    let mut sess =
+        Session::new(SessionConfig::real_small(2, 2).with_strict_kernels(false));
+    let x = sess.randn(&[48, 16], &[2, 1]);
+    let w = sess.randn(&[16, 5], &[1, 1]);
+    let (out, _) = ops::matmul(&mut sess, &x, &w).unwrap();
+    let got = sess.fetch(&out).unwrap();
+    let xa = sess.fetch(&x).unwrap();
+    let wa = sess.fetch(&w).unwrap();
+    let want = dense::matmul(&xa, &wa);
+    assert_within(&got, &want, &contraction_bound(&xa, &wa), "relaxed session");
+}
+
+#[test]
+fn epilogue_fold_runs_end_to_end_and_stays_exact() {
+    // -2·(X @ W) as a graph: the Scale folds into a ScaledMatmul task
+    // (reported via fused_ops) and the strict-tier result equals the
+    // unfused pipeline bit-for-bit
+    let mut sess = Session::new(SessionConfig::real_small(2, 2));
+    let x = sess.randn(&[32, 8], &[1, 1]);
+    let w = sess.randn(&[8, 4], &[1, 1]);
+
+    let mut g = Graph::new();
+    let la = g.leaf(x.obj_at(&[0, 0]), &[32, 8]);
+    let lb = g.leaf(w.obj_at(&[0, 0]), &[8, 4]);
+    let mm = g.op(Kernel::Matmul, vec![(la, 0), (lb, 0)]);
+    let sc = g.op(Kernel::Scale(-2.0), vec![(mm, 0)]);
+    g.add_output(ArrayGrid::new(&[32, 4], &[1, 1]), vec![(sc, 0)]);
+
+    let (outs, rep) = sess.run(&mut g).unwrap();
+    assert_eq!(rep.fused_ops, 1, "the Scale epilogue should fold");
+    assert_eq!(rep.tasks, 1, "one ScaledMatmul task, no separate Scale");
+    let got = sess.fetch(&outs[0]).unwrap();
+    let base = dense::matmul(&sess.fetch(&x).unwrap(), &sess.fetch(&w).unwrap());
+    let want = Block::from_vec(
+        &base.shape,
+        base.buf().iter().map(|v| -2.0 * v).collect(),
+    );
+    assert_eq!(got.max_abs_diff(&want), 0.0, "folded epilogue must be exact");
+}
