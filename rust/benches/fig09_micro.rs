@@ -14,8 +14,11 @@
 //! `ScaledMatmul` writeback), the work-stealing
 //! ablation (a deliberately skewed plan with stealing on/off, per-node
 //! steal counters included), the memory-manager and
-//! communication-overlap ablations, and the plan↔runtime feedback
-//! ablation (`SessionConfig::feedback` on/off over skewed layouts).
+//! communication-overlap ablations, the plan↔runtime feedback
+//! ablation (`SessionConfig::feedback` on/off over skewed layouts), and
+//! the plan-cache ablation (`SessionConfig::plan_cache` on/off over a
+//! repeated-topology GLM, with per-run search-time and simulation-count
+//! records).
 //! Results are also written machine-readably to `BENCH_fig09.json` so
 //! future PRs have a perf trajectory to diff against.
 //!
@@ -26,8 +29,8 @@ use std::sync::Arc;
 
 use nums::api::{ops, Policy, RunReport, Session, SessionConfig};
 use nums::bench::harness::{
-    emit_json, feedback_summary, glm_mem_run, max_peak_bytes, mem_summary, prefetch_summary,
-    print_series, produce_fold_plan, steal_summary, PerfRecord,
+    emit_json, feedback_summary, glm_mem_run, max_peak_bytes, mem_summary, planning_summary,
+    prefetch_summary, print_series, produce_fold_plan, steal_summary, PerfRecord,
 };
 use nums::exec::{Plan, RealExecutor, Task};
 use nums::linalg::dense;
@@ -697,6 +700,79 @@ fn feedback_ablation(records: &mut Vec<PerfRecord>, smoke: bool) -> Option<Strin
     violation
 }
 
+/// Plan-cache ablation (the PR 7 tentpole): the same Newton GLM fit with
+/// `SessionConfig::plan_cache` on/off on a real 2-node session (stealing
+/// off for placement determinism). Every iteration submits the same two
+/// graph topologies over the same block layout — the hierarchical-layout
+/// pins make each iteration's beta land on the same target — so with the
+/// cache on, every run from iteration 2 onward rebinds the memoized plan
+/// instead of re-running the LSHS local search: `plan_cache_hit == true`
+/// and `simulations == 0`. Per-run `search_secs`/`simulations`/
+/// `decisions` land in `BENCH_fig09.json` (bytes = simulations,
+/// gflops = decisions), so planning cost finally has numbers to diff.
+/// The two fits agree to roundoff (not bitwise across the toggle: the
+/// frontier-sampling RNG is session-lifetime state, so even two *fresh*
+/// schedules of the same graph may pick different reduce pairings — the
+/// bit-identity guarantee is cached-vs-oracle, covered by
+/// `tests/plan_cache.rs`).
+fn plan_cache_ablation(records: &mut Vec<PerfRecord>, smoke: bool) {
+    println!("## Fig 9 (ext): plan-cache ablation (repeated-topology GLM)");
+    let (rows, d, q, steps) = if smoke { (256, 8, 4, 3) } else { (1024, 16, 8, 4) };
+    let mut betas: Vec<Block> = Vec::new();
+    for cache in [false, true] {
+        let cfg = SessionConfig::real_small(2, 2)
+            .with_stealing(false)
+            .with_plan_cache(cache);
+        let mut sess = Session::new(cfg);
+        let (x, y) = nums::glm::classification_data(&mut sess, rows, d, q, 15);
+        let sw = Stopwatch::start();
+        let res = nums::glm::newton_fit(&mut sess, &x, &y, steps, 0.0).unwrap();
+        let secs = sw.secs();
+        let search: f64 = res.reports.iter().map(|r| r.search_secs).sum();
+        let sims: u64 = res.reports.iter().map(|r| r.simulations).sum();
+        println!("  glm cache={cache:<5} wall={secs:.4}s search={search:.6}s sims={sims}");
+        for (i, rep) in res.reports.iter().enumerate() {
+            println!("    run{i}: {}", planning_summary(rep));
+        }
+        if cache {
+            assert!(res.reports[0].simulations > 0, "iteration 1 must search");
+            // reports 0/1 are iteration 1's two graphs (cold); from
+            // iteration 2 on, both graphs replay memoized plans
+            for rep in &res.reports[2..] {
+                assert!(rep.plan_cache_hit, "iteration >= 2 must hit the cache");
+                assert_eq!(rep.simulations, 0, "a hit skips the local search");
+            }
+        } else {
+            assert!(
+                res.reports.iter().all(|r| !r.plan_cache_hit),
+                "cache off must never report a hit"
+            );
+        }
+        betas.push(sess.fetch(&res.beta).unwrap());
+        records.push(PerfRecord {
+            op: format!("glm_newton{steps}_plan_cache_{cache}"),
+            bytes: sims,
+            secs: search,
+            gflops: 0.0,
+        });
+        for (i, rep) in res.reports.iter().enumerate() {
+            records.push(PerfRecord {
+                op: format!("glm_newton{steps}_plan_cache_{cache}_run{i}"),
+                bytes: rep.simulations,
+                secs: rep.search_secs,
+                gflops: rep.decisions as f64,
+            });
+        }
+    }
+    let scale = betas[0].buf().iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    let rel = betas[0].max_abs_diff(&betas[1]) / scale;
+    assert!(
+        rel < 1e-7,
+        "plan-cache toggle changed GLM numerics beyond roundoff: rel {rel:e}"
+    );
+    println!("  betas agree across the toggle (rel diff {rel:.2e})");
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     // 64 GB-shape operands (2^27 x 64 f64) — modeled time, phantom blocks.
@@ -727,6 +803,7 @@ fn main() {
     stealing_ablation(&mut records, smoke);
     memory_ablation(&mut records, smoke);
     overlap_ablation(&mut records, smoke);
+    plan_cache_ablation(&mut records, smoke);
     let feedback_violation = feedback_ablation(&mut records, smoke);
     emit_json("BENCH_fig09.json", &records).expect("write BENCH_fig09.json");
     println!("wrote BENCH_fig09.json ({} records)", records.len());

@@ -3,14 +3,60 @@
 //!     (driver-side aggregation) vs NumS-without-LSHS;
 //! (b) L-BFGS (10 steps, history 10): NumS vs Spark MLlib (static
 //!     schedule, heavier per-task overhead).
+//!
+//! `cargo bench --bench fig14_logreg -- --smoke` instead runs the CI
+//! plan-cache check: iteration >= 2 of a sim-mode Newton fit must replay
+//! the memoized plan (`plan_cache_hit`, zero candidate simulations).
 
 use nums::api::{Policy, Session, SessionConfig};
-use nums::bench::harness::print_series;
+use nums::bench::harness::{planning_summary, print_series};
 use nums::glm::data::classification_data;
 use nums::glm::{lbfgs_fit, newton_fit, newton_fit_driver_agg};
 use nums::prelude::*;
 
+/// `--smoke` (CI): a bounded sim-mode Newton fit exercising the plan
+/// cache across iterations. Each Newton iteration submits the same two
+/// graph topologies over the same block layout, so iteration 1 pays the
+/// LSHS local search and every later iteration must replay the memoized
+/// plan: `plan_cache_hit == true` with strictly fewer candidate
+/// simulations than iteration 1 (exactly zero).
+fn smoke() {
+    let mut sess = Session::new(SessionConfig::paper_sim(4, 4));
+    let (x, y) = classification_data(&mut sess, 1 << 14, 16, 8, 3);
+    let res = newton_fit(&mut sess, &x, &y, 3, 0.0).unwrap();
+    for (i, rep) in res.reports.iter().enumerate() {
+        println!("run{i}: {}", planning_summary(rep));
+    }
+    // reports 0/1 are iteration 1's two graphs; 2/3 are iteration 2's
+    let it1 = &res.reports[0];
+    let it2 = &res.reports[2];
+    assert!(
+        !it1.plan_cache_hit && it1.simulations > 0,
+        "iteration 1 must run the local search"
+    );
+    assert!(it2.plan_cache_hit, "iteration 2 must hit the plan cache");
+    assert!(
+        it2.simulations < it1.simulations,
+        "a hit must simulate strictly less than the cold iteration \
+         ({} !< {})",
+        it2.simulations,
+        it1.simulations
+    );
+    assert_eq!(it2.simulations, 0, "a hit replays; it never simulates");
+    let (hits, misses, stale) = sess.plan_cache_stats();
+    println!("plan cache: {hits} hits / {misses} misses / {stale} stale re-plans");
+    assert!(
+        hits >= 4,
+        "both graphs of iterations 2 and 3 must hit, got {hits}"
+    );
+    println!("fig14 smoke: iteration-2 plan-cache hit verified");
+}
+
 fn main() {
+    if std::env::args().any(|a| a == "--smoke") {
+        smoke();
+        return;
+    }
     let d = 256usize;
     let sizes_gb = [64usize, 128, 256, 512, 1024];
     let steps = 2; // per-iteration cost is the comparison; keep runs fast

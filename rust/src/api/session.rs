@@ -17,7 +17,7 @@ use crate::grid::{softmax_grid, ArrayGrid, NodeGrid};
 use crate::net::model::{ComputeParams, NetParams, SystemMode};
 use crate::runtime::{Backend, KernelTier};
 use crate::scheduler::baselines::{BottomUp, RandomPlace, RoundRobin};
-use crate::scheduler::{ClusterState, Lshs, Scheduler, Topology};
+use crate::scheduler::{ClusterState, Lshs, PlanCache, Scheduler, Topology};
 use crate::store::{Block, IdGen, MemoryManager, ObjectId, StoreSet};
 use crate::util::rng::Rng;
 
@@ -120,6 +120,17 @@ pub struct SessionConfig {
     /// (the planner only ever sees its own committed decisions) measured
     /// by the fig09 feedback ablation.
     pub feedback: bool,
+    /// Memoize plans across `run()` calls, keyed by the canonical graph
+    /// signature ([`crate::graph::signature`]). Iterative drivers submit
+    /// the same topology every iteration; on a hit the cached plan is
+    /// *rebound* onto this run's input objects and fresh output ids
+    /// ([`crate::scheduler::plan_cache`]) instead of re-running the LSHS
+    /// local search — `RunReport::simulations` is 0 on the hit path.
+    /// Results stay bit-identical (reduce pairings are frozen in the
+    /// plan); staleness from absorbed feedback triggers a synchronous
+    /// foreground re-plan. On by default; off re-plans every run (the
+    /// fig09 `plan_cache` ablation baseline).
+    pub plan_cache: bool,
 }
 
 impl SessionConfig {
@@ -143,6 +154,7 @@ impl SessionConfig {
             lifetime_gc: true,
             mem_budget_bytes: None,
             feedback: true,
+            plan_cache: true,
         }
     }
 
@@ -166,6 +178,7 @@ impl SessionConfig {
             lifetime_gc: true,
             mem_budget_bytes: None,
             feedback: true,
+            plan_cache: true,
         }
     }
 
@@ -219,6 +232,12 @@ impl SessionConfig {
         self
     }
 
+    /// Toggle the plan cache (see [`SessionConfig::plan_cache`]).
+    pub fn with_plan_cache(mut self, on: bool) -> Self {
+        self.plan_cache = on;
+        self
+    }
+
     pub fn with_mode(mut self, m: SystemMode) -> Self {
         self.mode = m;
         self
@@ -243,10 +262,27 @@ pub struct RunReport {
     pub transfer_bytes: u64,
     pub sim: SimReport,
     pub real: Option<RealReport>,
-    /// Scheduling wall time (the γ-side cost LSHS itself adds).
+    /// Scheduling wall time (the γ-side cost LSHS itself adds): fusion +
+    /// signature + search-or-rebind. `search_secs` isolates the part the
+    /// plan cache amortizes.
     pub schedule_secs: f64,
+    /// Wall time of the local search (miss) or of signature + rebind
+    /// (hit) — the `schedule_secs` split the fig09 planning arm reports.
+    pub search_secs: f64,
     /// Element-wise ops absorbed by the fusion pass (tasks saved).
     pub fused_ops: usize,
+    /// Whether this run replayed a cached plan instead of scheduling.
+    pub plan_cache_hit: bool,
+    /// Session-cumulative plan-cache hits (0 when the cache is off).
+    pub plan_cache_hits: u64,
+    /// Session-cumulative plan-cache misses, including stale re-plans.
+    pub plan_cache_misses: u64,
+    /// Placement decisions this run (`Lshs::decisions` delta; 0 on a hit
+    /// and for non-simulating baselines).
+    pub decisions: u64,
+    /// Candidate placement simulations this run (`Lshs::simulations`
+    /// delta; 0 on a hit — the whole point of the cache).
+    pub simulations: u64,
 }
 
 pub struct Session {
@@ -263,6 +299,13 @@ pub struct Session {
     data_rng: Rng,
     /// Every materialized object: (target, bytes) — seeds sim-exec runs.
     objects: Vec<(ObjectId, usize, u64)>,
+    /// Plan memo keyed by canonical graph signature
+    /// (see [`SessionConfig::plan_cache`]).
+    plan_cache: PlanCache,
+    /// The plan of the most recent `run()` (fresh or rebound) — kept for
+    /// introspection: the plan-cache property suite replays it through
+    /// the sequential oracle and audits rebound input liveness.
+    pub last_plan: Option<Plan>,
     /// Cumulative reports.
     pub total_tasks: usize,
     pub total_transfer_bytes: u64,
@@ -313,6 +356,8 @@ impl Session {
             real_exec,
             data_rng: Rng::seed_from_u64(cfg.seed ^ 0xDA7A),
             objects: Vec::new(),
+            plan_cache: PlanCache::default(),
+            last_plan: None,
             total_tasks: 0,
             total_transfer_bytes: 0,
             total_sim_makespan: 0.0,
@@ -492,9 +537,36 @@ impl Session {
         } else {
             crate::graph::fuse::FuseStats::default()
         };
+        // planning step 2: search or replay. With the plan cache on, the
+        // post-fusion graph is condensed into a canonical signature; a
+        // fresh cached plan for it is rebound (symbolic slots -> this
+        // run's inputs + fresh ids, placements/transfers replayed into
+        // the load model) instead of re-running the local search. A miss
+        // — cold, capacity-evicted, or stale from absorbed feedback —
+        // schedules as always and captures the result.
+        let search_sw = crate::util::Stopwatch::start();
+        let (d0, s0) = self.scheduler.search_stats();
         let mut plan = Plan::new();
-        self.scheduler
-            .schedule(graph, &mut self.state, &self.ids, &mut plan);
+        let mut plan_cache_hit = false;
+        if self.cfg.plan_cache {
+            let (sig, inputs) = crate::graph::signature(graph, &self.state);
+            if self.plan_cache.lookup(sig) {
+                let entry = self.plan_cache.get(sig).expect("fresh entry after lookup");
+                entry.rebind(&inputs, &self.ids, graph, &mut self.state, &mut plan);
+                plan_cache_hit = true;
+            } else {
+                self.scheduler
+                    .schedule(graph, &mut self.state, &self.ids, &mut plan);
+                if let Some(entry) = PlanCache::capture(&inputs, graph, &plan) {
+                    self.plan_cache.insert(sig, entry);
+                }
+            }
+        } else {
+            self.scheduler
+                .schedule(graph, &mut self.state, &self.ids, &mut plan);
+        }
+        let search_secs = search_sw.secs();
+        let (d1, s1) = self.scheduler.search_stats();
         let schedule_secs = sw.secs();
 
         // modeled execution (always: it is cheap and feeds the figures)
@@ -526,6 +598,10 @@ impl Session {
         if self.cfg.feedback {
             if let Some(r) = &real {
                 self.state.absorb_feedback(&r.feedback);
+                // absorbed drift ages every cached plan: entries planned
+                // against the pre-drift model re-plan (in the foreground)
+                // once the accumulated magnitude crosses the threshold
+                self.plan_cache.note_feedback(r.feedback.pressure_elems());
             }
         }
 
@@ -544,14 +620,12 @@ impl Session {
         };
 
         // register surviving outputs as resident objects for later runs
-        for task in &plan.tasks {
-            for (obj, shape) in &task.outputs {
-                if dead.contains(obj) {
-                    continue;
-                }
-                let bytes: u64 = shape.iter().map(|&d| d as u64).product::<u64>() * 8;
-                self.objects.push((*obj, task.target, bytes));
+        for (obj, shape, target) in plan.produced() {
+            if dead.contains(&obj) {
+                continue;
             }
+            let bytes: u64 = shape.iter().map(|&d| d as u64).product::<u64>() * 8;
+            self.objects.push((obj, target, bytes));
         }
 
         // materialize outputs
@@ -579,18 +653,33 @@ impl Session {
         self.total_transfer_bytes += plan.transfer_bytes();
         self.total_sim_makespan += sim.makespan;
 
-        Ok((
-            outs,
-            RunReport {
-                tasks: plan.len(),
-                transfers: plan.transfer_count(),
-                transfer_bytes: plan.transfer_bytes(),
-                sim,
-                real,
-                schedule_secs,
-                fused_ops: fuse_stats.absorbed,
-            },
-        ))
+        let report = RunReport {
+            tasks: plan.len(),
+            transfers: plan.transfer_count(),
+            transfer_bytes: plan.transfer_bytes(),
+            sim,
+            real,
+            schedule_secs,
+            search_secs,
+            fused_ops: fuse_stats.absorbed,
+            plan_cache_hit,
+            plan_cache_hits: self.plan_cache.hits,
+            plan_cache_misses: self.plan_cache.misses,
+            decisions: d1 - d0,
+            simulations: s1 - s0,
+        };
+        self.last_plan = Some(plan);
+        Ok((outs, report))
+    }
+
+    /// Session-cumulative plan-cache counters:
+    /// `(hits, misses, stale re-plans)`.
+    pub fn plan_cache_stats(&self) -> (u64, u64, u64) {
+        (
+            self.plan_cache.hits,
+            self.plan_cache.misses,
+            self.plan_cache.stale_replans,
+        )
     }
 
     /// Gather a distributed array into a dense host block (real mode).

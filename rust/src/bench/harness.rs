@@ -193,6 +193,25 @@ pub fn prefetch_summary(report: &RealReport) -> String {
         .join(" | ")
 }
 
+/// One-line planning-cost summary of one `Session::run`:
+/// `hit=true sims=0 dec=0 sched=12.0µs (search 8.0µs) cache 3h/1m` —
+/// what the fig09 plan-cache ablation and the fig14 smoke arm print per
+/// iteration. `sims` is the run's candidate-placement simulation count
+/// (0 on a cache hit), `sched` the full fusion+signature+search-or-rebind
+/// wall time and `search` the part the cache amortizes.
+pub fn planning_summary(rep: &crate::api::RunReport) -> String {
+    format!(
+        "hit={:<5} sims={} dec={} sched={} (search {}) cache {}h/{}m",
+        rep.plan_cache_hit,
+        rep.simulations,
+        rep.decisions,
+        human_secs(rep.schedule_secs),
+        human_secs(rep.search_secs),
+        rep.plan_cache_hits,
+        rep.plan_cache_misses,
+    )
+}
+
 /// One-line per-node plan↔runtime feedback summary of a real run:
 /// `node0: stolen 3 (1.2 KB), demand 64 KB, unplanned in 64 KB / out 0 B | ...`
 /// — what the fig09 feedback ablation prints next to wall time.
@@ -404,6 +423,20 @@ mod tests {
         assert!(s.contains("node0: stolen 3 (1.00 KiB)"), "{s}");
         assert!(s.contains("demand 2.00 KiB"), "{s}");
         assert!(s.contains("node1: stolen 0"), "{s}");
+    }
+
+    #[test]
+    fn planning_summary_formats_hit_and_counters() {
+        let mut rep = crate::api::RunReport::default();
+        rep.plan_cache_hit = true;
+        rep.simulations = 0;
+        rep.decisions = 0;
+        rep.plan_cache_hits = 3;
+        rep.plan_cache_misses = 1;
+        let s = planning_summary(&rep);
+        assert!(s.contains("hit=true"), "{s}");
+        assert!(s.contains("sims=0"), "{s}");
+        assert!(s.contains("cache 3h/1m"), "{s}");
     }
 
     #[test]

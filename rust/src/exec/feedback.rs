@@ -81,6 +81,23 @@ pub struct RuntimeFeedback {
 }
 
 impl RuntimeFeedback {
+    /// Magnitude of the load-model drift this feedback causes when
+    /// absorbed, in f64 elements: the unplanned NIC traffic and spill
+    /// pressure [`crate::scheduler::ClusterState::absorb_feedback`] folds
+    /// into the Eq. 2 terms (replicas widen *options* but do not move the
+    /// objective's committed loads, so they are not counted). The plan
+    /// cache ages its entries by this amount — enough drift means a
+    /// memoized argmin is no longer trustworthy and the next lookup
+    /// re-plans.
+    pub fn pressure_elems(&self) -> f64 {
+        self.nodes
+            .iter()
+            .map(|n| {
+                (n.unplanned_in_bytes + n.unplanned_out_bytes + n.spilled_bytes) as f64 / 8.0
+            })
+            .sum()
+    }
+
     /// Bytes the plan's committed transfers put on each node's NICs:
     /// per-node `(in, out)`, with same-node movements skipped exactly as
     /// the stores skip them.

@@ -90,6 +90,21 @@ impl Plan {
         self.tasks.iter().map(|t| t.transfers.len()).sum()
     }
 
+    /// Every object this plan produces, with its shape and producing
+    /// target, in plan order. Plan order is a contract, not a
+    /// convenience: the plan cache abstracts produced objects to
+    /// positional `Produced(j)` slots and rebinding re-allocates them in
+    /// the same order (`crate::scheduler::plan_cache`), so a cached
+    /// plan's j-th produced object always corresponds to the j-th entry
+    /// of this iterator.
+    pub fn produced(&self) -> impl Iterator<Item = (ObjectId, &[usize], usize)> {
+        self.tasks.iter().flat_map(|t| {
+            t.outputs
+                .iter()
+                .map(move |(o, s)| (*o, s.as_slice(), t.target))
+        })
+    }
+
     /// Tasks per target histogram (for load-balance assertions).
     pub fn tasks_per_target(&self, n_targets: usize) -> Vec<usize> {
         let mut h = vec![0; n_targets];

@@ -6,9 +6,11 @@ pub mod dist;
 pub mod fuse;
 #[allow(clippy::module_inception)]
 pub mod graph;
+pub mod signature;
 pub mod vertex;
 
 pub use dist::DistArray;
 pub use fuse::{fuse_elementwise, fuse_epilogues, FuseStats};
 pub use graph::{Graph, GraphArrayRef};
+pub use signature::{signature, GraphSignature};
 pub use vertex::{Ref, Vertex, VertexId};

@@ -1,0 +1,437 @@
+//! Canonical graph signatures — the plan-cache key.
+//!
+//! Iterative workloads (logreg §8.3, Newton, tensor factorization)
+//! resubmit the *same* graph topology every iteration. Two runs can share
+//! a cached plan iff their graphs are **plan-isomorphic**: the scheduler,
+//! walking either graph, would face exactly the same sequence of decision
+//! problems. [`signature`] condenses everything the scheduler can observe
+//! into one 128-bit structural hash:
+//!
+//! * arena topology — vertex count, per-vertex kind, child `(vertex, out)`
+//!   edges in arena order (builders are deterministic, so arena order *is*
+//!   canonical order; fusion runs before signing and is itself
+//!   deterministic);
+//! * kernel identity — enum discriminant plus every numeric parameter's
+//!   exact bits (`Scale(α)` vs `Scale(α')` must not collide);
+//! * block shapes and placement constraints;
+//! * the leaf-object *aliasing pattern* — raw [`ObjectId`]s never enter
+//!   the hash (they differ every iteration); instead each distinct leaf
+//!   object gets its first-occurrence index, so "same block used twice"
+//!   hashes differently from "two distinct blocks";
+//! * the placement vector of the graph's inputs — each distinct input's
+//!   **primary** location (first entry of [`ClusterState::locations_of`],
+//!   the producer) and size. Primaries never move in this system;
+//!   *replica* lists deliberately stay out of the hash, because feedback
+//!   and committed pulls widen them between iterations and would thrash
+//!   the cache on exactly the repeated-topology runs it exists for. A
+//!   replica-informed re-plan still happens — via the staleness threshold
+//!   in [`crate::scheduler::plan_cache`], not via key churn;
+//! * the output structure (grids and root refs).
+//!
+//! The hash is FNV-1a/128. With a 128-bit digest an accidental collision
+//! is not a realistic event; this matters because a collision here would
+//! replay a *wrong plan* (wrong kernels/shapes), not merely a suboptimal
+//! placement. The willful-collision case (adversarial graphs) is out of
+//! scope — the cache is per-session, fed only by this driver's own
+//! builders.
+
+use crate::scheduler::ClusterState;
+use crate::store::ObjectId;
+
+use super::graph::Graph;
+use super::vertex::Vertex;
+
+/// 128-bit FNV-1a accumulator. Also implements [`std::hash::Hasher`]
+/// (folding `write` bytes into the same stream, `finish` = low 64 bits)
+/// so `#[derive(Hash)]` types like [`crate::runtime::BinOp`] and enum
+/// discriminants feed the same digest.
+pub struct Fnv128 {
+    h: u128,
+}
+
+impl Fnv128 {
+    const OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+    const PRIME: u128 = 0x0000000001000000000000000000013B;
+
+    pub fn new() -> Self {
+        Self { h: Self::OFFSET }
+    }
+
+    #[inline]
+    fn byte(&mut self, b: u8) {
+        self.h ^= b as u128;
+        self.h = self.h.wrapping_mul(Self::PRIME);
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// Exact bits — `-0.0` vs `0.0` and NaN payloads all distinguish,
+    /// which is the right call for a key that guards bit-identical replay.
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Domain separator between hashed sections, so e.g. an empty shape
+    /// list followed by `[2]` cannot collide with `[2]` followed by
+    /// nothing.
+    pub fn tag(&mut self, t: u8) {
+        self.byte(t);
+    }
+
+    pub fn digest(&self) -> u128 {
+        self.h
+    }
+}
+
+impl Default for Fnv128 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::hash::Hasher for Fnv128 {
+    fn finish(&self) -> u64 {
+        self.h as u64
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.byte(b);
+        }
+    }
+}
+
+/// Cache key: equal signature ⇒ plan-isomorphic graphs (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GraphSignature(pub u128);
+
+fn hash_shape(sig: &mut Fnv128, s: &[usize]) {
+    sig.usize(s.len());
+    for &d in s {
+        sig.usize(d);
+    }
+}
+
+fn hash_children(sig: &mut Fnv128, children: &[(usize, usize)]) {
+    sig.usize(children.len());
+    for &(vid, out) in children {
+        sig.usize(vid);
+        sig.usize(out);
+    }
+}
+
+fn hash_constraint(sig: &mut Fnv128, c: &Option<usize>) {
+    match c {
+        Some(t) => {
+            sig.tag(1);
+            sig.usize(*t);
+        }
+        None => sig.tag(0),
+    }
+}
+
+fn hash_ew_step(sig: &mut Fnv128, s: &crate::runtime::EwStep) {
+    use crate::runtime::EwStep as E;
+    use std::hash::Hash;
+    std::mem::discriminant(s).hash(sig);
+    match s {
+        E::Scale(a) => sig.f64(*a),
+        E::Bin(op) | E::BinRev(op) => op.hash(sig),
+        E::Neg | E::Sigmoid => {}
+    }
+}
+
+/// Kernel identity: discriminant + every numeric parameter's exact bits.
+/// The match is exhaustive over the parameter-carrying variants *without*
+/// a wildcard, so adding a parameterized kernel without extending this
+/// function fails to compile instead of silently under-hashing (a false
+/// cache hit here replays the wrong math, not just the wrong placement).
+fn hash_kernel(sig: &mut Fnv128, k: &crate::runtime::Kernel) {
+    use crate::runtime::Kernel as K;
+    use std::hash::Hash;
+    std::mem::discriminant(k).hash(sig);
+    match k {
+        K::Scale(a) | K::ScaledMatmul(a) | K::ScaledMatmulNT(a) | K::ScaledGram(a) => {
+            sig.f64(*a)
+        }
+        K::Ew(op) => op.hash(sig),
+        K::FusedEw(steps) => {
+            sig.usize(steps.len());
+            for s in steps {
+                hash_ew_step(sig, s);
+            }
+        }
+        K::Neg
+        | K::Sigmoid
+        | K::Matmul
+        | K::MatmulNT
+        | K::Gram
+        | K::SumAxis0
+        | K::SumAxis1
+        | K::SumAll
+        | K::GlmMu
+        | K::GlmGrad
+        | K::GlmHess
+        | K::LogLoss
+        | K::NewtonBlock
+        | K::LbfgsBlock
+        | K::PredictBlock
+        | K::Qr
+        | K::StackQr
+        | K::SplitTop
+        | K::SplitBottom
+        | K::InvUpper
+        | K::Cholesky
+        | K::SolveSpd
+        | K::Transpose
+        | K::ColScale
+        | K::MttkrpTerm
+        | K::TensordotJK
+        | K::EinsumXB
+        | K::EinsumWC => {}
+    }
+}
+
+/// Compute the canonical signature of a (post-fusion, pre-schedule) graph
+/// against the current load model, plus the graph's **canonical input
+/// list**: every distinct leaf object in first-occurrence arena order.
+///
+/// The input list is the rebinding contract: a cached plan stores task
+/// inputs as indices into this list, and a later hit substitutes the
+/// *new* graph's list positionally. Equal signatures make the positional
+/// substitution sound — the aliasing pattern (which positions share an
+/// object) is part of the hash.
+pub fn signature(graph: &Graph, state: &ClusterState) -> (GraphSignature, Vec<ObjectId>) {
+    let mut sig = Fnv128::new();
+    let mut inputs: Vec<ObjectId> = Vec::new();
+    let mut slot_of = |inputs: &mut Vec<ObjectId>, o: ObjectId| -> usize {
+        match inputs.iter().position(|&x| x == o) {
+            Some(i) => i,
+            None => {
+                inputs.push(o);
+                inputs.len() - 1
+            }
+        }
+    };
+
+    sig.usize(graph.vertices.len());
+    for v in &graph.vertices {
+        match v {
+            Vertex::Leaf { objs, shapes } => {
+                sig.tag(0);
+                sig.usize(objs.len());
+                for (o, s) in objs.iter().zip(shapes) {
+                    sig.usize(slot_of(&mut inputs, *o));
+                    hash_shape(&mut sig, s);
+                }
+            }
+            Vertex::Op {
+                kernel,
+                children,
+                constraint,
+            } => {
+                sig.tag(1);
+                hash_kernel(&mut sig, kernel);
+                hash_children(&mut sig, children);
+                hash_constraint(&mut sig, constraint);
+            }
+            Vertex::Reduce {
+                op,
+                children,
+                constraint,
+            } => {
+                use std::hash::Hash;
+                sig.tag(2);
+                op.hash(&mut sig);
+                hash_children(&mut sig, children);
+                hash_constraint(&mut sig, constraint);
+            }
+        }
+    }
+
+    sig.tag(3);
+    sig.usize(graph.outputs.len());
+    for out in &graph.outputs {
+        hash_shape(&mut sig, &out.grid.shape);
+        hash_shape(&mut sig, &out.grid.grid);
+        hash_children(&mut sig, &out.roots);
+    }
+
+    // placement vector: primary location + size of each distinct input
+    sig.tag(4);
+    sig.usize(inputs.len());
+    for &o in &inputs {
+        match state.locations_of(o).first() {
+            Some(&t) => {
+                sig.tag(1);
+                sig.usize(t);
+            }
+            None => sig.tag(0),
+        }
+        sig.f64(state.size_of(o));
+    }
+
+    (GraphSignature(sig.digest()), inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::build;
+    use crate::graph::DistArray;
+    use crate::grid::ArrayGrid;
+    use crate::net::model::SystemMode;
+    use crate::runtime::BinOp;
+    use crate::scheduler::Topology;
+    use crate::store::IdGen;
+
+    fn state(k: usize) -> ClusterState {
+        ClusterState::new(Topology::new(k, 4, SystemMode::Ray))
+    }
+
+    fn array(
+        st: &mut ClusterState,
+        ids: &IdGen,
+        shape: &[usize],
+        grid: &[usize],
+        target: usize,
+    ) -> DistArray {
+        let g = ArrayGrid::new(shape, grid);
+        let blocks: Vec<u64> = (0..g.num_blocks()).map(|_| ids.next()).collect();
+        for (f, c) in g.iter_coords().enumerate() {
+            st.register(blocks[f], g.block_elems(&c) as f64, target);
+        }
+        let targets = vec![target; blocks.len()];
+        DistArray::new(g, blocks, targets)
+    }
+
+    #[test]
+    fn same_topology_fresh_ids_same_signature() {
+        // the iteration-2 case: structurally identical graph, brand-new
+        // ObjectIds, same primaries -> same key
+        let make = |st: &mut ClusterState, ids: &IdGen| {
+            let a = array(st, ids, &[64, 8], &[4, 1], 0);
+            let b = array(st, ids, &[64, 8], &[4, 1], 0);
+            let mut g = Graph::new();
+            build::binary_ew(&mut g, &a, &b, BinOp::Add);
+            signature(&g, st)
+        };
+        let mut st = state(2);
+        let ids = IdGen::default();
+        let (s1, in1) = make(&mut st, &ids);
+        let (s2, in2) = make(&mut st, &ids);
+        assert_eq!(s1, s2);
+        assert_ne!(in1, in2, "ids differ even when the signature matches");
+        assert_eq!(in1.len(), in2.len());
+    }
+
+    #[test]
+    fn shape_grid_kernel_constraint_and_placement_all_distinguish() {
+        let ids = IdGen::default();
+        let base = |st: &mut ClusterState, ids: &IdGen| {
+            let a = array(st, ids, &[64, 8], &[4, 1], 0);
+            let b = array(st, ids, &[64, 8], &[4, 1], 0);
+            (a, b)
+        };
+
+        let mut st = state(2);
+        let (a, b) = base(&mut st, &ids);
+        let mut g = Graph::new();
+        build::binary_ew(&mut g, &a, &b, BinOp::Add);
+        let (s_add, _) = signature(&g, &st);
+
+        // different kernel
+        let mut g2 = Graph::new();
+        build::binary_ew(&mut g2, &a, &b, BinOp::Mul);
+        let (s_mul, _) = signature(&g2, &st);
+        assert_ne!(s_add, s_mul);
+
+        // different block shape (same topology otherwise)
+        let mut st3 = state(2);
+        let a3 = array(&mut st3, &ids, &[128, 8], &[4, 1], 0);
+        let b3 = array(&mut st3, &ids, &[128, 8], &[4, 1], 0);
+        let mut g3 = Graph::new();
+        build::binary_ew(&mut g3, &a3, &b3, BinOp::Add);
+        assert_ne!(signature(&g3, &st3).0, s_add);
+
+        // different grid (8 blocks instead of 4)
+        let mut st4 = state(2);
+        let a4 = array(&mut st4, &ids, &[64, 8], &[8, 1], 0);
+        let b4 = array(&mut st4, &ids, &[64, 8], &[8, 1], 0);
+        let mut g4 = Graph::new();
+        build::binary_ew(&mut g4, &a4, &b4, BinOp::Add);
+        assert_ne!(signature(&g4, &st4).0, s_add);
+
+        // different input placement (primaries on node 1, not 0)
+        let mut st5 = state(2);
+        let a5 = array(&mut st5, &ids, &[64, 8], &[4, 1], 1);
+        let b5 = array(&mut st5, &ids, &[64, 8], &[4, 1], 1);
+        let mut g5 = Graph::new();
+        build::binary_ew(&mut g5, &a5, &b5, BinOp::Add);
+        assert_ne!(signature(&g5, &st5).0, s_add);
+
+        // different constraint on the root op
+        let mut g6 = Graph::new();
+        build::binary_ew(&mut g6, &a, &b, BinOp::Add);
+        for out in 0..g6.outputs.len() {
+            let roots: Vec<_> = g6.outputs[out].roots.clone();
+            for (vid, _) in roots {
+                g6.set_constraint(vid, 1);
+            }
+        }
+        assert_ne!(signature(&g6, &st).0, s_add);
+    }
+
+    #[test]
+    fn aliasing_pattern_distinguishes() {
+        // x+x and x+y are different plans even with identical shapes
+        let ids = IdGen::default();
+        let mut st = state(2);
+        let a = array(&mut st, &ids, &[64, 8], &[4, 1], 0);
+        let b = array(&mut st, &ids, &[64, 8], &[4, 1], 0);
+        let mut gxx = Graph::new();
+        build::binary_ew(&mut gxx, &a, &a, BinOp::Add);
+        let mut gxy = Graph::new();
+        build::binary_ew(&mut gxy, &a, &b, BinOp::Add);
+        assert_ne!(signature(&gxx, &st).0, signature(&gxy, &st).0);
+    }
+
+    #[test]
+    fn replica_growth_does_not_change_the_key() {
+        // feedback/pulls add replicas between iterations; the key must
+        // stay stable or iteration 2 would always miss
+        let ids = IdGen::default();
+        let mut st = state(2);
+        let a = array(&mut st, &ids, &[64, 8], &[4, 1], 0);
+        let b = array(&mut st, &ids, &[64, 8], &[4, 1], 0);
+        let mut g = Graph::new();
+        build::binary_ew(&mut g, &a, &b, BinOp::Add);
+        let (before, _) = signature(&g, &st);
+        for &obj in &a.blocks {
+            st.add_replica(obj, 1);
+        }
+        let (after, _) = signature(&g, &st);
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn scale_parameter_bits_distinguish() {
+        use crate::runtime::Kernel;
+        let mut h1 = Fnv128::new();
+        hash_kernel(&mut h1, &Kernel::Scale(2.0));
+        let mut h2 = Fnv128::new();
+        hash_kernel(&mut h2, &Kernel::Scale(3.0));
+        assert_ne!(h1.digest(), h2.digest());
+        let mut h3 = Fnv128::new();
+        hash_kernel(&mut h3, &Kernel::ScaledMatmul(2.0));
+        assert_ne!(h1.digest(), h3.digest(), "variant tag separates kernels");
+    }
+}

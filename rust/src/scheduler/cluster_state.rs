@@ -52,6 +52,20 @@ pub struct PlacementSim {
     pub cost: f64,
 }
 
+/// Reusable buffers for [`ClusterState::placement_cost_into`]. The LSHS
+/// inner loop evaluates `options × decisions` candidates per graph; with
+/// a scratch held by the scheduler, none of them touches the allocator —
+/// the buffers grow to the widest candidate once and are cleared (not
+/// freed) between evaluations.
+#[derive(Clone, Debug, Default)]
+pub struct PlacementScratch {
+    /// (obj, src, charged elems, raw elems) per missing input of the most
+    /// recent simulation — same layout as [`PlacementSim::pulls`].
+    pub pulls: Vec<(ObjectId, usize, f64, u64)>,
+    /// Per-source accumulated outbound charge within one simulation.
+    src_extra: Vec<(usize, f64)>,
+}
+
 impl ClusterState {
     pub fn new(topo: Topology) -> Self {
         let n = topo.targets();
@@ -129,26 +143,50 @@ impl ClusterState {
     /// Simulate placing an op with `inputs` at `target`, producing
     /// `out_elems` elements. Returns the Eq. 2 objective after the
     /// simulated transition plus the transfer decisions; does not mutate.
+    ///
+    /// Allocating convenience wrapper around
+    /// [`ClusterState::placement_cost_into`] — the per-decision commit
+    /// path and tests use this; the LSHS candidate loop uses the scratch
+    /// variant directly so candidates never hit the allocator.
     pub fn placement_cost(&self, target: usize, inputs: &[ObjectId], out_elems: f64) -> PlacementSim {
-        let mut pulls = Vec::new();
+        let mut scratch = PlacementScratch::default();
+        let cost = self.placement_cost_into(target, inputs, out_elems, &mut scratch);
+        PlacementSim {
+            pulls: std::mem::take(&mut scratch.pulls),
+            cost,
+        }
+    }
+
+    /// [`ClusterState::placement_cost`] writing into caller-owned scratch:
+    /// returns the Eq. 2 objective; the committed-transfer decisions land
+    /// in `scratch.pulls` (cleared first). Zero heap allocation once the
+    /// scratch has warmed to the widest candidate.
+    pub fn placement_cost_into(
+        &self,
+        target: usize,
+        inputs: &[ObjectId],
+        out_elems: f64,
+        scratch: &mut PlacementScratch,
+    ) -> f64 {
+        scratch.pulls.clear();
+        scratch.src_extra.clear();
         let mut dst_mem = self.mem[target] + out_elems;
         let mut dst_in = self.net_in[target];
         let mut src_out_max: f64 = 0.0;
-        // src net_out accumulation must account for several pulls from the
-        // same source within this one placement
-        let mut src_extra: Vec<(usize, f64)> = Vec::new();
         for &obj in inputs {
             let locs = self.locations_of(obj);
             if locs.contains(&target) {
                 continue;
             }
             let elems = self.size_of(obj);
-            // choose the source with the least projected net_out
+            // choose the source with the least projected net_out;
+            // src net_out accumulation must account for several pulls from
+            // the same source within this one placement
             let src = *locs
                 .iter()
                 .min_by(|&&a, &&b| {
-                    let ea = self.net_out[a] + extra(&src_extra, a);
-                    let eb = self.net_out[b] + extra(&src_extra, b);
+                    let ea = self.net_out[a] + extra(&scratch.src_extra, a);
+                    let eb = self.net_out[b] + extra(&scratch.src_extra, b);
                     ea.partial_cmp(&eb).unwrap().then(a.cmp(&b))
                 })
                 .unwrap_or_else(|| panic!("object {obj} has no location"));
@@ -156,14 +194,11 @@ impl ClusterState {
             let charged = elems * f;
             dst_mem += elems; // the copy becomes resident regardless of mode
             dst_in += charged;
-            bump(&mut src_extra, src, charged);
-            src_out_max = src_out_max.max(self.net_out[src] + extra(&src_extra, src));
-            pulls.push((obj, src, charged, elems as u64));
+            bump(&mut scratch.src_extra, src, charged);
+            src_out_max = src_out_max.max(self.net_out[src] + extra(&scratch.src_extra, src));
+            scratch.pulls.push((obj, src, charged, elems as u64));
         }
-        let cost = self.max_mem.max(dst_mem)
-            + self.max_in.max(dst_in)
-            + self.max_out.max(src_out_max);
-        PlacementSim { pulls, cost }
+        self.max_mem.max(dst_mem) + self.max_in.max(dst_in) + self.max_out.max(src_out_max)
     }
 
     /// Commit a simulated placement: move inputs, account the output.
@@ -185,6 +220,46 @@ impl ClusterState {
             self.register(obj, elems, target);
         }
         self.max_mem = self.max_mem.max(self.mem[target]);
+    }
+
+    /// Commit a *rebound* cached task into the load model
+    /// ([`crate::scheduler::plan_cache`]): exactly what
+    /// [`ClusterState::apply`] would have committed had the scheduler
+    /// planned this task now — each committed transfer charges
+    /// `elems × charge_factor(src, target)` on both NICs (block sizes are
+    /// whole element counts, so `elems as f64` reproduces the original
+    /// charge bit-for-bit), the pulled copy joins the target's memory
+    /// term and location list, and every output registers at the target.
+    ///
+    /// Two deviations from `apply`, both deliberate: a pull whose object
+    /// is *already* resident at the target (a runtime replica absorbed
+    /// since the plan was captured) still charges the NIC terms — the
+    /// plan commits the transfer, and model-vs-plan accounting identities
+    /// are asserted on that basis — but does not duplicate the location
+    /// entry or double-count resident memory (`forget` relies on distinct
+    /// entries). And a pull of an object the model no longer tracks (a
+    /// defensive case; live plan inputs are never collected) skips the
+    /// memory/location side entirely.
+    pub fn replay_task(&mut self, task: &crate::exec::task::Task) {
+        for tr in &task.transfers {
+            let charged = tr.elems as f64 * self.charge_factor(tr.src, task.target);
+            self.net_out[tr.src] += charged;
+            self.max_out = self.max_out.max(self.net_out[tr.src]);
+            self.net_in[task.target] += charged;
+            self.max_in = self.max_in.max(self.net_in[task.target]);
+            if self.sizes.contains_key(&tr.obj) {
+                let locs = self.locations.entry(tr.obj).or_default();
+                if !locs.contains(&task.target) {
+                    locs.push(task.target);
+                    self.mem[task.target] += tr.elems as f64;
+                }
+            }
+        }
+        for (obj, shape) in &task.outputs {
+            let elems: f64 = shape.iter().map(|&d| d as f64).product();
+            self.register(*obj, elems, task.target);
+        }
+        self.max_mem = self.max_mem.max(self.mem[task.target]);
     }
 
     /// Record that the runtime materialized a copy of `obj` on physical
@@ -439,6 +514,72 @@ mod tests {
         // the replica books on node 1's first worker target
         assert_eq!(s.locations_of(7), &[0, 2]);
         assert_eq!(s.mem[2], 40.0);
+    }
+
+    #[test]
+    fn placement_cost_into_matches_the_allocating_wrapper() {
+        let mut s = ClusterState::new(ray_topo(3));
+        s.register(1, 50.0, 0);
+        s.register(2, 30.0, 1);
+        s.register(3, 20.0, 2);
+        let mut scratch = PlacementScratch::default();
+        for target in 0..3 {
+            let sim = s.placement_cost(target, &[1, 2, 3], 10.0);
+            let cost = s.placement_cost_into(target, &[1, 2, 3], 10.0, &mut scratch);
+            assert_eq!(sim.cost.to_bits(), cost.to_bits());
+            assert_eq!(sim.pulls, scratch.pulls);
+        }
+        // scratch is cleared between candidates, not accumulated
+        let _ = s.placement_cost_into(0, &[1], 0.0, &mut scratch);
+        assert!(scratch.pulls.is_empty(), "local input -> no pulls left over");
+    }
+
+    #[test]
+    fn replay_task_reproduces_apply_accounting() {
+        use crate::exec::task::{Task, Transfer};
+        use crate::runtime::Kernel;
+        let mut s = ClusterState::new(ray_topo(2));
+        s.register(1, 50.0, 0);
+
+        // the original schedule: pull obj 1 to target 1, produce obj 2
+        let mut original = s.clone();
+        let sim = original.placement_cost(1, &[1], 10.0);
+        original.apply(1, &sim, &[(2, 10.0)]);
+
+        // the cached-plan replay of the identical decision
+        let mut replayed = s.clone();
+        replayed.replay_task(&Task {
+            kernel: Kernel::Neg,
+            inputs: vec![1],
+            in_shapes: vec![vec![50, 1]],
+            outputs: vec![(2, vec![10, 1])],
+            target: 1,
+            transfers: vec![Transfer { obj: 1, src: 0, elems: 50 }],
+        });
+
+        assert_eq!(original.mem, replayed.mem);
+        assert_eq!(original.net_in, replayed.net_in);
+        assert_eq!(original.net_out, replayed.net_out);
+        assert_eq!(original.objective().to_bits(), replayed.objective().to_bits());
+        assert_eq!(original.locations_of(1), replayed.locations_of(1));
+        assert_eq!(original.locations_of(2), replayed.locations_of(2));
+
+        // a replica absorbed since capture: NIC terms still charge (the
+        // plan committed the transfer) but the copy is not double-counted
+        let mut with_replica = s.clone();
+        with_replica.add_replica(1, 1);
+        let mem_before = with_replica.mem[1];
+        with_replica.replay_task(&Task {
+            kernel: Kernel::Neg,
+            inputs: vec![1],
+            in_shapes: vec![vec![50, 1]],
+            outputs: vec![(2, vec![10, 1])],
+            target: 1,
+            transfers: vec![Transfer { obj: 1, src: 0, elems: 50 }],
+        });
+        assert_eq!(with_replica.net_in[1], 50.0);
+        assert_eq!(with_replica.mem[1], mem_before + 10.0, "copy counted once");
+        assert_eq!(with_replica.locations_of(1), &[0, 1], "no duplicate entry");
     }
 
     #[test]

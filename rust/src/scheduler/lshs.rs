@@ -17,8 +17,8 @@ use crate::store::IdGen;
 use crate::util::rng::Rng;
 
 use super::{
-    commit_op, commit_reduce_pair, location_union, op_view, reduce_leaf_positions, ClusterState,
-    Scheduler, Topology,
+    commit_op, commit_reduce_pair, location_union_into, op_view, reduce_leaf_positions,
+    ClusterState, PlacementScratch, Scheduler, Topology,
 };
 
 pub struct Lshs {
@@ -29,6 +29,13 @@ pub struct Lshs {
     pub decisions: u64,
     /// Candidate simulations evaluated.
     pub simulations: u64,
+    /// Reusable inner-loop buffers: candidate-simulation scratch and the
+    /// placement-option set. The frontier loop runs
+    /// `decisions × options` simulations per graph; with these held here,
+    /// none of them allocates (the per-decision *commit* still builds its
+    /// owned `Task`, which outlives the search).
+    scratch: PlacementScratch,
+    options_buf: Vec<usize>,
 }
 
 impl Lshs {
@@ -40,50 +47,49 @@ impl Lshs {
             rng: Rng::seed_from_u64(seed),
             decisions: 0,
             simulations: 0,
+            scratch: PlacementScratch::default(),
+            options_buf: Vec::new(),
         }
     }
 
     /// Pin the root op of every output block to its hierarchical-layout
     /// target (the paper's transition-function invariant, §5).
     fn pin_outputs(&self, graph: &mut Graph) {
-        let pins: Vec<(usize, usize)> = graph
-            .outputs
-            .iter()
-            .flat_map(|out| {
-                let grid = out.grid.clone();
-                out.roots
-                    .iter()
-                    .enumerate()
-                    .map(|(flat, &(vid, _))| {
-                        let coords = grid.coords_of(flat);
-                        let p = self.layout.place_block(&grid, &coords);
-                        (vid, self.topo.target_of(p))
-                    })
-                    .collect::<Vec<_>>()
-            })
-            .collect();
+        // single flat pass: no per-output intermediate Vec, no grid clone
+        let mut pins: Vec<(usize, usize)> = Vec::new();
+        for out in &graph.outputs {
+            for (flat, &(vid, _)) in out.roots.iter().enumerate() {
+                let coords = out.grid.coords_of(flat);
+                let p = self.layout.place_block(&out.grid, &coords);
+                pins.push((vid, self.topo.target_of(p)));
+            }
+        }
         for (vid, target) in pins {
             graph.set_constraint(vid, target);
         }
     }
 
     /// Choose the best placement among `options` for an op producing
-    /// `out_elems`, by simulating each (Algorithm 1's inner loop).
+    /// `out_elems`, by simulating each (Algorithm 1's inner loop). An
+    /// associated fn over explicitly-passed scratch/counter so the caller
+    /// can hold `options` borrowed from `self.options_buf` at the same
+    /// time; `placement_cost_into` keeps every candidate allocation-free.
     fn best_target(
-        &mut self,
         state: &ClusterState,
         options: &[usize],
         inputs: &[crate::store::ObjectId],
         out_elems: f64,
+        scratch: &mut PlacementScratch,
+        simulations: &mut u64,
     ) -> usize {
         debug_assert!(!options.is_empty());
         let mut best = options[0];
         let mut best_cost = f64::INFINITY;
         for &t in options {
-            self.simulations += 1;
-            let sim = state.placement_cost(t, inputs, out_elems);
-            if sim.cost < best_cost {
-                best_cost = sim.cost;
+            *simulations += 1;
+            let cost = state.placement_cost_into(t, inputs, out_elems, scratch);
+            if cost < best_cost {
+                best_cost = cost;
                 best = t;
             }
         }
@@ -129,6 +135,10 @@ impl Lshs {
 impl Scheduler for Lshs {
     fn name(&self) -> String {
         "lshs".into()
+    }
+
+    fn search_stats(&self) -> (u64, u64) {
+        (self.decisions, self.simulations)
     }
 
     fn place_creation(&mut self, grid: &ArrayGrid, state: &mut ClusterState) -> Vec<usize> {
@@ -203,18 +213,26 @@ impl Scheduler for Lshs {
                         .iter()
                         .map(|s| s.iter().map(|&d| d as f64).product::<f64>())
                         .sum();
-                    let options = match view.constraint {
-                        Some(c) => vec![c],
+                    match view.constraint {
+                        Some(c) => {
+                            self.options_buf.clear();
+                            self.options_buf.push(c);
+                        }
                         None => {
-                            let u = location_union(state, &view.inputs);
-                            if u.is_empty() {
-                                vec![0]
-                            } else {
-                                u
+                            location_union_into(state, &view.inputs, &mut self.options_buf);
+                            if self.options_buf.is_empty() {
+                                self.options_buf.push(0);
                             }
                         }
-                    };
-                    let target = self.best_target(state, &options, &view.inputs, out_elems);
+                    }
+                    let target = Self::best_target(
+                        state,
+                        &self.options_buf,
+                        &view.inputs,
+                        out_elems,
+                        &mut self.scratch,
+                        &mut self.simulations,
+                    );
                     self.decisions += 1;
                     commit_op(graph, state, ids, plan, vid, target);
                     // vid is now a leaf: retire it, wake eligible parents
@@ -235,24 +253,34 @@ impl Scheduler for Lshs {
                         let ch = graph.vertices[vid].children();
                         (ch[pa], ch[pb])
                     };
-                    let inputs = vec![graph.resolve(ca), graph.resolve(cb)];
+                    // stack pair, not a heap Vec: one reduce step is
+                    // always binary
+                    let inputs = [graph.resolve(ca), graph.resolve(cb)];
                     let elems: f64 = graph
                         .ref_shape(ca)
                         .iter()
                         .map(|&d| d as f64)
                         .product();
-                    let options = match (final_pair, constraint) {
-                        (true, Some(c)) => vec![c],
+                    match (final_pair, constraint) {
+                        (true, Some(c)) => {
+                            self.options_buf.clear();
+                            self.options_buf.push(c);
+                        }
                         _ => {
-                            let u = location_union(state, &inputs);
-                            if u.is_empty() {
-                                vec![0]
-                            } else {
-                                u
+                            location_union_into(state, &inputs, &mut self.options_buf);
+                            if self.options_buf.is_empty() {
+                                self.options_buf.push(0);
                             }
                         }
-                    };
-                    let target = self.best_target(state, &options, &inputs, elems);
+                    }
+                    let target = Self::best_target(
+                        state,
+                        &self.options_buf,
+                        &inputs,
+                        elems,
+                        &mut self.scratch,
+                        &mut self.simulations,
+                    );
                     self.decisions += 1;
                     commit_reduce_pair(graph, state, ids, plan, vid, pa, pb, target);
                     // commit may have grown the arena (new leaf vertex)

@@ -10,10 +10,12 @@
 pub mod baselines;
 pub mod cluster_state;
 pub mod lshs;
+pub mod plan_cache;
 pub mod topology;
 
-pub use cluster_state::ClusterState;
+pub use cluster_state::{ClusterState, PlacementScratch};
 pub use lshs::Lshs;
+pub use plan_cache::{CachedPlan, PlanCache};
 pub use topology::Topology;
 
 use crate::exec::task::{Plan, Task, Transfer};
@@ -32,6 +34,15 @@ pub trait Scheduler {
 
     /// Schedule every operation of `graph`, emitting tasks into `plan`.
     fn schedule(&mut self, graph: &mut Graph, state: &mut ClusterState, ids: &IdGen, plan: &mut Plan);
+
+    /// Cumulative `(placement decisions, candidate simulations)` over
+    /// this scheduler's lifetime. `Session::run` reports the per-run
+    /// delta — which is how a plan-cache hit proves it skipped the local
+    /// search (`simulations == 0`). Baselines place without simulating
+    /// and keep the default.
+    fn search_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 /// Resolved view of an op vertex ready for placement.
@@ -186,9 +197,16 @@ pub(crate) fn commit_reduce_pair(
     }
 }
 
-/// Current locations union for a set of objects (deduped, order-stable).
-pub(crate) fn location_union(state: &ClusterState, objs: &[ObjectId]) -> Vec<usize> {
-    let mut out: Vec<usize> = Vec::new();
+/// Current locations union for a set of objects (deduped, order-stable),
+/// written into a caller-owned buffer (cleared first) — the LSHS frontier
+/// loop reuses one buffer across decisions so the candidate set never
+/// allocates once warmed.
+pub(crate) fn location_union_into(
+    state: &ClusterState,
+    objs: &[ObjectId],
+    out: &mut Vec<usize>,
+) {
+    out.clear();
     for &o in objs {
         for &t in state.locations_of(o) {
             if !out.contains(&t) {
@@ -196,5 +214,4 @@ pub(crate) fn location_union(state: &ClusterState, objs: &[ObjectId]) -> Vec<usi
             }
         }
     }
-    out
 }

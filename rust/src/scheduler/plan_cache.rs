@@ -1,0 +1,485 @@
+//! Plan cache: amortize LSHS planning across repeated graph topologies.
+//!
+//! Iterative drivers (Newton, L-BFGS, tensor factorization) submit the
+//! same graph shape every iteration, and every iteration pays the full
+//! local search — `decisions × options × inputs` candidate simulations.
+//! This module memoizes the *outcome* of that search, keyed by the
+//! canonical [`GraphSignature`](crate::graph::GraphSignature): same
+//! signature ⇒ the scheduler would face an isomorphic decision problem,
+//! so the previous plan is a valid (and, modulo staleness, equally good)
+//! schedule for the new graph.
+//!
+//! A cached plan cannot store concrete [`ObjectId`]s — every iteration's
+//! graph carries fresh ones. [`PlanCache::capture`] therefore *abstracts*
+//! a freshly-scheduled plan into symbolic [`Slot`]s: task inputs become
+//! `Input(i)` (position in the graph's canonical input list, see
+//! [`crate::graph::signature::signature`]) or `Produced(j)` (the j-th
+//! object the plan itself creates). On a hit, [`CachedPlan::rebind`] runs
+//! the abstraction backwards: `Input` slots map to *this* run's input
+//! objects, `Produced` slots to brand-new ids from the session's
+//! [`IdGen`], and every task is replayed into the [`ClusterState`]
+//! exactly as [`ClusterState::apply`] would have committed it — so Eq. 2
+//! accounting, lifetime analysis, feedback reconciliation, and the sim
+//! executor all see a plan indistinguishable from a freshly-scheduled
+//! one. The graph's output roots are rewritten to leaves over the
+//! remapped objects, which is all `Session::run` needs downstream (pins
+//! and output materialization go through `Graph::resolve`).
+//!
+//! **Correctness vs optimality.** A hit is always *correct*: kernels and
+//! reduce pairings are frozen in the plan, so results are bit-identical
+//! to executing the original schedule (the bit-identity invariant —
+//! reduction shape is fixed at plan time). What can rot is *cost*: the
+//! load model drifts as feedback absorbs steal traffic and spill
+//! pressure. Each entry therefore carries a staleness score — the
+//! feedback magnitude (in elements) absorbed since the entry was planned,
+//! relative to the plan's own data scale. When the ratio crosses
+//! [`PlanCache::STALE_RATIO`], the next lookup declines the hit and the
+//! session re-plans in the foreground (synchronously — the jit-tier
+//! idiom without threads), replacing the entry.
+
+use std::collections::HashMap;
+
+use crate::exec::task::{Plan, Task, Transfer};
+use crate::graph::{Graph, GraphSignature, Vertex, VertexId};
+use crate::runtime::Kernel;
+use crate::store::{IdGen, ObjectId};
+
+use super::ClusterState;
+
+/// Symbolic object reference inside a cached plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Slot {
+    /// Index into the graph's canonical input list (distinct leaf objects
+    /// in first-occurrence arena order).
+    Input(u32),
+    /// The j-th object produced by the plan itself, in task/output order.
+    Produced(u32),
+}
+
+/// One committed transfer, with the moved object abstracted to a slot.
+#[derive(Clone, Debug)]
+struct SymTransfer {
+    obj: Slot,
+    src: usize,
+    elems: u64,
+}
+
+/// One task with all object ids abstracted to slots. Output slots are
+/// implicit: a task producing `k` outputs owns the next `k` `Produced`
+/// indices in plan order.
+#[derive(Clone, Debug)]
+struct SymTask {
+    kernel: Kernel,
+    inputs: Vec<Slot>,
+    in_shapes: Vec<Vec<usize>>,
+    out_shapes: Vec<Vec<usize>>,
+    target: usize,
+    transfers: Vec<SymTransfer>,
+}
+
+/// A memoized schedule for one graph signature.
+#[derive(Clone, Debug)]
+pub struct CachedPlan {
+    n_inputs: usize,
+    n_produced: usize,
+    tasks: Vec<SymTask>,
+    /// Output root vertices of the scheduled graph: `(vertex id, objs,
+    /// shapes)` — replayed onto the new graph so `Graph::resolve` works.
+    root_leaves: Vec<(VertexId, Vec<Slot>, Vec<Vec<usize>>)>,
+    /// Elements the plan touches (outputs + transfers): the denominator
+    /// of the staleness ratio.
+    planned_elems: f64,
+    /// Feedback elements absorbed by the load model since this entry was
+    /// planned (unplanned traffic + spill pressure).
+    stale_elems: f64,
+}
+
+impl CachedPlan {
+    /// Rebind this symbolic plan onto concrete objects: `inputs` is the
+    /// new graph's canonical input list (positional contract with the
+    /// signature), fresh output ids come from `ids`, concrete tasks are
+    /// appended to `plan`, every placement/transfer is replayed into
+    /// `state`, and the new graph's output roots are rewritten to leaves.
+    pub fn rebind(
+        &self,
+        inputs: &[ObjectId],
+        ids: &IdGen,
+        graph: &mut Graph,
+        state: &mut ClusterState,
+        plan: &mut Plan,
+    ) {
+        assert_eq!(
+            inputs.len(),
+            self.n_inputs,
+            "signature match implies an equal canonical input list"
+        );
+        let fresh: Vec<ObjectId> = (0..self.n_produced).map(|_| ids.next()).collect();
+        let resolve = |s: Slot| -> ObjectId {
+            match s {
+                Slot::Input(i) => inputs[i as usize],
+                Slot::Produced(j) => fresh[j as usize],
+            }
+        };
+        let mut next_out = 0usize;
+        for st in &self.tasks {
+            let outputs: Vec<(ObjectId, Vec<usize>)> = st
+                .out_shapes
+                .iter()
+                .map(|s| {
+                    let o = fresh[next_out];
+                    next_out += 1;
+                    (o, s.clone())
+                })
+                .collect();
+            let task = Task {
+                kernel: st.kernel.clone(),
+                inputs: st.inputs.iter().map(|&s| resolve(s)).collect(),
+                in_shapes: st.in_shapes.clone(),
+                outputs,
+                target: st.target,
+                transfers: st
+                    .transfers
+                    .iter()
+                    .map(|tr| Transfer {
+                        obj: resolve(tr.obj),
+                        src: tr.src,
+                        elems: tr.elems,
+                    })
+                    .collect(),
+            };
+            state.replay_task(&task);
+            plan.tasks.push(task);
+        }
+        debug_assert_eq!(next_out, self.n_produced);
+        for (vid, slots, shapes) in &self.root_leaves {
+            graph.vertices[*vid] = Vertex::Leaf {
+                objs: slots.iter().map(|&s| resolve(s)).collect(),
+                shapes: shapes.clone(),
+            };
+        }
+    }
+}
+
+/// Session-owned plan memo (see module docs). Bounded FIFO capacity;
+/// counters are cumulative over the session.
+#[derive(Debug)]
+pub struct PlanCache {
+    entries: HashMap<GraphSignature, CachedPlan>,
+    /// Insertion order, for capacity eviction.
+    order: Vec<GraphSignature>,
+    capacity: usize,
+    /// Re-plan when `stale_elems > STALE_RATIO × planned_elems`.
+    stale_ratio: f64,
+    pub hits: u64,
+    pub misses: u64,
+    /// Hits declined because the entry went stale (each one re-plans and
+    /// replaces the entry in the foreground).
+    pub stale_replans: u64,
+}
+
+impl PlanCache {
+    /// Default capacity: iterative drivers cycle through a handful of
+    /// topologies; 128 is far above any workload in the repo while
+    /// bounding a pathological signature-churn session.
+    pub const CAPACITY: usize = 128;
+    /// Default staleness threshold: once the absorbed feedback magnitude
+    /// reaches half the plan's own data scale, the load model has drifted
+    /// enough that the memoized argmin is no longer trustworthy.
+    pub const STALE_RATIO: f64 = 0.5;
+
+    pub fn new(capacity: usize, stale_ratio: f64) -> Self {
+        Self {
+            entries: HashMap::new(),
+            order: Vec::new(),
+            capacity: capacity.max(1),
+            stale_ratio,
+            hits: 0,
+            misses: 0,
+            stale_replans: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Count a lookup: `true` ⇒ a fresh entry exists and the caller
+    /// should [`CachedPlan::rebind`] it ([`PlanCache::get`]); `false` ⇒
+    /// schedule from scratch and [`PlanCache::insert`] the result. A
+    /// stale entry is evicted here and reported as a miss (plus
+    /// `stale_replans`), so the caller's miss path *is* the foreground
+    /// re-plan.
+    pub fn lookup(&mut self, sig: GraphSignature) -> bool {
+        match self.entries.get(&sig) {
+            Some(e) if e.stale_elems <= self.stale_ratio * e.planned_elems.max(1.0) => {
+                self.hits += 1;
+                true
+            }
+            Some(_) => {
+                self.entries.remove(&sig);
+                self.order.retain(|&s| s != sig);
+                self.stale_replans += 1;
+                self.misses += 1;
+                false
+            }
+            None => {
+                self.misses += 1;
+                false
+            }
+        }
+    }
+
+    pub fn get(&self, sig: GraphSignature) -> Option<&CachedPlan> {
+        self.entries.get(&sig)
+    }
+
+    pub fn insert(&mut self, sig: GraphSignature, entry: CachedPlan) {
+        if self.entries.insert(sig, entry).is_none() {
+            self.order.push(sig);
+            if self.order.len() > self.capacity {
+                let evict = self.order.remove(0);
+                self.entries.remove(&evict);
+            }
+        }
+    }
+
+    /// Charge absorbed runtime feedback against every cached entry:
+    /// `elems` is the magnitude (in f64 elements) of unplanned traffic
+    /// and spill pressure the load model just absorbed. Entries planned
+    /// against the pre-drift model grow stale together.
+    pub fn note_feedback(&mut self, elems: f64) {
+        if elems <= 0.0 {
+            return;
+        }
+        for e in self.entries.values_mut() {
+            e.stale_elems += elems;
+        }
+    }
+
+    /// Abstract a freshly-scheduled plan into a cacheable symbolic form.
+    /// `inputs` is the canonical input list the signature returned for
+    /// this graph (computed pre-schedule); `graph` is the post-schedule
+    /// graph (every vertex a leaf). Returns `None` if the plan references
+    /// an object outside `inputs ∪ produced` — an uncacheable plan, never
+    /// expected from the in-tree schedulers, but a wrong cache entry
+    /// would be a correctness bug so this is a hard gate, not an assert.
+    pub fn capture(inputs: &[ObjectId], graph: &Graph, plan: &Plan) -> Option<CachedPlan> {
+        let mut slot_of: HashMap<ObjectId, Slot> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, &o)| (o, Slot::Input(i as u32)))
+            .collect();
+        let mut produced = 0u32;
+        let mut tasks = Vec::with_capacity(plan.tasks.len());
+        let mut planned_elems = 0.0f64;
+        for t in &plan.tasks {
+            let ins: Option<Vec<Slot>> =
+                t.inputs.iter().map(|o| slot_of.get(o).copied()).collect();
+            let transfers: Option<Vec<SymTransfer>> = t
+                .transfers
+                .iter()
+                .map(|tr| {
+                    slot_of.get(&tr.obj).map(|&s| SymTransfer {
+                        obj: s,
+                        src: tr.src,
+                        elems: tr.elems,
+                    })
+                })
+                .collect();
+            let (ins, transfers) = (ins?, transfers?);
+            planned_elems += t.out_elems() as f64;
+            planned_elems += t.transfers.iter().map(|tr| tr.elems as f64).sum::<f64>();
+            let mut out_shapes = Vec::with_capacity(t.outputs.len());
+            for (o, s) in &t.outputs {
+                slot_of.insert(*o, Slot::Produced(produced));
+                produced += 1;
+                out_shapes.push(s.clone());
+            }
+            tasks.push(SymTask {
+                kernel: t.kernel.clone(),
+                inputs: ins,
+                in_shapes: t.in_shapes.clone(),
+                out_shapes,
+                target: t.target,
+                transfers,
+            });
+        }
+        let mut root_leaves = Vec::new();
+        let mut seen: Vec<VertexId> = Vec::new();
+        for out in &graph.outputs {
+            for &(vid, _) in &out.roots {
+                if seen.contains(&vid) {
+                    continue;
+                }
+                seen.push(vid);
+                let (objs, shapes) = match &graph.vertices[vid] {
+                    Vertex::Leaf { objs, shapes } => (objs, shapes),
+                    // scheduling rewrites every output root to a leaf; a
+                    // non-leaf root means the plan is not replayable
+                    _ => return None,
+                };
+                let slots: Option<Vec<Slot>> =
+                    objs.iter().map(|o| slot_of.get(o).copied()).collect();
+                root_leaves.push((vid, slots?, shapes.clone()));
+            }
+        }
+        Some(CachedPlan {
+            n_inputs: inputs.len(),
+            n_produced: produced as usize,
+            tasks,
+            root_leaves,
+            planned_elems,
+            stale_elems: 0.0,
+        })
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new(Self::CAPACITY, Self::STALE_RATIO)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build, signature::signature, DistArray};
+    use crate::grid::{ArrayGrid, NodeGrid};
+    use crate::net::model::SystemMode;
+    use crate::runtime::BinOp;
+    use crate::scheduler::{Lshs, Scheduler, Topology};
+
+    fn setup(k: usize) -> (Lshs, ClusterState, IdGen) {
+        let topo = Topology::new(k, 4, SystemMode::Ray);
+        let lshs = Lshs::new(NodeGrid::linear(k), topo.clone(), 42);
+        (lshs, ClusterState::new(topo), IdGen::default())
+    }
+
+    fn create(
+        sched: &mut Lshs,
+        state: &mut ClusterState,
+        ids: &IdGen,
+        shape: &[usize],
+        grid: &[usize],
+    ) -> DistArray {
+        let g = ArrayGrid::new(shape, grid);
+        let targets = sched.place_creation(&g, state);
+        let blocks: Vec<u64> = (0..g.num_blocks()).map(|_| ids.next()).collect();
+        for (f, c) in g.iter_coords().enumerate() {
+            state.register(blocks[f], g.block_elems(&c) as f64, targets[f]);
+        }
+        DistArray::new(g, blocks, targets)
+    }
+
+    #[test]
+    fn capture_rebind_roundtrip_preserves_structure_and_accounting() {
+        let (mut sched, mut state, ids) = setup(2);
+        let a = create(&mut sched, &mut state, &ids, &[64, 64], &[2, 2]);
+        let b = create(&mut sched, &mut state, &ids, &[64, 64], &[2, 2]);
+
+        // iteration 1: schedule for real, capture
+        let mut g1 = crate::graph::Graph::new();
+        build::matmul(&mut g1, &a, &b);
+        let (_, inputs1) = signature(&g1, &state);
+        let mut plan1 = Plan::new();
+        sched.schedule(&mut g1, &mut state, &ids, &mut plan1);
+        let cached = PlanCache::capture(&inputs1, &g1, &plan1).expect("cacheable");
+
+        // iteration 2: identical topology over the same inputs, rebound
+        let mut g2 = crate::graph::Graph::new();
+        build::matmul(&mut g2, &a, &b);
+        let (_, inputs2) = signature(&g2, &state);
+        let mut state2 = state.clone();
+        let mut plan2 = Plan::new();
+        cached.rebind(&inputs2, &ids, &mut g2, &mut state2, &mut plan2);
+
+        assert_eq!(plan2.len(), plan1.len());
+        assert_eq!(plan2.transfer_count(), plan1.transfer_count());
+        assert_eq!(plan2.transfer_bytes(), plan1.transfer_bytes());
+        for (t1, t2) in plan1.tasks.iter().zip(&plan2.tasks) {
+            assert_eq!(t1.kernel, t2.kernel);
+            assert_eq!(t1.target, t2.target);
+            assert_eq!(t1.in_shapes, t2.in_shapes);
+            // fresh ids, never recycled
+            for ((o1, s1), (o2, s2)) in t1.outputs.iter().zip(&t2.outputs) {
+                assert_ne!(o1, o2);
+                assert_eq!(s1, s2);
+            }
+        }
+        // the rebound graph resolves its outputs to the fresh ids
+        for out in &g2.outputs {
+            for &r in &out.roots {
+                let obj = g2.resolve(r);
+                assert!(
+                    plan2.tasks.iter().any(|t| t.outputs.iter().any(|(o, _)| *o == obj)),
+                    "output root must resolve to a rebound plan output"
+                );
+            }
+        }
+        // replay accounted the outputs at their targets (primary = the
+        // producing target; later replayed pulls may add replicas)
+        for t in &plan2.tasks {
+            for (o, s) in &t.outputs {
+                let elems: f64 = s.iter().map(|&d| d as f64).product();
+                assert_eq!(state2.locations_of(*o).first(), Some(&t.target));
+                assert_eq!(state2.size_of(*o), elems);
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_counts_and_staleness_evict() {
+        let (mut sched, mut state, ids) = setup(2);
+        let a = create(&mut sched, &mut state, &ids, &[64, 8], &[4, 1]);
+        let b = create(&mut sched, &mut state, &ids, &[64, 8], &[4, 1]);
+        let mut g = crate::graph::Graph::new();
+        build::binary_ew(&mut g, &a, &b, BinOp::Add);
+        let (sig, inputs) = signature(&g, &state);
+        let mut plan = Plan::new();
+        sched.schedule(&mut g, &mut state, &ids, &mut plan);
+        let entry = PlanCache::capture(&inputs, &g, &plan).unwrap();
+        let planned = entry.planned_elems;
+        assert!(planned > 0.0);
+
+        let mut cache = PlanCache::default();
+        assert!(!cache.lookup(sig), "cold cache misses");
+        cache.insert(sig, entry);
+        assert!(cache.lookup(sig), "warm cache hits");
+        assert_eq!((cache.hits, cache.misses, cache.stale_replans), (1, 1, 0));
+
+        // small feedback: still fresh
+        cache.note_feedback(planned * 0.1);
+        assert!(cache.lookup(sig));
+        // large feedback: crosses the ratio, entry evicted, miss reported
+        cache.note_feedback(planned * PlanCache::STALE_RATIO);
+        assert!(!cache.lookup(sig), "stale entry declines the hit");
+        assert_eq!(cache.stale_replans, 1);
+        assert!(cache.get(sig).is_none(), "stale entry evicted");
+    }
+
+    #[test]
+    fn capacity_evicts_oldest_insertion() {
+        let (mut sched, mut state, ids) = setup(2);
+        let mut cache = PlanCache::new(2, PlanCache::STALE_RATIO);
+        let mut sigs = Vec::new();
+        for n in [1usize, 2, 3] {
+            let a = create(&mut sched, &mut state, &ids, &[64 * n, 8], &[4, 1]);
+            let b = create(&mut sched, &mut state, &ids, &[64 * n, 8], &[4, 1]);
+            let mut g = crate::graph::Graph::new();
+            build::binary_ew(&mut g, &a, &b, BinOp::Add);
+            let (sig, inputs) = signature(&g, &state);
+            let mut plan = Plan::new();
+            sched.schedule(&mut g, &mut state, &ids, &mut plan);
+            cache.insert(sig, PlanCache::capture(&inputs, &g, &plan).unwrap());
+            sigs.push(sig);
+        }
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(sigs[0]).is_none(), "oldest entry evicted");
+        assert!(cache.get(sigs[1]).is_some());
+        assert!(cache.get(sigs[2]).is_some());
+    }
+}

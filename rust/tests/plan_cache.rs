@@ -1,0 +1,335 @@
+//! Plan-cache suites.
+//!
+//! The cache memoizes a *symbolic* plan per canonical graph signature and
+//! rebinds it onto fresh object ids on a hit (`scheduler::plan_cache`).
+//! The correctness bar is exactness: a cached run must execute a schedule
+//! that is semantically identical to plan-order sequential execution
+//! (bit-for-bit, kernel by kernel), its ClusterState replay must keep the
+//! Eq. 2 accounting identities intact, and a rebind must never reference
+//! an object that lifetime GC already released. The suites here check all
+//! of that through the public `Session` API only — across multi-run GLM
+//! sessions with feedback on, lifetime GC on, and skewed `create_at`
+//! layouts — plus signature collision sanity (kernel kind, scale
+//! parameter, operand aliasing, and input placement must all miss).
+
+use std::collections::{HashMap, HashSet};
+
+use nums::api::{ops, RunReport, Session, SessionConfig};
+use nums::exec::Plan;
+use nums::glm::data::{classification_data, classification_dense};
+use nums::glm::{newton_fit, newton_fit_serial};
+use nums::prelude::*;
+use nums::runtime::native;
+
+/// Sequential oracle: run the plan in order, single process, no stores.
+fn run_sequential(plan: &Plan, seeds: &HashMap<u64, Block>) -> HashMap<u64, Block> {
+    let mut env: HashMap<u64, Block> = seeds.clone();
+    for t in &plan.tasks {
+        let refs: Vec<&Block> = t.inputs.iter().map(|o| &env[o]).collect();
+        let outs = native::execute(&t.kernel, &refs).unwrap();
+        for ((obj, _), b) in t.outputs.iter().zip(outs) {
+            env.insert(*obj, b);
+        }
+    }
+    env
+}
+
+/// The plan's leaf inputs (task inputs the plan itself does not produce),
+/// fetched out of the session stores. Leaves are externally-owned arrays,
+/// so they are never lifetime-GC'd and must all still be resident — a
+/// rebound plan referencing a forgotten object panics right here.
+fn plan_seeds(sess: &Session, plan: &Plan) -> HashMap<u64, Block> {
+    let produced: HashSet<u64> = plan.produced().map(|(o, _, _)| o).collect();
+    let mut seeds = HashMap::new();
+    for t in &plan.tasks {
+        for &obj in &t.inputs {
+            if produced.contains(&obj) || seeds.contains_key(&obj) {
+                continue;
+            }
+            let b = sess
+                .stores
+                .fetch(obj)
+                .unwrap_or_else(|| panic!("plan input {obj} is not resident"));
+            seeds.insert(obj, b.as_ref().clone());
+        }
+    }
+    seeds
+}
+
+/// One scheduled run's worth of evidence for the oracle/rebind audits.
+struct RunTrace {
+    rep: RunReport,
+    plan: Plan,
+    outs: Vec<DistArray>,
+}
+
+/// Hand-rolled Newton loop — the same two graphs per iteration that
+/// `glm::newton_fit` submits, but keeping every run's report, plan, and
+/// output arrays alive so the oracle can replay them afterwards.
+fn newton_runs(
+    sess: &mut Session,
+    x: &DistArray,
+    y: &DistArray,
+    steps: usize,
+) -> (DistArray, Vec<RunTrace>) {
+    let d = x.grid.shape[1];
+    let mut beta = sess.zeros(&[d, 1], &[1, 1]);
+    let mut traces = Vec::new();
+    for _ in 0..steps {
+        let mut g = Graph::new();
+        build::glm_newton(&mut g, x, y, &beta);
+        let (outs, rep) = sess.run(&mut g).unwrap();
+        let plan = sess.last_plan.clone().unwrap();
+        let (grad, hess) = (outs[0].clone(), outs[1].clone());
+        traces.push(RunTrace { rep, plan, outs });
+
+        let mut g2 = Graph::new();
+        let lh = g2.leaf(hess.single_obj(), &[d, d]);
+        let lg = g2.leaf(grad.single_obj(), &[d, 1]);
+        let lb = g2.leaf(beta.single_obj(), &[d, 1]);
+        let dir = g2.op(Kernel::SolveSpd, vec![(lh, 0), (lg, 0)]);
+        let upd = g2.op(Kernel::Ew(BinOp::Sub), vec![(lb, 0), (dir, 0)]);
+        g2.add_output(ArrayGrid::new(&[d, 1], &[1, 1]), vec![(upd, 0)]);
+        let (outs2, rep2) = sess.run(&mut g2).unwrap();
+        let plan2 = sess.last_plan.clone().unwrap();
+        beta = outs2[0].clone();
+        traces.push(RunTrace {
+            rep: rep2,
+            plan: plan2,
+            outs: outs2,
+        });
+    }
+    (beta, traces)
+}
+
+/// Replay every traced plan through the sequential oracle and compare the
+/// run's surviving output blocks bit-for-bit against the stores.
+fn assert_oracle_exact(sess: &Session, traces: &[RunTrace]) {
+    for (i, tr) in traces.iter().enumerate() {
+        let seeds = plan_seeds(sess, &tr.plan);
+        let env = run_sequential(&tr.plan, &seeds);
+        for arr in &tr.outs {
+            for &obj in &arr.blocks {
+                let got = sess
+                    .stores
+                    .fetch(obj)
+                    .unwrap_or_else(|| panic!("run {i}: output {obj} not resident"));
+                let want = &env[&obj];
+                assert_eq!(got.shape, want.shape, "run {i}: shape of {obj}");
+                assert!(
+                    got.buf()
+                        .iter()
+                        .zip(want.buf())
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "run {i}: output {obj} diverges from the sequential oracle \
+                     (hit={})",
+                    tr.rep.plan_cache_hit
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn glm_second_iteration_hits_and_skips_the_search() {
+    // acceptance: on a repeated-topology GLM session, iteration 2 reports
+    // a cache hit with zero candidate simulations. Stealing off keeps the
+    // runs feedback-quiet, so no staleness aging interferes.
+    let cfg = SessionConfig::real_small(2, 2).with_stealing(false);
+    let mut sess = Session::new(cfg);
+    let (x, y) = classification_data(&mut sess, 512, 8, 4, 0xAB);
+    let res = newton_fit(&mut sess, &x, &y, 3, 0.0).unwrap();
+    assert!(res.reports.len() >= 4, "3 iterations, 2 graphs each");
+    assert!(!res.reports[0].plan_cache_hit, "iteration 1 is cold");
+    assert!(res.reports[0].simulations > 0, "iteration 1 must search");
+    for (i, rep) in res.reports.iter().enumerate().skip(2) {
+        assert!(rep.plan_cache_hit, "run {i} (iteration >= 2) must hit");
+        assert_eq!(rep.simulations, 0, "run {i}: a hit never simulates");
+        assert_eq!(rep.decisions, 0, "run {i}: a hit never decides");
+    }
+    let (hits, misses, stale) = sess.plan_cache_stats();
+    assert_eq!(misses, 2, "exactly the two iteration-1 graphs are cold");
+    assert!(hits >= 4, "iterations 2..3 replay both graphs: {hits}");
+    assert_eq!(stale, 0, "quiet runs must not age entries");
+}
+
+#[test]
+fn cached_runs_are_bit_identical_to_the_sequential_oracle() {
+    // every run — cold schedules and rebound replays alike, with
+    // lifetime GC and feedback at their defaults — must execute exactly
+    // the plan's kernel sequence
+    let cfg = SessionConfig::real_small(2, 2).with_stealing(false);
+    let mut sess = Session::new(cfg);
+    let (x, y) = classification_data(&mut sess, 512, 8, 4, 0x11);
+    let (_, traces) = newton_runs(&mut sess, &x, &y, 3);
+    let hit_runs = traces.iter().filter(|t| t.rep.plan_cache_hit).count();
+    assert!(hit_runs >= 4, "iterations 2..3 must replay, got {hit_runs}");
+    assert_oracle_exact(&sess, &traces);
+}
+
+#[test]
+fn skewed_feedback_gc_sessions_stay_oracle_exact_with_cache_on_and_off() {
+    // the adversarial property arm: every creation block on node 0
+    // (skewed `create_at` layout), stealing on so the executor migrates
+    // work and the feedback loop absorbs real drift (which may age cache
+    // entries into foreground re-plans — also a correct path), lifetime
+    // GC on. Both cache arms must stay bitwise oracle-exact run by run,
+    // and their fits may differ only by reduce-order roundoff.
+    let mut betas = Vec::new();
+    for cache in [true, false] {
+        let cfg = SessionConfig::real_small(2, 2).with_plan_cache(cache);
+        let mut sess = Session::new(cfg);
+        let x = sess.randn_at(&[256, 8], &[4, 1], 0);
+        let y = sess.create_at(&[256, 1], &[4, 1], 0, |rng, bs, _| {
+            (0..bs.iter().product::<usize>())
+                .map(|_| if rng.bool(0.5) { 1.0 } else { 0.0 })
+                .collect()
+        });
+        let (beta, traces) = newton_runs(&mut sess, &x, &y, 3);
+        if !cache {
+            assert!(
+                traces.iter().all(|t| !t.rep.plan_cache_hit),
+                "cache off must never report a hit"
+            );
+        }
+        assert_oracle_exact(&sess, &traces);
+        betas.push(sess.fetch(&beta).unwrap());
+    }
+    let scale = betas[0].buf().iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    let rel = betas[0].max_abs_diff(&betas[1]) / scale;
+    assert!(rel < 1e-6, "cache toggle moved the fit beyond roundoff: {rel:e}");
+}
+
+#[test]
+fn on_off_and_serial_agree_on_classification_glm() {
+    // same data, three solvers: cache-on session, cache-off session, and
+    // the dense serial baseline — all within reduce-order roundoff
+    let n = 1024;
+    let (xd, yd) = classification_dense(n, 8, 0xCD);
+    let serial = newton_fit_serial(&xd, &yd, 5, 0.0).unwrap();
+    for cache in [true, false] {
+        let cfg = SessionConfig::real_small(4, 2).with_plan_cache(cache);
+        let mut sess = Session::new(cfg);
+        let (x, y) = classification_data(&mut sess, n, 8, 4, 0xCD);
+        let res = newton_fit(&mut sess, &x, &y, 5, 0.0).unwrap();
+        let beta = sess.fetch(&res.beta).unwrap();
+        assert!(
+            beta.max_abs_diff(&serial.beta) < 1e-7,
+            "cache={cache}: distributed Newton diverges from dense"
+        );
+    }
+}
+
+#[test]
+fn signature_collisions_do_not_false_hit() {
+    // a false hit replays the wrong plan — wrong math, not just a wrong
+    // placement — so every semantically distinct graph must miss.
+    // (Stealing off: the repeat-graph *hit* assertions below must not be
+    // subject to feedback-driven staleness aging.)
+    let mut sess = Session::new(SessionConfig::real_small(2, 2).with_stealing(false));
+    let x = sess.randn(&[64, 64], &[2, 1]);
+    let y = sess.randn(&[64, 64], &[2, 1]);
+
+    let (_, r1) = ops::add(&mut sess, &x, &y).unwrap();
+    assert!(!r1.plan_cache_hit, "first sight is cold");
+    let (_, r2) = ops::add(&mut sess, &x, &y).unwrap();
+    assert!(r2.plan_cache_hit, "identical graph + placement must hit");
+    assert_eq!(r2.simulations, 0);
+
+    let (_, r3) = ops::mul(&mut sess, &x, &y).unwrap();
+    assert!(!r3.plan_cache_hit, "kernel kind distinguishes");
+
+    let (_, r4) = ops::add(&mut sess, &x, &x).unwrap();
+    assert!(!r4.plan_cache_hit, "operand aliasing (x+x vs x+y) distinguishes");
+
+    let none: [&DistArray; 0] = [];
+    let (_, r5) = ops::ew_chain(&mut sess, &x, &none, &[EwStep::Scale(2.0)]).unwrap();
+    assert!(!r5.plan_cache_hit);
+    let (_, r6) = ops::ew_chain(&mut sess, &x, &none, &[EwStep::Scale(2.0)]).unwrap();
+    assert!(r6.plan_cache_hit, "same scale parameter must hit");
+    let (_, r7) = ops::ew_chain(&mut sess, &x, &none, &[EwStep::Scale(3.0)]).unwrap();
+    assert!(!r7.plan_cache_hit, "scale parameter bits distinguish");
+
+    // same topology, same shapes — but the inputs live elsewhere, so the
+    // memoized placements would be wrong
+    let x1 = sess.randn_at(&[64, 64], &[2, 1], 1);
+    let y1 = sess.randn_at(&[64, 64], &[2, 1], 1);
+    let (_, r8) = ops::add(&mut sess, &x1, &y1).unwrap();
+    assert!(!r8.plan_cache_hit, "input placement distinguishes");
+}
+
+#[test]
+fn plan_cache_toggle_is_bit_transparent_for_elementwise_pipelines() {
+    // element-wise ops are block-local: placement can never change their
+    // numerics, so even across repeated runs (where the cache does alter
+    // *how* plans are obtained) the toggle must stay bit-transparent.
+    // Stealing off keeps feedback quiet, so the second-run hit assertion
+    // is deterministic rather than subject to staleness aging.
+    let run = |cache: bool| {
+        let cfg = SessionConfig::real_small(2, 2)
+            .with_stealing(false)
+            .with_plan_cache(cache);
+        let mut sess = Session::new(cfg);
+        let x = sess.randn_at(&[128, 128], &[4, 4], 0);
+        let y = sess.randn_at(&[128, 128], &[4, 4], 0);
+        let (a, _) = ops::add(&mut sess, &x, &y).unwrap();
+        let (a2, rep) = ops::add(&mut sess, &x, &y).unwrap();
+        assert_eq!(rep.plan_cache_hit, cache, "second identical run");
+        let (b, _) = ops::mul(&mut sess, &a, &a2).unwrap();
+        let (c, _) = ops::neg(&mut sess, &b).unwrap();
+        sess.fetch(&c).unwrap()
+    };
+    let on = run(true);
+    let off = run(false);
+    assert_eq!(on.max_abs_diff(&off), 0.0, "cache changed elementwise bits");
+}
+
+#[test]
+fn rebound_plans_after_gc_reference_only_live_objects() {
+    // lifetime GC releases dead intermediates during each run and the
+    // session forgets them from the load model; a later cache hit rebinds
+    // the symbolic plan onto *this* run's inputs, so no rebound task may
+    // reference an object any earlier run released
+    let cfg = SessionConfig::real_small(2, 2).with_stealing(false);
+    let mut sess = Session::new(cfg);
+    let (x, y) = classification_data(&mut sess, 512, 8, 4, 0x77);
+    let (_, traces) = newton_runs(&mut sess, &x, &y, 4);
+
+    let mut released: HashSet<u64> = HashSet::new();
+    let mut audited_hits = 0usize;
+    for (i, tr) in traces.iter().enumerate() {
+        if let Some(real) = &tr.rep.real {
+            released.extend(real.gc_released.iter().copied());
+        }
+        if !tr.rep.plan_cache_hit {
+            continue;
+        }
+        audited_hits += 1;
+        let produced: HashSet<u64> = tr.plan.produced().map(|(o, _, _)| o).collect();
+        for t in &tr.plan.tasks {
+            for &obj in &t.inputs {
+                if produced.contains(&obj) {
+                    continue;
+                }
+                assert!(
+                    !released.contains(&obj),
+                    "run {i}: rebound plan references GC-released object {obj}"
+                );
+                assert!(
+                    sess.state.size_of(obj) > 0.0,
+                    "run {i}: rebound input {obj} missing from the load model"
+                );
+                assert!(
+                    sess.stores.fetch(obj).is_some(),
+                    "run {i}: rebound input {obj} not resident in any store"
+                );
+            }
+        }
+    }
+    assert!(audited_hits >= 6, "iterations 2..4 must replay: {audited_hits}");
+    assert!(
+        !released.is_empty(),
+        "the GLM graphs must produce GC-dead intermediates for this audit \
+         to mean anything"
+    );
+}
