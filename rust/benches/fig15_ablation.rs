@@ -10,9 +10,11 @@
 //! counterpart of the modeled Fig. 15 curves.
 
 use nums::api::{Policy, Session, SessionConfig};
-use nums::bench::harness::{glm_mem_run, max_peak_bytes, mem_summary};
-use nums::glm::data::classification_data;
+use nums::bench::harness::{glm_mem_run, max_peak_bytes, mem_summary, timing_breakdown};
+use nums::glm::data::{classification_data, feature, row_class};
 use nums::glm::newton_fit;
+use nums::graph::DistArray;
+use nums::grid::ArrayGrid;
 use nums::metrics::{summarize_trace, trace_to_tsv};
 use nums::util::fmt::{human_bytes, human_secs};
 
@@ -65,7 +67,147 @@ fn run_real_memory(gc: bool) -> u64 {
     max_peak_bytes(&last)
 }
 
+/// Same bimodal classification data as `classification_data`, but every
+/// X/y block is created on `target` — the deliberately skewed placement
+/// that makes the real traced arm interesting: the plan must ship blocks
+/// off node 0, stealing migrates work toward idle nodes, and the
+/// divergence report has something to reconcile.
+fn skewed_classification_data(
+    sess: &mut Session,
+    n: usize,
+    d: usize,
+    q: usize,
+    seed: u64,
+    target: usize,
+) -> (DistArray, DistArray) {
+    let xg = ArrayGrid::new(&[n, d], &[q, 1]);
+    let xgrid = xg.clone();
+    let x = sess.create_at(&[n, d], &[q, 1], target, move |_, bs, coords| {
+        let r0 = xgrid.block_offset(0, coords[0]);
+        let mut out = Vec::with_capacity(bs[0] * bs[1]);
+        for i in 0..bs[0] {
+            for j in 0..bs[1] {
+                out.push(feature(seed, r0 + i, j));
+            }
+        }
+        out
+    });
+    let y = sess.create_at(&[n, 1], &[q, 1], target, move |_, bs, coords| {
+        let r0 = xg.block_offset(0, coords[0]);
+        (0..bs[0])
+            .map(|i| if row_class(seed, r0 + i) { 1.0 } else { 0.0 })
+            .collect()
+    });
+    (x, y)
+}
+
+/// The tentpole's real-executor arm: a skewed GLM fit with tracing on.
+/// Folds the run's spans/events into per-node *measured* load series
+/// (same `summarize_trace`/`trace_to_tsv` machinery as the modeled
+/// curves above), prints the plan-vs-actual divergence report, and emits
+/// the machine-readable rollup into `BENCH_fig15.json`.
+fn run_real_traced(smoke: bool) {
+    let nodes = 4usize;
+    let (rows, d, q, steps) = if smoke {
+        (512, 8, 8, 1)
+    } else {
+        (4096, 32, 16, 2)
+    };
+    let cfg = SessionConfig::real_small(nodes, 2).with_tracing(true);
+    let mut sess = Session::new(cfg);
+    let (x, y) = skewed_classification_data(&mut sess, rows, d, q, 15, 0);
+    let res = newton_fit(&mut sess, &x, &y, steps, 0.0).unwrap();
+    let rep = res.reports.last().expect("at least one run");
+    let real = rep.real.as_ref().expect("real mode");
+    let tr = rep.trace().expect("tracing was on");
+
+    println!("\n=== real traced run (skewed placement: all blocks born on node 0) ===");
+    let summary = summarize_trace(&tr.series_events, nodes);
+    println!("tasks traced           : {} spans ({} dropped)", tr.spans.len(), tr.dropped_spans);
+    println!("max node peak memory   : {}", human_bytes(summary.max_peak_mem as f64));
+    println!("max node net-in        : {}", human_bytes(summary.max_net_in as f64));
+    println!("memory balance ratio   : {:.2}", summary.mem_balance_ratio);
+    let path = "target/fig15_real.tsv";
+    std::fs::write(path, trace_to_tsv(&tr.series_events)).ok();
+    println!("measured trace written : {path}");
+    println!("{}", tr.divergence.summary());
+    let breakdown = timing_breakdown(rep);
+    println!("timing: {}", breakdown.summary());
+
+    // Machine-readable rollup: per-node measured series summary, the
+    // divergence reconciliation, and the uniform timing breakdown.
+    // Hand-rolled (no serde offline); shape checked by the --smoke arm
+    // and the runtime_trace round-trip test.
+    let mut s = String::from("{\n  \"bench\": \"fig15_real_traced\",\n");
+    s.push_str(&format!(
+        "  \"spans\": {}, \"dropped_spans\": {}, \"migrated_tasks\": {},\n",
+        tr.spans.len(),
+        tr.dropped_spans,
+        tr.divergence.migrated_tasks()
+    ));
+    s.push_str(&format!(
+        "  \"timing\": {{\"plan_secs\": {:.9}, \"search_secs\": {:.9}, \"exec_secs\": {:.9}, \
+         \"io_secs\": {:.9}, \"io_bytes\": {}, \"plan_cache_hit\": {}}},\n",
+        breakdown.plan_secs,
+        breakdown.search_secs,
+        breakdown.exec_secs,
+        breakdown.io_secs,
+        breakdown.io_bytes,
+        breakdown.plan_cache_hit
+    ));
+    s.push_str("  \"nodes\": [\n");
+    let series = nums::metrics::per_node_series(&tr.series_events, nodes);
+    for (i, nd) in tr.divergence.nodes.iter().enumerate() {
+        let se = &series[i];
+        s.push_str(&format!(
+            "    {{\"node\": {}, \"peak_mem\": {}, \"net_in\": {}, \"points\": {}, \
+             \"planned_tasks\": {}, \"observed_tasks\": {}, \"planned_in\": {}, \
+             \"observed_in\": {}, \"prefetch_in\": {}, \"demand_in\": {}, \
+             \"spilled\": {}, \"readback\": {}}}{}\n",
+            nd.node,
+            se.peak_mem(),
+            se.final_net_in(),
+            se.t.len(),
+            nd.planned_tasks,
+            nd.observed_tasks,
+            nd.planned_in_bytes,
+            nd.observed_in_bytes,
+            nd.prefetch_in_bytes,
+            nd.demand_in_bytes,
+            nd.spilled_bytes,
+            nd.readback_bytes,
+            if i + 1 < nodes { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write("BENCH_fig15.json", &s).expect("write BENCH_fig15.json");
+    println!("rollup written         : BENCH_fig15.json");
+
+    if smoke {
+        // CI smoke assertions: the invariants the trace suite proves at
+        // unit scale must also hold on this end-to-end workload.
+        assert_eq!(tr.spans.len(), real.tasks, "one span per executed task");
+        assert_eq!(tr.dropped_spans, 0, "ring must not wrap at this scale");
+        for nd in &tr.divergence.nodes {
+            assert_eq!(
+                nd.observed_in_bytes,
+                nd.prefetch_in_bytes + nd.demand_in_bytes,
+                "node {}: every inbound byte is prefetch or demand",
+                nd.node
+            );
+        }
+        let parsed = nums::util::json::parse(&s).expect("rollup must be valid JSON");
+        let arr = parsed.get("nodes").and_then(|v| v.as_arr()).expect("nodes array");
+        assert_eq!(arr.len(), nodes);
+        println!("--smoke OK: {} spans reconciled across {nodes} nodes", tr.spans.len());
+    }
+}
+
 fn main() {
+    if std::env::args().any(|a| a == "--smoke") {
+        run_real_traced(true);
+        return;
+    }
     let lshs = run(Policy::Lshs, "lshs");
     let nolshs = run(Policy::BottomUp, "no_lshs");
 
@@ -98,4 +240,6 @@ fn main() {
         human_bytes(peak_gc as f64),
         peak_nogc as f64 / peak_gc.max(1) as f64
     );
+
+    run_real_traced(false);
 }

@@ -13,6 +13,7 @@ use anyhow::{anyhow, Result};
 
 use crate::exec::{Plan, RealExecutor, RealReport, SimExecutor, SimReport};
 use crate::graph::{DistArray, Graph};
+use crate::metrics::runtime_trace::{chrome_trace_json, EventKind, RtEvent, RunTrace};
 use crate::grid::{softmax_grid, ArrayGrid, NodeGrid};
 use crate::net::model::{ComputeParams, NetParams, SystemMode};
 use crate::runtime::{Backend, KernelTier};
@@ -131,6 +132,17 @@ pub struct SessionConfig {
     /// foreground re-plan. On by default; off re-plans every run (the
     /// fig09 `plan_cache` ablation baseline).
     pub plan_cache: bool,
+    /// Trace real runs: per-task spans (queue-wait, input-fetch, kernel
+    /// execution) and runtime events (fetches tagged prefetch/demand,
+    /// spills, read-backs, evictions, GC frees, steals, plan-cache
+    /// hits), folded post-run into per-node Fig. 15 series, a Chrome
+    /// trace-event JSON, and a plan-vs-actual divergence report
+    /// ([`crate::metrics::runtime_trace`], via `RunReport::trace()`).
+    /// Off by default: no recorder exists, results are bit-identical to
+    /// an untraced run. Setting `NUMS_TRACE=<path>` turns tracing on and
+    /// additionally writes the Chrome JSON of each run to `<path>`
+    /// (last run wins).
+    pub tracing: bool,
 }
 
 impl SessionConfig {
@@ -155,6 +167,7 @@ impl SessionConfig {
             mem_budget_bytes: None,
             feedback: true,
             plan_cache: true,
+            tracing: false,
         }
     }
 
@@ -179,6 +192,7 @@ impl SessionConfig {
             mem_budget_bytes: None,
             feedback: true,
             plan_cache: true,
+            tracing: false,
         }
     }
 
@@ -238,6 +252,12 @@ impl SessionConfig {
         self
     }
 
+    /// Toggle real-run tracing (see [`SessionConfig::tracing`]).
+    pub fn with_tracing(mut self, on: bool) -> Self {
+        self.tracing = on;
+        self
+    }
+
     pub fn with_mode(mut self, m: SystemMode) -> Self {
         self.mode = m;
         self
@@ -283,6 +303,14 @@ pub struct RunReport {
     /// Candidate placement simulations this run (`Lshs::simulations`
     /// delta; 0 on a hit — the whole point of the cache).
     pub simulations: u64,
+}
+
+impl RunReport {
+    /// The real run's trace (spans, events, per-node series, divergence
+    /// report) when the session ran with `SessionConfig::tracing` on.
+    pub fn trace(&self) -> Option<&RunTrace> {
+        self.real.as_ref().and_then(|r| r.trace.as_ref())
+    }
 }
 
 pub struct Session {
@@ -337,12 +365,17 @@ impl Session {
             } else {
                 KernelTier::detect()
             };
+            // NUMS_TRACE=<path> implies tracing on (and exports the
+            // Chrome JSON after each run)
+            let tracing = cfg.tracing
+                || std::env::var("NUMS_TRACE").map_or(false, |v| !v.is_empty());
             Some(
                 RealExecutor::new(topo.clone(), Arc::clone(&backend))
                     .with_stealing(cfg.stealing)
                     .with_prefetch(cfg.prefetch)
                     .with_tier(tier)
-                    .with_memory(memory),
+                    .with_memory(memory)
+                    .with_tracing(tracing),
             )
         } else {
             None
@@ -577,7 +610,7 @@ impl Session {
         // real execution on the session-lifetime executor; the graph's
         // output blocks are pinned so lifetime GC and budget spilling
         // never touch what the driver is about to hand back
-        let real = match &self.real_exec {
+        let mut real = match &self.real_exec {
             Some(exec) => {
                 let pins: Vec<ObjectId> = graph
                     .outputs
@@ -588,6 +621,31 @@ impl Session {
             }
             None => None,
         };
+
+        // stamp the planning outcome into the trace (t=0 sorts first),
+        // and honor the NUMS_TRACE export path
+        if let Some(tr) = real.as_mut().and_then(|r| r.trace.as_mut()) {
+            if plan_cache_hit {
+                tr.events.insert(
+                    0,
+                    RtEvent {
+                        t: 0.0,
+                        node: 0,
+                        src: None,
+                        obj: None,
+                        bytes: 0,
+                        kind: EventKind::PlanCacheHit,
+                    },
+                );
+            }
+            if let Ok(path) = std::env::var("NUMS_TRACE") {
+                if !path.is_empty() {
+                    // best-effort export (a bad path must not fail the run);
+                    // successive runs overwrite — last run wins
+                    let _ = std::fs::write(&path, chrome_trace_json(tr));
+                }
+            }
+        }
 
         // close the plan↔runtime loop: fold what the executor observed
         // but the plan never committed (steal migrations, demand pulls,

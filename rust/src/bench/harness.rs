@@ -212,6 +212,75 @@ pub fn planning_summary(rep: &crate::api::RunReport) -> String {
     )
 }
 
+/// Uniform three-way wall-time split of one `Session::run`, so every
+/// bench row can report the same `{plan, exec, io}` breakdown no matter
+/// which backend (sim or real) or tracing mode produced it.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TimingBreakdown {
+    /// Scheduling wall time: fusion + signature + search-or-rebind
+    /// (`RunReport::schedule_secs`).
+    pub plan_secs: f64,
+    /// The part of `plan_secs` the plan cache amortizes
+    /// (`RunReport::search_secs`).
+    pub search_secs: f64,
+    /// Real-executor wall seconds, or the modeled makespan in sim mode.
+    pub exec_secs: f64,
+    /// Input-fetch seconds summed over task spans (tracing on; 0 without
+    /// a trace). Fetches overlap across workers, so on wide runs this can
+    /// exceed `exec_secs` — it is aggregate fetch *work*, not wall time.
+    pub io_secs: f64,
+    /// Cross-node input bytes observed by task spans (0 without a trace).
+    pub io_bytes: u64,
+    /// Whether this run replayed a cached plan.
+    pub plan_cache_hit: bool,
+    /// Session-cumulative plan-cache hit / miss counters.
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+}
+
+impl TimingBreakdown {
+    /// One-line rendering: `plan 12.00 us (search 8.00 us, miss, cache
+    /// 0h/1m) | exec 3.00 ms | io 400.00 us (1.00 KiB)`.
+    pub fn summary(&self) -> String {
+        use crate::util::fmt::human_bytes;
+        format!(
+            "plan {} (search {}, {}, cache {}h/{}m) | exec {} | io {} ({})",
+            human_secs(self.plan_secs),
+            human_secs(self.search_secs),
+            if self.plan_cache_hit { "hit" } else { "miss" },
+            self.plan_cache_hits,
+            self.plan_cache_misses,
+            human_secs(self.exec_secs),
+            human_secs(self.io_secs),
+            human_bytes(self.io_bytes as f64),
+        )
+    }
+}
+
+/// Fold one run report into the uniform `{plan, exec, io}` breakdown.
+/// `io` comes from the run trace's task spans when tracing was on; an
+/// untraced run reports `io = 0` rather than guessing from NIC counters,
+/// so the column always means the same thing.
+pub fn timing_breakdown(rep: &crate::api::RunReport) -> TimingBreakdown {
+    let exec_secs = rep.real.as_ref().map_or(rep.sim.makespan, |r| r.wall_secs);
+    let (io_secs, io_bytes) = rep.trace().map_or((0.0, 0), |t| {
+        (
+            t.spans.iter().map(|s| s.fetch_secs()).sum(),
+            t.span_fetch_bytes(),
+        )
+    });
+    TimingBreakdown {
+        plan_secs: rep.schedule_secs,
+        search_secs: rep.search_secs,
+        exec_secs,
+        io_secs,
+        io_bytes,
+        plan_cache_hit: rep.plan_cache_hit,
+        plan_cache_hits: rep.plan_cache_hits,
+        plan_cache_misses: rep.plan_cache_misses,
+    }
+}
+
 /// One-line per-node plan↔runtime feedback summary of a real run:
 /// `node0: stolen 3 (1.2 KB), demand 64 KB, unplanned in 64 KB / out 0 B | ...`
 /// — what the fig09 feedback ablation prints next to wall time.
@@ -437,6 +506,63 @@ mod tests {
         assert!(s.contains("hit=true"), "{s}");
         assert!(s.contains("sims=0"), "{s}");
         assert!(s.contains("cache 3h/1m"), "{s}");
+    }
+
+    #[test]
+    fn timing_breakdown_sim_run_uses_makespan() {
+        let mut rep = crate::api::RunReport::default();
+        rep.schedule_secs = 0.002;
+        rep.search_secs = 0.001;
+        rep.sim.makespan = 1.5;
+        rep.plan_cache_misses = 1;
+        let b = timing_breakdown(&rep);
+        assert_eq!(b.plan_secs, 0.002);
+        assert_eq!(b.exec_secs, 1.5);
+        assert_eq!(b.io_secs, 0.0);
+        assert_eq!(b.io_bytes, 0);
+        assert!(!b.plan_cache_hit);
+        let s = b.summary();
+        assert!(s.contains("plan 2.00 ms"), "{s}");
+        assert!(s.contains("miss, cache 0h/1m"), "{s}");
+        assert!(s.contains("io 0.0 ns (0 B)"), "{s}");
+    }
+
+    #[test]
+    fn timing_breakdown_real_run_rolls_up_spans() {
+        use crate::metrics::runtime_trace::{RunTrace, TaskSpan};
+        use crate::runtime::KernelTier;
+        let span = |task: usize, fetch: f64, bytes: u64| TaskSpan {
+            task,
+            node: 0,
+            worker: 0,
+            stolen: false,
+            threads: 1,
+            tier: KernelTier::Scalar,
+            prefetch_hits: 0,
+            ready_t: 0.0,
+            start_t: 0.0,
+            fetch_end_t: fetch,
+            end_t: fetch + 1.0,
+            fetch_bytes: bytes,
+            kernel: String::new(),
+        };
+        let mut real = RealReport::default();
+        real.wall_secs = 2.5;
+        let mut tr = RunTrace::default();
+        tr.spans = vec![span(0, 0.25, 1024), span(1, 0.5, 512)];
+        real.trace = Some(tr);
+        let mut rep = crate::api::RunReport::default();
+        rep.sim.makespan = 99.0; // must be ignored: real wall wins
+        rep.real = Some(real);
+        rep.plan_cache_hit = true;
+        rep.plan_cache_hits = 2;
+        let b = timing_breakdown(&rep);
+        assert_eq!(b.exec_secs, 2.5);
+        assert!((b.io_secs - 0.75).abs() < 1e-12, "{}", b.io_secs);
+        assert_eq!(b.io_bytes, 1536);
+        let s = b.summary();
+        assert!(s.contains("hit, cache 2h/0m"), "{s}");
+        assert!(s.contains("1.50 KiB"), "{s}");
     }
 
     #[test]

@@ -3,4 +3,4 @@
 
 pub mod harness;
 
-pub use harness::{emit_json, Bench, Measurement, PerfRecord};
+pub use harness::{emit_json, timing_breakdown, Bench, Measurement, PerfRecord, TimingBreakdown};

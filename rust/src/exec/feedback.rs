@@ -100,8 +100,10 @@ impl RuntimeFeedback {
 
     /// Bytes the plan's committed transfers put on each node's NICs:
     /// per-node `(in, out)`, with same-node movements skipped exactly as
-    /// the stores skip them.
-    fn planned_nic_bytes(plan: &Plan, topo: &Topology) -> Vec<(u64, u64)> {
+    /// the stores skip them. Shared with the divergence report
+    /// ([`crate::metrics::runtime_trace`]) so "planned" means the same
+    /// thing in both reconciliations.
+    pub(crate) fn planned_nic_bytes(plan: &Plan, topo: &Topology) -> Vec<(u64, u64)> {
         let mut nic = vec![(0u64, 0u64); topo.nodes];
         for t in &plan.tasks {
             let dst = topo.node_of(t.target);

@@ -60,8 +60,9 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
+use crate::metrics::runtime_trace::{EventKind, FetchOrigin, RunRecorder};
 use crate::store::{MemoryManager, ObjectId, StoreSet};
 
 /// Per-node communication-overlap counters for one run.
@@ -147,6 +148,10 @@ pub struct Prefetcher {
     /// unbounded). Derived from the session's memory budget so the
     /// pipeline never runs further ahead than pressure allows.
     byte_budget: Option<u64>,
+    /// Run recorder for fetch events (`None` when tracing is off). Only
+    /// consulted after a transfer actually moved bytes — the
+    /// nothing-to-do early returns in `pull` never touch it.
+    recorder: Option<Arc<RunRecorder>>,
 }
 
 impl Prefetcher {
@@ -169,7 +174,15 @@ impl Prefetcher {
                 .map(|_| Mutex::new(PrefetchStats::default()))
                 .collect(),
             byte_budget,
+            recorder: None,
         }
+    }
+
+    /// Attach a run recorder: every background pull that moves bytes
+    /// emits a `Fetch(Prefetch)` event.
+    pub fn with_recorder(mut self, r: Arc<RunRecorder>) -> Self {
+        self.recorder = Some(r);
+        self
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -445,16 +458,32 @@ impl Prefetcher {
         }
         let (landed, bytes) = match memory {
             Some(m) => {
-                let (b, n) = m.acquire(stores, node, obj, spillable);
+                // the manager emits the fetch event itself, tagged with
+                // this origin (it knows the actual source node)
+                let (b, n) =
+                    m.acquire_tagged(stores, node, obj, spillable, FetchOrigin::Prefetch);
                 (b.is_some(), n)
             }
-            None => match stores
-                .locate(obj, hint.unwrap_or(node))
-                .and_then(|src| stores.try_transfer(src, node, obj))
-            {
-                Some(n) => (true, n),
-                None => (false, 0),
-            },
+            None => {
+                let src = stores.locate(obj, hint.unwrap_or(node));
+                match src.and_then(|s| stores.try_transfer(s, node, obj)) {
+                    Some(n) => {
+                        if n > 0 {
+                            if let Some(r) = &self.recorder {
+                                r.event(
+                                    node,
+                                    src,
+                                    Some(obj),
+                                    n,
+                                    EventKind::Fetch(FetchOrigin::Prefetch),
+                                );
+                            }
+                        }
+                        (true, n)
+                    }
+                    None => (false, 0),
+                }
+            }
         };
         if bytes > 0 {
             // counted even when the pull then lost its copy to eviction:

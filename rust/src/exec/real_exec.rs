@@ -73,6 +73,9 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use crate::metrics::runtime_trace::{
+    EventKind, FetchOrigin, RunRecorder, RunTrace, SpanRing, TaskSpan,
+};
 use crate::runtime::{Backend, ExecContext, KernelTier};
 use crate::scheduler::Topology;
 use crate::store::{Block, MemoryManager, NodeMemStats, ObjectId, StoreSet};
@@ -124,6 +127,10 @@ pub struct RealReport {
     /// [`crate::scheduler::ClusterState`] between runs
     /// (`SessionConfig::feedback`, default on).
     pub feedback: RuntimeFeedback,
+    /// Full run trace (spans, events, Fig. 15 series, divergence report)
+    /// when the executor ran with tracing on; `None` otherwise. See
+    /// [`crate::metrics::runtime_trace`].
+    pub trace: Option<RunTrace>,
 }
 
 /// `NUMS_DEADLOCK_TIMEOUT_SECS` parsing (non-positive/garbage/absurd -> 30s).
@@ -161,6 +168,9 @@ struct ExecState {
     live: HashMap<ObjectId, usize>,
     /// Intermediates lifetime GC released so far (completion order).
     released: Vec<ObjectId>,
+    /// Per-task enqueue timestamp (seconds since the trace epoch), for
+    /// span queue-wait. Sized `n_tasks` when tracing, empty otherwise.
+    ready_at: Vec<f64>,
 }
 
 struct Shared {
@@ -180,6 +190,10 @@ struct Shared {
     stealing: bool,
     /// Ready-queue length at which a node spills to the overflow.
     spill_threshold: usize,
+    /// The run recorder's epoch when tracing is on: `enqueue` stamps
+    /// `ready_at` against it (it already holds the state lock, so it
+    /// cannot call back into the recorder).
+    trace_epoch: Option<std::time::Instant>,
 }
 
 /// Floor of the adaptive batch-steal trigger: deques shallower than this
@@ -249,6 +263,9 @@ struct StealInfo {
 
 impl Shared {
     fn enqueue(&self, st: &mut ExecState, i: usize) {
+        if let Some(epoch) = self.trace_epoch {
+            st.ready_at[i] = epoch.elapsed().as_secs_f64();
+        }
         let node = self.task_node[i];
         if self.stealing && st.ready[node].len() >= self.spill_threshold {
             st.overflow.push_back(i);
@@ -402,6 +419,11 @@ pub struct RealExecutor {
     /// the packed AVX2+FMA path (epsilon-bounded). Resolved once here —
     /// workers never re-run feature detection.
     pub tier: KernelTier,
+    /// Per-task span + runtime-event tracing (default off). Off means
+    /// no recorder exists: no timestamps are taken, no ring is
+    /// allocated, and results are bit-identical to an untraced run. On,
+    /// [`RealReport::trace`] carries the full [`RunTrace`].
+    pub tracing: bool,
 }
 
 impl RealExecutor {
@@ -421,6 +443,7 @@ impl RealExecutor {
             prefetch: true,
             memory: None,
             tier: KernelTier::detect(),
+            tracing: false,
         }
     }
 
@@ -451,6 +474,12 @@ impl RealExecutor {
         self
     }
 
+    /// Toggle run tracing (see [`RealExecutor::tracing`]).
+    pub fn with_tracing(mut self, on: bool) -> Self {
+        self.tracing = on;
+        self
+    }
+
     /// Execute the plan over `stores`. All creation-time objects must
     /// already be resident (see `api::Session`). No pins: every terminal
     /// output survives, but nothing else is protected from GC/spill.
@@ -470,6 +499,10 @@ impl RealExecutor {
         let sw = Stopwatch::start();
         let k = self.topo.nodes;
         let n_tasks = plan.tasks.len();
+        // run recorder: exists only when tracing — with it absent, no
+        // timestamp is ever taken and no trace branch allocates
+        let recorder = self.tracing.then(|| Arc::new(RunRecorder::new(k)));
+        let recorder_ref: Option<&RunRecorder> = recorder.as_deref();
         let memory = self.memory.as_ref();
         let mem_start = memory.map(|m| m.stats());
         // NIC baseline for the run's plan-vs-observed reconciliation
@@ -555,6 +588,7 @@ impl RealExecutor {
                 stats: vec![NodeExecStats::default(); k],
                 live,
                 released: Vec::new(),
+                ready_at: vec![0.0; if recorder.is_some() { n_tasks } else { 0 }],
             }),
             cv: Condvar::new(),
             failed: Mutex::new(None),
@@ -564,6 +598,7 @@ impl RealExecutor {
             input_bytes,
             stealing: self.stealing,
             spill_threshold: (2 * self.threads_per_node).max(2),
+            trace_epoch: recorder.as_ref().map(|r| r.epoch()),
         };
         // seed the deques with initially-ready tasks, in plan order
         {
@@ -589,9 +624,13 @@ impl RealExecutor {
         // lookahead is capped at half the node byte budget — pulling
         // further ahead than pressure allows only feeds the evictor.
         let pf_budget = memory.and_then(|m| m.budget).map(|b| (b / 2).max(1));
-        let prefetcher = self
-            .prefetch
-            .then(|| Arc::new(Prefetcher::new(k, pf_budget)));
+        let prefetcher = self.prefetch.then(|| {
+            let mut pf = Prefetcher::new(k, pf_budget);
+            if let Some(r) = &recorder {
+                pf = pf.with_recorder(Arc::clone(r));
+            }
+            Arc::new(pf)
+        });
         let prefetcher_ref: Option<&Prefetcher> = prefetcher.as_deref();
         // topological depth per task (plan order is topological): the
         // transfer threads' pull priority — next-to-run inputs move first
@@ -617,6 +656,11 @@ impl RealExecutor {
         if let (Some(mgr), Some(pf)) = (memory, &prefetcher) {
             let pf2 = Arc::clone(pf);
             mgr.attach_spill_sink(Arc::new(move |node| pf2.notify_spill(node)));
+        }
+        // the manager emits its own events (managed fetches, spills,
+        // read-backs, evictions, GC frees) for this run only
+        if let (Some(mgr), Some(r)) = (memory, &recorder) {
+            mgr.attach_trace(Arc::clone(r));
         }
         let gc_live = memory.map_or(false, |m| m.lifetime_gc);
         // pulling a GC-released intermediate would resurrect dead bytes:
@@ -672,22 +716,28 @@ impl RealExecutor {
             }
             let mut workers = Vec::with_capacity(total_workers);
             for node in 0..k {
-                for _ in 0..self.threads_per_node {
+                for wk in 0..self.threads_per_node {
                     let stealing = self.stealing;
                     let tier = self.tier;
+                    let worker_id = node * self.threads_per_node + wk;
                     workers.push(scope.spawn(move || {
                         let me = node;
                         let ctx =
                             ExecContext::shared(total_workers, me, stealing).with_tier(tier);
-                        loop {
+                        // span ring: sized once here — pushing a span on
+                        // the hot path allocates nothing (the kernel
+                        // label stays empty until post-run resolution)
+                        let mut ring: Option<SpanRing<TaskSpan>> =
+                            recorder_ref.map(|_| SpanRing::new(n_tasks));
+                        'work: loop {
                             if shared.has_failed() {
-                                return;
+                                break 'work;
                             }
                             let mut st = shared.state.lock().unwrap();
                             if st.remaining == 0 {
                                 drop(st);
                                 shared.cv.notify_all();
-                                return;
+                                break 'work;
                             }
                             let mut steal_info: Option<StealInfo> = None;
                             let picked = match shared.pick(&mut st, me) {
@@ -753,7 +803,7 @@ impl RealExecutor {
                                     };
                                     drop(st);
                                     shared.fail(msg);
-                                    return;
+                                    break 'work;
                                 }
                                 // park until something completes; the timeout
                                 // is only a re-check heartbeat — a running
@@ -765,8 +815,22 @@ impl RealExecutor {
                                 drop(g);
                                 continue;
                             };
+                            // span timestamps: ready_at was stamped at
+                            // enqueue (batch-stolen tasks keep theirs)
+                            let ready_t = recorder_ref
+                                .map_or(0.0, |_| st.ready_at.get(idx).copied().unwrap_or(0.0));
                             st.running += 1;
                             drop(st);
+                            let start_t = recorder_ref.map_or(0.0, |r| r.now());
+                            if let (Some(r), Some(si)) = (recorder_ref, &steal_info) {
+                                r.event(
+                                    me,
+                                    Some(si.victim),
+                                    None,
+                                    (si.queued.len() + 1) as u64,
+                                    EventKind::Steal,
+                                );
+                            }
                             if let (Some(pf), Some(si)) = (prefetcher_ref, &steal_info) {
                                 // the migrated tasks' pulls toward the
                                 // victim are dead weight now: withdraw
@@ -794,6 +858,7 @@ impl RealExecutor {
                             // stolen task pays its cross-node transfers;
                             // the manager pages spilled inputs back in)
                             let mut moved = 0u64;
+                            let mut hits: u32 = 0;
                             let mut vanished = None;
                             let mut inputs: Vec<Arc<Block>> =
                                 Vec::with_capacity(task.inputs.len());
@@ -801,6 +866,8 @@ impl RealExecutor {
                                 let before = moved;
                                 let got = match memory {
                                     Some(mgr) => {
+                                        // the manager emits the fetch event
+                                        // itself (it knows the source node)
                                         let (b, m) =
                                             mgr.acquire(stores, me, obj, &|o| lt.spillable(o));
                                         moved += m;
@@ -809,7 +876,21 @@ impl RealExecutor {
                                     None => {
                                         if !stores.contains(me, obj) {
                                             if let Some(src) = stores.locate(obj, me) {
-                                                moved += stores.transfer(src, me, obj);
+                                                let n = stores.transfer(src, me, obj);
+                                                moved += n;
+                                                if n > 0 {
+                                                    if let Some(r) = recorder_ref {
+                                                        r.event(
+                                                            me,
+                                                            Some(src),
+                                                            Some(obj),
+                                                            n,
+                                                            EventKind::Fetch(
+                                                                FetchOrigin::Demand,
+                                                            ),
+                                                        );
+                                                    }
+                                                }
                                             }
                                         }
                                         stores.get(me, obj)
@@ -825,6 +906,7 @@ impl RealExecutor {
                                                 && pf.was_prefetched(me, obj)
                                             {
                                                 pf.add_hit(me);
+                                                hits += 1;
                                             }
                                         }
                                         inputs.push(b)
@@ -835,6 +917,7 @@ impl RealExecutor {
                                     }
                                 }
                             }
+                            let fetch_end_t = recorder_ref.map_or(0.0, |r| r.now());
                             if let Some(pf) = prefetcher_ref {
                                 if moved > 0 {
                                     pf.add_demand(me, moved);
@@ -847,7 +930,7 @@ impl RealExecutor {
                                 // mask this error with a bogus deadlock
                                 shared.fail(format!("object {obj} vanished (task {idx})"));
                                 shared.state.lock().unwrap().running -= 1;
-                                return;
+                                break 'work;
                             }
                             let in_refs: Vec<&Block> =
                                 inputs.iter().map(|b| b.as_ref()).collect();
@@ -884,6 +967,28 @@ impl RealExecutor {
                                             ),
                                             None => stores.put(me, *obj, block),
                                         }
+                                    }
+                                    // outputs are visible: close the span.
+                                    // `String::new()` does not allocate —
+                                    // the label resolves in finish()
+                                    if let (Some(r), Some(ring)) =
+                                        (recorder_ref, ring.as_mut())
+                                    {
+                                        ring.push(TaskSpan {
+                                            task: idx,
+                                            node: me,
+                                            worker: worker_id,
+                                            stolen,
+                                            threads: ctx.kernel_threads,
+                                            tier,
+                                            prefetch_hits: hits,
+                                            ready_t,
+                                            start_t,
+                                            fetch_end_t,
+                                            end_t: r.now(),
+                                            fetch_bytes: moved,
+                                            kernel: String::new(),
+                                        });
                                     }
                                     let mut st = shared.state.lock().unwrap();
                                     st.completed[idx] = true;
@@ -975,9 +1080,13 @@ impl RealExecutor {
                                         task.kernel
                                     ));
                                     shared.state.lock().unwrap().running -= 1;
-                                    return;
+                                    break 'work;
                                 }
                             }
+                        }
+                        // one drain per worker, after the last task
+                        if let (Some(r), Some(ring)) = (recorder_ref, ring.take()) {
+                            r.drain_spans(ring);
                         }
                     }));
                 }
@@ -1016,6 +1125,9 @@ impl RealExecutor {
             }
         }
         if let Some(err) = shared.failed.lock().unwrap().take() {
+            if let (Some(mgr), true) = (memory, recorder.is_some()) {
+                mgr.detach_trace();
+            }
             return Err(anyhow!(err));
         }
         let (stats, released) = {
@@ -1029,6 +1141,12 @@ impl RealExecutor {
             for &obj in &released {
                 mgr.release(stores, obj);
             }
+        }
+        // the re-release above still emitted (a resurrected replica freed
+        // there is part of this run); from here on the manager is silent,
+        // so event byte totals match this run's `mem_stats` exactly
+        if let (Some(mgr), true) = (memory, recorder.is_some()) {
+            mgr.detach_trace();
         }
         let mem_stats = match (memory, mem_start) {
             (Some(m), Some(s0)) => m
@@ -1056,6 +1174,7 @@ impl RealExecutor {
             &mem_stats,
             replicas,
         );
+        let trace = recorder.as_ref().map(|r| r.finish(plan, &self.topo));
         Ok(RealReport {
             wall_secs,
             tasks: plan.len(),
@@ -1065,6 +1184,7 @@ impl RealExecutor {
             prefetch_stats,
             gc_released: released,
             feedback,
+            trace,
         })
     }
 }

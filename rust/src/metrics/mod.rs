@@ -1,5 +1,11 @@
-//! Load traces and report writers (the Fig. 15 load-over-time data).
+//! Load traces and report writers (the Fig. 15 load-over-time data),
+//! plus the real-runtime tracing recorder (spans, events, divergence).
 
+pub mod runtime_trace;
 pub mod trace;
 
-pub use trace::{summarize_trace, trace_to_tsv, NodeSeries};
+pub use runtime_trace::{
+    chrome_trace_json, DivergenceReport, EventKind, FetchOrigin, NodeDivergence, RtEvent,
+    RunRecorder, RunTrace, SpanRing, TaskDivergence, TaskSpan,
+};
+pub use trace::{per_node_series, summarize_trace, trace_to_tsv, NodeSeries};

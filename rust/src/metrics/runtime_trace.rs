@@ -1,0 +1,935 @@
+//! Low-overhead tracing for the *real* executor: per-task spans, runtime
+//! events, and post-run folds into the Fig. 15 machinery.
+//!
+//! The DES simulator always produced load-over-time curves
+//! ([`crate::exec::TraceEvent`] → [`super::trace`]), but the real
+//! executor only reported end-of-run aggregates — none of the Eq. 2
+//! claims, the prefetch/steal interactions, or the feedback loop's
+//! corrections could be *observed* as they happen. This module records
+//! them:
+//!
+//! * **Spans** — one [`TaskSpan`] per executed task: queue-wait (ready →
+//!   picked), input-fetch (with demand bytes and prefetch-hit counts),
+//!   and kernel execution (kernel kind, tier, thread budget), stamped
+//!   against one run-level `Instant` epoch. Workers record spans into
+//!   stack-local ring buffers ([`SpanRing`]) — **no locks, no
+//!   allocation on the task hot path** — drained once at worker exit.
+//! * **Events** — [`RtEvent`]s for cross-node fetches (tagged
+//!   prefetch vs demand, with exact bytes), spills, read-backs, replica
+//!   evictions, GC frees, steals, and plan-cache hits. Event sites are
+//!   already heavyweight (disk I/O, cross-node memcpy, GC), so they go
+//!   through one mutex on the recorder — never on the per-input fast
+//!   path where nothing moved.
+//!
+//! Post-run, [`RunRecorder::finish`] folds both into a [`RunTrace`]:
+//!
+//! * `series_events` — cumulative per-node `(mem, net_in, net_out)`
+//!   samples in the *simulator's* [`crate::exec::TraceEvent`] type, so
+//!   `summarize_trace`/`trace_to_tsv` work unchanged on real runs. Net
+//!   counters are exact (they are built from the same fetch events the
+//!   store counters see); the memory curve is a resident-byte *estimate*
+//!   relative to run start (creation-time residency is not replayed, and
+//!   a GC free of a disk-only copy subtracts like a resident one).
+//! * a Chrome trace-event / Perfetto JSON exporter
+//!   ([`chrome_trace_json`]) — open the file in `chrome://tracing` or
+//!   <https://ui.perfetto.dev>; pid = node, tid = worker.
+//! * a [`DivergenceReport`] joining each task's *planned* placement and
+//!   transfer bytes (from the [`Plan`]'s committed decisions, the same
+//!   Eq. 2 deltas the scheduler charged) against *observed* placement,
+//!   bytes, and durations — the feedback loop (PR 5) and plan-cache
+//!   replay (PR 7) made inspectable instead of only assertable.
+//!
+//! Tracing is off by default (`SessionConfig::tracing` / `NUMS_TRACE`):
+//! with it off the executor holds no recorder, takes no timestamps, and
+//! the run is bit-identical to an untraced one.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::exec::feedback::RuntimeFeedback;
+use crate::exec::sim_exec::TraceEvent;
+use crate::exec::task::Plan;
+use crate::runtime::KernelTier;
+use crate::scheduler::Topology;
+use crate::store::ObjectId;
+
+/// Who moved a cross-node byte: the background transfer thread or the
+/// worker hot path. Mirrors the `prefetch_bytes` / `demand_pull_bytes`
+/// split in [`crate::exec::PrefetchStats`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FetchOrigin {
+    /// Moved by a per-node transfer thread before any worker asked.
+    Prefetch,
+    /// Moved synchronously while a worker collected task inputs.
+    Demand,
+}
+
+/// What happened at an [`RtEvent`]'s timestamp.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// `bytes` moved cross-node onto `node` (from `src`).
+    Fetch(FetchOrigin),
+    /// `bytes` written to `node`'s spill file (sync or async finalize).
+    Spill,
+    /// `bytes` shed by reusing a current spill file (no write happened).
+    SpillReuse,
+    /// `bytes` restored from spill into `node`'s store.
+    Readback,
+    /// `bytes` reclaimed by evicting a replica copy (primary elsewhere).
+    ReplicaEvict,
+    /// `bytes` reclaimed by lifetime GC (dead intermediate).
+    GcFree,
+    /// A worker on `node` stole work from `src`; `bytes` holds the
+    /// number of migrated tasks, not bytes (the stolen inputs' traffic
+    /// shows up as ordinary `Fetch` events when they actually move).
+    Steal,
+    /// The session served this run's plan from the plan cache (t = 0).
+    PlanCacheHit,
+}
+
+/// One timestamped runtime event (everything that is not a task span).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RtEvent {
+    /// Seconds since the run epoch.
+    pub t: f64,
+    /// Node the event happened on (destination, for fetches).
+    pub node: usize,
+    /// Source node, when the event has one (fetches, steals).
+    pub src: Option<usize>,
+    /// Object involved, when the event has one.
+    pub obj: Option<ObjectId>,
+    /// Bytes moved/freed/written ([`EventKind::Steal`]: migrated tasks).
+    pub bytes: u64,
+    pub kind: EventKind,
+}
+
+/// One executed task's span: `ready_t ≤ start_t ≤ fetch_end_t ≤ end_t`,
+/// all in seconds since the run epoch. Recorded without allocation on
+/// the hot path — `kernel` stays empty until [`RunRecorder::finish`]
+/// resolves it from the plan.
+#[derive(Clone, Debug)]
+pub struct TaskSpan {
+    /// Plan task index.
+    pub task: usize,
+    /// Node whose worker executed the task (≠ planned node when stolen).
+    pub node: usize,
+    /// Global worker id (`node * threads_per_node + thread`).
+    pub worker: usize,
+    /// Whether the task ran on a node other than its plan target's.
+    pub stolen: bool,
+    /// Intra-kernel thread budget the worker's [`crate::runtime::ExecContext`] granted.
+    pub threads: usize,
+    /// Microkernel tier the kernel dispatched under.
+    pub tier: KernelTier,
+    /// Inputs found resident thanks to a completed prefetch.
+    pub prefetch_hits: u32,
+    /// When the task's last dependency was satisfied (enqueue time).
+    pub ready_t: f64,
+    /// When a worker picked the task.
+    pub start_t: f64,
+    /// When input collection finished.
+    pub fetch_end_t: f64,
+    /// When outputs were inserted (kernel + output store time included).
+    pub end_t: f64,
+    /// Demand bytes the worker moved to collect inputs (0 on full hits).
+    pub fetch_bytes: u64,
+    /// Kernel label (`Display` of [`crate::runtime::kernel::Kernel`]),
+    /// resolved post-run; empty while the span sits in a worker ring.
+    pub kernel: String,
+}
+
+impl TaskSpan {
+    /// Ready-to-picked wait (time spent in a ready deque).
+    pub fn queue_wait_secs(&self) -> f64 {
+        (self.start_t - self.ready_t).max(0.0)
+    }
+
+    /// Input-collection time (demand pulls, spill read-backs).
+    pub fn fetch_secs(&self) -> f64 {
+        (self.fetch_end_t - self.start_t).max(0.0)
+    }
+
+    /// Kernel execution + output insertion time.
+    pub fn exec_secs(&self) -> f64 {
+        (self.end_t - self.fetch_end_t).max(0.0)
+    }
+}
+
+/// Hard cap on one worker's span ring (a plan larger than this keeps the
+/// newest spans and counts the overwritten ones in `dropped`).
+pub const SPAN_RING_CAP: usize = 1 << 16;
+
+/// Fixed-capacity overwrite-oldest ring. Allocated once at worker start,
+/// pushed with no locks and no further allocation (`TaskSpan`'s only
+/// heap field, `kernel`, is pushed empty).
+pub struct SpanRing<T> {
+    buf: Vec<T>,
+    cap: usize,
+    head: usize,
+    dropped: u64,
+}
+
+impl<T> SpanRing<T> {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.clamp(1, SPAN_RING_CAP);
+        Self {
+            buf: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn push(&mut self, v: T) {
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.head] = v;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Spans overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// `(entries, dropped)` — entry order is unspecified once the ring
+    /// has wrapped (the post-run fold sorts by timestamp anyway).
+    pub fn into_parts(self) -> (Vec<T>, u64) {
+        (self.buf, self.dropped)
+    }
+}
+
+#[derive(Default)]
+struct Sink {
+    spans: Vec<TaskSpan>,
+    events: Vec<RtEvent>,
+    dropped_spans: u64,
+}
+
+/// Run-scoped recorder: one `Instant` epoch every timestamp derives
+/// from, plus a mutexed sink that worker rings drain into at exit and
+/// rare events (fetches, spills, steals) push into directly.
+pub struct RunRecorder {
+    epoch: Instant,
+    nodes: usize,
+    sink: Mutex<Sink>,
+}
+
+impl RunRecorder {
+    pub fn new(nodes: usize) -> Self {
+        Self {
+            epoch: Instant::now(),
+            nodes,
+            sink: Mutex::new(Sink::default()),
+        }
+    }
+
+    /// Seconds since the run epoch (monotonic).
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// The run epoch itself, for call sites that stamp timestamps while
+    /// already holding another lock (e.g. the executor's enqueue path).
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Record one runtime event, stamped now. Takes the sink mutex —
+    /// callers are event sites that already did real work (cross-node
+    /// transfer, disk I/O, GC), never the per-input nothing-moved path.
+    pub fn event(
+        &self,
+        node: usize,
+        src: Option<usize>,
+        obj: Option<ObjectId>,
+        bytes: u64,
+        kind: EventKind,
+    ) {
+        let t = self.now();
+        self.sink.lock().unwrap().events.push(RtEvent {
+            t,
+            node,
+            src,
+            obj,
+            bytes,
+            kind,
+        });
+    }
+
+    /// Fold a worker's span ring into the sink (worker exit, once).
+    pub fn drain_spans(&self, ring: SpanRing<TaskSpan>) {
+        let (spans, dropped) = ring.into_parts();
+        let mut s = self.sink.lock().unwrap();
+        s.spans.extend(spans);
+        s.dropped_spans += dropped;
+    }
+
+    /// Consume everything recorded so far into a [`RunTrace`]: kernel
+    /// labels resolved from the plan, spans/events time-sorted, the
+    /// Fig. 15 series fold, and the plan-vs-actual divergence report.
+    pub fn finish(&self, plan: &Plan, topo: &Topology) -> RunTrace {
+        let (mut spans, mut events, dropped_spans) = {
+            let mut s = self.sink.lock().unwrap();
+            (
+                std::mem::take(&mut s.spans),
+                std::mem::take(&mut s.events),
+                s.dropped_spans,
+            )
+        };
+        for sp in &mut spans {
+            if let Some(t) = plan.tasks.get(sp.task) {
+                sp.kernel = format!("{}", t.kernel);
+            }
+        }
+        spans.sort_by(|a, b| {
+            a.start_t
+                .total_cmp(&b.start_t)
+                .then(a.task.cmp(&b.task))
+        });
+        events.sort_by(|a, b| a.t.total_cmp(&b.t));
+        let series_events = fold_series(&spans, &events, plan, self.nodes);
+        let divergence = DivergenceReport::build(plan, topo, &spans, &events, self.nodes);
+        RunTrace {
+            spans,
+            events,
+            dropped_spans,
+            series_events,
+            divergence,
+        }
+    }
+}
+
+/// Everything one traced real run produced, attached to
+/// [`crate::exec::RealReport::trace`].
+#[derive(Clone, Debug, Default)]
+pub struct RunTrace {
+    /// One span per executed task, sorted by start time.
+    pub spans: Vec<TaskSpan>,
+    /// Runtime events, sorted by time.
+    pub events: Vec<RtEvent>,
+    /// Spans lost to ring overwrite (0 unless a plan exceeded
+    /// [`SPAN_RING_CAP`] tasks on one worker).
+    pub dropped_spans: u64,
+    /// The spans/events folded into cumulative per-node samples in the
+    /// simulator's event type — feed to
+    /// [`crate::metrics::summarize_trace`] / [`crate::metrics::trace_to_tsv`].
+    pub series_events: Vec<TraceEvent>,
+    /// Plan-vs-actual reconciliation (placements, bytes, durations).
+    pub divergence: DivergenceReport,
+}
+
+impl RunTrace {
+    /// Total demand bytes across spans (equals the per-node sum of
+    /// `PrefetchStats::demand_pull_bytes` — asserted in the trace suite).
+    pub fn span_fetch_bytes(&self) -> u64 {
+        self.spans.iter().map(|s| s.fetch_bytes).sum()
+    }
+}
+
+/// One time-ordered per-node delta during the fold.
+struct Delta {
+    t: f64,
+    node: usize,
+    mem: i64,
+    net_in: u64,
+    net_out: u64,
+}
+
+/// Fold spans + events into cumulative per-node samples. Net counters
+/// replay the fetch events exactly; the memory curve adds task output
+/// bytes at span end, fetched bytes at fetch time, and subtracts
+/// spill/evict/GC sheds — a resident-byte estimate relative to run
+/// start, clamped at zero.
+fn fold_series(
+    spans: &[TaskSpan],
+    events: &[RtEvent],
+    plan: &Plan,
+    nodes: usize,
+) -> Vec<TraceEvent> {
+    let mut deltas: Vec<Delta> = Vec::with_capacity(spans.len() + 2 * events.len());
+    for sp in spans {
+        let out_bytes = plan
+            .tasks
+            .get(sp.task)
+            .map_or(0, |t| t.out_elems() * 8);
+        deltas.push(Delta {
+            t: sp.end_t,
+            node: sp.node,
+            mem: out_bytes as i64,
+            net_in: 0,
+            net_out: 0,
+        });
+    }
+    for e in events {
+        match e.kind {
+            EventKind::Fetch(_) => {
+                deltas.push(Delta {
+                    t: e.t,
+                    node: e.node,
+                    mem: e.bytes as i64,
+                    net_in: e.bytes,
+                    net_out: 0,
+                });
+                if let Some(src) = e.src {
+                    if src != e.node && src < nodes {
+                        deltas.push(Delta {
+                            t: e.t,
+                            node: src,
+                            mem: 0,
+                            net_in: 0,
+                            net_out: e.bytes,
+                        });
+                    }
+                }
+            }
+            EventKind::Spill
+            | EventKind::SpillReuse
+            | EventKind::ReplicaEvict
+            | EventKind::GcFree => deltas.push(Delta {
+                t: e.t,
+                node: e.node,
+                mem: -(e.bytes as i64),
+                net_in: 0,
+                net_out: 0,
+            }),
+            EventKind::Readback => deltas.push(Delta {
+                t: e.t,
+                node: e.node,
+                mem: e.bytes as i64,
+                net_in: 0,
+                net_out: 0,
+            }),
+            EventKind::Steal | EventKind::PlanCacheHit => {}
+        }
+    }
+    deltas.sort_by(|a, b| a.t.total_cmp(&b.t));
+    let mut mem = vec![0i128; nodes];
+    let mut net_in = vec![0u64; nodes];
+    let mut net_out = vec![0u64; nodes];
+    let mut out = Vec::with_capacity(deltas.len());
+    for d in deltas {
+        if d.node >= nodes {
+            continue;
+        }
+        mem[d.node] = (mem[d.node] + d.mem as i128).max(0);
+        net_in[d.node] += d.net_in;
+        net_out[d.node] += d.net_out;
+        out.push(TraceEvent {
+            t: d.t,
+            node: d.node,
+            mem_bytes: mem[d.node] as u64,
+            net_in_bytes: net_in[d.node],
+            net_out_bytes: net_out[d.node],
+        });
+    }
+    out
+}
+
+/// One task's planned-vs-observed row.
+#[derive(Clone, Debug, Default)]
+pub struct TaskDivergence {
+    pub task: usize,
+    /// Node the scheduler placed the task on.
+    pub planned_node: usize,
+    /// Node that actually executed it.
+    pub observed_node: usize,
+    pub stolen: bool,
+    /// Cross-node input bytes the plan committed for this task (Eq. 2's
+    /// charged NIC deltas toward the planned node).
+    pub planned_in_bytes: u64,
+    /// Demand bytes the executing worker actually moved.
+    pub observed_fetch_bytes: u64,
+    pub queue_wait_secs: f64,
+    pub fetch_secs: f64,
+    pub exec_secs: f64,
+}
+
+/// One node's planned-vs-observed totals. `observed_in_bytes ==
+/// prefetch_in_bytes + demand_in_bytes == ` the run's `net_in` store
+/// delta — the accounting identity the trace suite asserts.
+#[derive(Clone, Debug, Default)]
+pub struct NodeDivergence {
+    pub node: usize,
+    /// Tasks the plan targeted at this node.
+    pub planned_tasks: usize,
+    /// Tasks this node's workers actually ran.
+    pub observed_tasks: usize,
+    /// Inbound bytes the plan's committed transfers predicted.
+    pub planned_in_bytes: u64,
+    /// Outbound bytes the plan's committed transfers predicted.
+    pub planned_out_bytes: u64,
+    /// Inbound bytes observed (all fetch events landing here).
+    pub observed_in_bytes: u64,
+    /// Outbound bytes observed (all fetch events sourced here).
+    pub observed_out_bytes: u64,
+    /// Observed inbound bytes moved by the transfer threads.
+    pub prefetch_in_bytes: u64,
+    /// Observed inbound bytes moved on the worker hot path.
+    pub demand_in_bytes: u64,
+    pub spilled_bytes: u64,
+    pub readback_bytes: u64,
+}
+
+/// Plan-vs-actual reconciliation for one run.
+#[derive(Clone, Debug, Default)]
+pub struct DivergenceReport {
+    /// Per executed task, span order.
+    pub tasks: Vec<TaskDivergence>,
+    /// Per node.
+    pub nodes: Vec<NodeDivergence>,
+}
+
+impl DivergenceReport {
+    fn build(
+        plan: &Plan,
+        topo: &Topology,
+        spans: &[TaskSpan],
+        events: &[RtEvent],
+        nodes: usize,
+    ) -> Self {
+        let planned_nic = RuntimeFeedback::planned_nic_bytes(plan, topo);
+        let mut per_node: Vec<NodeDivergence> = (0..nodes)
+            .map(|n| NodeDivergence {
+                node: n,
+                planned_in_bytes: planned_nic.get(n).map_or(0, |p| p.0),
+                planned_out_bytes: planned_nic.get(n).map_or(0, |p| p.1),
+                ..Default::default()
+            })
+            .collect();
+        for t in &plan.tasks {
+            let n = topo.node_of(t.target);
+            if n < nodes {
+                per_node[n].planned_tasks += 1;
+            }
+        }
+        let tasks = spans
+            .iter()
+            .map(|sp| {
+                if sp.node < nodes {
+                    per_node[sp.node].observed_tasks += 1;
+                }
+                let (planned_node, planned_in) = plan
+                    .tasks
+                    .get(sp.task)
+                    .map(|t| {
+                        let dst = topo.node_of(t.target);
+                        let bytes = t
+                            .transfers
+                            .iter()
+                            .filter(|tr| topo.node_of(tr.src) != dst)
+                            .map(|tr| tr.bytes())
+                            .sum();
+                        (dst, bytes)
+                    })
+                    .unwrap_or((sp.node, 0));
+                TaskDivergence {
+                    task: sp.task,
+                    planned_node,
+                    observed_node: sp.node,
+                    stolen: sp.stolen,
+                    planned_in_bytes: planned_in,
+                    observed_fetch_bytes: sp.fetch_bytes,
+                    queue_wait_secs: sp.queue_wait_secs(),
+                    fetch_secs: sp.fetch_secs(),
+                    exec_secs: sp.exec_secs(),
+                }
+            })
+            .collect();
+        for e in events {
+            match e.kind {
+                EventKind::Fetch(origin) => {
+                    if e.node < nodes {
+                        let nd = &mut per_node[e.node];
+                        nd.observed_in_bytes += e.bytes;
+                        match origin {
+                            FetchOrigin::Prefetch => nd.prefetch_in_bytes += e.bytes,
+                            FetchOrigin::Demand => nd.demand_in_bytes += e.bytes,
+                        }
+                    }
+                    if let Some(src) = e.src {
+                        if src != e.node && src < nodes {
+                            per_node[src].observed_out_bytes += e.bytes;
+                        }
+                    }
+                }
+                EventKind::Spill => {
+                    if e.node < nodes {
+                        per_node[e.node].spilled_bytes += e.bytes;
+                    }
+                }
+                EventKind::Readback => {
+                    if e.node < nodes {
+                        per_node[e.node].readback_bytes += e.bytes;
+                    }
+                }
+                _ => {}
+            }
+        }
+        Self {
+            tasks,
+            nodes: per_node,
+        }
+    }
+
+    /// Tasks that ran on a node other than their planned target.
+    pub fn migrated_tasks(&self) -> usize {
+        self.tasks.iter().filter(|t| t.stolen).count()
+    }
+
+    /// Human-readable reconciliation: one line per node plus a header.
+    pub fn summary(&self) -> String {
+        let total = self.tasks.len();
+        let migrated = self.migrated_tasks();
+        let mut out = format!(
+            "plan-vs-actual: {}/{} tasks on planned node ({migrated} migrated)\n",
+            total - migrated,
+            total
+        );
+        for n in &self.nodes {
+            out.push_str(&format!(
+                "  node {}: tasks {}->{} | in {} planned -> {} observed \
+                 ({} prefetch + {} demand) | out {} -> {} | spill {} readback {}\n",
+                n.node,
+                n.planned_tasks,
+                n.observed_tasks,
+                n.planned_in_bytes,
+                n.observed_in_bytes,
+                n.prefetch_in_bytes,
+                n.demand_in_bytes,
+                n.planned_out_bytes,
+                n.observed_out_bytes,
+                n.spilled_bytes,
+                n.readback_bytes
+            ));
+        }
+        out
+    }
+}
+
+/// Minimal JSON string escape (quotes, backslashes, control chars).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn us(secs: f64) -> String {
+    format!("{:.3}", secs * 1e6)
+}
+
+fn instant_name(kind: EventKind) -> &'static str {
+    match kind {
+        EventKind::Fetch(FetchOrigin::Prefetch) => "fetch.prefetch",
+        EventKind::Fetch(FetchOrigin::Demand) => "fetch.demand",
+        EventKind::Spill => "spill",
+        EventKind::SpillReuse => "spill.reuse",
+        EventKind::Readback => "readback",
+        EventKind::ReplicaEvict => "replica.evict",
+        EventKind::GcFree => "gc.free",
+        EventKind::Steal => "steal",
+        EventKind::PlanCacheHit => "plan.cache.hit",
+    }
+}
+
+/// Serialize a [`RunTrace`] to Chrome trace-event JSON (the format
+/// `chrome://tracing` and Perfetto load): spans become complete (`"X"`)
+/// events named by kernel, runtime events become instants (`"i"`);
+/// pid = node, tid = worker (0 for non-worker events), timestamps in
+/// microseconds since the run epoch. Hand-rolled — the offline image
+/// vendors no serde ([`crate::util::json`] parses it back in tests).
+pub fn chrome_trace_json(trace: &RunTrace) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    for sp in &trace.spans {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"task\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+             \"pid\":{},\"tid\":{},\"args\":{{\"task\":{},\"tier\":\"{:?}\",\
+             \"threads\":{},\"queue_wait_us\":{},\"fetch_us\":{},\
+             \"fetch_bytes\":{},\"prefetch_hits\":{},\"stolen\":{}}}}}",
+            esc(&sp.kernel),
+            us(sp.start_t),
+            us((sp.end_t - sp.start_t).max(0.0)),
+            sp.node,
+            sp.worker,
+            sp.task,
+            sp.tier,
+            sp.threads,
+            us(sp.queue_wait_secs()),
+            us(sp.fetch_secs()),
+            sp.fetch_bytes,
+            sp.prefetch_hits,
+            sp.stolen
+        ));
+    }
+    for e in &trace.events {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"runtime\",\"ph\":\"i\",\"ts\":{},\
+             \"pid\":{},\"tid\":0,\"s\":\"p\",\"args\":{{\"bytes\":{}",
+            instant_name(e.kind),
+            us(e.t),
+            e.node,
+            e.bytes
+        ));
+        if let Some(src) = e.src {
+            out.push_str(&format!(",\"src\":{src}"));
+        }
+        if let Some(obj) = e.obj {
+            out.push_str(&format!(",\"obj\":{obj}"));
+        }
+        out.push_str("}}");
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::model::SystemMode;
+    use crate::runtime::kernel::Kernel;
+    use crate::exec::task::{Task, Transfer};
+
+    fn tiny_plan() -> Plan {
+        Plan {
+            tasks: vec![
+                Task {
+                    kernel: Kernel::Scale(2.0),
+                    inputs: vec![1],
+                    in_shapes: vec![vec![2, 2]],
+                    outputs: vec![(10, vec![2, 2])],
+                    target: 0,
+                    transfers: vec![],
+                },
+                Task {
+                    kernel: Kernel::Neg,
+                    inputs: vec![10],
+                    in_shapes: vec![vec![2, 2]],
+                    outputs: vec![(11, vec![2, 2])],
+                    target: 1,
+                    transfers: vec![Transfer {
+                        obj: 10,
+                        src: 0,
+                        elems: 4,
+                    }],
+                },
+            ],
+        }
+    }
+
+    fn span(task: usize, node: usize, start: f64, end: f64, bytes: u64) -> TaskSpan {
+        TaskSpan {
+            task,
+            node,
+            worker: node,
+            stolen: false,
+            threads: 1,
+            tier: KernelTier::Scalar,
+            prefetch_hits: 0,
+            ready_t: start,
+            start_t: start,
+            fetch_end_t: start,
+            end_t: end,
+            fetch_bytes: bytes,
+            kernel: String::new(),
+        }
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let mut r = SpanRing::new(2);
+        r.push(1u32);
+        r.push(2);
+        assert_eq!(r.dropped(), 0);
+        r.push(3);
+        r.push(4);
+        let (buf, dropped) = r.into_parts();
+        assert_eq!(dropped, 2);
+        assert_eq!(buf.len(), 2);
+        assert!(buf.contains(&3) && buf.contains(&4));
+    }
+
+    #[test]
+    fn recorder_timestamps_are_monotone_and_finish_labels_kernels() {
+        let topo = Topology::new(2, 1, SystemMode::Ray);
+        let plan = tiny_plan();
+        let rec = RunRecorder::new(2);
+        let t0 = rec.now();
+        let mut ring = SpanRing::new(8);
+        ring.push(span(1, 1, 0.002, 0.003, 32));
+        ring.push(span(0, 0, 0.001, 0.002, 0));
+        rec.event(1, Some(0), Some(10), 32, EventKind::Fetch(FetchOrigin::Demand));
+        rec.drain_spans(ring);
+        let t1 = rec.now();
+        assert!(t1 >= t0 && t0 >= 0.0);
+        let tr = rec.finish(&plan, &topo);
+        assert_eq!(tr.spans.len(), 2);
+        // sorted by start time, labels resolved
+        assert_eq!(tr.spans[0].task, 0);
+        assert_eq!(tr.spans[0].kernel, format!("{}", plan.tasks[0].kernel));
+        assert!(!tr.spans[1].kernel.is_empty());
+        assert_eq!(tr.dropped_spans, 0);
+        assert_eq!(tr.span_fetch_bytes(), 32);
+    }
+
+    #[test]
+    fn series_fold_replays_net_exactly_and_estimates_mem() {
+        let plan = tiny_plan();
+        let spans = vec![span(0, 0, 0.001, 0.002, 0), span(1, 1, 0.003, 0.004, 32)];
+        let events = vec![RtEvent {
+            t: 0.0025,
+            node: 1,
+            src: Some(0),
+            obj: Some(10),
+            bytes: 32,
+            kind: EventKind::Fetch(FetchOrigin::Demand),
+        }];
+        let series = fold_series(&spans, &events, &plan, 2);
+        let per = crate::metrics::trace::per_node_series(&series, 2);
+        // node 1 received exactly the fetched bytes
+        assert_eq!(per[1].final_net_in(), 32);
+        assert_eq!(per[0].final_net_in(), 0);
+        assert_eq!(per[0].net_out_bytes.last().copied().unwrap(), 32);
+        // node 0: task 0's output (4 elems) resident
+        assert_eq!(per[0].peak_mem(), 32);
+        // node 1: fetched input + its own output
+        assert_eq!(per[1].peak_mem(), 64);
+        // timestamps are sorted within each node
+        for s in &per {
+            assert!(s.t.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    #[test]
+    fn mem_estimate_clamps_at_zero_on_overshed() {
+        let plan = Plan::default();
+        let events = vec![RtEvent {
+            t: 0.001,
+            node: 0,
+            src: None,
+            obj: Some(5),
+            bytes: 640,
+            kind: EventKind::GcFree,
+        }];
+        let series = fold_series(&[], &events, &plan, 1);
+        assert_eq!(series.len(), 1);
+        assert_eq!(series[0].mem_bytes, 0, "sheds below run-start clamp at 0");
+    }
+
+    #[test]
+    fn divergence_joins_plan_against_observation() {
+        let topo = Topology::new(2, 1, SystemMode::Ray);
+        let plan = tiny_plan();
+        // task 1 was planned on node 1 but stolen by node 0
+        let mut sp1 = span(1, 0, 0.003, 0.004, 32);
+        sp1.stolen = true;
+        let spans = vec![span(0, 0, 0.001, 0.002, 0), sp1];
+        let events = vec![
+            RtEvent {
+                t: 0.0025,
+                node: 0,
+                src: None,
+                obj: None,
+                bytes: 1,
+                kind: EventKind::Steal,
+            },
+            RtEvent {
+                t: 0.0026,
+                node: 0,
+                src: Some(1),
+                obj: Some(10),
+                bytes: 32,
+                kind: EventKind::Fetch(FetchOrigin::Demand),
+            },
+        ];
+        let d = DivergenceReport::build(&plan, &topo, &spans, &events, 2);
+        assert_eq!(d.tasks.len(), 2);
+        assert_eq!(d.migrated_tasks(), 1);
+        let t1 = d.tasks.iter().find(|t| t.task == 1).unwrap();
+        assert_eq!(t1.planned_node, 1);
+        assert_eq!(t1.observed_node, 0);
+        assert_eq!(t1.planned_in_bytes, 32, "committed transfer of 4 elems");
+        assert_eq!(t1.observed_fetch_bytes, 32);
+        assert_eq!(d.nodes[1].planned_tasks, 1);
+        assert_eq!(d.nodes[1].observed_tasks, 0);
+        assert_eq!(d.nodes[0].observed_in_bytes, 32);
+        assert_eq!(d.nodes[0].demand_in_bytes, 32);
+        assert_eq!(d.nodes[0].prefetch_in_bytes, 0);
+        // the plan predicted node 1 would receive; observation disagrees
+        assert_eq!(d.nodes[1].planned_in_bytes, 32);
+        assert_eq!(d.nodes[1].observed_in_bytes, 0);
+        let s = d.summary();
+        assert!(s.contains("1 migrated"), "{s}");
+        assert!(s.contains("node 0"), "{s}");
+    }
+
+    #[test]
+    fn chrome_json_shape_and_escaping() {
+        let mut sp = span(0, 0, 0.001, 0.002, 8);
+        sp.kernel = "Ew(\"Add\")\\x".into();
+        let trace = RunTrace {
+            spans: vec![sp],
+            events: vec![RtEvent {
+                t: 0.0015,
+                node: 0,
+                src: Some(1),
+                obj: Some(7),
+                bytes: 64,
+                kind: EventKind::Spill,
+            }],
+            ..Default::default()
+        };
+        let js = chrome_trace_json(&trace);
+        assert!(js.starts_with("{\"traceEvents\":["));
+        assert!(js.ends_with("]}"));
+        assert!(js.contains("\\\"Add\\\""), "quotes escaped: {js}");
+        assert!(js.contains("\\\\x"), "backslash escaped: {js}");
+        assert!(js.contains("\"ph\":\"X\""));
+        assert!(js.contains("\"ph\":\"i\""));
+        assert!(js.contains("\"name\":\"spill\""));
+        assert!(js.contains("\"src\":1"));
+        // parses with the vendored reader
+        let v = crate::util::json::parse(&js).expect("valid JSON");
+        let evs = v.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(evs.len(), 2);
+    }
+
+    #[test]
+    fn span_phase_durations_never_negative() {
+        let mut sp = span(0, 0, 0.005, 0.004, 0);
+        sp.ready_t = 0.006; // degenerate ordering must clamp, not underflow
+        sp.fetch_end_t = 0.0055;
+        assert!(sp.queue_wait_secs() >= 0.0);
+        assert!(sp.fetch_secs() >= 0.0);
+        assert!(sp.exec_secs() >= 0.0);
+    }
+}

@@ -32,7 +32,9 @@ pub fn per_node_series(events: &[TraceEvent], nodes: usize) -> Vec<NodeSeries> {
         })
         .collect();
     let mut sorted: Vec<&TraceEvent> = events.iter().collect();
-    sorted.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+    // total_cmp: a NaN timestamp (e.g. from a degenerate modeled rate)
+    // must sort deterministically, not panic the whole report path.
+    sorted.sort_by(|a, b| a.t.total_cmp(&b.t));
     for e in sorted {
         let s = &mut out[e.node];
         s.t.push(e.t);
@@ -112,6 +114,19 @@ mod tests {
         assert!((sm.mem_balance_ratio - 1.0).abs() < 1e-9);
         let skew = vec![ev(1.0, 0, 300, 0), ev(1.0, 1, 100, 0)];
         assert!(summarize_trace(&skew, 2).mem_balance_ratio > 1.4);
+    }
+
+    #[test]
+    fn nan_timestamp_does_not_panic() {
+        let events = vec![ev(f64::NAN, 0, 1, 0), ev(1.0, 0, 2, 0), ev(0.5, 1, 3, 0)];
+        let s = per_node_series(&events, 2);
+        // NaN sorts last under total_cmp; finite entries stay ordered.
+        assert_eq!(s[0].t.len(), 2);
+        assert_eq!(s[0].t[0], 1.0);
+        assert!(s[0].t[1].is_nan());
+        assert_eq!(s[1].peak_mem(), 3);
+        let sm = summarize_trace(&events, 2);
+        assert_eq!(sm.max_peak_mem, 2);
     }
 
     #[test]

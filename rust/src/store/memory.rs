@@ -48,6 +48,8 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
+use crate::metrics::runtime_trace::{EventKind, FetchOrigin, RunRecorder};
+
 use super::block::Block;
 use super::object_store::{ObjectId, StoreSet};
 
@@ -164,6 +166,12 @@ pub struct MemoryManager {
     /// Async spill sink (the executor's transfer threads). `None` =
     /// synchronous writes, the standalone/creation-time behavior.
     sink: Mutex<Option<SpillSink>>,
+    /// Run recorder for memory events (spills, read-backs, evictions, GC
+    /// frees, managed fetches). Attached per traced run by the executor,
+    /// like the spill sink. Every emission site already holds a node
+    /// lock and just did real work (disk I/O, cross-node copy, free);
+    /// the recorder's sink mutex is a leaf lock, so no ordering cycle.
+    trace: Mutex<Option<Arc<RunRecorder>>>,
 }
 
 impl MemoryManager {
@@ -181,6 +189,7 @@ impl MemoryManager {
             spill_root,
             spill_ok,
             sink: Mutex::new(None),
+            trace: Mutex::new(None),
         }
     }
 
@@ -197,6 +206,33 @@ impl MemoryManager {
     /// left parked in memory.
     pub fn detach_spill_sink(&self) {
         *self.sink.lock().unwrap() = None;
+    }
+
+    /// Route this run's memory events to `r` (the executor attaches the
+    /// recorder for a traced run, mirroring the spill sink).
+    pub fn attach_trace(&self, r: Arc<RunRecorder>) {
+        *self.trace.lock().unwrap() = Some(r);
+    }
+
+    /// Stop emitting events (run teardown).
+    pub fn detach_trace(&self) {
+        *self.trace.lock().unwrap() = None;
+    }
+
+    /// Emit one memory event if a recorder is attached. Clones the Arc
+    /// out so the recorder's sink lock is never taken under `trace`'s.
+    fn emit(
+        &self,
+        node: usize,
+        src: Option<usize>,
+        obj: Option<ObjectId>,
+        bytes: u64,
+        kind: EventKind,
+    ) {
+        let r = self.trace.lock().unwrap().clone();
+        if let Some(r) = r {
+            r.event(node, src, obj, bytes, kind);
+        }
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -286,6 +322,7 @@ impl MemoryManager {
             }
             if let Some(b) = stores.remove(node, o) {
                 nm.stats.evicted_replica_bytes += b.bytes();
+                self.emit(node, None, Some(o), b.bytes(), EventKind::ReplicaEvict);
             }
             nm.forget(o);
         }
@@ -325,6 +362,7 @@ impl MemoryManager {
                 if usable {
                     stores.remove(node, o);
                     nm.stats.spill_reuse_bytes += b.bytes();
+                    self.emit(node, None, Some(o), b.bytes(), EventKind::SpillReuse);
                     nm.forget(o);
                     continue;
                 }
@@ -358,6 +396,7 @@ impl MemoryManager {
                     }
                     stores.remove(node, o);
                     nm.stats.spilled_bytes += b.bytes();
+                    self.emit(node, None, Some(o), b.bytes(), EventKind::Spill);
                     nm.spilled.insert(
                         o,
                         Spilled {
@@ -415,6 +454,7 @@ impl MemoryManager {
                         sp.pending = None;
                         sp.on_disk = true;
                         nm.stats.spilled_bytes += bytes;
+                        self.emit(node, None, Some(obj), bytes, EventKind::Spill);
                         written += bytes;
                     } else {
                         // disk trouble: reinstate the block (over budget
@@ -485,6 +525,7 @@ impl MemoryManager {
         };
         stores.put(node, id, block.clone());
         nm.stats.readback_bytes += bytes;
+        self.emit(node, None, Some(id), bytes, EventKind::Readback);
         nm.touch(id);
         Some(block)
     }
@@ -502,6 +543,22 @@ impl MemoryManager {
         node: usize,
         id: ObjectId,
         spillable: &dyn Fn(ObjectId) -> bool,
+    ) -> (Option<Arc<Block>>, u64) {
+        self.acquire_tagged(stores, node, id, spillable, FetchOrigin::Demand)
+    }
+
+    /// [`MemoryManager::acquire`] with an explicit fetch origin for the
+    /// run trace: the worker hot path acquires as `Demand`, the transfer
+    /// threads as `Prefetch`. A fetch event is emitted only when a
+    /// cross-node transfer actually moved bytes, so event totals match
+    /// the stores' `net_in` accounting exactly.
+    pub fn acquire_tagged(
+        &self,
+        stores: &StoreSet,
+        node: usize,
+        id: ObjectId,
+        spillable: &dyn Fn(ObjectId) -> bool,
+        origin: FetchOrigin,
     ) -> (Option<Arc<Block>>, u64) {
         let mut moved = 0u64;
         // consecutive scans that found the object nowhere: a transient
@@ -562,6 +619,9 @@ impl MemoryManager {
             match stores.try_transfer(src, node, id) {
                 Some(n) => {
                     moved += n;
+                    if n > 0 {
+                        self.emit(node, Some(src), Some(id), n, EventKind::Fetch(origin));
+                    }
                     let mut nm = self.nodes[node].lock().unwrap();
                     if let Some(b) = stores.get(node, id) {
                         nm.replicas.insert(id);
@@ -652,6 +712,7 @@ impl MemoryManager {
             let resident = stores.remove(n, id);
             if let Some(b) = &resident {
                 nm.stats.gc_freed_bytes += b.bytes();
+                self.emit(n, None, Some(id), b.bytes(), EventKind::GcFree);
             }
             if let Some(sp) = nm.spilled.remove(&id) {
                 let _ = std::fs::remove_file(&sp.path);
@@ -659,6 +720,7 @@ impl MemoryManager {
                 // bytes twice — count the free once
                 if resident.is_none() {
                     nm.stats.gc_freed_bytes += sp.bytes;
+                    self.emit(n, None, Some(id), sp.bytes, EventKind::GcFree);
                 }
             }
             nm.forget(id);

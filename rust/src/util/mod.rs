@@ -5,6 +5,7 @@
 
 pub mod cli;
 pub mod fmt;
+pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,448 @@
+//! Real-runtime tracing suites: the recorder must be a *pure observer*.
+//!
+//! Four claims, matching the module contract of
+//! `nums::metrics::runtime_trace`:
+//!
+//! 1. every executed task produces exactly one span, stamped with the
+//!    node/worker that really ran it;
+//! 2. byte accounting reconciles exactly — per node, fetch-event bytes
+//!    split into prefetch + demand equal the store's `net_in` counter,
+//!    and span `fetch_bytes` sum to the demand side; spill/readback/GC
+//!    event totals equal the run's `NodeMemStats` deltas;
+//! 3. tracing on vs off is bit-identical on a random-graph oracle suite
+//!    (the recorder may not perturb execution);
+//! 4. the folded `series_events` feed the existing Fig. 15 machinery and
+//!    the Chrome trace export is valid JSON (round-tripped through
+//!    `nums::util::json`).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use nums::api::ops;
+use nums::exec::{Plan, RealExecutor, Task};
+use nums::metrics::runtime_trace::{EventKind, FetchOrigin, RunTrace};
+use nums::metrics::{chrome_trace_json, per_node_series, summarize_trace};
+use nums::prelude::*;
+use nums::runtime::native;
+use nums::store::{MemoryManager, StoreSet};
+use nums::util::prop::forall_res;
+
+/// Sequential oracle: run the plan in order, single process, no stores.
+fn run_sequential(plan: &Plan, seeds: &HashMap<u64, Block>) -> HashMap<u64, Block> {
+    let mut env: HashMap<u64, Block> = seeds.clone();
+    for t in &plan.tasks {
+        let refs: Vec<&Block> = t.inputs.iter().map(|o| &env[o]).collect();
+        let outs = native::execute(&t.kernel, &refs).unwrap();
+        for ((obj, _), b) in t.outputs.iter().zip(outs) {
+            env.insert(*obj, b);
+        }
+    }
+    env
+}
+
+/// The canonical skew (same shape as `tests/exec_overlap.rs`): matmuls
+/// whose inputs all live on node 0, targeted so the runtime has to move
+/// work and bytes.
+fn skewed_matmul_plan(k_tasks: usize, n: usize, target: usize) -> (Plan, HashMap<u64, Block>) {
+    let mut rng = Rng::seed_from_u64(0x7A0CE);
+    let mut seeds = HashMap::new();
+    for i in 0..2 * k_tasks as u64 {
+        let mut v = vec![0.0; n * n];
+        rng.fill_normal(&mut v);
+        seeds.insert(i, Block::from_vec(&[n, n], v));
+    }
+    let plan = Plan {
+        tasks: (0..k_tasks)
+            .map(|i| Task {
+                kernel: Kernel::Matmul,
+                inputs: vec![(2 * i) as u64, (2 * i + 1) as u64],
+                in_shapes: vec![vec![n, n], vec![n, n]],
+                outputs: vec![(1000 + i as u64, vec![n, n])],
+                target,
+                transfers: vec![],
+            })
+            .collect(),
+    };
+    (plan, seeds)
+}
+
+fn seeded_stores(nodes: usize, seeds: &HashMap<u64, Block>) -> StoreSet {
+    let stores = StoreSet::new(nodes);
+    for (obj, b) in seeds {
+        stores.put(0, *obj, Arc::new(b.clone()));
+    }
+    stores
+}
+
+/// Per-kind event byte totals (and for fetches, per-origin).
+fn event_bytes(tr: &RunTrace) -> HashMap<&'static str, u64> {
+    let mut m: HashMap<&'static str, u64> = HashMap::new();
+    for e in &tr.events {
+        let k = match e.kind {
+            EventKind::Fetch(FetchOrigin::Prefetch) => "fetch.prefetch",
+            EventKind::Fetch(FetchOrigin::Demand) => "fetch.demand",
+            EventKind::Spill => "spill",
+            EventKind::SpillReuse => "spill.reuse",
+            EventKind::Readback => "readback",
+            EventKind::ReplicaEvict => "replica.evict",
+            EventKind::GcFree => "gc.free",
+            EventKind::Steal => "steal",
+            EventKind::PlanCacheHit => "plan.cache.hit",
+        };
+        *m.entry(k).or_default() += e.bytes;
+    }
+    m
+}
+
+#[test]
+fn every_executed_task_gets_exactly_one_span() {
+    let k_tasks = 40usize;
+    let (plan, seeds) = skewed_matmul_plan(k_tasks, 64, 0);
+    let topo = Topology::new(4, 2, SystemMode::Ray);
+    let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+        .with_stealing(true)
+        .with_prefetch(true)
+        .with_tracing(true);
+    exec.threads_per_node = 2;
+    let stores = seeded_stores(4, &seeds);
+    let rep = exec.run(&plan, &stores).unwrap();
+    let tr = rep.trace.as_ref().expect("tracing was on");
+
+    assert_eq!(tr.dropped_spans, 0, "ring must not wrap at this scale");
+    assert_eq!(tr.spans.len(), k_tasks, "one span per executed task");
+    let ids: HashSet<usize> = tr.spans.iter().map(|s| s.task).collect();
+    assert_eq!(ids.len(), k_tasks, "no task recorded twice");
+    assert!(ids.iter().all(|&t| t < k_tasks));
+
+    for sp in &tr.spans {
+        assert!(sp.node < 4, "{sp:?}");
+        assert_eq!(sp.node, sp.worker / 2, "worker id encodes its node: {sp:?}");
+        // monotonic within a span (queue wait can clamp to zero, the
+        // rest are taken in order off one epoch)
+        assert!(sp.start_t <= sp.fetch_end_t && sp.fetch_end_t <= sp.end_t, "{sp:?}");
+        assert!(sp.queue_wait_secs() >= 0.0 && sp.fetch_secs() >= 0.0 && sp.exec_secs() >= 0.0);
+        assert!(!sp.kernel.is_empty(), "kernel label resolved in finish()");
+        assert!(sp.threads >= 1);
+    }
+
+    // migration cross-check: spans, node_stats and the divergence report
+    // all describe the same steals
+    let stolen_spans = tr.spans.iter().filter(|s| s.stolen).count();
+    let stolen_stats: usize = rep.node_stats.iter().map(|s| s.tasks_stolen).sum();
+    assert_eq!(stolen_spans, stolen_stats);
+    assert!(stolen_spans > 0, "skewed plan must trigger stealing");
+    assert_eq!(tr.divergence.migrated_tasks(), stolen_spans);
+    let steal_events = tr.events.iter().filter(|e| e.kind == EventKind::Steal).count();
+    assert!(steal_events > 0, "steals must leave instant events");
+
+    // per-node task conservation in the divergence report
+    let run_total: usize = tr.divergence.nodes.iter().map(|n| n.observed_tasks).sum();
+    assert_eq!(run_total, k_tasks);
+    assert_eq!(
+        tr.divergence.nodes.iter().map(|n| n.planned_tasks).sum::<usize>(),
+        k_tasks
+    );
+}
+
+#[test]
+fn fetch_bytes_reconcile_exactly_with_net_in() {
+    // pipeline skew: inputs born on node 0, work targeted at node 1 — the
+    // transfer thread and the hot path split the inbound bytes, and the
+    // trace must account every byte exactly once.
+    let k_tasks = 8usize;
+    let (plan, seeds) = skewed_matmul_plan(k_tasks, 96, 1);
+    let topo = Topology::new(2, 1, SystemMode::Ray);
+    let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+        .with_stealing(false)
+        .with_prefetch(true)
+        .with_tracing(true);
+    exec.threads_per_node = 1;
+    let stores = seeded_stores(2, &seeds);
+    let rep = exec.run(&plan, &stores).unwrap();
+    let tr = rep.trace.as_ref().unwrap();
+
+    for nd in &tr.divergence.nodes {
+        // identity 1: every observed inbound byte is prefetch or demand
+        assert_eq!(
+            nd.observed_in_bytes,
+            nd.prefetch_in_bytes + nd.demand_in_bytes,
+            "node {}", nd.node
+        );
+        // identity 2: fetch events reconcile with the store NIC counter
+        // (fresh stores: the snapshot is this run's delta)
+        assert_eq!(
+            nd.observed_in_bytes, rep.store_snapshot[nd.node].2,
+            "node {}: event bytes != net_in", nd.node
+        );
+        // identity 3: and with the prefetcher's own view of the split
+        let p = &rep.prefetch_stats[nd.node];
+        assert_eq!(nd.prefetch_in_bytes, p.prefetch_bytes, "node {}", nd.node);
+        assert_eq!(nd.demand_in_bytes, p.demand_pull_bytes, "node {}", nd.node);
+    }
+    // identity 4: span fetch_bytes are exactly the hot-path (demand) side
+    let demand_total: u64 = tr
+        .divergence
+        .nodes
+        .iter()
+        .map(|n| n.demand_in_bytes)
+        .sum();
+    assert_eq!(tr.span_fetch_bytes(), demand_total);
+    let ev = event_bytes(tr);
+    assert_eq!(
+        ev.get("fetch.prefetch").copied().unwrap_or(0)
+            + ev.get("fetch.demand").copied().unwrap_or(0),
+        rep.store_snapshot.iter().map(|s| s.2).sum::<u64>()
+    );
+    // something actually moved, on both paths or at least one
+    assert!(tr.divergence.nodes[1].observed_in_bytes > 0);
+}
+
+#[test]
+fn spill_events_reconcile_with_mem_stats() {
+    // produce-then-fold under a 3-block budget on one node: cold producer
+    // outputs spill and come back, lifetime GC releases dead
+    // intermediates — and every one of those byte counters must be
+    // reproducible from the event stream alone.
+    let n = 16usize;
+    let k = 8usize;
+    let block_bytes = (n * n * 8) as u64;
+    let (plan, acc) = nums::bench::harness::produce_fold_plan(k, n);
+    let topo = Topology::new(1, 1, SystemMode::Ray);
+    let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+        .with_prefetch(false)
+        .with_memory(MemoryManager::new(1, Some(3 * block_bytes), true))
+        .with_tracing(true);
+    exec.threads_per_node = 1;
+    let stores = StoreSet::new(1);
+    stores.put(0, 1, Arc::new(Block::filled(&[n, n], 1.0)));
+    let rep = exec.run(&plan, &stores).unwrap();
+    let tr = rep.trace.as_ref().unwrap();
+    let m = &rep.mem_stats[0];
+    assert!(m.spilled_bytes > 0, "a 3-block budget must spill: {m:?}");
+
+    let ev = event_bytes(tr);
+    assert_eq!(ev.get("spill").copied().unwrap_or(0), m.spilled_bytes);
+    assert_eq!(ev.get("readback").copied().unwrap_or(0), m.readback_bytes);
+    assert_eq!(ev.get("spill.reuse").copied().unwrap_or(0), m.spill_reuse_bytes);
+    assert_eq!(
+        ev.get("replica.evict").copied().unwrap_or(0),
+        m.evicted_replica_bytes
+    );
+    assert_eq!(ev.get("gc.free").copied().unwrap_or(0), m.gc_freed_bytes);
+    // the divergence report carries the same spill story
+    assert_eq!(tr.divergence.nodes[0].spilled_bytes, m.spilled_bytes);
+    assert_eq!(tr.divergence.nodes[0].readback_bytes, m.readback_bytes);
+    // and the run still produced the right answer
+    let got = exec.memory.as_ref().unwrap().fetch(&stores, acc).unwrap();
+    assert_eq!(got.shape, vec![n, n]);
+}
+
+#[test]
+fn prop_tracing_is_a_pure_observer() {
+    // tracing on vs off over random plans: outputs bit-identical, and the
+    // off-run must not even allocate a trace
+    forall_res(
+        0x7 + 0xACE,
+        12,
+        |r| {
+            let n_seeds = 2 + r.usize(4);
+            let tasks: Vec<(u8, usize, usize, usize)> = (0..1 + r.usize(16))
+                .map(|_| (r.usize(256) as u8, r.usize(1 << 16), r.usize(1 << 16), r.usize(1 << 16)))
+                .collect();
+            (1 + r.usize(3), r.usize(2) == 1, n_seeds, tasks)
+        },
+        |&(nodes, stealing, n_seeds, ref task_spec)| {
+            const SHAPE: [usize; 2] = [4, 4];
+            let mut rng = Rng::seed_from_u64(0x9E2 ^ task_spec.len() as u64);
+            let mut seeds = HashMap::new();
+            let mut avail: Vec<u64> = Vec::new();
+            for s in 0..n_seeds {
+                let mut v = vec![0.0; SHAPE[0] * SHAPE[1]];
+                rng.fill_normal(&mut v);
+                seeds.insert(s as u64, Block::from_vec(&SHAPE, v));
+                avail.push(s as u64);
+            }
+            let mut tasks = Vec::new();
+            for (i, &(kind, p1, p2, tgt)) in task_spec.iter().enumerate() {
+                let out = 1000 + i as u64;
+                let (kernel, inputs) = match kind % 4 {
+                    0 => (Kernel::Ew(BinOp::Add), vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+                    1 => (Kernel::Ew(BinOp::Mul), vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+                    2 => (Kernel::Neg, vec![avail[p1 % avail.len()]]),
+                    _ => (Kernel::Scale(0.5), vec![avail[p1 % avail.len()]]),
+                };
+                let in_shapes = vec![SHAPE.to_vec(); inputs.len()];
+                tasks.push(Task {
+                    kernel,
+                    inputs,
+                    in_shapes,
+                    outputs: vec![(out, SHAPE.to_vec())],
+                    target: tgt % nodes,
+                    transfers: vec![],
+                });
+                avail.push(out);
+            }
+            let plan = Plan { tasks };
+            let want = run_sequential(&plan, &seeds);
+            let consumed: HashSet<u64> =
+                plan.tasks.iter().flat_map(|t| t.inputs.iter().copied()).collect();
+            let mut traced_spans = None;
+            for tracing in [false, true] {
+                let topo = Topology::new(nodes, 2, SystemMode::Ray);
+                let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+                    .with_stealing(stealing)
+                    .with_prefetch(true)
+                    .with_tracing(tracing);
+                exec.threads_per_node = 2;
+                let stores = StoreSet::new(nodes);
+                for (obj, b) in &seeds {
+                    stores.put((*obj as usize) % nodes, *obj, Arc::new(b.clone()));
+                }
+                let rep = exec
+                    .run(&plan, &stores)
+                    .map_err(|e| format!("tracing={tracing}: {e}"))?;
+                if tracing {
+                    let tr = rep.trace.as_ref().ok_or("trace missing with tracing on")?;
+                    if tr.spans.len() != plan.tasks.len() {
+                        return Err(format!(
+                            "{} spans for {} tasks",
+                            tr.spans.len(),
+                            plan.tasks.len()
+                        ));
+                    }
+                    traced_spans = Some(tr.spans.len());
+                } else if rep.trace.is_some() {
+                    return Err("tracing off must not build a trace".into());
+                }
+                for i in 0..plan.tasks.len() {
+                    let obj = 1000 + i as u64;
+                    if consumed.contains(&obj) {
+                        continue; // dead intermediate (may be GC'd)
+                    }
+                    let got = stores
+                        .fetch(obj)
+                        .ok_or_else(|| format!("tracing={tracing}: output {obj} missing"))?;
+                    let w = &want[&obj];
+                    if got.buf().iter().zip(w.buf()).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                        return Err(format!("tracing={tracing}: output {obj} differs"));
+                    }
+                }
+            }
+            traced_spans.ok_or("traced arm never ran".to_string())?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn series_events_feed_fig15_machinery() {
+    // the folded series must plug into the existing per_node_series /
+    // summarize_trace pipeline, and its cumulative net_in must agree with
+    // the divergence report's observed bytes.
+    let k_tasks = 10usize;
+    let (plan, seeds) = skewed_matmul_plan(k_tasks, 64, 1);
+    let topo = Topology::new(2, 2, SystemMode::Ray);
+    let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+        .with_stealing(false)
+        .with_prefetch(true)
+        .with_tracing(true);
+    exec.threads_per_node = 2;
+    let stores = seeded_stores(2, &seeds);
+    let rep = exec.run(&plan, &stores).unwrap();
+    let tr = rep.trace.as_ref().unwrap();
+
+    let series = per_node_series(&tr.series_events, 2);
+    assert_eq!(series.len(), 2);
+    for s in &series {
+        // timestamps sorted (total_cmp order)
+        assert!(s.t.windows(2).all(|w| w[0] <= w[1]), "node {} unsorted", s.node);
+    }
+    assert!(series[1].peak_mem() > 0, "executing node accumulated memory");
+    for nd in &tr.divergence.nodes {
+        assert_eq!(
+            series[nd.node].final_net_in(),
+            nd.observed_in_bytes,
+            "node {}: series net_in must equal observed fetch bytes",
+            nd.node
+        );
+    }
+    let sm = summarize_trace(&tr.series_events, 2);
+    assert!(sm.max_peak_mem >= series[1].peak_mem());
+    assert_eq!(sm.max_net_in, rep.store_snapshot.iter().map(|s| s.2).max().unwrap());
+}
+
+#[test]
+fn chrome_trace_export_round_trips_through_json_parser() {
+    let k_tasks = 6usize;
+    let (plan, seeds) = skewed_matmul_plan(k_tasks, 32, 1);
+    let topo = Topology::new(2, 1, SystemMode::Ray);
+    let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+        .with_prefetch(true)
+        .with_tracing(true);
+    exec.threads_per_node = 1;
+    let stores = seeded_stores(2, &seeds);
+    let rep = exec.run(&plan, &stores).unwrap();
+    let tr = rep.trace.as_ref().unwrap();
+
+    let json = chrome_trace_json(tr);
+    let v = nums::util::json::parse(&json).expect("exporter must emit valid JSON");
+    let events = v
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    assert_eq!(events.len(), tr.spans.len() + tr.events.len());
+    let mut complete = 0usize;
+    let mut instants = 0usize;
+    for e in events {
+        let ph = e.get("ph").and_then(|p| p.as_str()).expect("ph");
+        assert!(e.get("name").and_then(|n| n.as_str()).is_some());
+        assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
+        assert!(e.get("pid").and_then(|p| p.as_f64()).is_some());
+        match ph {
+            "X" => {
+                complete += 1;
+                assert!(e.get("dur").and_then(|d| d.as_f64()).unwrap() >= 0.0);
+            }
+            "i" => instants += 1,
+            other => panic!("unexpected phase {other}"),
+        }
+    }
+    assert_eq!(complete, tr.spans.len());
+    assert_eq!(instants, tr.events.len());
+}
+
+#[test]
+fn session_trace_carries_plan_cache_hit_and_rolls_up() {
+    // end-to-end through the Session: tracing on, same graph twice — the
+    // second run replays the cached plan and its trace records that as an
+    // instant event; the timing breakdown sees the trace's io rollup.
+    let mut sess =
+        Session::new(SessionConfig::real_small(2, 2).with_stealing(false).with_tracing(true));
+    let x = sess.randn(&[64, 64], &[2, 2]);
+    let y = sess.randn(&[64, 64], &[2, 2]);
+    let (_, rep1) = ops::add(&mut sess, &x, &y).unwrap();
+    let tr1 = rep1.trace().expect("tracing on");
+    assert!(!tr1.spans.is_empty());
+    assert!(
+        !tr1.events.iter().any(|e| e.kind == EventKind::PlanCacheHit),
+        "first run is a cache miss"
+    );
+
+    let (_, rep2) = ops::add(&mut sess, &x, &y).unwrap();
+    assert!(rep2.plan_cache_hit, "identical graph must hit the plan cache");
+    let tr2 = rep2.trace().expect("tracing on");
+    assert!(
+        tr2.events.iter().any(|e| e.kind == EventKind::PlanCacheHit),
+        "cache hit must appear in the event stream"
+    );
+    let b = nums::bench::timing_breakdown(&rep2);
+    assert!(b.plan_cache_hit);
+    assert_eq!(b.exec_secs, rep2.real.as_ref().unwrap().wall_secs);
+
+    // tracing off: the same session API yields no trace at all
+    let mut off = Session::new(SessionConfig::real_small(2, 2));
+    let a = off.randn(&[32, 32], &[2, 2]);
+    let bb = off.randn(&[32, 32], &[2, 2]);
+    let (_, rep) = ops::add(&mut off, &a, &bb).unwrap();
+    assert!(rep.trace().is_none());
+}
