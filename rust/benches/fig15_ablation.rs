@@ -11,6 +11,7 @@
 
 use nums::api::{Policy, Session, SessionConfig};
 use nums::bench::harness::{glm_mem_run, max_peak_bytes, mem_summary, timing_breakdown};
+use nums::exec::{FaultPlan, NodeLossMode, RecoveryStats};
 use nums::glm::data::{classification_data, feature, row_class};
 use nums::glm::newton_fit;
 use nums::graph::DistArray;
@@ -101,6 +102,89 @@ fn skewed_classification_data(
     (x, y)
 }
 
+/// Recovery arm: the same skewed GLM under a seeded fault plan — rate
+/// faults at every site plus one survivable whole-node loss — against
+/// its fault-free twin. Proves the bit-identity contract at benchmark
+/// scale and measures the recovery overhead (retries, recomputed bytes,
+/// added wall time). Returns the JSON fragment for `BENCH_fig15.json`.
+fn run_real_recovery(smoke: bool) -> String {
+    let nodes = 4usize;
+    let (rows, d, q, steps) = if smoke {
+        (512, 8, 8, 1)
+    } else {
+        (4096, 32, 16, 2)
+    };
+    let fit = |fault: Option<FaultPlan>| {
+        // explicit rate-0 default so the fault-free baseline stays
+        // fault-free even if NUMS_FAULT_* is armed in the environment
+        let cfg = SessionConfig::real_small(nodes, 2)
+            .with_fault_plan(fault.unwrap_or_else(|| FaultPlan::new(0, 0.0)));
+        let mut sess = Session::new(cfg);
+        let (x, y) = skewed_classification_data(&mut sess, rows, d, q, 15, 0);
+        let t0 = std::time::Instant::now();
+        let res = newton_fit(&mut sess, &x, &y, steps, 0.0).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        let beta = sess.fetch(&res.beta).unwrap();
+        let bits: Vec<u64> = beta.into_vec().iter().map(|v| v.to_bits()).collect();
+        let mut stats = RecoveryStats::default();
+        for rep in &res.reports {
+            let r = rep.real.as_ref().expect("real mode");
+            stats.retries += r.recovery_stats.retries;
+            stats.backoff_secs += r.recovery_stats.backoff_secs;
+            stats.recomputed_tasks += r.recovery_stats.recomputed_tasks;
+            stats.recomputed_bytes += r.recovery_stats.recomputed_bytes;
+            stats.node_losses_survived += r.recovery_stats.node_losses_survived;
+        }
+        (bits, secs, stats)
+    };
+
+    let (clean_bits, clean_secs, clean_stats) = fit(None);
+    assert!(clean_stats.is_zero(), "fault-free run must report no recovery work");
+    let plan = FaultPlan::new(9, 0.3).with_node_loss(1, 4, NodeLossMode::Survivable);
+    let (chaos_bits, chaos_secs, stats) = fit(Some(plan));
+    let identical = chaos_bits == clean_bits;
+
+    println!("\n=== recovery arm (rate 0.3 faults + survivable loss of node 1) ===");
+    println!("fault-free fit         : {}", human_secs(clean_secs));
+    println!(
+        "chaos fit              : {} ({:.2}x overhead)",
+        human_secs(chaos_secs),
+        chaos_secs / clean_secs.max(1e-12)
+    );
+    println!(
+        "recovery work          : {} retries ({} backoff), {} tasks / {} recomputed, {} node loss(es) survived",
+        stats.retries,
+        human_secs(stats.backoff_secs),
+        stats.recomputed_tasks,
+        human_bytes(stats.recomputed_bytes as f64),
+        stats.node_losses_survived
+    );
+    println!(
+        "bit-identical result   : {}",
+        if identical { "yes" } else { "NO — CONTRACT VIOLATED" }
+    );
+    if smoke {
+        assert!(identical, "chaos fit must be bit-identical to the fault-free fit");
+        assert_eq!(stats.node_losses_survived, 1, "the scheduled loss must fire");
+        assert!(stats.retries > 0, "rate 0.3 must inject transient faults");
+    }
+    format!(
+        "  \"recovery\": {{\"clean_secs\": {:.9}, \"chaos_secs\": {:.9}, \
+         \"overhead_ratio\": {:.6}, \"retries\": {}, \"backoff_secs\": {:.9}, \
+         \"recomputed_tasks\": {}, \"recomputed_bytes\": {}, \
+         \"node_losses_survived\": {}, \"bit_identical\": {}}}\n",
+        clean_secs,
+        chaos_secs,
+        chaos_secs / clean_secs.max(1e-12),
+        stats.retries,
+        stats.backoff_secs,
+        stats.recomputed_tasks,
+        stats.recomputed_bytes,
+        stats.node_losses_survived,
+        identical
+    )
+}
+
 /// The tentpole's real-executor arm: a skewed GLM fit with tracing on.
 /// Folds the run's spans/events into per-node *measured* load series
 /// (same `summarize_trace`/`trace_to_tsv` machinery as the modeled
@@ -134,8 +218,11 @@ fn run_real_traced(smoke: bool) {
     let breakdown = timing_breakdown(rep);
     println!("timing: {}", breakdown.summary());
 
+    let recovery_json = run_real_recovery(smoke);
+
     // Machine-readable rollup: per-node measured series summary, the
-    // divergence reconciliation, and the uniform timing breakdown.
+    // divergence reconciliation, the recovery-overhead arm, and the
+    // uniform timing breakdown.
     // Hand-rolled (no serde offline); shape checked by the --smoke arm
     // and the runtime_trace round-trip test.
     let mut s = String::from("{\n  \"bench\": \"fig15_real_traced\",\n");
@@ -179,7 +266,9 @@ fn run_real_traced(smoke: bool) {
             if i + 1 < nodes { "," } else { "" }
         ));
     }
-    s.push_str("  ]\n}\n");
+    s.push_str("  ],\n");
+    s.push_str(&recovery_json);
+    s.push_str("}\n");
     std::fs::write("BENCH_fig15.json", &s).expect("write BENCH_fig15.json");
     println!("rollup written         : BENCH_fig15.json");
 
@@ -199,6 +288,12 @@ fn run_real_traced(smoke: bool) {
         let parsed = nums::util::json::parse(&s).expect("rollup must be valid JSON");
         let arr = parsed.get("nodes").and_then(|v| v.as_arr()).expect("nodes array");
         assert_eq!(arr.len(), nodes);
+        let rec = parsed.get("recovery").expect("recovery arm in rollup");
+        assert_eq!(
+            rec.get("bit_identical").and_then(|v| v.as_bool()),
+            Some(true),
+            "rollup must record the proven bit-identity"
+        );
         println!("--smoke OK: {} spans reconciled across {nodes} nodes", tr.spans.len());
     }
 }

@@ -143,6 +143,18 @@ pub struct SessionConfig {
     /// additionally writes the Chrome JSON of each run to `<path>`
     /// (last run wins).
     pub tracing: bool,
+    /// Deterministic fault injection for real runs
+    /// ([`crate::exec::FaultPlan`]): seeded failures at the kernel,
+    /// transfer, and spill I/O sites, plus at most one scheduled
+    /// whole-node loss. Transient faults retry with bounded backoff;
+    /// lost objects are recomputed from plan lineage — a chaos run must
+    /// produce bit-identical results to a fault-free one (scalar tier),
+    /// with the recovery work reported in
+    /// `RealReport::recovery_stats`. `None` (default) arms nothing and
+    /// costs nothing; the `NUMS_FAULT_SEED` / `NUMS_FAULT_RATE`
+    /// environment variables arm rate-based injection (never node loss)
+    /// when this field is unset.
+    pub fault_plan: Option<crate::exec::FaultPlan>,
 }
 
 impl SessionConfig {
@@ -168,6 +180,7 @@ impl SessionConfig {
             feedback: true,
             plan_cache: true,
             tracing: false,
+            fault_plan: None,
         }
     }
 
@@ -193,6 +206,7 @@ impl SessionConfig {
             feedback: true,
             plan_cache: true,
             tracing: false,
+            fault_plan: None,
         }
     }
 
@@ -255,6 +269,13 @@ impl SessionConfig {
     /// Toggle real-run tracing (see [`SessionConfig::tracing`]).
     pub fn with_tracing(mut self, on: bool) -> Self {
         self.tracing = on;
+        self
+    }
+
+    /// Arm deterministic fault injection
+    /// (see [`SessionConfig::fault_plan`]).
+    pub fn with_fault_plan(mut self, plan: crate::exec::FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
         self
     }
 
@@ -369,13 +390,20 @@ impl Session {
             // Chrome JSON after each run)
             let tracing = cfg.tracing
                 || std::env::var("NUMS_TRACE").map_or(false, |v| !v.is_empty());
+            // explicit session plan wins; otherwise the env vars may arm
+            // rate-based chaos (never a node loss) for the whole session
+            let fault_plan = cfg
+                .fault_plan
+                .clone()
+                .or_else(crate::exec::FaultPlan::from_env);
             Some(
                 RealExecutor::new(topo.clone(), Arc::clone(&backend))
                     .with_stealing(cfg.stealing)
                     .with_prefetch(cfg.prefetch)
                     .with_tier(tier)
                     .with_memory(memory)
-                    .with_tracing(tracing),
+                    .with_tracing(tracing)
+                    .with_faults(fault_plan),
             )
         } else {
             None
@@ -676,6 +704,25 @@ impl Session {
             }
             None => Default::default(),
         };
+
+        // a node loss wiped real copies the load model still counts:
+        // drop exactly that node's copies, and re-register any object
+        // lineage recovery re-materialized elsewhere so later plans can
+        // source it from its actual home
+        if let Some(r) = &real {
+            for (node, lost) in &r.node_losses {
+                for &(obj, bytes) in lost {
+                    self.state.forget_copies_on(obj, *node);
+                    if self.state.locations_of(obj).is_empty() {
+                        if let Some(n) =
+                            (0..self.topo.nodes).find(|&n| self.stores.contains(n, obj))
+                        {
+                            self.state.register(obj, (bytes / 8) as f64, n);
+                        }
+                    }
+                }
+            }
+        }
 
         // register surviving outputs as resident objects for later runs
         for (obj, shape, target) in plan.produced() {

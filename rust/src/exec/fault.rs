@@ -1,0 +1,287 @@
+//! Deterministic fault injection for the real executor.
+//!
+//! The paper leans on Ray's lineage-based resilience for its cloud
+//! claims; this module supplies the *failure half* of that story so the
+//! recovery half ([`crate::exec::recovery`]) has something real to
+//! survive. A [`FaultInjector`] — seeded through
+//! `SessionConfig::fault_plan` or the `NUMS_FAULT_SEED` /
+//! `NUMS_FAULT_RATE` environment variables — decides failures at the
+//! five real failure sites of the runtime ([`FaultSite`]): kernel
+//! execution, demand-pull/prefetch transfer, spill write, spill
+//! readback, and whole-node loss.
+//!
+//! Two properties make injected chaos usable as a *correctness* tool:
+//!
+//! * **Determinism independent of thread interleaving.** Each decision
+//!   hashes `(seed, site, key)` with the same FNV-1a used by plan
+//!   signatures and compares against a rate threshold — never a shared
+//!   counter, so the same plan under the same seed fails at the same
+//!   sites no matter how workers interleave.
+//! * **Bounded per-site failures.** Any one `(site, key)` pair injects
+//!   at most [`MAX_INJECTIONS_PER_KEY`] failures, so every transient
+//!   fault is survivable by bounded retry *by construction* — chaos
+//!   runs must converge to the bit-identical fault-free result, not
+//!   livelock.
+//!
+//! Default off = zero cost: when no plan is configured, no injector is
+//! constructed and every site's check is an `Option` test against
+//! `None`, exactly like the tracing recorder.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::graph::signature::Fnv128;
+
+/// Where a fault can be injected — the five real failure sites.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// Kernel execution (key = task index in plan order). Injected
+    /// *before* the kernel runs, so a retried task has no partial
+    /// side effects to undo.
+    Kernel,
+    /// A cross-node pull — demand or prefetch (key = object id).
+    Transfer,
+    /// Writing a spill file (key = object id).
+    SpillWrite,
+    /// Reading a spill file back (key = object id).
+    SpillRead,
+    /// Whole-node loss (keyed/configured by [`NodeLossSpec`], not rate).
+    NodeLoss,
+}
+
+/// How much of a node's store a node-loss event wipes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeLossMode {
+    /// Wipe the node's unpinned *plan-produced* blocks plus anything
+    /// with another live copy; spare lifetime-pinned outputs and
+    /// sole-copy external inputs (modeling data the driver can re-put).
+    /// Everything lost is recomputable from lineage.
+    Survivable,
+    /// Wipe every unpinned block, including sole-copy inputs with no
+    /// producing task — exercising the unrecoverable-loss error path.
+    Total,
+}
+
+/// A scheduled whole-node loss: after `after_tasks` tasks complete,
+/// node `node`'s store is wiped per `mode` and its workers stop picking
+/// up new work (they finish the task in hand and exit).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeLossSpec {
+    pub node: usize,
+    pub after_tasks: usize,
+    pub mode: NodeLossMode,
+}
+
+/// The session-level fault configuration. `rate` is the per-decision
+/// injection probability in `[0, 1]`; `node_loss` schedules at most one
+/// whole-node loss per run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rate: f64,
+    pub node_loss: Option<NodeLossSpec>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, rate: f64) -> Self {
+        Self { seed, rate, node_loss: None }
+    }
+
+    pub fn with_node_loss(mut self, node: usize, after_tasks: usize, mode: NodeLossMode) -> Self {
+        self.node_loss = Some(NodeLossSpec { node, after_tasks, mode });
+        self
+    }
+
+    /// Read `NUMS_FAULT_SEED` / `NUMS_FAULT_RATE` from the environment.
+    /// Either variable alone is enough to arm injection (`seed` defaults
+    /// to 0, `rate` to 0.05); node loss is never env-triggered — a wiped
+    /// node needs test-specific survivability reasoning, so it stays an
+    /// explicit `SessionConfig::fault_plan` decision.
+    pub fn from_env() -> Option<Self> {
+        let seed = std::env::var("NUMS_FAULT_SEED").ok().and_then(|v| v.parse::<u64>().ok());
+        let rate = std::env::var("NUMS_FAULT_RATE").ok().and_then(|v| v.parse::<f64>().ok());
+        if seed.is_none() && rate.is_none() {
+            return None;
+        }
+        Some(Self {
+            seed: seed.unwrap_or(0),
+            rate: rate.unwrap_or(0.05).clamp(0.0, 1.0),
+            node_loss: None,
+        })
+    }
+}
+
+/// Most injected failures any one `(site, key)` pair will see: retry
+/// loops with more attempts than this are guaranteed to make progress.
+pub const MAX_INJECTIONS_PER_KEY: u32 = 2;
+
+/// The armed injector. One per run; shared by workers, the transfer
+/// thread, and the memory manager via `Arc`.
+pub struct FaultInjector {
+    seed: u64,
+    /// Threshold in hash space: a decision fires when
+    /// `hash(seed, site, key) < threshold`.
+    threshold: u64,
+    /// Injections already delivered per (site, key) — the retry bound.
+    delivered: Mutex<HashMap<(FaultSite, u64), u32>>,
+    /// Injected-failure counter (all sites), for reports/tests.
+    injected: AtomicUsize,
+    node_loss: Option<NodeLossSpec>,
+    /// Set once the scheduled node loss has fired.
+    node_loss_fired: AtomicBool,
+}
+
+impl FaultInjector {
+    pub fn new(plan: &FaultPlan) -> Self {
+        let rate = plan.rate.clamp(0.0, 1.0);
+        // map the probability onto u64 hash space; rate 1.0 saturates
+        let threshold = if rate >= 1.0 {
+            u64::MAX
+        } else {
+            (rate * u64::MAX as f64) as u64
+        };
+        Self {
+            seed: plan.seed,
+            threshold,
+            delivered: Mutex::new(HashMap::new()),
+            injected: AtomicUsize::new(0),
+            node_loss: plan.node_loss,
+            node_loss_fired: AtomicBool::new(false),
+        }
+    }
+
+    fn hash(&self, site: FaultSite, key: u64) -> u64 {
+        let mut h = Fnv128::new();
+        h.u64(self.seed);
+        h.tag(match site {
+            FaultSite::Kernel => 1,
+            FaultSite::Transfer => 2,
+            FaultSite::SpillWrite => 3,
+            FaultSite::SpillRead => 4,
+            FaultSite::NodeLoss => 5,
+        });
+        h.u64(key);
+        h.digest() as u64
+    }
+
+    /// Should this `(site, key)` decision fail *this time*? Deterministic
+    /// in `(seed, site, key)` for the first [`MAX_INJECTIONS_PER_KEY`]
+    /// asks; always `false` afterwards, so bounded retries always win.
+    pub fn should_fail(&self, site: FaultSite, key: u64) -> bool {
+        if self.threshold == 0 {
+            return false;
+        }
+        if self.hash(site, key) >= self.threshold {
+            return false;
+        }
+        let mut d = self.delivered.lock().unwrap();
+        let n = d.entry((site, key)).or_insert(0);
+        if *n >= MAX_INJECTIONS_PER_KEY {
+            return false;
+        }
+        *n += 1;
+        drop(d);
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Total failures injected so far (all sites).
+    pub fn injected(&self) -> usize {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// The scheduled node loss, if any.
+    pub fn node_loss(&self) -> Option<NodeLossSpec> {
+        self.node_loss
+    }
+
+    /// Called by the executor with the completed-task count; returns the
+    /// spec exactly once, when the trigger point is reached.
+    pub fn take_node_loss(&self, completed_tasks: usize) -> Option<NodeLossSpec> {
+        let spec = self.node_loss?;
+        if completed_tasks < spec.after_tasks {
+            return None;
+        }
+        if self.node_loss_fired.swap(true, Ordering::SeqCst) {
+            return None;
+        }
+        Some(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_and_interleaving_free() {
+        let plan = FaultPlan::new(42, 0.5);
+        let a = FaultInjector::new(&plan);
+        let b = FaultInjector::new(&plan);
+        // same (site, key) stream, different ask orders: identical verdicts
+        let keys: Vec<u64> = (0..200).collect();
+        let fwd: Vec<bool> = keys.iter().map(|&k| a.should_fail(FaultSite::Kernel, k)).collect();
+        let rev: Vec<bool> = keys
+            .iter()
+            .rev()
+            .map(|&k| b.should_fail(FaultSite::Kernel, k))
+            .collect();
+        let rev_fwd: Vec<bool> = rev.into_iter().rev().collect();
+        assert_eq!(fwd, rev_fwd);
+        assert!(fwd.iter().any(|&f| f), "rate 0.5 over 200 keys must fire");
+        assert!(!fwd.iter().all(|&f| f), "rate 0.5 must not fire everywhere");
+    }
+
+    #[test]
+    fn sites_hash_independently() {
+        let inj = FaultInjector::new(&FaultPlan::new(7, 0.5));
+        let kernel: Vec<bool> = (0..64).map(|k| inj.should_fail(FaultSite::Kernel, k)).collect();
+        let spill: Vec<bool> = (0..64).map(|k| inj.should_fail(FaultSite::SpillRead, k)).collect();
+        assert_ne!(kernel, spill, "site tag must decorrelate the decision streams");
+    }
+
+    #[test]
+    fn per_key_injections_are_capped() {
+        let inj = FaultInjector::new(&FaultPlan::new(1, 1.0));
+        // rate 1.0: every key fails, but only MAX_INJECTIONS_PER_KEY times
+        let mut fails = 0;
+        for _ in 0..10 {
+            if inj.should_fail(FaultSite::Transfer, 99) {
+                fails += 1;
+            }
+        }
+        assert_eq!(fails, MAX_INJECTIONS_PER_KEY);
+        assert_eq!(inj.injected(), MAX_INJECTIONS_PER_KEY as usize);
+        // a fresh key gets its own budget
+        assert!(inj.should_fail(FaultSite::Transfer, 100));
+    }
+
+    #[test]
+    fn rate_zero_never_fires() {
+        let inj = FaultInjector::new(&FaultPlan::new(5, 0.0));
+        assert!((0..1000).all(|k| !inj.should_fail(FaultSite::Kernel, k)));
+        assert_eq!(inj.injected(), 0);
+    }
+
+    #[test]
+    fn node_loss_fires_exactly_once_at_the_trigger() {
+        let plan = FaultPlan::new(3, 0.0).with_node_loss(1, 4, NodeLossMode::Survivable);
+        let inj = FaultInjector::new(&plan);
+        assert!(inj.take_node_loss(0).is_none());
+        assert!(inj.take_node_loss(3).is_none());
+        let spec = inj.take_node_loss(4).expect("fires at the trigger point");
+        assert_eq!(spec.node, 1);
+        assert_eq!(spec.mode, NodeLossMode::Survivable);
+        assert!(inj.take_node_loss(5).is_none(), "fires once");
+    }
+
+    #[test]
+    fn env_plan_parses_and_clamps() {
+        // from_env reads real process env; exercise the parse/clamp logic
+        // through explicit construction instead of mutating global state.
+        let p = FaultPlan { seed: 9, rate: 7.0, node_loss: None };
+        let inj = FaultInjector::new(&p);
+        assert!(inj.should_fail(FaultSite::Kernel, 0), "clamped rate 1.0 always fires");
+    }
+}

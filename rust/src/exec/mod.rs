@@ -20,22 +20,34 @@
 //! manager's spill writes, so workers mostly find inputs resident and
 //! never block on file I/O.
 //!
+//! The executor is fault-tolerant: an optional deterministic
+//! [`fault::FaultInjector`] fails kernels, transfers, and spill I/O at
+//! seeded sites (plus at most one scheduled whole-node loss), and the
+//! [`recovery`] module walks plan lineage backward from any lost
+//! `ObjectId` to rebuild the minimal recompute subgraph on surviving
+//! nodes — transient faults retry with bounded backoff, and chaos runs
+//! must converge to the bit-identical fault-free result.
+//!
 //! Each run also produces a [`feedback::RuntimeFeedback`]: the
 //! reconciliation of plan against observation (steal migrations, demand
 //! pulls, spill pressure, runtime replicas) that the session folds back
 //! into the scheduler's load model, so the *next* plan's Eq. 2
 //! simulation sees where load actually landed.
 
+pub mod fault;
 pub mod feedback;
 pub mod lifetime;
 pub mod prefetch;
 pub mod real_exec;
+pub mod recovery;
 pub mod sim_exec;
 pub mod task;
 
+pub use fault::{FaultInjector, FaultPlan, FaultSite, NodeLossMode, NodeLossSpec};
 pub use feedback::{NodeFeedback, RuntimeFeedback};
 pub use lifetime::Lifetimes;
 pub use prefetch::{PrefetchStats, Prefetcher};
 pub use real_exec::{NodeExecStats, RealExecutor, RealReport};
+pub use recovery::{ExecError, RecoveryStats};
 pub use sim_exec::{SimExecutor, SimReport, TraceEvent};
 pub use task::{Plan, Task, Transfer};

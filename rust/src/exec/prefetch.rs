@@ -65,6 +65,8 @@ use std::sync::{Arc, Condvar, Mutex};
 use crate::metrics::runtime_trace::{EventKind, FetchOrigin, RunRecorder};
 use crate::store::{MemoryManager, ObjectId, StoreSet};
 
+use super::fault::{FaultInjector, FaultSite};
+
 /// Per-node communication-overlap counters for one run.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct PrefetchStats {
@@ -152,6 +154,12 @@ pub struct Prefetcher {
     /// consulted after a transfer actually moved bytes — the
     /// nothing-to-do early returns in `pull` never touch it.
     recorder: Option<Arc<RunRecorder>>,
+    /// Deterministic fault injector ([`FaultSite::Transfer`]): an
+    /// injected background-pull failure drops the job before any byte
+    /// moves — the demand path (which retries with backoff) covers the
+    /// object, so the byte identity `prefetch + demand == net_in` holds
+    /// under chaos. `None` (the default) costs one `Option` test.
+    fault: Option<Arc<FaultInjector>>,
 }
 
 impl Prefetcher {
@@ -175,6 +183,7 @@ impl Prefetcher {
                 .collect(),
             byte_budget,
             recorder: None,
+            fault: None,
         }
     }
 
@@ -182,6 +191,13 @@ impl Prefetcher {
     /// emits a `Fetch(Prefetch)` event.
     pub fn with_recorder(mut self, r: Arc<RunRecorder>) -> Self {
         self.recorder = Some(r);
+        self
+    }
+
+    /// Arm deterministic fault injection on background pulls (chaos
+    /// runs; mirrors [`Prefetcher::with_recorder`]).
+    pub fn with_fault(mut self, f: Arc<FaultInjector>) -> Self {
+        self.fault = Some(f);
         self
     }
 
@@ -455,6 +471,18 @@ impl Prefetcher {
             // released mid-queue: pulling would resurrect dead bytes
             self.unrequest(node, obj);
             return;
+        }
+        if let Some(fj) = &self.fault {
+            if fj.should_fail(FaultSite::Transfer, obj) {
+                // injected transfer fault: the pull dies before moving a
+                // byte, exactly like a decline — un-dedup so the demand
+                // path (or a later warm trigger) recovers the object
+                if let Some(r) = &self.recorder {
+                    r.event(node, None, Some(obj), 0, EventKind::Fault);
+                }
+                self.unrequest(node, obj);
+                return;
+            }
         }
         let (landed, bytes) = match memory {
             Some(m) => {

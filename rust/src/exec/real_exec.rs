@@ -59,15 +59,33 @@
 //! Failure modes: a plan referencing an object that no store holds and no
 //! task produces (or a dependency cycle) is detected as soon as the
 //! executor goes fully idle — nothing running, nothing queued, work left —
-//! and fails immediately, naming the blocking `ObjectId`s. Parked workers
-//! re-check that condition every `deadlock_timeout`
+//! and fails with a typed [`ExecError`], naming the blocking `ObjectId`s.
+//! Parked workers re-check that condition every `deadlock_timeout`
 //! (`NUMS_DEADLOCK_TIMEOUT_SECS` overrides), so a missed wakeup can only
 //! delay detection, never hang the run; a long-running kernel never trips
 //! the watchdog (progress stalls are only fatal once nothing is running).
 //! Kernel panics are caught and surfaced as task errors rather than
 //! poisoning the worker pool.
+//!
+//! Fault tolerance ([`super::fault`], [`super::recovery`]): when a
+//! [`FaultInjector`] is armed (`RealExecutor::with_faults`; default off =
+//! no injector constructed, no hot-path work), deterministic failures are
+//! injected at kernel execution, demand transfers, spill I/O (inside the
+//! memory manager), and — once per run — a whole-node loss. Transient
+//! failures retry in place with bounded exponential backoff; a lost
+//! object triggers lineage recovery: the plan is walked backward from the
+//! missing `ObjectId` to its producing task and transitively to live
+//! inputs, and the minimal recompute subgraph is spliced back into the
+//! running dependency counts, placed on surviving nodes. The idle
+//! watchdog attempts that same recovery before declaring a deadlock, so
+//! a wiped node is a detour, not a panic; only a dead lineage (an object
+//! gone from every store that no task produces) escalates, as
+//! [`ExecError::UnrecoverableLoss`]. What recovery cost the run lands in
+//! [`RealReport::recovery_stats`] and, per wiped node,
+//! [`RealReport::node_losses`].
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
@@ -83,9 +101,11 @@ use crate::util::Stopwatch;
 
 use std::sync::Arc;
 
+use super::fault::{FaultInjector, FaultSite, NodeLossMode, NodeLossSpec};
 use super::feedback::RuntimeFeedback;
 use super::lifetime::Lifetimes;
 use super::prefetch::{PrefetchStats, Prefetcher};
+use super::recovery::{self, ExecError, RecoveryStats, MAX_TRANSIENT_RETRIES};
 use super::task::Plan;
 
 /// Per-node load-balance counters for one run.
@@ -131,6 +151,15 @@ pub struct RealReport {
     /// when the executor ran with tracing on; `None` otherwise. See
     /// [`crate::metrics::runtime_trace`].
     pub trace: Option<RunTrace>,
+    /// What surviving injected/real faults cost this run: retries,
+    /// backoff sleep, lineage-recomputed tasks/bytes, node losses.
+    /// All-zero ([`RecoveryStats::is_zero`]) on a fault-free run.
+    pub recovery_stats: RecoveryStats,
+    /// Whole-node losses this run absorbed: `(node, wiped objects with
+    /// their bytes)`. The session uses this to drop the dead copies from
+    /// the scheduler's [`crate::scheduler::ClusterState`] so the Eq. 2
+    /// accounting stays honest about where data really lives.
+    pub node_losses: Vec<(usize, Vec<(ObjectId, u64)>)>,
 }
 
 /// `NUMS_DEADLOCK_TIMEOUT_SECS` parsing (non-positive/garbage/absurd -> 30s).
@@ -171,12 +200,23 @@ struct ExecState {
     /// Per-task enqueue timestamp (seconds since the trace epoch), for
     /// span queue-wait. Sized `n_tasks` when tracing, empty otherwise.
     ready_at: Vec<f64>,
+    /// Tasks re-spliced by lineage recovery, awaiting re-execution; the
+    /// completion path pops membership to tally/trace the recompute.
+    recovering: HashSet<usize>,
+    /// Lineage-recovery tallies (retries/backoff live in `Shared` atomics
+    /// — they happen outside this lock).
+    recomputed_tasks: u64,
+    recomputed_bytes: u64,
+    /// Per wiped node: the objects (with bytes) its loss destroyed.
+    node_losses: Vec<(usize, Vec<(ObjectId, u64)>)>,
+    /// Recovery splices so far — bounds the recover/re-lose loop.
+    recovery_rounds: usize,
 }
 
 struct Shared {
     state: Mutex<ExecState>,
     cv: Condvar,
-    failed: Mutex<Option<String>>,
+    failed: Mutex<Option<ExecError>>,
     /// obj -> consumer task indices (with multiplicity), for every input
     /// that is not pre-resident.
     consumers: HashMap<ObjectId, Vec<usize>>,
@@ -194,11 +234,27 @@ struct Shared {
     /// `ready_at` against it (it already holds the state lock, so it
     /// cannot call back into the recorder).
     trace_epoch: Option<std::time::Instant>,
+    /// Nodes whose store was wiped by an injected node loss. A dead
+    /// node's workers finish the task in hand and exit; its queued work
+    /// drains to the overflow for survivors.
+    dead: Vec<AtomicBool>,
+    /// Fast any-node-dead flag so `pick` only consults the overflow on
+    /// the non-stealing path after an actual loss.
+    any_dead: AtomicBool,
+    /// Transient-failure retries delivered (kernel/transfer sites).
+    retries: AtomicU64,
+    /// Microseconds slept in retry backoff.
+    backoff_us: AtomicU64,
 }
 
 /// Floor of the adaptive batch-steal trigger: deques shallower than this
 /// are always stolen from one task at a time.
 const MIN_BATCH_STEAL: usize = 2;
+
+/// Most recovery splices one run will attempt before a still-vanishing
+/// object is declared lost for good — bounds any recover/re-lose loop a
+/// pathological environment could otherwise sustain.
+const MAX_RECOVERY_ROUNDS: usize = 64;
 
 /// Adaptive batch-steal trigger: a victim loses half its deque in one
 /// steal only when its depth is at least twice the mean ready depth per
@@ -267,11 +323,33 @@ impl Shared {
             st.ready_at[i] = epoch.elapsed().as_secs_f64();
         }
         let node = self.task_node[i];
-        if self.stealing && st.ready[node].len() >= self.spill_threshold {
+        // a dead node's deque would never drain: divert its work to the
+        // overflow, which every surviving worker consults after a loss
+        if self.is_dead(node)
+            || (self.stealing && st.ready[node].len() >= self.spill_threshold)
+        {
             st.overflow.push_back(i);
         } else {
             st.ready[node].push_back(i);
         }
+    }
+
+    /// Enqueue directly on `node`, bypassing the plan target — lineage
+    /// recovery re-placing a recompute task on a surviving node.
+    fn enqueue_on(&self, st: &mut ExecState, i: usize, node: usize) {
+        if let Some(epoch) = self.trace_epoch {
+            st.ready_at[i] = epoch.elapsed().as_secs_f64();
+        }
+        st.ready[node].push_back(i);
+    }
+
+    fn is_dead(&self, node: usize) -> bool {
+        self.dead[node].load(Ordering::Relaxed)
+    }
+
+    fn mark_dead(&self, node: usize) {
+        self.dead[node].store(true, Ordering::SeqCst);
+        self.any_dead.store(true, Ordering::SeqCst);
     }
 
     /// Next move for a worker on `me`: local front, then overflow, then
@@ -285,6 +363,13 @@ impl Shared {
             return Pick::Run(i);
         }
         if !self.stealing {
+            // no stealing, but after a node loss the overflow carries the
+            // dead node's diverted work: survivors must still drain it
+            if self.any_dead.load(Ordering::Relaxed) {
+                if let Some(i) = st.overflow.pop_front() {
+                    return Pick::Run(i);
+                }
+            }
             return Pick::Idle;
         }
         if let Some(i) = st.overflow.pop_front() {
@@ -351,10 +436,10 @@ impl Shared {
         Some(first)
     }
 
-    fn fail(&self, msg: String) {
+    fn fail(&self, err: ExecError) {
         let mut f = self.failed.lock().unwrap();
         if f.is_none() {
-            *f = Some(msg);
+            *f = Some(err);
         }
         drop(f);
         self.cv.notify_all();
@@ -391,6 +476,96 @@ fn missing_inputs(
     missing
 }
 
+/// Total output bytes of task `i` (f64 blocks).
+fn out_bytes_of(plan: &Plan, i: usize) -> u64 {
+    plan.tasks[i]
+        .outputs
+        .iter()
+        .map(|(_, s)| s.iter().map(|&d| d as u64).product::<u64>() * 8)
+        .sum()
+}
+
+/// Current resident bytes per node — the load array recovery placement
+/// balances against (read without the state lock held).
+fn node_loads(stores: &StoreSet, k: usize) -> Vec<u64> {
+    (0..k).map(|n| stores.node_bytes(n)).collect()
+}
+
+/// Objects a recovery splice must treat as absent: the unavailable roots
+/// plus every unavailable output of the recompute subgraph (its internal
+/// intermediates). Computed *without* the state lock — `available` reads
+/// store/manager state.
+fn gone_set(
+    plan: &Plan,
+    tasks: &[usize],
+    roots: &[ObjectId],
+    available: &dyn Fn(ObjectId) -> bool,
+) -> HashSet<ObjectId> {
+    let mut gone: HashSet<ObjectId> =
+        roots.iter().copied().filter(|&o| !available(o)).collect();
+    for &r in tasks {
+        for (o, _) in &plan.tasks[r].outputs {
+            if !available(*o) {
+                gone.insert(*o);
+            }
+        }
+    }
+    gone
+}
+
+/// Splice a recompute subgraph back into the running dependency counts.
+/// Caller holds the state lock. `gone` objects leave `produced` (so
+/// diagnostics, warm pulls, and dependency math stay honest); completed
+/// tasks in `tasks` are reset with their unmet-dep counts recomputed
+/// against current availability, and immediately-ready ones are placed
+/// on surviving nodes by min-load greedy ([`recovery::place_on_survivors`],
+/// charging `loads`). Tasks already pending or running are left alone —
+/// their outputs are on the way. The normal completion path re-gates
+/// everything downstream: a recompute producer finishing decrements its
+/// consumers exactly like the first execution did (the `deps > 0` guard
+/// makes the re-decrements safe for consumers that already ran).
+fn splice_recovery(
+    shared: &Shared,
+    st: &mut ExecState,
+    plan: &Plan,
+    tasks: &[usize],
+    gone: &HashSet<ObjectId>,
+    loads: &mut [u64],
+) {
+    for &o in gone {
+        st.produced.remove(&o);
+    }
+    let mut reset: Vec<usize> = Vec::new();
+    for &r in tasks {
+        if !st.completed[r] {
+            continue;
+        }
+        st.completed[r] = false;
+        st.remaining += 1;
+        st.recovering.insert(r);
+        reset.push(r);
+    }
+    let alive: Vec<bool> = shared
+        .dead
+        .iter()
+        .map(|d| !d.load(Ordering::Relaxed))
+        .collect();
+    for &r in &reset {
+        let need = plan.tasks[r]
+            .inputs
+            .iter()
+            .filter(|o| !st.produced.contains(o))
+            .count();
+        st.deps[r] = need;
+        if need == 0 {
+            match recovery::place_on_survivors(out_bytes_of(plan, r), loads, &alive) {
+                Some(node) => shared.enqueue_on(st, r, node),
+                None => st.overflow.push_back(r),
+            }
+        }
+    }
+}
+
 pub struct RealExecutor {
     pub topo: Topology,
     pub backend: Arc<Backend>,
@@ -424,6 +599,12 @@ pub struct RealExecutor {
     /// allocated, and results are bit-identical to an untraced run. On,
     /// [`RealReport::trace`] carries the full [`RunTrace`].
     pub tracing: bool,
+    /// Deterministic fault injector (default `None` = faults off: no
+    /// injector is constructed and every injection site is an `Option`
+    /// test, exactly like the tracing recorder). Armed via
+    /// [`RealExecutor::with_faults`] from `SessionConfig::fault_plan` or
+    /// the `NUMS_FAULT_SEED`/`NUMS_FAULT_RATE` environment overrides.
+    pub fault: Option<Arc<FaultInjector>>,
 }
 
 impl RealExecutor {
@@ -444,6 +625,7 @@ impl RealExecutor {
             memory: None,
             tier: KernelTier::detect(),
             tracing: false,
+            fault: None,
         }
     }
 
@@ -477,6 +659,13 @@ impl RealExecutor {
     /// Toggle run tracing (see [`RealExecutor::tracing`]).
     pub fn with_tracing(mut self, on: bool) -> Self {
         self.tracing = on;
+        self
+    }
+
+    /// Arm deterministic fault injection (see [`RealExecutor::fault`]).
+    /// `None` leaves faults off — the zero-cost default.
+    pub fn with_faults(mut self, plan: Option<super::fault::FaultPlan>) -> Self {
+        self.fault = plan.map(|p| Arc::new(FaultInjector::new(&p)));
         self
     }
 
@@ -589,6 +778,11 @@ impl RealExecutor {
                 live,
                 released: Vec::new(),
                 ready_at: vec![0.0; if recorder.is_some() { n_tasks } else { 0 }],
+                recovering: HashSet::new(),
+                recomputed_tasks: 0,
+                recomputed_bytes: 0,
+                node_losses: Vec::new(),
+                recovery_rounds: 0,
             }),
             cv: Condvar::new(),
             failed: Mutex::new(None),
@@ -599,6 +793,10 @@ impl RealExecutor {
             stealing: self.stealing,
             spill_threshold: (2 * self.threads_per_node).max(2),
             trace_epoch: recorder.as_ref().map(|r| r.epoch()),
+            dead: (0..k).map(|_| AtomicBool::new(false)).collect(),
+            any_dead: AtomicBool::new(false),
+            retries: AtomicU64::new(0),
+            backoff_us: AtomicU64::new(0),
         };
         // seed the deques with initially-ready tasks, in plan order
         {
@@ -615,6 +813,23 @@ impl RealExecutor {
         let backend = self.backend.as_ref();
         let topo = &self.topo;
         let shared = &shared;
+        let will_produce = &will_produce;
+        // fault injection: absent = zero cost (every site is an Option
+        // test); the manager carries its own handle for the spill sites
+        let fault_ref: Option<&FaultInjector> = self.fault.as_deref();
+        if let (Some(mgr), Some(fj)) = (memory, &self.fault) {
+            mgr.attach_fault(Arc::clone(fj));
+        }
+        // "is this object in some live store (or spill file) right now?"
+        // — the availability oracle the lineage walk leans on. Takes
+        // store/manager locks: never call with the state lock held.
+        let available = move |o: ObjectId| -> bool {
+            match memory {
+                Some(m) => m.holds(stores, o),
+                None => stores.fetch(o).is_some(),
+            }
+        };
+        let available = &available;
 
         // --- communication overlap ------------------------------------
         // One transfer thread per node: background input pulls plus the
@@ -628,6 +843,9 @@ impl RealExecutor {
             let mut pf = Prefetcher::new(k, pf_budget);
             if let Some(r) = &recorder {
                 pf = pf.with_recorder(Arc::clone(r));
+            }
+            if let Some(fj) = &self.fault {
+                pf = pf.with_fault(Arc::clone(fj));
             }
             Arc::new(pf)
         });
@@ -704,6 +922,105 @@ impl RealExecutor {
             }
         }
 
+        // whole-node loss: wipe the node's store per the spec's mode, mark
+        // it dead (its workers finish the task in hand and exit, its
+        // queued work drains to the overflow), and proactively splice the
+        // recompute subgraph for every wiped object someone still needs.
+        // Runs on whichever worker's completion crossed the trigger —
+        // never with the state lock held on entry.
+        let handle_node_loss = move |spec: NodeLossSpec| {
+            shared.mark_dead(spec.node);
+            shared.cv.notify_all(); // dead node's parked workers wake to exit
+            // objects nothing in the plan consumes = terminal results
+            let consumed: HashSet<ObjectId> = plan
+                .tasks
+                .iter()
+                .flat_map(|t| t.inputs.iter().copied())
+                .collect();
+            let spare = |o: ObjectId| -> bool {
+                match spec.mode {
+                    NodeLossMode::Total => false,
+                    NodeLossMode::Survivable => {
+                        // pinned outputs, terminal results, and sole-copy
+                        // externals (no lineage — modeling data the
+                        // driver can re-put) survive; everything else is
+                        // recomputable and fair game
+                        lt.is_pinned(o)
+                            || pins.contains(&o)
+                            || (will_produce.contains(&o) && !consumed.contains(&o))
+                            || (!will_produce.contains(&o)
+                                && !(0..k)
+                                    .any(|n| n != spec.node && stores.contains(n, o)))
+                    }
+                }
+            };
+            let lost: Vec<(ObjectId, u64)> = match memory {
+                Some(m) => m.wipe_node(stores, spec.node, &spare),
+                None => stores
+                    .objects(spec.node)
+                    .into_iter()
+                    .filter(|&o| !spare(o))
+                    .filter_map(|o| {
+                        stores.remove(spec.node, o).map(|b| (o, b.bytes()))
+                    })
+                    .collect(),
+            };
+            let lost_bytes: u64 = lost.iter().map(|&(_, b)| b).sum();
+            if let Some(r) = recorder_ref {
+                r.event(spec.node, None, None, lost_bytes, EventKind::NodeLoss);
+            }
+            // a wiped object with a surviving replica is not gone; of the
+            // truly gone, only those an incomplete task still needs are
+            // worth recomputing now (the lazy vanish path backstops any
+            // this snapshot misses)
+            let gone_objs: Vec<ObjectId> = lost
+                .iter()
+                .map(|&(o, _)| o)
+                .filter(|&o| !available(o))
+                .collect();
+            let completed_snap: Vec<bool> =
+                shared.state.lock().unwrap().completed.clone();
+            let needed: Vec<ObjectId> = gone_objs
+                .iter()
+                .copied()
+                .filter(|o| {
+                    shared
+                        .consumers
+                        .get(o)
+                        .map_or(false, |cs| cs.iter().any(|&c| !completed_snap[c]))
+                })
+                .collect();
+            let redo = if needed.is_empty() {
+                Vec::new()
+            } else {
+                match recovery::plan_recompute(plan, &needed, available) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        shared.fail(e);
+                        return;
+                    }
+                }
+            };
+            let gone = gone_set(plan, &redo, &gone_objs, available);
+            let mut loads = node_loads(stores, k);
+            let mut st = shared.state.lock().unwrap();
+            // the dead node's queued work goes to survivors
+            while let Some(t) = st.ready[spec.node].pop_front() {
+                st.overflow.push_back(t);
+            }
+            st.node_losses.push((spec.node, lost));
+            for &o in &gone_objs {
+                st.produced.remove(&o);
+            }
+            if !redo.is_empty() {
+                st.recovery_rounds += 1;
+                splice_recovery(shared, &mut st, plan, &redo, &gone, &mut loads);
+            }
+            drop(st);
+            shared.cv.notify_all();
+        };
+        let handle_node_loss = &handle_node_loss;
+
         std::thread::scope(|scope| {
             if let Some(pf) = prefetcher_ref {
                 for node in 0..k {
@@ -731,6 +1048,12 @@ impl RealExecutor {
                             recorder_ref.map(|_| SpanRing::new(n_tasks));
                         'work: loop {
                             if shared.has_failed() {
+                                break 'work;
+                            }
+                            if shared.is_dead(me) {
+                                // this node's store was wiped: pick up
+                                // nothing new here (survivors drain the
+                                // diverted work)
                                 break 'work;
                             }
                             let mut st = shared.state.lock().unwrap();
@@ -777,32 +1100,92 @@ impl RealExecutor {
                                 let all_empty = st.overflow.is_empty()
                                     && st.ready.iter().all(|q| q.is_empty());
                                 if st.running == 0 && all_empty {
+                                    // recovery trigger first, panic second:
+                                    // a stuck run whose missing inputs
+                                    // still have lineage is a recompute,
+                                    // not a deadlock
+                                    if st.recovery_rounds < MAX_RECOVERY_ROUNDS {
+                                        let stuck = missing_inputs(plan, &st, None);
+                                        drop(st);
+                                        // never-satisfiable inputs were never
+                                        // present — that is the provable
+                                        // deadlock below, not a loss with
+                                        // lineage to walk
+                                        let lost: Vec<ObjectId> = stuck
+                                            .into_iter()
+                                            .filter(|&o| {
+                                                !shared.never_satisfied.contains(&o)
+                                                    && !available(o)
+                                            })
+                                            .collect();
+                                        let mut spliced = false;
+                                        if !lost.is_empty() {
+                                            match recovery::plan_recompute(
+                                                plan, &lost, available,
+                                            ) {
+                                                Ok(redo) if !redo.is_empty() => {
+                                                    let gone = gone_set(
+                                                        plan, &redo, &lost,
+                                                        available,
+                                                    );
+                                                    let mut loads =
+                                                        node_loads(stores, k);
+                                                    let mut st2 =
+                                                        shared.state.lock().unwrap();
+                                                    st2.recovery_rounds += 1;
+                                                    splice_recovery(
+                                                        shared, &mut st2, plan,
+                                                        &redo, &gone, &mut loads,
+                                                    );
+                                                    drop(st2);
+                                                    shared.cv.notify_all();
+                                                    spliced = true;
+                                                }
+                                                Ok(_) => {}
+                                                Err(e) => {
+                                                    shared.fail(e);
+                                                    break 'work;
+                                                }
+                                            }
+                                        }
+                                        if spliced {
+                                            continue;
+                                        }
+                                        // nothing recoverable: re-confirm the
+                                        // stuck condition before declaring death
+                                        st = shared.state.lock().unwrap();
+                                        let still_stuck = st.remaining > 0
+                                            && st.running == 0
+                                            && st.overflow.is_empty()
+                                            && st.ready.iter().all(|q| q.is_empty());
+                                        if !still_stuck {
+                                            drop(st);
+                                            continue;
+                                        }
+                                    }
                                     let never = missing_inputs(
                                         plan,
                                         &st,
                                         Some(&shared.never_satisfied),
                                     );
-                                    let msg = if never.is_empty() {
+                                    let err = if never.is_empty() {
                                         // every missing input has a producer,
                                         // yet nothing can run: a cycle
                                         let all = missing_inputs(plan, &st, None);
-                                        format!(
-                                            "deadlock: dependency cycle among plan \
-                                             tasks; unproduced inputs {all:?} \
-                                             (idle re-check window: \
-                                             NUMS_DEADLOCK_TIMEOUT_SECS)"
-                                        )
+                                        ExecError::Deadlock {
+                                            plan_tasks: n_tasks,
+                                            missing: all,
+                                            cycle: true,
+                                        }
                                     } else {
-                                        format!(
-                                            "deadlock: {n_tasks}-task plan is \
-                                             incomplete and blocked on input objects \
-                                             {never:?} that no store holds and no \
-                                             task produces (idle re-check window: \
-                                             NUMS_DEADLOCK_TIMEOUT_SECS)"
-                                        )
+                                        ExecError::Deadlock {
+                                            plan_tasks: n_tasks,
+                                            missing: never,
+                                            cycle: false,
+                                        }
                                     };
                                     drop(st);
-                                    shared.fail(msg);
+                                    shared.fail(err);
                                     break 'work;
                                 }
                                 // park until something completes; the timeout
@@ -863,6 +1246,44 @@ impl RealExecutor {
                             let mut inputs: Vec<Arc<Block>> =
                                 Vec::with_capacity(task.inputs.len());
                             for &obj in &task.inputs {
+                                // injected transfer fault: the pull "fails"
+                                // before any byte moves; backoff and re-ask —
+                                // the injector's per-key cap guarantees the
+                                // bounded retry wins, and only then does the
+                                // real (exactly-once-accounted) pull below run
+                                if let Some(fj) = fault_ref {
+                                    let mut attempt = 0u32;
+                                    while !stores.contains(me, obj)
+                                        && fj.should_fail(FaultSite::Transfer, obj)
+                                    {
+                                        if let Some(r) = recorder_ref {
+                                            r.event(
+                                                me,
+                                                None,
+                                                Some(obj),
+                                                0,
+                                                EventKind::Fault,
+                                            );
+                                        }
+                                        let d = recovery::backoff_delay(attempt);
+                                        shared.backoff_us.fetch_add(
+                                            d.as_micros() as u64,
+                                            Ordering::Relaxed,
+                                        );
+                                        shared.retries.fetch_add(1, Ordering::Relaxed);
+                                        std::thread::sleep(d);
+                                        if let Some(r) = recorder_ref {
+                                            r.event(
+                                                me,
+                                                None,
+                                                Some(obj),
+                                                0,
+                                                EventKind::Retry,
+                                            );
+                                        }
+                                        attempt += 1;
+                                    }
+                                }
                                 let before = moved;
                                 let got = match memory {
                                     Some(mgr) => {
@@ -924,35 +1345,126 @@ impl RealExecutor {
                                 }
                             }
                             if let Some(obj) = vanished {
-                                // set failed before releasing `running`: a
-                                // parked worker's heartbeat must never see
-                                // running==0 with no failure recorded and
-                                // mask this error with a bogus deadlock
-                                shared.fail(format!("object {obj} vanished (task {idx})"));
-                                shared.state.lock().unwrap().running -= 1;
-                                break 'work;
+                                // an input disappeared between readiness and
+                                // collection — a wiped node, a corrupt spill
+                                // readback, a lost sole copy. Lineage
+                                // recovery: re-gate this task on the object's
+                                // producer and splice the minimal recompute
+                                // subgraph. `running` stays held until the
+                                // splice lands (or the failure is recorded),
+                                // so a parked worker's heartbeat can never
+                                // see running==0 mid-recovery and declare a
+                                // bogus deadlock.
+                                drop(inputs);
+                                if available(obj) {
+                                    // raced back into residency (late
+                                    // readback/transfer): just retry the task
+                                    let mut st = shared.state.lock().unwrap();
+                                    st.running -= 1;
+                                    shared.enqueue(&mut st, idx);
+                                    drop(st);
+                                    shared.cv.notify_all();
+                                    continue 'work;
+                                }
+                                match recovery::plan_recompute(
+                                    plan,
+                                    &[obj],
+                                    available,
+                                ) {
+                                    Err(e) => {
+                                        shared.fail(e);
+                                        shared.state.lock().unwrap().running -= 1;
+                                        break 'work;
+                                    }
+                                    Ok(redo) => {
+                                        let gone = gone_set(
+                                            plan, &redo, &[obj], available,
+                                        );
+                                        let mut loads = node_loads(stores, k);
+                                        let mut st = shared.state.lock().unwrap();
+                                        if st.recovery_rounds >= MAX_RECOVERY_ROUNDS {
+                                            drop(st);
+                                            shared.fail(ExecError::ObjectLost {
+                                                obj,
+                                                task: idx,
+                                            });
+                                            shared.state.lock().unwrap().running -= 1;
+                                            break 'work;
+                                        }
+                                        st.recovery_rounds += 1;
+                                        // re-gate this task on the missing
+                                        // object: its producer's completion
+                                        // decrements this extra dep through
+                                        // the normal consumer path
+                                        st.deps[idx] += 1;
+                                        splice_recovery(
+                                            shared, &mut st, plan, &redo, &gone,
+                                            &mut loads,
+                                        );
+                                        st.running -= 1;
+                                        drop(st);
+                                        shared.cv.notify_all();
+                                        continue 'work;
+                                    }
+                                }
                             }
                             let in_refs: Vec<&Block> =
                                 inputs.iter().map(|b| b.as_ref()).collect();
+                            // injected kernel fault: fails *before* the
+                            // kernel runs (no partial side effects to undo),
+                            // retried in place with bounded backoff. Real
+                            // kernel panics below are NOT retried — a
+                            // deterministic panic would just panic again.
+                            let mut injected_failure: Option<Result<Vec<Block>>> = None;
+                            if let Some(fj) = fault_ref {
+                                let mut attempt = 0u32;
+                                while fj.should_fail(FaultSite::Kernel, idx as u64) {
+                                    if let Some(r) = recorder_ref {
+                                        r.event(me, None, None, 0, EventKind::Fault);
+                                    }
+                                    if attempt >= MAX_TRANSIENT_RETRIES {
+                                        injected_failure = Some(Err(anyhow!(
+                                            "injected kernel fault exhausted \
+                                             {MAX_TRANSIENT_RETRIES} retries"
+                                        )));
+                                        break;
+                                    }
+                                    let d = recovery::backoff_delay(attempt);
+                                    shared.backoff_us.fetch_add(
+                                        d.as_micros() as u64,
+                                        Ordering::Relaxed,
+                                    );
+                                    shared.retries.fetch_add(1, Ordering::Relaxed);
+                                    std::thread::sleep(d);
+                                    if let Some(r) = recorder_ref {
+                                        r.event(me, None, None, 0, EventKind::Retry);
+                                    }
+                                    attempt += 1;
+                                }
+                            }
                             // catch kernel panics (e.g. cholesky on an
                             // indefinite block): a panicking task must fail
                             // the run, not leave `running` pinned and the
                             // pool hung
-                            let executed = std::panic::catch_unwind(
-                                std::panic::AssertUnwindSafe(|| {
-                                    backend.execute(&task.kernel, &in_refs, &ctx)
-                                }),
-                            )
-                            .unwrap_or_else(|p| {
-                                let why = p
-                                    .downcast_ref::<String>()
-                                    .cloned()
-                                    .or_else(|| {
-                                        p.downcast_ref::<&str>().map(|s| s.to_string())
-                                    })
-                                    .unwrap_or_else(|| "kernel panicked".into());
-                                Err(anyhow!("panic: {why}"))
-                            });
+                            let executed = if let Some(err) = injected_failure {
+                                err
+                            } else {
+                                std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| {
+                                        backend.execute(&task.kernel, &in_refs, &ctx)
+                                    }),
+                                )
+                                .unwrap_or_else(|p| {
+                                    let why = p
+                                        .downcast_ref::<String>()
+                                        .cloned()
+                                        .or_else(|| {
+                                            p.downcast_ref::<&str>().map(|s| s.to_string())
+                                        })
+                                        .unwrap_or_else(|| "kernel panicked".into());
+                                    Err(anyhow!("panic: {why}"))
+                                })
+                            };
                             match executed {
                                 Ok(outs) => {
                                     for ((obj, _), block) in task.outputs.iter().zip(outs) {
@@ -999,6 +1511,21 @@ impl RealExecutor {
                                         st.stats[me].tasks_stolen += 1;
                                         st.stats[me].steal_bytes += moved;
                                     }
+                                    // a lineage-recovery re-execution: tally
+                                    // it (and trace it, after unlocking) so
+                                    // recovery_stats reconcile with the
+                                    // recompute trace events byte-for-byte
+                                    let recovered = st.recovering.remove(&idx);
+                                    let re_bytes = if recovered {
+                                        out_bytes_of(plan, idx)
+                                    } else {
+                                        0
+                                    };
+                                    if recovered {
+                                        st.recomputed_tasks += 1;
+                                        st.recomputed_bytes += re_bytes;
+                                    }
+                                    let completed_now = n_tasks - st.remaining;
                                     // tasks brought within ≤ 1 unmet dep:
                                     // their available inputs can start
                                     // moving now (the still-unmet one
@@ -1052,8 +1579,23 @@ impl RealExecutor {
                                     st.released.extend_from_slice(&dead);
                                     drop(st);
                                     shared.cv.notify_all();
+                                    if recovered {
+                                        if let Some(r) = recorder_ref {
+                                            r.event(
+                                                me,
+                                                None,
+                                                None,
+                                                re_bytes,
+                                                EventKind::Recompute,
+                                            );
+                                        }
+                                    }
                                     if let Some(pf) = prefetcher_ref {
                                         for &(c, obj) in &warm {
+                                            // never feed a wiped node's store
+                                            if shared.is_dead(shared.task_node[c]) {
+                                                continue;
+                                            }
                                             pf.request_pull(
                                                 shared.task_node[c],
                                                 obj,
@@ -1071,14 +1613,24 @@ impl RealExecutor {
                                             mgr.release(stores, obj);
                                         }
                                     }
+                                    // scheduled whole-node loss: fires on the
+                                    // completion that crosses the trigger
+                                    if let Some(fj) = fault_ref {
+                                        if let Some(spec) =
+                                            fj.take_node_loss(completed_now)
+                                        {
+                                            handle_node_loss(spec);
+                                        }
+                                    }
                                 }
                                 Err(e) => {
                                     // fail first, then release `running`
                                     // (same masking hazard as above)
-                                    shared.fail(format!(
-                                        "task {idx} ({}): {e}",
-                                        task.kernel
-                                    ));
+                                    shared.fail(ExecError::TaskFailed {
+                                        task: idx,
+                                        kernel: format!("{}", task.kernel),
+                                        reason: e.to_string(),
+                                    });
                                     shared.state.lock().unwrap().running -= 1;
                                     break 'work;
                                 }
@@ -1128,12 +1680,27 @@ impl RealExecutor {
             if let (Some(mgr), true) = (memory, recorder.is_some()) {
                 mgr.detach_trace();
             }
-            return Err(anyhow!(err));
+            if let (Some(mgr), true) = (memory, self.fault.is_some()) {
+                mgr.detach_fault();
+            }
+            // the typed ExecError rides the anyhow boundary as a payload:
+            // Session::run callers can downcast_ref::<ExecError>() it back
+            return Err(err.into());
         }
-        let (stats, released) = {
+        let (stats, released, recovery_stats, node_losses) = {
             let st = shared.state.lock().unwrap();
-            (st.stats.clone(), st.released.clone())
+            let rs = RecoveryStats {
+                retries: shared.retries.load(Ordering::Relaxed),
+                backoff_secs: shared.backoff_us.load(Ordering::Relaxed) as f64 / 1e6,
+                recomputed_tasks: st.recomputed_tasks,
+                recomputed_bytes: st.recomputed_bytes,
+                node_losses_survived: st.node_losses.len() as u64,
+            };
+            (st.stats.clone(), st.released.clone(), rs, st.node_losses.clone())
         };
+        if let (Some(mgr), true) = (memory, self.fault.is_some()) {
+            mgr.detach_fault();
+        }
         if let Some(mgr) = memory {
             // a prefetch racing a release can resurrect a dead
             // intermediate as a replica; with the transfer threads
@@ -1185,6 +1752,8 @@ impl RealExecutor {
             gc_released: released,
             feedback,
             trace,
+            recovery_stats,
+            node_losses,
         })
     }
 }
@@ -1496,5 +2065,101 @@ mod tests {
         assert_eq!(rep.node_stats[0].tasks_run, 8);
         assert_eq!(rep.node_stats[1].tasks_run, 0);
         assert!(rep.node_stats.iter().all(|s| s.tasks_stolen == 0));
+    }
+
+    fn chain_plan(len: usize, target: usize) -> Plan {
+        Plan {
+            tasks: (0..len)
+                .map(|i| Task {
+                    kernel: Kernel::Scale(3.0),
+                    inputs: vec![if i == 0 { 1 } else { 9 + i as u64 }],
+                    in_shapes: vec![vec![1, 1]],
+                    outputs: vec![(10 + i as u64, vec![1, 1])],
+                    target,
+                    transfers: vec![],
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn injected_transient_faults_retry_to_the_fault_free_result() {
+        use crate::exec::fault::FaultPlan;
+        let run = |plan_cfg: Option<FaultPlan>| {
+            let topo = Topology::new(2, 1, SystemMode::Ray);
+            let ex = RealExecutor::new(topo, Arc::new(Backend::native()))
+                .with_faults(plan_cfg);
+            let stores = StoreSet::new(2);
+            stores.put(0, 1, Arc::new(Block::from_vec(&[1, 1], vec![2.0])));
+            let plan = chain_plan(3, 0);
+            let rep = ex.run(&plan, &stores).unwrap();
+            (rep, stores.fetch(12).unwrap().as_ref().clone())
+        };
+        let (clean, clean_out) = run(None);
+        assert!(clean.recovery_stats.is_zero(), "fault-free run must cost nothing");
+        // rate 1.0: every kernel/transfer decision fails (twice, per the
+        // injector cap) and is retried through backoff
+        let (chaos, chaos_out) = run(Some(FaultPlan::new(11, 1.0)));
+        assert!(chaos.recovery_stats.retries > 0, "rate-1.0 chaos must retry");
+        assert!(chaos.recovery_stats.backoff_secs > 0.0);
+        assert_eq!(chaos.recovery_stats.node_losses_survived, 0);
+        assert_eq!(
+            chaos_out.max_abs_diff(&clean_out),
+            0.0,
+            "injected transients changed numerics"
+        );
+    }
+
+    #[test]
+    fn survivable_node_loss_recovers_by_lineage_recompute() {
+        use crate::exec::fault::{FaultPlan, NodeLossMode};
+        // 5-task chain pinned to node 1, seed on node 0; after 2
+        // completions node 1 dies and its intermediates are wiped. The
+        // lineage walk must rebuild the missing prefix on node 0 and the
+        // run must finish with the exact fault-free result.
+        let topo = Topology::new(2, 1, SystemMode::Ray);
+        let fp = FaultPlan::new(0, 0.0).with_node_loss(1, 2, NodeLossMode::Survivable);
+        let ex = RealExecutor::new(topo, Arc::new(Backend::native()))
+            .with_stealing(false)
+            .with_faults(Some(fp));
+        let stores = StoreSet::new(2);
+        stores.put(0, 1, Arc::new(Block::from_vec(&[1, 1], vec![2.0])));
+        let plan = chain_plan(5, 1);
+        let rep = ex.run(&plan, &stores).unwrap();
+        assert_eq!(rep.recovery_stats.node_losses_survived, 1);
+        assert!(
+            rep.recovery_stats.recomputed_tasks > 0,
+            "wiped intermediates must be recomputed, got {:?}",
+            rep.recovery_stats
+        );
+        assert_eq!(rep.node_losses.len(), 1);
+        assert_eq!(rep.node_losses[0].0, 1, "node 1 was the one lost");
+        let out = stores.fetch(14).unwrap();
+        assert_eq!(out.buf(), &[2.0 * 243.0], "recovery changed the result");
+    }
+
+    #[test]
+    fn total_node_loss_of_a_sole_copy_input_is_a_typed_unrecoverable_loss() {
+        use crate::exec::fault::{FaultPlan, NodeLossMode};
+        // the external seed lives on the node that dies in Total mode:
+        // no lineage can rebuild it — typed error, not a deadlock hang
+        let topo = Topology::new(2, 1, SystemMode::Ray);
+        let fp = FaultPlan::new(0, 0.0).with_node_loss(0, 1, NodeLossMode::Total);
+        let mut ex = RealExecutor::new(topo, Arc::new(Backend::native()))
+            .with_stealing(false)
+            .with_faults(Some(fp));
+        ex.deadlock_timeout = Duration::from_millis(50);
+        let stores = StoreSet::new(2);
+        stores.put(0, 1, Arc::new(Block::from_vec(&[1, 1], vec![2.0])));
+        let plan = chain_plan(5, 0);
+        let err = ex.run(&plan, &stores).unwrap_err();
+        let typed = err
+            .downcast_ref::<ExecError>()
+            .expect("typed error must survive the anyhow boundary");
+        assert!(
+            matches!(typed, ExecError::UnrecoverableLoss { .. }),
+            "expected UnrecoverableLoss, got {typed:?}"
+        );
+        assert!(err.to_string().contains("unrecoverable loss"), "{err}");
     }
 }

@@ -1,0 +1,348 @@
+//! Lineage-based recovery: typed executor errors, retry/backoff policy,
+//! and the recompute-subgraph walk.
+//!
+//! This is the survival half of the resilience story
+//! ([`crate::exec::fault`] is the failure half, and the Ray lineage
+//! model the paper leans on is the blueprint): the plan *is* the
+//! lineage. Every produced object names its producing task, so when an
+//! object is lost — a wiped node, a corrupt spill file, an evicted
+//! sole copy — the executor walks the plan backward from each missing
+//! `ObjectId` to its producer and transitively to live inputs
+//! ([`plan_recompute`]), yielding a minimal recompute subgraph in plan
+//! order that can be spliced back into the running executor's
+//! dependency counts. Placement of recomputed tasks goes to surviving
+//! nodes by the same min-load greedy the Eq. 2 memory term encodes
+//! ([`place_on_survivors`]); the session afterwards reconciles the
+//! `ClusterState` so planning stays honest about where copies really
+//! live.
+//!
+//! Transient failures (injected kernel faults, failed pulls, spill I/O)
+//! never reach the lineage walk: they retry in place with bounded
+//! exponential backoff ([`backoff_delay`], [`MAX_TRANSIENT_RETRIES`]).
+//! Only loss of data escalates; and loss of data *without* lineage — a
+//! pre-resident input no task produces, gone from every store —
+//! escalates to [`ExecError::UnrecoverableLoss`] naming the dead
+//! lineage chain, instead of deadlocking the pool.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::time::Duration;
+
+use crate::store::ObjectId;
+
+use super::task::Plan;
+
+/// What recovering from injected/real faults cost one run. All zeros
+/// (the [`RecoveryStats::is_zero`] check) on a fault-free run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RecoveryStats {
+    /// Transient failures that were retried (kernel, transfer, spill).
+    pub retries: u64,
+    /// Total wall-clock spent sleeping in retry backoff.
+    pub backoff_secs: f64,
+    /// Tasks re-executed through lineage recovery.
+    pub recomputed_tasks: u64,
+    /// Output bytes those re-executions produced.
+    pub recomputed_bytes: u64,
+    /// Whole-node losses the run survived.
+    pub node_losses_survived: u64,
+}
+
+impl RecoveryStats {
+    pub fn is_zero(&self) -> bool {
+        self.retries == 0
+            && self.backoff_secs == 0.0
+            && self.recomputed_tasks == 0
+            && self.recomputed_bytes == 0
+            && self.node_losses_survived == 0
+    }
+}
+
+/// Typed real-executor failure, returned through `Session::run` (the
+/// vendored `anyhow` shim keeps the original value downcastable). The
+/// `Display` wording deliberately preserves the diagnostic strings the
+/// stringy error paths used to emit, so existing message-matching
+/// callers and tests keep working.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ExecError {
+    /// Nothing running, nothing queued, tasks left — and no recovery
+    /// possible. `missing` names the blocking inputs; `cycle` is true
+    /// when every missing input has a producer (a dependency cycle).
+    Deadlock {
+        plan_tasks: usize,
+        missing: Vec<ObjectId>,
+        cycle: bool,
+    },
+    /// A kernel failed (panic or kernel error) beyond retry.
+    TaskFailed {
+        task: usize,
+        kernel: String,
+        reason: String,
+    },
+    /// An input vanished mid-collection and lineage recovery could not
+    /// be attempted or did not apply.
+    ObjectLost { obj: ObjectId, task: usize },
+    /// An object is gone from every store and has no producing task —
+    /// the lineage walk dead-ends. The chain runs from the object the
+    /// executor needed to the unproducible ancestor.
+    UnrecoverableLoss { lineage: Vec<ObjectId> },
+    /// A spill file could not be written after retries.
+    SpillIo { obj: ObjectId, reason: String },
+}
+
+impl fmt::Display for ExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecError::Deadlock { plan_tasks, missing, cycle } => {
+                if *cycle {
+                    write!(
+                        f,
+                        "deadlock: dependency cycle among plan tasks; unproduced inputs \
+                         {missing:?} (idle re-check window: NUMS_DEADLOCK_TIMEOUT_SECS)"
+                    )
+                } else {
+                    write!(
+                        f,
+                        "deadlock: {plan_tasks}-task plan is incomplete and blocked on \
+                         input objects {missing:?} that no store holds and no task \
+                         produces (idle re-check window: NUMS_DEADLOCK_TIMEOUT_SECS)"
+                    )
+                }
+            }
+            ExecError::TaskFailed { task, kernel, reason } => {
+                write!(f, "task {task} ({kernel}): {reason}")
+            }
+            ExecError::ObjectLost { obj, task } => {
+                write!(f, "object {obj} vanished (task {task})")
+            }
+            ExecError::UnrecoverableLoss { lineage } => {
+                write!(
+                    f,
+                    "unrecoverable loss: dead lineage chain {lineage:?} — object \
+                     {} is gone from every store and no task produces it",
+                    lineage.last().copied().unwrap_or_default()
+                )
+            }
+            ExecError::SpillIo { obj, reason } => {
+                write!(f, "spill I/O failed for object {obj}: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+/// Most in-place retries any transient failure site attempts before
+/// escalating. The injector's per-key cap
+/// ([`crate::exec::fault::MAX_INJECTIONS_PER_KEY`]) is strictly below
+/// this, so injected transients always succeed within the budget.
+pub const MAX_TRANSIENT_RETRIES: u32 = 4;
+
+/// Bounded exponential backoff for transient-failure retries: 100 µs
+/// doubling per attempt, capped at 5 ms — long enough to let a racing
+/// writer finish, short enough that chaos CI stays fast.
+pub fn backoff_delay(attempt: u32) -> Duration {
+    let us = 100u64 << attempt.min(6);
+    Duration::from_micros(us.min(5_000))
+}
+
+/// Walk the plan's lineage backward from each of `missing` to live
+/// data: returns the minimal recompute subgraph as plan-order task
+/// indices (ascending = topological, since plans are topologically
+/// ordered). `available` answers "is this object in some live store
+/// right now". Objects that are available are live leaves; objects
+/// with a producer recurse into that producer's inputs; an object
+/// that is neither available nor produced dead-ends the walk with
+/// [`ExecError::UnrecoverableLoss`].
+pub fn plan_recompute(
+    plan: &Plan,
+    missing: &[ObjectId],
+    available: &dyn Fn(ObjectId) -> bool,
+) -> Result<Vec<usize>, ExecError> {
+    let mut producer: HashMap<ObjectId, usize> = HashMap::new();
+    for (i, t) in plan.tasks.iter().enumerate() {
+        for (o, _) in &t.outputs {
+            producer.insert(*o, i);
+        }
+    }
+
+    let mut tasks: HashSet<usize> = HashSet::new();
+    for &root in missing {
+        // chain of objects from the needed root down to the current
+        // frame — reported verbatim on a dead end
+        let mut chain: Vec<ObjectId> = Vec::new();
+        // DFS over (object, lineage depth); depth prunes the chain back
+        // to the fork point when the walk pops a sibling
+        let mut stack: Vec<(ObjectId, usize)> = vec![(root, 0)];
+        while let Some((obj, depth)) = stack.pop() {
+            chain.truncate(depth);
+            chain.push(obj);
+            if depth > 0 && available(obj) {
+                continue; // live leaf: recompute reads it directly
+            }
+            match producer.get(&obj) {
+                Some(&t) => {
+                    if !tasks.insert(t) {
+                        continue; // producer already in the subgraph
+                    }
+                    for &inp in &plan.tasks[t].inputs {
+                        stack.push((inp, depth + 1));
+                    }
+                }
+                None => {
+                    if depth == 0 && available(obj) {
+                        // raced back into residency; nothing to do
+                        chain.pop();
+                        continue;
+                    }
+                    return Err(ExecError::UnrecoverableLoss { lineage: chain });
+                }
+            }
+        }
+    }
+
+    let mut out: Vec<usize> = tasks.into_iter().collect();
+    out.sort_unstable();
+    Ok(out)
+}
+
+/// Greedy min-load placement of one recompute task over surviving
+/// nodes: the runtime-side analogue of the Eq. 2 memory term —
+/// `ClusterState` is not reachable from worker threads, so recovery
+/// balances on projected resident bytes and charges its choice into
+/// `load` so successive placements spread. Returns `None` when no node
+/// survives.
+pub fn place_on_survivors(bytes: u64, load: &mut [u64], alive: &[bool]) -> Option<usize> {
+    let node = (0..load.len())
+        .filter(|&n| alive[n])
+        .min_by_key(|&n| (load[n], n))?;
+    load[node] = load[node].saturating_add(bytes);
+    Some(node)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::task::Task;
+    use crate::runtime::Kernel;
+
+    fn task(inputs: &[ObjectId], out: ObjectId) -> Task {
+        Task {
+            kernel: Kernel::Neg,
+            inputs: inputs.to_vec(),
+            in_shapes: inputs.iter().map(|_| vec![2, 2]).collect(),
+            outputs: vec![(out, vec![2, 2])],
+            target: 0,
+            transfers: vec![],
+        }
+    }
+
+    /// 1 -> 10 -> 11 -> 12 (chain), with 2 joining at task 1.
+    fn chain_plan() -> Plan {
+        Plan {
+            tasks: vec![task(&[1], 10), task(&[10, 2], 11), task(&[11], 12)],
+        }
+    }
+
+    #[test]
+    fn recompute_walks_transitively_to_live_inputs() {
+        let plan = chain_plan();
+        // 12 lost, 11 also lost, 10 still live, leaves 1/2 live
+        let live: HashSet<ObjectId> = [1, 2, 10].into_iter().collect();
+        let got = plan_recompute(&plan, &[12], &|o| live.contains(&o)).unwrap();
+        assert_eq!(got, vec![1, 2], "rebuild 11 then 12; 10 is a live leaf");
+    }
+
+    #[test]
+    fn recompute_is_minimal_when_the_object_is_directly_rebuildable() {
+        let plan = chain_plan();
+        let live: HashSet<ObjectId> = [1, 2, 10, 11].into_iter().collect();
+        let got = plan_recompute(&plan, &[12], &|o| live.contains(&o)).unwrap();
+        assert_eq!(got, vec![2]);
+    }
+
+    #[test]
+    fn recompute_dedupes_shared_ancestors_across_roots() {
+        let plan = chain_plan();
+        let live: HashSet<ObjectId> = [1, 2].into_iter().collect();
+        let got = plan_recompute(&plan, &[11, 12], &|o| live.contains(&o)).unwrap();
+        assert_eq!(got, vec![0, 1, 2], "whole chain, each task once, plan order");
+    }
+
+    #[test]
+    fn dead_lineage_is_a_typed_unrecoverable_loss() {
+        let plan = chain_plan();
+        // external input 2 is gone and nothing produces it
+        let live: HashSet<ObjectId> = [1, 10].into_iter().collect();
+        let err = plan_recompute(&plan, &[11], &|o| live.contains(&o)).unwrap_err();
+        match &err {
+            ExecError::UnrecoverableLoss { lineage } => {
+                assert_eq!(lineage.first(), Some(&11), "chain starts at the need");
+                assert_eq!(lineage.last(), Some(&2), "chain ends at the dead end");
+            }
+            other => panic!("expected UnrecoverableLoss, got {other:?}"),
+        }
+        let msg = err.to_string();
+        assert!(msg.contains("unrecoverable loss"), "{msg}");
+        assert!(msg.contains("no task produces"), "{msg}");
+    }
+
+    #[test]
+    fn display_preserves_legacy_diagnostics() {
+        let d = ExecError::Deadlock { plan_tasks: 3, missing: vec![99], cycle: false };
+        let s = d.to_string();
+        assert!(s.contains("deadlock"));
+        assert!(s.contains("[99]"));
+        assert!(s.contains("NUMS_DEADLOCK_TIMEOUT_SECS"));
+
+        let c = ExecError::Deadlock { plan_tasks: 3, missing: vec![7], cycle: true };
+        assert!(c.to_string().contains("dependency cycle"));
+
+        let t = ExecError::TaskFailed {
+            task: 4,
+            kernel: "Cholesky".into(),
+            reason: "panic: not positive definite".into(),
+        };
+        let s = t.to_string();
+        assert!(s.contains("task 4 (Cholesky)"));
+        assert!(s.contains("panic"));
+
+        let v = ExecError::ObjectLost { obj: 8, task: 2 };
+        assert_eq!(v.to_string(), "object 8 vanished (task 2)");
+    }
+
+    #[test]
+    fn typed_error_survives_the_anyhow_boundary() {
+        fn run() -> anyhow::Result<()> {
+            Err(ExecError::ObjectLost { obj: 5, task: 1 })?
+        }
+        let e = run().unwrap_err();
+        assert!(e.to_string().contains("vanished"));
+        let typed = e.downcast_ref::<ExecError>().expect("payload preserved");
+        assert_eq!(*typed, ExecError::ObjectLost { obj: 5, task: 1 });
+    }
+
+    #[test]
+    fn placement_spreads_over_min_load_survivors() {
+        let mut load = vec![100, 0, 50, 0];
+        let alive = vec![false, true, true, true];
+        assert_eq!(place_on_survivors(40, &mut load, &alive), Some(1));
+        assert_eq!(place_on_survivors(40, &mut load, &alive), Some(3));
+        assert_eq!(place_on_survivors(40, &mut load, &alive), Some(1), "40 < 50");
+        assert_eq!(load, vec![100, 80, 50, 40]);
+        let none_alive = vec![false; 4];
+        assert_eq!(place_on_survivors(1, &mut load, &none_alive), None);
+    }
+
+    #[test]
+    fn backoff_is_bounded_and_monotone() {
+        let mut prev = Duration::ZERO;
+        for a in 0..16 {
+            let d = backoff_delay(a);
+            assert!(d >= prev);
+            assert!(d <= Duration::from_millis(5));
+            prev = d;
+        }
+        assert_eq!(backoff_delay(0), Duration::from_micros(100));
+    }
+}

@@ -85,6 +85,20 @@ pub enum EventKind {
     Steal,
     /// The session served this run's plan from the plan cache (t = 0).
     PlanCacheHit,
+    /// A deterministic injected failure fired on `node` (`obj`/`bytes`
+    /// describe the victim operation where known). Memory-neutral: the
+    /// failed operation moved or freed nothing.
+    Fault,
+    /// A worker retried after a transient (injected or real) failure,
+    /// after a bounded backoff sleep. Memory-neutral.
+    Retry,
+    /// A lineage-recovery recompute of `obj` completed on `node`;
+    /// `bytes` holds the recomputed output bytes. The recompute's memory
+    /// effect shows up through its ordinary task span and store events.
+    Recompute,
+    /// Node `node` was lost (fault injection); `bytes` holds the total
+    /// bytes wiped from its store and spill files.
+    NodeLoss,
 }
 
 /// One timestamped runtime event (everything that is not a task span).
@@ -411,7 +425,21 @@ fn fold_series(
                 net_in: 0,
                 net_out: 0,
             }),
-            EventKind::Steal | EventKind::PlanCacheHit => {}
+            // node loss wipes resident bytes like a GC free; the fault/
+            // retry/recompute instants are memory-neutral (a recompute's
+            // output lands through its ordinary task span)
+            EventKind::NodeLoss => deltas.push(Delta {
+                t: e.t,
+                node: e.node,
+                mem: -(e.bytes as i64),
+                net_in: 0,
+                net_out: 0,
+            }),
+            EventKind::Steal
+            | EventKind::PlanCacheHit
+            | EventKind::Fault
+            | EventKind::Retry
+            | EventKind::Recompute => {}
         }
     }
     deltas.sort_by(|a, b| a.t.total_cmp(&b.t));
@@ -650,6 +678,10 @@ fn instant_name(kind: EventKind) -> &'static str {
         EventKind::GcFree => "gc.free",
         EventKind::Steal => "steal",
         EventKind::PlanCacheHit => "plan.cache.hit",
+        EventKind::Fault => "fault.inject",
+        EventKind::Retry => "retry",
+        EventKind::Recompute => "recompute",
+        EventKind::NodeLoss => "node.loss",
     }
 }
 

@@ -120,6 +120,34 @@ impl ClusterState {
         self.max_mem = self.mem.iter().cloned().fold(0.0, f64::max);
     }
 
+    /// Drop only `node`'s copies of `obj` from the load model — the
+    /// fault-tolerance counterpart of [`ClusterState::forget`], used when
+    /// a node loss wiped that node's store but other copies (or a
+    /// lineage recompute) keep the object alive. If this would empty the
+    /// location list the object is removed outright (same as `forget`):
+    /// `placement_cost` panics on a tracked object with no locations, so
+    /// a sole-copy loss must leave the model consistent — the session
+    /// re-registers the object when recovery re-materializes it. No-op
+    /// for unknown ids.
+    pub fn forget_copies_on(&mut self, obj: ObjectId, node: usize) {
+        let Some(&elems) = self.sizes.get(&obj) else { return };
+        let Some(locs) = self.locations.get_mut(&obj) else {
+            self.sizes.remove(&obj);
+            return;
+        };
+        let before = locs.len();
+        locs.retain(|&t| t != node);
+        let dropped = before - locs.len();
+        if dropped > 0 {
+            self.mem[node] -= elems * dropped as f64;
+        }
+        if locs.is_empty() {
+            self.locations.remove(&obj);
+            self.sizes.remove(&obj);
+        }
+        self.max_mem = self.mem.iter().cloned().fold(0.0, f64::max);
+    }
+
     pub fn size_of(&self, obj: ObjectId) -> f64 {
         *self.sizes.get(&obj).unwrap_or(&0.0)
     }
@@ -436,6 +464,32 @@ mod tests {
         // unknown ids are a no-op
         s.forget(99);
         assert_eq!(s.mem[0], 30.0);
+    }
+
+    #[test]
+    fn forget_copies_on_drops_one_node_and_keeps_the_rest_consistent() {
+        let mut s = ClusterState::new(ray_topo(2));
+        s.register(1, 50.0, 0);
+        s.add_replica(1, 1);
+        assert_eq!(s.mem[0], 50.0);
+        assert_eq!(s.mem[1], 50.0);
+        // node 1 lost: its copy leaves the model, node 0's stays
+        s.forget_copies_on(1, 1);
+        assert_eq!(s.locations_of(1), &[0]);
+        assert_eq!(s.mem[1], 0.0);
+        assert_eq!(s.mem[0], 50.0);
+        assert_eq!(s.size_of(1), 50.0, "object still tracked");
+        // a consumer placed on node 1 must now pull again — and the
+        // surviving location list is non-empty, so placement_cost is safe
+        assert_eq!(s.placement_cost(1, &[1], 0.0).pulls.len(), 1);
+        // losing the last copy removes the object outright
+        s.forget_copies_on(1, 0);
+        assert!(s.locations_of(1).is_empty());
+        assert_eq!(s.size_of(1), 0.0);
+        assert_eq!(s.mem[0], 0.0);
+        // unknown ids are a no-op
+        s.forget_copies_on(99, 0);
+        assert_eq!(s.mem[0], 0.0);
     }
 
     #[test]

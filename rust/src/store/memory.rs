@@ -48,6 +48,8 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
+use crate::exec::fault::{FaultInjector, FaultSite, MAX_INJECTIONS_PER_KEY};
+use crate::graph::signature::Fnv128;
 use crate::metrics::runtime_trace::{EventKind, FetchOrigin, RunRecorder};
 
 use super::block::Block;
@@ -172,6 +174,11 @@ pub struct MemoryManager {
     /// lock and just did real work (disk I/O, cross-node copy, free);
     /// the recorder's sink mutex is a leaf lock, so no ordering cycle.
     trace: Mutex<Option<Arc<RunRecorder>>>,
+    /// Deterministic fault injector for the spill I/O sites
+    /// ([`FaultSite::SpillWrite`] / [`FaultSite::SpillRead`]). Attached
+    /// per chaos run by the executor, like the trace recorder; `None`
+    /// (the default) keeps every site a plain `Option` test.
+    fault: Mutex<Option<Arc<FaultInjector>>>,
 }
 
 impl MemoryManager {
@@ -190,6 +197,7 @@ impl MemoryManager {
             spill_ok,
             sink: Mutex::new(None),
             trace: Mutex::new(None),
+            fault: Mutex::new(None),
         }
     }
 
@@ -217,6 +225,29 @@ impl MemoryManager {
     /// Stop emitting events (run teardown).
     pub fn detach_trace(&self) {
         *self.trace.lock().unwrap() = None;
+    }
+
+    /// Arm deterministic fault injection at the spill I/O sites for the
+    /// duration of a chaos run (the executor attaches its injector here,
+    /// mirroring the trace recorder).
+    pub fn attach_fault(&self, f: Arc<FaultInjector>) {
+        *self.fault.lock().unwrap() = Some(f);
+    }
+
+    /// Disarm spill-site fault injection (run teardown).
+    pub fn detach_fault(&self) {
+        *self.fault.lock().unwrap() = None;
+    }
+
+    /// Should this spill-site operation fail now? Always `false` with no
+    /// injector attached. Clones the Arc out so the injector's internal
+    /// lock is never taken under `fault`'s.
+    fn inject(&self, site: FaultSite, key: u64) -> bool {
+        let f = self.fault.lock().unwrap().clone();
+        match f {
+            Some(f) => f.should_fail(site, key),
+            None => false,
+        }
     }
 
     /// Emit one memory event if a recorder is attached. Clones the Arc
@@ -391,7 +422,20 @@ impl MemoryManager {
                     queued = true;
                 }
                 None => {
-                    if write_spill(&path, b.buf()).is_err() {
+                    // injected write faults are transient by construction
+                    // (per-key cap below the attempt bound), so retrying
+                    // here keeps budget/peak accounting identical under
+                    // chaos; a *real* disk error still aborts the shed.
+                    let mut wrote = false;
+                    for _ in 0..=MAX_INJECTIONS_PER_KEY {
+                        if self.inject(FaultSite::SpillWrite, o) {
+                            self.emit(node, None, Some(o), b.bytes(), EventKind::Fault);
+                            continue;
+                        }
+                        wrote = write_spill(&path, b.buf()).is_ok();
+                        break;
+                    }
+                    if !wrote {
                         return; // disk trouble: keep the block resident
                     }
                     stores.remove(node, o);
@@ -441,7 +485,18 @@ impl MemoryManager {
             let Some((obj, path, block, bytes)) = next else {
                 return written;
             };
-            let ok = write_spill(&path, block.buf()).is_ok();
+            // injected write faults retry inline (the per-key cap bounds
+            // the loop); only a real disk error reaches the reinstate
+            // path below, so chaos runs keep the post-run budget intact.
+            let mut ok = false;
+            for _ in 0..=MAX_INJECTIONS_PER_KEY {
+                if self.inject(FaultSite::SpillWrite, obj) {
+                    self.emit(node, None, Some(obj), bytes, EventKind::Fault);
+                    continue;
+                }
+                ok = write_spill(&path, block.buf()).is_ok();
+                break;
+            }
             let mut nm = self.nodes[node].lock().unwrap();
             match nm.spilled.get_mut(&obj) {
                 Some(sp)
@@ -503,25 +558,39 @@ impl MemoryManager {
             // async write still in flight: the parked block *is* the
             // object — no disk involved, and never a half-written file
             Some(b) => b,
-            None => match read_spill(&path, bytes) {
-                Some(data) => {
-                    // a fresh successful read re-earns the clean bit (a
-                    // transient earlier failure may have cleared it)
-                    if let Some(sp) = nm.spilled.get_mut(&id) {
-                        sp.on_disk = true;
-                    }
-                    Arc::new(Block::from_vec(&shape, data))
-                }
-                None => {
-                    // unreadable file: clear the clean bit so the
-                    // spill-reuse path never trusts this copy with the
-                    // only resident bytes (retries may still succeed)
+            None => {
+                // injected readback fault: behave exactly like an
+                // unreadable file (clear the clean bit, return None).
+                // acquire's outer loop retries; the per-key cap (2) sits
+                // inside its 3-consecutive-total-miss abort window, so a
+                // sole local spill copy always comes back.
+                if self.inject(FaultSite::SpillRead, id) {
+                    self.emit(node, None, Some(id), bytes, EventKind::Fault);
                     if let Some(sp) = nm.spilled.get_mut(&id) {
                         sp.on_disk = false;
                     }
                     return None;
                 }
-            },
+                match read_spill(&path, bytes) {
+                    Some(data) => {
+                        // a fresh successful read re-earns the clean bit (a
+                        // transient earlier failure may have cleared it)
+                        if let Some(sp) = nm.spilled.get_mut(&id) {
+                            sp.on_disk = true;
+                        }
+                        Arc::new(Block::from_vec(&shape, data))
+                    }
+                    None => {
+                        // unreadable file: clear the clean bit so the
+                        // spill-reuse path never trusts this copy with the
+                        // only resident bytes (retries may still succeed)
+                        if let Some(sp) = nm.spilled.get_mut(&id) {
+                            sp.on_disk = false;
+                        }
+                        return None;
+                    }
+                }
+            }
         };
         stores.put(node, id, block.clone());
         nm.stats.readback_bytes += bytes;
@@ -726,6 +795,49 @@ impl MemoryManager {
             nm.forget(id);
         }
     }
+
+    /// Whole-node loss: drop every resident object and spill copy on
+    /// `node` except those `spare` keeps (lifetime-pinned results,
+    /// sole-copy external inputs the driver could re-seed — the
+    /// executor's survivability policy, not ours). Returns the lost
+    /// `(object, block bytes)` pairs, sorted, so the executor can walk
+    /// lineage for exactly what vanished. Replica/LRU bookkeeping for
+    /// the wiped ids is cleared; spared ids keep theirs.
+    pub fn wipe_node(
+        &self,
+        stores: &StoreSet,
+        node: usize,
+        spare: &dyn Fn(ObjectId) -> bool,
+    ) -> Vec<(ObjectId, u64)> {
+        let mut lost: Vec<(ObjectId, u64)> = Vec::new();
+        let mut nm = self.nodes[node].lock().unwrap();
+        for o in stores.objects(node) {
+            if spare(o) {
+                continue;
+            }
+            if let Some(b) = stores.remove(node, o) {
+                lost.push((o, b.bytes()));
+            }
+            nm.forget(o);
+        }
+        let spilled_ids: Vec<ObjectId> = nm.spilled.keys().copied().collect();
+        for o in spilled_ids {
+            if spare(o) {
+                continue;
+            }
+            if let Some(sp) = nm.spilled.remove(&o) {
+                let _ = std::fs::remove_file(&sp.path);
+                // a clean on-disk twin of a just-wiped resident copy is
+                // the same object — count its bytes once
+                if !lost.iter().any(|&(id, _)| id == o) {
+                    lost.push((o, sp.bytes));
+                }
+            }
+            nm.forget(o);
+        }
+        lost.sort_unstable();
+        lost
+    }
 }
 
 impl Drop for MemoryManager {
@@ -739,40 +851,62 @@ impl Drop for MemoryManager {
 /// O(chunk), never a second full copy of the block.
 const SPILL_CHUNK_ELEMS: usize = 1 << 15; // 256 KiB of f64
 
+/// Trailing checksum size: every spill file ends with the 16-byte LE
+/// FNV-1a-128 digest of its data (hashed as exact f64 bits via
+/// [`Fnv128::f64`]), so silent corruption — not just truncation — is
+/// caught at read-back and routed into lineage recovery instead of
+/// feeding wrong bits to a kernel. `Spilled::bytes` and all spill
+/// counters stay *block* bytes; the trailer is a file-format detail.
+const SPILL_TRAILER_BYTES: u64 = 16;
+
 fn write_spill(path: &Path, data: &[f64]) -> std::io::Result<()> {
     use std::io::Write;
     let file = std::fs::File::create(path)?;
     let mut w = std::io::BufWriter::new(file);
     let mut buf = Vec::with_capacity(SPILL_CHUNK_ELEMS.min(data.len()) * 8);
+    let mut sum = Fnv128::new();
     for chunk in data.chunks(SPILL_CHUNK_ELEMS) {
         buf.clear();
         for v in chunk {
             buf.extend_from_slice(&v.to_le_bytes());
+            sum.f64(*v);
         }
         w.write_all(&buf)?;
     }
+    w.write_all(&sum.digest().to_le_bytes())?;
     w.flush()
 }
 
 /// Chunked decode for the same reason as [`write_spill`]: the read-back
 /// happens on a node already near its budget, so the transient raw-byte
 /// buffer stays O(chunk) instead of a full second copy of the block.
+/// Returns `None` on truncation *or* a checksum-trailer mismatch — the
+/// caller treats both as an unreadable file (and, under fault
+/// tolerance, recovers the object from lineage).
 fn read_spill(path: &Path, bytes: u64) -> Option<Vec<f64>> {
     use std::io::Read;
     let mut file = std::fs::File::open(path).ok()?;
-    if file.metadata().ok()?.len() != bytes {
+    if file.metadata().ok()?.len() != bytes + SPILL_TRAILER_BYTES {
         return None; // truncated or clobbered spill file
     }
     let mut out = Vec::with_capacity((bytes / 8) as usize);
     let mut buf = vec![0u8; (SPILL_CHUNK_ELEMS * 8).min(bytes.max(8) as usize)];
+    let mut sum = Fnv128::new();
     let mut remaining = bytes as usize;
     while remaining > 0 {
         let take = remaining.min(buf.len());
         file.read_exact(&mut buf[..take]).ok()?;
         for c in buf[..take].chunks_exact(8) {
-            out.push(f64::from_le_bytes(c.try_into().unwrap()));
+            let v = f64::from_le_bytes(c.try_into().unwrap());
+            sum.f64(v);
+            out.push(v);
         }
         remaining -= take;
+    }
+    let mut trailer = [0u8; SPILL_TRAILER_BYTES as usize];
+    file.read_exact(&mut trailer).ok()?;
+    if u128::from_le_bytes(trailer) != sum.digest() {
+        return None; // bit rot: corrupt data must never reach a kernel
     }
     Some(out)
 }
@@ -1010,6 +1144,63 @@ mod tests {
         mgr.detach_spill_sink();
         let (b2, _) = mgr.acquire(&stores, 0, 2, ALL);
         assert_eq!(b2.unwrap().buf()[0], 2.0, "swept file must read back correctly");
+    }
+
+    #[test]
+    fn corrupt_spill_file_is_rejected_not_served() {
+        let stores = StoreSet::new(1);
+        let mgr = MemoryManager::new(1, Some(80), true);
+        mgr.insert(&stores, 0, 1, blk(10, 1.5), ALL);
+        mgr.insert(&stores, 0, 2, blk(10, 2.0), ALL); // writes 1
+        let path = mgr.spill_path(0, 1);
+        assert!(path.exists());
+        // flip one data byte in place: length still matches, so only the
+        // checksum trailer can catch it
+        let mut raw = std::fs::read(&path).unwrap();
+        raw[3] ^= 0xFF;
+        std::fs::write(&path, &raw).unwrap();
+        let (b, _) = mgr.acquire(&stores, 0, 1, ALL);
+        assert!(b.is_none(), "corrupt bits must never reach a caller");
+        assert!(mgr.fetch(&stores, 1).is_none(), "gather must reject them too");
+    }
+
+    #[test]
+    fn injected_spill_faults_are_survived_by_bounded_retry() {
+        use crate::exec::fault::{FaultInjector, FaultPlan};
+        let stores = StoreSet::new(1);
+        let mgr = MemoryManager::new(1, Some(80), true);
+        // rate 1.0: every spill write and readback fails
+        // MAX_INJECTIONS_PER_KEY times before the real I/O happens
+        mgr.attach_fault(Arc::new(FaultInjector::new(&FaultPlan::new(5, 1.0))));
+        mgr.insert(&stores, 0, 1, blk(10, 4.0), ALL);
+        mgr.insert(&stores, 0, 2, blk(10, 2.0), ALL); // spills 1 (with retries)
+        assert_eq!(mgr.stats()[0].spilled_bytes, 80, "write must land despite faults");
+        assert!(!stores.contains(0, 1));
+        let (b, _) = mgr.acquire(&stores, 0, 1, ALL);
+        assert_eq!(
+            b.expect("readback retries fit the total-miss window").buf()[0],
+            4.0
+        );
+        mgr.detach_fault();
+    }
+
+    #[test]
+    fn wipe_node_drops_unspared_copies_and_reports_bytes() {
+        let stores = StoreSet::new(2);
+        let mgr = MemoryManager::new(2, Some(160), true);
+        mgr.insert(&stores, 0, 1, blk(10, 1.0), ALL); // resident
+        mgr.insert(&stores, 0, 2, blk(10, 2.0), ALL); // resident
+        mgr.insert(&stores, 0, 3, blk(10, 3.0), ALL); // spills the coldest (1)
+        assert!(!stores.contains(0, 1), "1 must be on disk");
+        let spare = |o: ObjectId| o == 2;
+        let lost = mgr.wipe_node(&stores, 0, &spare);
+        assert_eq!(lost, vec![(1, 80), (3, 80)], "sorted (object, bytes) pairs");
+        assert!(stores.contains(0, 2), "spared object survives");
+        assert!(!mgr.holds(&stores, 1), "spill copy wiped with the node");
+        assert!(!mgr.spill_path(0, 1).exists(), "spill file deleted");
+        assert!(!stores.contains(0, 3));
+        // node 1 untouched
+        assert_eq!(mgr.wipe_node(&stores, 1, &|_| false), vec![]);
     }
 
     #[test]

@@ -61,6 +61,11 @@ impl ObjectStore {
     pub fn is_empty(&self) -> bool {
         self.objects.is_empty()
     }
+
+    /// Every object id resident in this store (unordered).
+    pub fn ids(&self) -> Vec<ObjectId> {
+        self.objects.keys().copied().collect()
+    }
 }
 
 /// All node stores of a simulated cluster. Thread-safe: the real executor
@@ -165,6 +170,11 @@ impl StoreSet {
         None
     }
 
+    /// Every object id resident on `node` right now (unordered snapshot;
+    /// fault-tolerance node wipes enumerate a store through this).
+    pub fn objects(&self, node: usize) -> Vec<ObjectId> {
+        self.stores[node].lock().unwrap().ids()
+    }
 }
 
 /// Monotonic object-id allocator shared by the driver.

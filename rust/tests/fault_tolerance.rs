@@ -1,0 +1,255 @@
+//! Lineage-based fault tolerance, end to end through `Session::run`.
+//!
+//! The correctness contract under test: a run with injected transient
+//! faults — and at most one *survivable* whole-node loss — must produce
+//! **bit-identical** results (scalar kernel tier) to a fault-free run,
+//! with the recovery work reported in `RealReport::recovery_stats` and
+//! reconciled against the run trace. An *unsurvivable* loss must fail
+//! with a typed [`ExecError::UnrecoverableLoss`] naming the dead
+//! lineage, not hang or report a bogus deadlock.
+
+use nums::api::{ops, Session, SessionConfig};
+use nums::exec::{ExecError, FaultPlan, NodeLossMode};
+use nums::glm::data::classification_data;
+use nums::glm::newton_fit;
+use nums::metrics::runtime_trace::EventKind;
+use nums::util::prop::forall_res;
+
+/// One matmul under a given fault plan; returns (bits, report).
+///
+/// `None` pins an explicit rate-0 plan rather than leaving the config
+/// empty: the CI chaos leg arms `NUMS_FAULT_SEED`/`NUMS_FAULT_RATE` in
+/// the environment, and the fault-free oracle must stay fault-free
+/// even there (an explicit plan overrides the env arming).
+fn run_matmul(
+    dims: (usize, usize, usize),
+    grids: (usize, usize, usize),
+    seed: u64,
+    fault: Option<FaultPlan>,
+) -> Result<(Vec<u64>, nums::api::RunReport), String> {
+    let (m, k, n) = dims;
+    let (gm, gk, gn) = grids;
+    let cfg = SessionConfig::real_small(2, 2)
+        .with_seed(seed)
+        .with_fault_plan(fault.unwrap_or_else(|| FaultPlan::new(0, 0.0)));
+    let mut sess = Session::new(cfg);
+    let a = sess.randn(&[m, k], &[gm, gk]);
+    let b = sess.randn(&[k, n], &[gk, gn]);
+    let (c, rep) = ops::matmul(&mut sess, &a, &b).map_err(|e| e.to_string())?;
+    let host = sess.fetch(&c).map_err(|e| e.to_string())?;
+    let bits: Vec<u64> = host.into_vec().iter().map(|v| v.to_bits()).collect();
+    Ok((bits, rep))
+}
+
+/// Seeded random fault plans over random matmuls: every chaos run must
+/// converge to the exact bits of the fault-free oracle, with retries
+/// actually exercised somewhere across the case set.
+#[test]
+fn prop_injected_faults_preserve_bit_identity() {
+    use std::cell::Cell;
+    let total_retries = Cell::new(0u64);
+    let total_injected_runs = Cell::new(0u64);
+    forall_res(
+        0xFA017,
+        10,
+        |r| {
+            let m = 16 + r.usize(48);
+            let k = 16 + r.usize(48);
+            let n = 16 + r.usize(48);
+            let gm = 1 + r.usize(2);
+            let gk = 1 + r.usize(2);
+            let gn = 1 + r.usize(2);
+            let rate = 0.3 + 0.7 * (r.usize(8) as f64 / 8.0);
+            (m, k, n, gm, gk, gn, r.next_u64(), r.next_u64(), rate)
+        },
+        |&(m, k, n, gm, gk, gn, seed, fseed, rate)| {
+            let dims = (m, k, n);
+            let grids = (gm.min(m), gk.min(k), gn.min(n));
+            let (want, clean_rep) = run_matmul(dims, grids, seed, None)?;
+            let clean = clean_rep.real.as_ref().expect("real mode");
+            if !clean.recovery_stats.is_zero() {
+                return Err(format!(
+                    "fault-free run reported recovery work: {:?}",
+                    clean.recovery_stats
+                ));
+            }
+            let (got, rep) =
+                run_matmul(dims, grids, seed, Some(FaultPlan::new(fseed, rate)))?;
+            if got != want {
+                return Err(format!(
+                    "chaos run (fseed {fseed}, rate {rate}) diverged from oracle"
+                ));
+            }
+            let real = rep.real.as_ref().expect("real mode");
+            total_retries.set(total_retries.get() + real.recovery_stats.retries);
+            if real.recovery_stats.retries > 0 {
+                total_injected_runs.set(total_injected_runs.get() + 1);
+                if real.recovery_stats.backoff_secs <= 0.0 {
+                    return Err("retries without backoff time".into());
+                }
+            }
+            if real.recovery_stats.node_losses_survived != 0 {
+                return Err("rate-based plans must never lose a node".into());
+            }
+            Ok(())
+        },
+    );
+    assert!(
+        total_retries.get() > 0 && total_injected_runs.get() > 0,
+        "rates in [0.3, 1.0] over 10 cases must inject at least once \
+         ({} retries in {} runs)",
+        total_retries.get(),
+        total_injected_runs.get()
+    );
+}
+
+#[test]
+fn survivable_node_loss_is_bit_identical_and_reported() {
+    let dims = (96, 96, 96);
+    let grids = (4, 4, 2);
+    let (want, _) = run_matmul(dims, grids, 0xBEEF, None).unwrap();
+    // no rate faults: isolate the node-loss path. Stealing stays on —
+    // recovery must cope with tasks landing anywhere.
+    let plan = FaultPlan::new(0, 0.0).with_node_loss(1, 3, NodeLossMode::Survivable);
+    let (got, rep) = run_matmul(dims, grids, 0xBEEF, Some(plan)).unwrap();
+    assert_eq!(got, want, "recovered run must be bit-identical");
+    let real = rep.real.as_ref().unwrap();
+    assert_eq!(
+        real.recovery_stats.node_losses_survived, 1,
+        "the scheduled loss must fire and be survived"
+    );
+    assert!(
+        !real.recovery_stats.is_zero(),
+        "a survived loss is recovery work"
+    );
+    assert_eq!(real.node_losses.len(), 1);
+    assert_eq!(real.node_losses[0].0, 1, "node 1 was the one lost");
+}
+
+/// `recovery_stats` must reconcile with the run trace: recomputed bytes
+/// equal the sum of `Recompute` event bytes, recompute events match the
+/// task counter, and the node-loss event carries the wiped bytes.
+#[test]
+fn recovery_stats_reconcile_with_trace_events() {
+    let cfg = SessionConfig::real_small(2, 2)
+        .with_seed(0x7AC3)
+        .with_tracing(true)
+        .with_fault_plan(
+            FaultPlan::new(11, 0.6).with_node_loss(1, 2, NodeLossMode::Survivable),
+        );
+    let mut sess = Session::new(cfg);
+    let a = sess.randn(&[96, 96], &[4, 2]);
+    let b = sess.randn(&[96, 96], &[2, 4]);
+    let (_, rep) = ops::matmul(&mut sess, &a, &b).unwrap();
+    let real = rep.real.as_ref().unwrap();
+    let tr = rep.trace().expect("tracing on");
+
+    let recompute_bytes: u64 = tr
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Recompute)
+        .map(|e| e.bytes)
+        .sum();
+    let recompute_events = tr
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Recompute)
+        .count() as u64;
+    assert_eq!(
+        real.recovery_stats.recomputed_bytes, recompute_bytes,
+        "stats and trace must agree on recomputed bytes"
+    );
+    assert_eq!(
+        real.recovery_stats.recomputed_tasks, recompute_events,
+        "one Recompute event per recomputed task"
+    );
+
+    assert_eq!(real.recovery_stats.node_losses_survived, 1);
+    let loss_events: Vec<_> = tr
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::NodeLoss)
+        .collect();
+    assert_eq!(loss_events.len(), 1, "exactly one node-loss instant");
+    assert_eq!(loss_events[0].node, 1);
+    let wiped: u64 = real.node_losses[0].1.iter().map(|&(_, b)| b).sum();
+    assert_eq!(loss_events[0].bytes, wiped, "loss event carries wiped bytes");
+
+    // injected failures at rate 0.6 must show up as Fault instants, and
+    // every worker-site retry as a Retry instant
+    let faults = tr.events.iter().filter(|e| e.kind == EventKind::Fault).count();
+    assert!(faults > 0, "rate 0.6 over a 40-task plan must inject");
+    let retry_events = tr
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Retry)
+        .count() as u64;
+    assert_eq!(
+        real.recovery_stats.retries, retry_events,
+        "stats and trace must agree on retry count"
+    );
+}
+
+/// Node loss in the middle of an iterative GLM driver: every later
+/// iteration replans against the surviving copies, and the final model
+/// is bit-identical to the fault-free fit.
+#[test]
+fn node_loss_mid_glm_recovers_bit_identically() {
+    let fit = |fault: Option<FaultPlan>| {
+        // explicit rate-0 default: keep the oracle clean under the CI
+        // chaos leg's env-armed injection (see `run_matmul`)
+        let cfg = SessionConfig::real_small(3, 2)
+            .with_seed(0x61F7)
+            .with_fault_plan(fault.unwrap_or_else(|| FaultPlan::new(0, 0.0)));
+        let mut sess = Session::new(cfg);
+        let (x, y) = classification_data(&mut sess, 512, 8, 6, 0x11);
+        let res = newton_fit(&mut sess, &x, &y, 4, 0.0).unwrap();
+        let beta = sess.fetch(&res.beta).unwrap();
+        (
+            beta.into_vec().iter().map(|v| v.to_bits()).collect::<Vec<u64>>(),
+            res.losses,
+        )
+    };
+    let (want_beta, want_losses) = fit(None);
+    // the loss fires mid-fit, a few tasks into whichever run crosses the
+    // trigger; rate faults ride along to stress retry during recovery
+    let plan = FaultPlan::new(3, 0.4).with_node_loss(2, 5, NodeLossMode::Survivable);
+    let (got_beta, got_losses) = fit(Some(plan));
+    assert_eq!(got_beta, want_beta, "chaos fit diverged from fault-free fit");
+    assert_eq!(got_losses, want_losses, "loss curves must match exactly");
+}
+
+/// Wiping a sole-copy external input (Total mode) is not survivable:
+/// `Session::run` must return the typed error promptly — naming the dead
+/// lineage — instead of deadlocking or panicking.
+#[test]
+fn total_node_loss_is_a_typed_unrecoverable_error() {
+    let cfg = SessionConfig::real_small(2, 2).with_seed(0xDEAD).with_fault_plan(
+        FaultPlan::new(0, 0.0).with_node_loss(0, 1, NodeLossMode::Total),
+    );
+    let mut sess = Session::new(cfg);
+    let a = sess.randn(&[64, 64], &[2, 2]);
+    let b = sess.randn(&[64, 64], &[2, 2]);
+    let err = match ops::matmul(&mut sess, &a, &b) {
+        Ok(_) => panic!("total loss of seed data must fail the run"),
+        Err(e) => e,
+    };
+    let typed = err
+        .downcast_ref::<ExecError>()
+        .expect("typed ExecError must survive the anyhow boundary");
+    match typed {
+        ExecError::UnrecoverableLoss { lineage } => {
+            assert!(!lineage.is_empty(), "error must name the dead lineage");
+        }
+        other => panic!("want UnrecoverableLoss, got {other:?}"),
+    }
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("unrecoverable loss"),
+        "message must say what happened: {msg}"
+    );
+    assert!(
+        !msg.contains("deadlock"),
+        "a known loss must not masquerade as a deadlock: {msg}"
+    );
+}

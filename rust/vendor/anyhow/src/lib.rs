@@ -8,17 +8,29 @@
 //! `impl<E: std::error::Error> From<E> for Error` coherent with the
 //! reflexive `From<T> for T`.
 
+use std::any::Any;
 use std::fmt;
 
-/// A boxed-free dynamic error: just the rendered message chain.
+/// A dynamic error: the rendered message chain, plus (when the error
+/// arrived through the blanket `From<E: std::error::Error>` conversion)
+/// the original typed value, recoverable via [`Error::downcast_ref`] —
+/// the slice of the real crate's downcasting that callers here need to
+/// pull a typed `ExecError` back out of a `?`-converted result.
 pub struct Error {
     msg: String,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Construct from anything displayable (the real crate's `Error::msg`).
     pub fn msg<M: fmt::Display>(m: M) -> Self {
-        Error { msg: m.to_string() }
+        Error { msg: m.to_string(), payload: None }
+    }
+
+    /// The original typed error, if this `Error` was built from one via
+    /// the blanket `From` conversion (message-only errors return `None`).
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.payload.as_ref()?.downcast_ref::<T>()
     }
 }
 
@@ -36,7 +48,8 @@ impl fmt::Debug for Error {
 
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Self {
-        Error { msg: e.to_string() }
+        let msg = e.to_string();
+        Error { msg, payload: Some(Box::new(e)) }
     }
 }
 
@@ -142,5 +155,26 @@ mod tests {
 
         let some: Option<i32> = Some(5);
         assert_eq!(some.context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn downcast_recovers_the_typed_error() {
+        #[derive(Debug, PartialEq)]
+        struct Typed(u32);
+        impl fmt::Display for Typed {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "typed {}", self.0)
+            }
+        }
+        impl std::error::Error for Typed {}
+
+        let e: Error = Typed(7).into();
+        assert_eq!(format!("{e}"), "typed 7");
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(7)));
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+
+        // message-only errors carry no payload
+        let m = anyhow!("plain");
+        assert!(m.downcast_ref::<Typed>().is_none());
     }
 }
