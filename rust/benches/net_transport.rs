@@ -1,0 +1,192 @@
+//! Measured (not modeled) per-transfer transport baselines — the
+//! fig15-style arm for the block-carrier layer. One deliberately skewed
+//! matmul pipeline (every input on node 0, every task on node 1) is run
+//! on each transport with per-transfer metrics on; the carriers' own
+//! `TransferRecord`s — real bytes over real wall time, over real
+//! `/dev/shm` files and real loopback sockets for the non-default
+//! transports — land in `BENCH_net.json` as per-transfer latency and
+//! bandwidth. `cargo bench --bench net_transport -- --smoke` runs a
+//! reduced size and additionally asserts cross-transport bit identity.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::Arc;
+
+use nums::exec::{Plan, RealExecutor, Task};
+use nums::net::{serve_node, InProcessTransport, ShmTransport, TcpTransport, Transport};
+use nums::prelude::*;
+use nums::store::StoreSet;
+
+/// Skewed pipeline: `k` matmuls, inputs seeded on node 0, all targeted
+/// at node 1 — every input block crosses the wire exactly once.
+fn skewed_plan(n: usize, k: usize) -> (Plan, HashMap<u64, Block>) {
+    let mut rng = Rng::seed_from_u64(0xBE7);
+    let mut seeds = HashMap::new();
+    for i in 0..2 * k as u64 {
+        let mut v = vec![0.0; n * n];
+        rng.fill_normal(&mut v);
+        seeds.insert(i, Block::from_vec(&[n, n], v));
+    }
+    let plan = Plan {
+        tasks: (0..k)
+            .map(|i| Task {
+                kernel: Kernel::Matmul,
+                inputs: vec![(2 * i) as u64, (2 * i + 1) as u64],
+                in_shapes: vec![vec![n, n], vec![n, n]],
+                outputs: vec![(1000 + i as u64, vec![n, n])],
+                target: 1,
+                transfers: vec![],
+            })
+            .collect(),
+    };
+    (plan, seeds)
+}
+
+fn in_thread_daemons(nodes: usize) -> Vec<SocketAddr> {
+    (0..nodes)
+        .map(|_| {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            std::thread::spawn(move || serve_node(listener));
+            addr
+        })
+        .collect()
+}
+
+struct Row {
+    transport: &'static str,
+    transfers: usize,
+    bytes: u64,
+    mean_us: f64,
+    max_us: f64,
+    gb_per_s: f64,
+    wall_secs: f64,
+}
+
+/// Run the skewed pipeline on `transport`, returning the measured row
+/// and the output bits (for the smoke identity check).
+fn run_one(
+    label: &'static str,
+    transport: Arc<dyn Transport>,
+    n: usize,
+    k: usize,
+) -> (Row, Vec<u64>) {
+    let (plan, seeds) = skewed_plan(n, k);
+    let stores = StoreSet::with_transport(2, transport);
+    for (obj, b) in &seeds {
+        stores.put(0, *obj, Arc::new(b.clone()));
+    }
+    let topo = Topology::new(2, 2, SystemMode::Ray);
+    let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+        .with_stealing(false)
+        .with_prefetch(true);
+    exec.threads_per_node = 2;
+    let t0 = std::time::Instant::now();
+    exec.run(&plan, &stores).expect("bench run");
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let mut bits = Vec::new();
+    for i in 0..k {
+        let out = stores.fetch(1000 + i as u64).expect("output");
+        bits.extend(out.buf().iter().map(|v| v.to_bits()));
+    }
+    let records = stores.transport().records();
+    stores.transport().shutdown();
+    let transfers = records.len();
+    let bytes: u64 = records.iter().map(|r| r.bytes).sum();
+    let total_secs: f64 = records.iter().map(|r| r.secs).sum();
+    let mean_us = if transfers > 0 {
+        1e6 * total_secs / transfers as f64
+    } else {
+        0.0
+    };
+    let max_us = records.iter().map(|r| 1e6 * r.secs).fold(0.0, f64::max);
+    let gb_per_s = if total_secs > 0.0 {
+        bytes as f64 / total_secs / 1e9
+    } else {
+        0.0
+    };
+    (
+        Row { transport: label, transfers, bytes, mean_us, max_us, gb_per_s, wall_secs },
+        bits,
+    )
+}
+
+fn emit(path: &str, rows: &[Row]) {
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"transport\": \"{}\", \"transfers\": {}, \"bytes\": {}, \
+             \"mean_us\": {:.3}, \"max_us\": {:.3}, \"gb_per_s\": {:.4}, \
+             \"wall_secs\": {:.6}}}{}\n",
+            r.transport,
+            r.transfers,
+            r.bytes,
+            r.mean_us,
+            r.max_us,
+            r.gb_per_s,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    std::fs::write(path, &s).expect("write BENCH_net.json");
+    // the hand-rolled writer must stay parseable by the repo's reader
+    nums::util::json::parse(&s).expect("BENCH_net.json round-trips");
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (n, k) = if smoke { (64usize, 8usize) } else { (256usize, 32usize) };
+    println!(
+        "net transport baselines: {k} matmuls of {n}x{n} blocks, all inputs shipped node0 -> node1"
+    );
+
+    let mut rows = Vec::new();
+
+    let (row, inproc_bits) = run_one(
+        "in-process",
+        Arc::new(InProcessTransport::with_metrics()),
+        n,
+        k,
+    );
+    rows.push(row);
+
+    let (row, shm_bits) =
+        run_one("shm", Arc::new(ShmTransport::new().expect("/dev/shm dir")), n, k);
+    rows.push(row);
+
+    // prefer real node processes (the launcher path); fall back to
+    // in-thread daemons if spawning is unavailable in this environment
+    let bin = std::path::PathBuf::from(env!("CARGO_BIN_EXE_nums"));
+    let (tcp, tcp_label): (TcpTransport, &'static str) = match TcpTransport::launch(2, &bin) {
+        Ok(t) => (t, "tcp"),
+        Err(e) => {
+            println!("tcp launcher unavailable ({e}); using in-thread daemons");
+            (TcpTransport::connect(in_thread_daemons(2)), "tcp-inthread")
+        }
+    };
+    let (row, tcp_bits) = run_one(tcp_label, Arc::new(tcp), n, k);
+    rows.push(row);
+
+    for r in &rows {
+        println!(
+            "  {:<12} {:>4} transfers  {:>12} B  mean {:>9.1} us  max {:>9.1} us  {:>7.3} GB/s  (wall {:.3}s)",
+            r.transport, r.transfers, r.bytes, r.mean_us, r.max_us, r.gb_per_s, r.wall_secs
+        );
+    }
+    emit("BENCH_net.json", &rows);
+    println!("wrote BENCH_net.json ({} transports)", rows.len());
+
+    // measured means measured: the carriers with a wire in them must
+    // have clocked real time on every record
+    for r in &rows {
+        assert!(r.transfers > 0, "{}: skewed pipeline must transfer", r.transport);
+        if r.transport != "in-process" {
+            assert!(r.mean_us > 0.0, "{}: transfers must take time", r.transport);
+        }
+    }
+    if smoke {
+        assert_eq!(inproc_bits, shm_bits, "shm diverged from in-process");
+        assert_eq!(inproc_bits, tcp_bits, "tcp diverged from in-process");
+        println!("smoke: all transports bit-identical ({} output words)", inproc_bits.len());
+    }
+}

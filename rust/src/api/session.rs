@@ -16,6 +16,7 @@ use crate::graph::{DistArray, Graph};
 use crate::metrics::runtime_trace::{chrome_trace_json, EventKind, RtEvent, RunTrace};
 use crate::grid::{softmax_grid, ArrayGrid, NodeGrid};
 use crate::net::model::{ComputeParams, NetParams, SystemMode};
+use crate::net::{InProcessTransport, ShmTransport, TcpTransport, TransportKind};
 use crate::runtime::{Backend, KernelTier};
 use crate::scheduler::baselines::{BottomUp, RandomPlace, RoundRobin};
 use crate::scheduler::{ClusterState, Lshs, PlanCache, Scheduler, Topology};
@@ -155,6 +156,20 @@ pub struct SessionConfig {
     /// environment variables arm rate-based injection (never node loss)
     /// when this field is unset.
     pub fault_plan: Option<crate::exec::FaultPlan>,
+    /// Physical block carrier under `StoreSet::try_transfer` (real mode
+    /// only; simulated execution moves no real bytes). `InProcess`
+    /// (default) Arc-clones between stores — today's behavior and the
+    /// sequential oracle. `SharedMem` round-trips every transfer through
+    /// a checksummed `/dev/shm`-backed file; `Tcp` launches one OS
+    /// process per node (the `nums node` subcommand, binary from
+    /// `NUMS_NODE_BIN` or the current executable) and moves framed
+    /// blocks over loopback sockets with heartbeats. Results must be
+    /// bit-identical across all three (scalar tier) and the per-node
+    /// `prefetch + demand == net_in` identity holds on each — that is
+    /// what `tests/transport.rs` enforces. Constructors default from the
+    /// `NUMS_TRANSPORT` env var (`inproc`|`shm`|`tcp`), so the whole
+    /// suite can be re-run on a real transport without code changes.
+    pub transport: TransportKind,
 }
 
 impl SessionConfig {
@@ -181,6 +196,7 @@ impl SessionConfig {
             plan_cache: true,
             tracing: false,
             fault_plan: None,
+            transport: TransportKind::from_env(),
         }
     }
 
@@ -207,6 +223,7 @@ impl SessionConfig {
             plan_cache: true,
             tracing: false,
             fault_plan: None,
+            transport: TransportKind::from_env(),
         }
     }
 
@@ -276,6 +293,12 @@ impl SessionConfig {
     /// (see [`SessionConfig::fault_plan`]).
     pub fn with_fault_plan(mut self, plan: crate::exec::FaultPlan) -> Self {
         self.fault_plan = Some(plan);
+        self
+    }
+
+    /// Select the block carrier (see [`SessionConfig::transport`]).
+    pub fn with_transport(mut self, t: TransportKind) -> Self {
+        self.transport = t;
         self
     }
 
@@ -408,11 +431,46 @@ impl Session {
         } else {
             None
         };
+        // simulated execution moves no real bytes, so it always gets the
+        // plain in-process store set regardless of the configured carrier
+        let stores = match (cfg.exec, cfg.transport) {
+            (ExecMode::Real, TransportKind::SharedMem) => StoreSet::with_transport(
+                topo.nodes,
+                Arc::new(
+                    ShmTransport::new()
+                        .expect("shm transport: cannot create block hand-off directory"),
+                ),
+            ),
+            (ExecMode::Real, TransportKind::Tcp) => {
+                // the node-daemon binary: NUMS_NODE_BIN when set (tests
+                // point it at the built `nums` binary), else this very
+                // executable (the nums CLI launching its own peers)
+                let bin = std::env::var("NUMS_NODE_BIN")
+                    .map(std::path::PathBuf::from)
+                    .or_else(|_| std::env::current_exe())
+                    .expect("tcp transport: no node binary (set NUMS_NODE_BIN)");
+                let t = TcpTransport::launch(topo.nodes, &bin).unwrap_or_else(|e| {
+                    panic!(
+                        "tcp transport: failed to launch {} node processes from \
+                         {bin:?}: {e} (set NUMS_NODE_BIN to the nums binary)",
+                        topo.nodes
+                    )
+                });
+                StoreSet::with_transport(topo.nodes, Arc::new(t))
+            }
+            (ExecMode::Real, TransportKind::InProcess)
+                if std::env::var("NUMS_TRANSPORT_METRICS").map_or(false, |v| v == "1") =>
+            {
+                // per-transfer timing for the net bench's baseline arm
+                StoreSet::with_transport(topo.nodes, Arc::new(InProcessTransport::with_metrics()))
+            }
+            _ => StoreSet::new(topo.nodes),
+        };
         Session {
             topo: topo.clone(),
             state: ClusterState::new(topo.clone()),
             ids: IdGen::default(),
-            stores: StoreSet::new(topo.nodes),
+            stores,
             backend,
             real_exec,
             data_rng: Rng::seed_from_u64(cfg.seed ^ 0xDA7A),

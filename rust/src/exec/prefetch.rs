@@ -472,6 +472,13 @@ impl Prefetcher {
             self.unrequest(node, obj);
             return;
         }
+        if stores.peer_dead(node) {
+            // the destination's transport endpoint is gone: its work is
+            // being diverted to survivors, so a background pull *to* it
+            // would be wasted bytes at best and a livelock at worst
+            self.unrequest(node, obj);
+            return;
+        }
         if let Some(fj) = &self.fault {
             if fj.should_fail(FaultSite::Transfer, obj) {
                 // injected transfer fault: the pull dies before moving a

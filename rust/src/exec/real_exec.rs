@@ -798,6 +798,15 @@ impl RealExecutor {
             retries: AtomicU64::new(0),
             backoff_us: AtomicU64::new(0),
         };
+        // a peer whose transport endpoint died before this run (e.g. a
+        // TCP node process killed between graphs) starts dead: marking
+        // it before seeding diverts its work to survivors from task one
+        for n in stores.dead_peers() {
+            shared.mark_dead(n);
+        }
+        // link-retry baseline: the delta this run spends is folded into
+        // RecoveryStats.retries below
+        let transport_retries0 = stores.transport_retries();
         // seed the deques with initially-ready tasks, in plan order
         {
             let mut st = shared.state.lock().unwrap();
@@ -1050,6 +1059,17 @@ impl RealExecutor {
                             if shared.has_failed() {
                                 break 'work;
                             }
+                            // transport-detected peer deaths (a killed
+                            // TCP node process, a link that never came
+                            // back) are converted into the scheduled
+                            // node-loss path here, exactly once each
+                            while let Some(n) = stores.take_dead_peer() {
+                                handle_node_loss(NodeLossSpec {
+                                    node: n,
+                                    after_tasks: 0,
+                                    mode: NodeLossMode::Survivable,
+                                });
+                            }
                             if shared.is_dead(me) {
                                 // this node's store was wiped: pick up
                                 // nothing new here (survivors drain the
@@ -1297,19 +1317,29 @@ impl RealExecutor {
                                     None => {
                                         if !stores.contains(me, obj) {
                                             if let Some(src) = stores.locate(obj, me) {
-                                                let n = stores.transfer(src, me, obj);
-                                                moved += n;
-                                                if n > 0 {
-                                                    if let Some(r) = recorder_ref {
-                                                        r.event(
-                                                            me,
-                                                            Some(src),
-                                                            Some(obj),
-                                                            n,
-                                                            EventKind::Fetch(
-                                                                FetchOrigin::Demand,
-                                                            ),
-                                                        );
+                                                // try_transfer, not transfer:
+                                                // with remote sources a copy
+                                                // that vanished (or a link that
+                                                // died) mid-pull must surface
+                                                // as a recoverable loss — the
+                                                // vanish path below — never as
+                                                // a panic
+                                                if let Some(n) =
+                                                    stores.try_transfer(src, me, obj)
+                                                {
+                                                    moved += n;
+                                                    if n > 0 {
+                                                        if let Some(r) = recorder_ref {
+                                                            r.event(
+                                                                me,
+                                                                Some(src),
+                                                                Some(obj),
+                                                                n,
+                                                                EventKind::Fetch(
+                                                                    FetchOrigin::Demand,
+                                                                ),
+                                                            );
+                                                        }
                                                     }
                                                 }
                                             }
@@ -1356,6 +1386,18 @@ impl RealExecutor {
                                 // see running==0 mid-recovery and declare a
                                 // bogus deadlock.
                                 drop(inputs);
+                                // a transport-detected peer death may be
+                                // *why* the input vanished: wipe and
+                                // splice for it first, so the
+                                // availability check below sees the
+                                // post-loss world, not a stale one
+                                while let Some(n) = stores.take_dead_peer() {
+                                    handle_node_loss(NodeLossSpec {
+                                        node: n,
+                                        after_tasks: 0,
+                                        mode: NodeLossMode::Survivable,
+                                    });
+                                }
                                 if available(obj) {
                                     // raced back into residency (late
                                     // readback/transfer): just retry the task
@@ -1690,7 +1732,10 @@ impl RealExecutor {
         let (stats, released, recovery_stats, node_losses) = {
             let st = shared.state.lock().unwrap();
             let rs = RecoveryStats {
-                retries: shared.retries.load(Ordering::Relaxed),
+                // injected-fault retries plus transient link retries the
+                // transport spent this run: one retry economy
+                retries: shared.retries.load(Ordering::Relaxed)
+                    + (stores.transport_retries() - transport_retries0),
                 backoff_secs: shared.backoff_us.load(Ordering::Relaxed) as f64 / 1e6,
                 recomputed_tasks: st.recomputed_tasks,
                 recomputed_bytes: st.recomputed_bytes,

@@ -23,6 +23,18 @@
 //! pre-resident input no task produces, gone from every store —
 //! escalates to [`ExecError::UnrecoverableLoss`] naming the dead
 //! lineage chain, instead of deadlocking the pool.
+//!
+//! The real transport layer ([`crate::net::transport`]) maps its
+//! failures onto these same two classes, which is the payoff of keeping
+//! this machinery transport-agnostic: a **transient** link failure
+//! (heartbeat/read timeout, corrupt frame, I/O hiccup) retries inside
+//! `StoreSet::try_transfer` with the mirror-image backoff policy
+//! (`net::link_backoff`); **peer-process death** (connection refused or
+//! reset, a killed node daemon, transient retries exhausting) marks the
+//! peer dead on the `StoreSet`, and the executor reaps that flag into
+//! the identical node-loss path a scheduled
+//! [`crate::exec::fault::NodeLossSpec`] takes — wipe, divert, lineage
+//! recompute via [`plan_recompute`].
 
 use std::collections::{HashMap, HashSet};
 use std::fmt;

@@ -109,6 +109,7 @@ pub mod prelude {
     pub use crate::graph::{build, DistArray, Graph};
     pub use crate::grid::{ArrayGrid, NodeGrid};
     pub use crate::net::model::{ComputeParams, NetParams, SystemMode};
+    pub use crate::net::TransportKind;
     pub use crate::runtime::{Backend, BinOp, EwStep, ExecContext, Kernel, KernelTier};
     pub use crate::scheduler::{ClusterState, Lshs, Topology};
     pub use crate::store::Block;

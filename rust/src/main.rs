@@ -4,10 +4,15 @@
 //!   info                       show artifacts manifest + cluster presets
 //!   validate                   cross-check PJRT artifacts vs the native oracle
 //!   logreg  [--n --d --q ...]  run distributed Newton logistic regression
+//!                              (--transport inproc|shm|tcp selects the block
+//!                              carrier; tcp launches `nums node` peers)
 //!   dgemm   [--n --nodes]      NumS recursive matmul vs SUMMA (modeled)
+//!   node    [--idx N]          TCP-transport block daemon: binds loopback,
+//!                              prints `NUMS-NODE-READY <addr>`, serves
+//!                              checksummed block frames until Quit
 //!   bench --list               list figure benches (run via `cargo bench`)
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use nums::prelude::*;
 use nums::util::cli::Args;
 
@@ -23,6 +28,7 @@ fn main() -> Result<()> {
         "validate" => validate(&args),
         "logreg" => logreg(&args),
         "dgemm" => dgemm(&args),
+        "node" => node(&args),
         "bench" => {
             println!("figure benches run via `cargo bench`:");
             for b in [
@@ -37,13 +43,14 @@ fn main() -> Result<()> {
                 "fig15_ablation",
                 "tab03_datasci",
                 "fig16_fraction",
+                "net_transport",
             ] {
                 println!("  cargo bench --bench {b}");
             }
             Ok(())
         }
         other => {
-            eprintln!("unknown subcommand {other:?}; try: info|validate|logreg|dgemm|bench");
+            eprintln!("unknown subcommand {other:?}; try: info|validate|logreg|dgemm|node|bench");
             std::process::exit(2);
         }
     }
@@ -164,7 +171,16 @@ fn logreg(args: &Args) -> Result<()> {
     let wpn = args.usize_or("workers", 4);
     let steps = args.usize_or("steps", 8);
     let policy = nums::api::Policy::parse(args.str_or("policy", "lshs"))?;
-    let cfg = SessionConfig::real_small(nodes, wpn).with_policy(policy);
+    let mut cfg = SessionConfig::real_small(nodes, wpn).with_policy(policy);
+    // explicit flag wins; otherwise real_small already honored
+    // NUMS_TRANSPORT from the environment
+    let t = args.str_or("transport", "");
+    if !t.is_empty() {
+        cfg = cfg.with_transport(
+            TransportKind::parse(t).ok_or_else(|| anyhow!("--transport {t:?}: expected inproc|shm|tcp"))?,
+        );
+    }
+    println!("transport={}", cfg.transport.name());
     let mut sess = Session::new(cfg);
     let (x, y) = nums::glm::classification_data(&mut sess, n, d, q, args.u64_or("seed", 1));
     let res = nums::glm::newton_fit(&mut sess, &x, &y, steps, 1e-8)?;
@@ -175,6 +191,22 @@ fn logreg(args: &Args) -> Result<()> {
         res.sim_secs(),
         res.transfer_bytes()
     );
+    Ok(())
+}
+
+/// TCP-transport block daemon (one per simulated node, its own OS
+/// process). Binds an ephemeral loopback port, prints the rendezvous
+/// line the launcher ([`nums::net::TcpTransport::launch`]) parses, and
+/// serves checksummed block frames until an orderly `Quit` — or until
+/// the chaos suite kills the process, which is the point.
+fn node(args: &Args) -> Result<()> {
+    let _idx = args.usize_or("idx", 0); // diagnostics only
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    println!("{}{addr}", nums::net::READY_PREFIX);
+    use std::io::Write;
+    std::io::stdout().flush()?;
+    nums::net::serve_node(listener)?;
     Ok(())
 }
 

@@ -1,0 +1,484 @@
+//! Length-prefixed, checksum-trailed block frames — the wire format every
+//! non-in-process [`crate::net::Transport`] speaks.
+//!
+//! A frame is:
+//!
+//! ```text
+//! magic "NBF1" (4) | op (1) | ndim (1) | node (2 LE) | obj (8 LE)
+//!   | payload elems (8 LE)                              = 24-byte header
+//! shape dims (ndim × 8 LE)
+//! payload (elems × 8, f64 LE)
+//! FNV-1a-128 trailer (16 LE)                             = integrity
+//! ```
+//!
+//! The trailer hashes the *semantic* content — op, node, object id,
+//! shape, and payload as exact f64 bits via [`Fnv128::f64`] — the same
+//! convention as the spill-file codec in [`crate::store::memory`], so a
+//! frame that decodes is bit-identical to the frame that was encoded.
+//! Control frames (`Get`/`Ack`/`Ping`/…) carry no shape or payload but
+//! still end in a trailer: a corrupted length field on a control frame
+//! is caught, never silently resynchronized.
+//!
+//! Decoding never returns bad data silently: every failure is a typed
+//! [`FrameError`] — truncation, bad magic, unknown op, an implausible
+//! length, or a checksum mismatch. [`FrameDecoder`] is the incremental
+//! (partial-read resume) face of the same parser: feed it bytes as they
+//! arrive and it yields a frame exactly when one is complete.
+
+use std::io::{Read, Write};
+
+use crate::graph::signature::Fnv128;
+use crate::store::ObjectId;
+
+/// Frame magic: "NumS Block Frame v1".
+pub const MAGIC: [u8; 4] = *b"NBF1";
+
+/// Fixed header size in bytes.
+pub const HEADER_BYTES: usize = 24;
+
+/// Trailer (FNV-1a-128 digest) size in bytes.
+pub const TRAILER_BYTES: usize = 16;
+
+/// Upper bound on payload elements (2 GiB of f64) and on rank. A frame
+/// whose header claims more is rejected before any allocation — a
+/// corrupt length field must not become an OOM.
+pub const MAX_PAYLOAD_ELEMS: u64 = 1 << 28;
+const MAX_NDIM: u8 = 8;
+
+/// Frame opcode. `Put`/`Data` carry a block; the rest are control.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameOp {
+    /// Driver → node: store this block.
+    Put = 1,
+    /// Driver → node: send me this object.
+    Get = 2,
+    /// Node → driver: the requested block.
+    Data = 3,
+    /// Node → driver: object not held here.
+    NotFound = 4,
+    /// Node → driver: `Put` landed.
+    Ack = 5,
+    /// Heartbeat request.
+    Ping = 6,
+    /// Heartbeat reply.
+    Pong = 7,
+    /// Orderly shutdown of the node process.
+    Quit = 8,
+}
+
+impl FrameOp {
+    fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            1 => FrameOp::Put,
+            2 => FrameOp::Get,
+            3 => FrameOp::Data,
+            4 => FrameOp::NotFound,
+            5 => FrameOp::Ack,
+            6 => FrameOp::Ping,
+            7 => FrameOp::Pong,
+            8 => FrameOp::Quit,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded frame. `shape`/`payload` are empty on control frames.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub op: FrameOp,
+    /// Logical node the frame concerns (diagnostics; the socket already
+    /// identifies the peer).
+    pub node: u16,
+    pub obj: ObjectId,
+    pub shape: Vec<usize>,
+    pub payload: Vec<f64>,
+}
+
+impl Frame {
+    /// A payload-less frame (`Get`/`Ack`/`Ping`/…).
+    pub fn control(op: FrameOp, node: u16, obj: ObjectId) -> Self {
+        Frame { op, node, obj, shape: Vec::new(), payload: Vec::new() }
+    }
+
+    /// A block-carrying frame (`Put`/`Data`).
+    pub fn data(op: FrameOp, node: u16, obj: ObjectId, shape: &[usize], payload: Vec<f64>) -> Self {
+        Frame { op, node, obj, shape: shape.to_vec(), payload }
+    }
+
+    /// Payload bytes (the block bytes a transfer accounts).
+    pub fn payload_bytes(&self) -> u64 {
+        self.payload.len() as u64 * 8
+    }
+}
+
+/// Typed decode failure. Truncation is an error for one-shot
+/// [`decode`]; the incremental [`FrameDecoder`] treats it as
+/// "need more bytes" instead.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FrameError {
+    /// Fewer bytes than a complete frame; `needed` is the total frame
+    /// size once known (0 while even the header is short).
+    Truncated { needed: usize, have: usize },
+    /// First four bytes are not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Unknown opcode byte.
+    BadOp(u8),
+    /// Header claims an implausible payload or rank.
+    TooLarge { elems: u64, ndim: u8 },
+    /// Checksum trailer mismatch — the bytes arrived, but wrong.
+    Corrupt { expect: u128, got: u128 },
+    /// Underlying stream error (blocking [`read_frame`] only).
+    Io { kind: std::io::ErrorKind, msg: String },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Truncated { needed, have } => {
+                write!(f, "truncated frame: have {have} bytes, need {needed}")
+            }
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:?}"),
+            FrameError::BadOp(op) => write!(f, "unknown frame op {op}"),
+            FrameError::TooLarge { elems, ndim } => {
+                write!(f, "implausible frame header: {elems} elems, ndim {ndim}")
+            }
+            FrameError::Corrupt { expect, got } => {
+                write!(f, "frame checksum mismatch: expect {expect:032x}, got {got:032x}")
+            }
+            FrameError::Io { kind, msg } => write!(f, "frame I/O ({kind:?}): {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl FrameError {
+    /// Read/connect timed out — the transient (retryable) failure class.
+    pub fn is_timeout(&self) -> bool {
+        matches!(
+            self,
+            FrameError::Io { kind: std::io::ErrorKind::WouldBlock, .. }
+                | FrameError::Io { kind: std::io::ErrorKind::TimedOut, .. }
+        )
+    }
+}
+
+fn digest_of(op: FrameOp, node: u16, obj: ObjectId, shape: &[usize], payload: &[f64]) -> u128 {
+    let mut sum = Fnv128::new();
+    sum.tag(op as u8);
+    sum.u64(node as u64);
+    sum.u64(obj);
+    sum.usize(shape.len());
+    for &d in shape {
+        sum.usize(d);
+    }
+    sum.tag(0x7C); // domain separator: shape | payload
+    for &v in payload {
+        sum.f64(v);
+    }
+    sum.digest()
+}
+
+/// Encode a frame to its wire bytes.
+pub fn encode(f: &Frame) -> Vec<u8> {
+    let mut out = Vec::with_capacity(
+        HEADER_BYTES + f.shape.len() * 8 + f.payload.len() * 8 + TRAILER_BYTES,
+    );
+    out.extend_from_slice(&MAGIC);
+    out.push(f.op as u8);
+    out.push(f.shape.len() as u8);
+    out.extend_from_slice(&f.node.to_le_bytes());
+    out.extend_from_slice(&f.obj.to_le_bytes());
+    out.extend_from_slice(&(f.payload.len() as u64).to_le_bytes());
+    for &d in &f.shape {
+        out.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+    for &v in &f.payload {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&digest_of(f.op, f.node, f.obj, &f.shape, &f.payload).to_le_bytes());
+    out
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b[..8].try_into().unwrap())
+}
+
+/// One-shot decode from a byte buffer. Returns the frame and the number
+/// of bytes consumed, or a typed error — [`FrameError::Truncated`] when
+/// the buffer ends mid-frame (the incremental decoder's resume signal).
+pub fn decode(buf: &[u8]) -> Result<(Frame, usize), FrameError> {
+    if buf.len() < HEADER_BYTES {
+        // magic/op are validated as soon as their bytes exist, so a
+        // garbage prefix fails fast instead of waiting for "more data"
+        if buf.len() >= 4 && buf[..4] != MAGIC {
+            return Err(FrameError::BadMagic(buf[..4].try_into().unwrap()));
+        }
+        if buf.len() >= 5 && FrameOp::from_u8(buf[4]).is_none() {
+            return Err(FrameError::BadOp(buf[4]));
+        }
+        return Err(FrameError::Truncated { needed: HEADER_BYTES, have: buf.len() });
+    }
+    if buf[..4] != MAGIC {
+        return Err(FrameError::BadMagic(buf[..4].try_into().unwrap()));
+    }
+    let op = FrameOp::from_u8(buf[4]).ok_or(FrameError::BadOp(buf[4]))?;
+    let ndim = buf[5];
+    let node = u16::from_le_bytes([buf[6], buf[7]]);
+    let obj = le_u64(&buf[8..16]);
+    let elems = le_u64(&buf[16..24]);
+    if elems > MAX_PAYLOAD_ELEMS || ndim > MAX_NDIM {
+        return Err(FrameError::TooLarge { elems, ndim });
+    }
+    let total = HEADER_BYTES + ndim as usize * 8 + elems as usize * 8 + TRAILER_BYTES;
+    if buf.len() < total {
+        return Err(FrameError::Truncated { needed: total, have: buf.len() });
+    }
+    let mut at = HEADER_BYTES;
+    let mut shape = Vec::with_capacity(ndim as usize);
+    for _ in 0..ndim {
+        shape.push(le_u64(&buf[at..at + 8]) as usize);
+        at += 8;
+    }
+    let mut payload = Vec::with_capacity(elems as usize);
+    for _ in 0..elems {
+        payload.push(f64::from_le_bytes(buf[at..at + 8].try_into().unwrap()));
+        at += 8;
+    }
+    let got = u128::from_le_bytes(buf[at..at + 16].try_into().unwrap());
+    let expect = digest_of(op, node, obj, &shape, &payload);
+    if got != expect {
+        return Err(FrameError::Corrupt { expect, got });
+    }
+    Ok((Frame { op, node, obj, shape, payload }, total))
+}
+
+/// Incremental decoder: accumulate bytes from any number of partial
+/// reads and yield each frame exactly when complete. `Ok(None)` means
+/// "feed me more"; errors are the same typed rejections as [`decode`]
+/// (and are sticky — a corrupted stream has lost framing, so the
+/// connection must be dropped, not resynchronized).
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bytes currently buffered (a partially-received frame).
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn feed(&mut self, bytes: &[u8]) -> Result<Option<Frame>, FrameError> {
+        self.buf.extend_from_slice(bytes);
+        match decode(&self.buf) {
+            Ok((frame, used)) => {
+                self.buf.drain(..used);
+                Ok(Some(frame))
+            }
+            Err(FrameError::Truncated { .. }) => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+fn io_err(e: std::io::Error) -> FrameError {
+    FrameError::Io { kind: e.kind(), msg: e.to_string() }
+}
+
+/// Write one frame to a blocking stream.
+pub fn write_frame(w: &mut impl Write, f: &Frame) -> Result<(), FrameError> {
+    w.write_all(&encode(f)).map_err(io_err)?;
+    w.flush().map_err(io_err)
+}
+
+/// Read one frame from a blocking stream. An EOF mid-frame is
+/// [`FrameError::Truncated`]; an EOF before any byte of the frame is
+/// `Io{kind: UnexpectedEof}` (a cleanly closed peer, not a torn frame).
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, FrameError> {
+    let mut header = [0u8; HEADER_BYTES];
+    let mut got = 0usize;
+    while got < HEADER_BYTES {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => {
+                return Err(FrameError::Io {
+                    kind: std::io::ErrorKind::UnexpectedEof,
+                    msg: "peer closed".into(),
+                })
+            }
+            Ok(0) => return Err(FrameError::Truncated { needed: HEADER_BYTES, have: got }),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(io_err(e)),
+        }
+    }
+    // header-side validation before trusting the length fields
+    if header[..4] != MAGIC {
+        return Err(FrameError::BadMagic(header[..4].try_into().unwrap()));
+    }
+    let op = FrameOp::from_u8(header[4]).ok_or(FrameError::BadOp(header[4]))?;
+    let ndim = header[5];
+    let elems = le_u64(&header[16..24]);
+    if elems > MAX_PAYLOAD_ELEMS || ndim > MAX_NDIM {
+        return Err(FrameError::TooLarge { elems, ndim });
+    }
+    let _ = op; // full parse (incl. checksum) goes through `decode`
+    let body = ndim as usize * 8 + elems as usize * 8 + TRAILER_BYTES;
+    let mut buf = Vec::with_capacity(HEADER_BYTES + body);
+    buf.extend_from_slice(&header);
+    buf.resize(HEADER_BYTES + body, 0);
+    let mut at = HEADER_BYTES;
+    while at < buf.len() {
+        match r.read(&mut buf[at..]) {
+            Ok(0) => return Err(FrameError::Truncated { needed: buf.len(), have: at }),
+            Ok(n) => at += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(io_err(e)),
+        }
+    }
+    decode(&buf).map(|(f, _)| f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(f: &Frame) {
+        let bytes = encode(f);
+        let (back, used) = decode(&bytes).expect("decode");
+        assert_eq!(used, bytes.len());
+        assert_eq!(&back, f);
+    }
+
+    #[test]
+    fn control_and_data_frames_roundtrip() {
+        roundtrip(&Frame::control(FrameOp::Ping, 3, 0));
+        roundtrip(&Frame::control(FrameOp::Get, 1, 42));
+        roundtrip(&Frame::data(FrameOp::Put, 2, 7, &[2, 3], vec![1.0, -0.0, f64::MIN, 4.5, 5.0, 6.0]));
+        roundtrip(&Frame::data(FrameOp::Data, 0, 9, &[0], vec![]));
+    }
+
+    #[test]
+    fn random_payloads_roundtrip_bit_exactly() {
+        let mut rng = Rng::seed_from_u64(0xF3A);
+        for case in 0..50u64 {
+            let n = (case as usize % 97) + 1;
+            let mut v = vec![0.0; n];
+            rng.fill_normal(&mut v);
+            let f = Frame::data(FrameOp::Data, (case % 7) as u16, case, &[n, 1], v);
+            let bytes = encode(&f);
+            let (back, _) = decode(&bytes).expect("decode");
+            // exact bits, not approximate equality
+            for (a, b) in f.payload.iter().zip(&back.payload) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(back.shape, f.shape);
+        }
+    }
+
+    #[test]
+    fn truncation_is_a_typed_error_at_every_cut() {
+        let bytes = encode(&Frame::data(FrameOp::Put, 1, 5, &[2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        for cut in 0..bytes.len() {
+            match decode(&bytes[..cut]) {
+                Err(FrameError::Truncated { needed, have }) => {
+                    assert_eq!(have, cut);
+                    assert!(needed > cut);
+                }
+                other => panic!("cut {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_trailer_and_corrupt_payload_are_rejected() {
+        let f = Frame::data(FrameOp::Data, 0, 1, &[3], vec![1.0, 2.0, 3.0]);
+        let clean = encode(&f);
+        // flip one bit everywhere after the length-bearing header: every
+        // such corruption must surface as Corrupt (never silent data)
+        for at in [HEADER_BYTES, HEADER_BYTES + 8, clean.len() - 1, clean.len() - 16] {
+            let mut bad = clean.clone();
+            bad[at] ^= 0x40;
+            match decode(&bad) {
+                Err(FrameError::Corrupt { expect, got }) => assert_ne!(expect, got),
+                other => panic!("byte {at}: expected Corrupt, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_bad_op_and_too_large_are_typed() {
+        let mut bytes = encode(&Frame::control(FrameOp::Ping, 0, 0));
+        bytes[0] = b'X';
+        assert!(matches!(decode(&bytes), Err(FrameError::BadMagic(_))));
+        // garbage prefix fails fast even before a full header arrives
+        assert!(matches!(decode(b"XYZW"), Err(FrameError::BadMagic(_))));
+
+        let mut bytes = encode(&Frame::control(FrameOp::Ping, 0, 0));
+        bytes[4] = 0xEE;
+        assert!(matches!(decode(&bytes), Err(FrameError::BadOp(0xEE))));
+
+        let mut bytes = encode(&Frame::control(FrameOp::Ping, 0, 0));
+        bytes[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(decode(&bytes), Err(FrameError::TooLarge { .. })));
+    }
+
+    #[test]
+    fn incremental_decoder_resumes_across_partial_reads() {
+        let frames = vec![
+            Frame::control(FrameOp::Ping, 0, 0),
+            Frame::data(FrameOp::Put, 1, 8, &[2, 2], vec![9.0, 8.0, 7.0, 6.0]),
+            Frame::control(FrameOp::Ack, 1, 8),
+        ];
+        let mut wire = Vec::new();
+        for f in &frames {
+            wire.extend_from_slice(&encode(f));
+        }
+        // feed one byte at a time: frames pop out exactly at boundaries
+        let mut dec = FrameDecoder::new();
+        let mut out = Vec::new();
+        for &b in &wire {
+            if let Some(f) = dec.feed(&[b]).expect("clean stream") {
+                out.push(f);
+            }
+        }
+        assert_eq!(out, frames);
+        assert_eq!(dec.pending(), 0);
+
+        // and in arbitrary chunk sizes
+        let mut dec = FrameDecoder::new();
+        let mut out = Vec::new();
+        for chunk in wire.chunks(13) {
+            let mut fed = dec.feed(chunk).expect("clean stream");
+            while let Some(f) = fed {
+                out.push(f);
+                fed = dec.feed(&[]).expect("clean stream");
+            }
+        }
+        assert_eq!(out, frames);
+    }
+
+    #[test]
+    fn blocking_reader_roundtrips_and_types_eof() {
+        let f = Frame::data(FrameOp::Data, 2, 11, &[2], vec![1.5, -2.5]);
+        let bytes = encode(&f);
+        let mut cur = std::io::Cursor::new(bytes.clone());
+        assert_eq!(read_frame(&mut cur).unwrap(), f);
+        // clean EOF at a frame boundary
+        match read_frame(&mut cur) {
+            Err(FrameError::Io { kind, .. }) => {
+                assert_eq!(kind, std::io::ErrorKind::UnexpectedEof)
+            }
+            other => panic!("expected clean-EOF Io, got {other:?}"),
+        }
+        // EOF mid-frame is a torn frame
+        let mut cur = std::io::Cursor::new(bytes[..bytes.len() - 3].to_vec());
+        assert!(matches!(read_frame(&mut cur), Err(FrameError::Truncated { .. })));
+    }
+}

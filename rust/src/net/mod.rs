@@ -1,5 +1,17 @@
-//! The α–β–γ communication model of §7 / Appendix A.
+//! Networking: the α–β–γ communication *model* of §7 / Appendix A, and
+//! the *real* transport layer — pluggable in-process / shared-memory /
+//! loopback-TCP block carriers behind `StoreSet::try_transfer`, with a
+//! checksummed wire format and a node-process launcher.
 
+pub mod frame;
 pub mod model;
+pub mod tcp;
+pub mod transport;
 
+pub use frame::{Frame, FrameDecoder, FrameError, FrameOp};
 pub use model::{LinkParams, NetParams};
+pub use tcp::{serve_node, TcpTransport, READY_PREFIX};
+pub use transport::{
+    link_backoff, InProcessTransport, ShmTransport, TransferRecord, Transport, TransportError,
+    TransportKind, TransportMetrics, MAX_LINK_RETRIES,
+};

@@ -1,0 +1,480 @@
+//! Loopback-TCP transport: one OS process per node, length-prefixed
+//! checksum-trailed [`frame`]s over `std::net`, heartbeats, and a
+//! launcher/rendezvous protocol.
+//!
+//! Topology: the driver process keeps the per-node stores (and the
+//! worker threads — kernels still execute in the driver); each node
+//! additionally gets a **block daemon**, a separate OS process running
+//! [`serve_node`] (the `nums node` subcommand). A transfer `src → dst`
+//! is carried as: heartbeat `src`'s daemon (`Ping`/`Pong` — the bytes
+//! notionally leave src's NIC, so a dead source must fail the
+//! transfer), then `Put` the payload frame to `dst`'s daemon, then
+//! `Get` it back and re-decode. Every transferred byte therefore
+//! crosses a real process boundary over a real (loopback) socket
+//! twice, which is what makes the per-transfer latency/bandwidth in
+//! `BENCH_net.json` measured rather than modeled.
+//!
+//! Rendezvous: a node process binds `127.0.0.1:0`, prints
+//! `NUMS-NODE-READY <addr>` on stdout, and serves frames.
+//! [`TcpTransport::launch`] spawns one child per node and reads that
+//! line back — no ports to pre-agree on, nothing listens beyond
+//! localhost.
+//!
+//! Failure mapping: read/connect timeouts surface as
+//! [`TransportError::Timeout`] (transient — `StoreSet` retries with
+//! backoff); resets, refused connections, clean EOFs, and torn frames
+//! surface as [`TransportError::PeerDead`], which the executor turns
+//! into its PR 9 node-loss recovery. A checksum-mismatched frame is
+//! [`TransportError::Corrupt`] and the connection is dropped — framing
+//! is lost, and corrupt payloads must never be served.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::frame::{self, Frame, FrameError, FrameOp};
+use super::transport::{Transport, TransportError, TransportKind, TransferRecord, TransportMetrics};
+use crate::store::{Block, ObjectId};
+
+/// Rendezvous line prefix a node process prints once it is listening.
+pub const READY_PREFIX: &str = "NUMS-NODE-READY ";
+
+/// Default per-frame read/connect timeout; override with
+/// `NUMS_NET_TIMEOUT_MS`. Generous next to loopback RTTs (µs) so slow
+/// CI never times out spuriously, small enough that a stalled peer is
+/// detected promptly.
+pub fn default_timeout() -> Duration {
+    let ms = std::env::var("NUMS_NET_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(2_000);
+    Duration::from_millis(ms.max(1))
+}
+
+/// The block daemon: serve frames on `listener` until a `Quit` frame
+/// arrives. Blocks live in a plain map — this process *is* the node's
+/// memory for transfer purposes; killing it loses them, which is
+/// exactly the failure the chaos suite injects. Connections are served
+/// sequentially (the driver multiplexes one connection per node); a
+/// dropped connection returns to `accept`, so a reconnecting driver
+/// finds its blocks still here.
+pub fn serve_node(listener: TcpListener) -> std::io::Result<()> {
+    let mut blocks: HashMap<ObjectId, (Vec<usize>, Vec<f64>)> = HashMap::new();
+    for stream in listener.incoming() {
+        let mut stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let _ = stream.set_nodelay(true);
+        if serve_conn(&mut stream, &mut blocks) {
+            return Ok(()); // orderly Quit
+        }
+    }
+    Ok(())
+}
+
+/// Serve one driver connection; returns true on `Quit`.
+fn serve_conn(
+    stream: &mut TcpStream,
+    blocks: &mut HashMap<ObjectId, (Vec<usize>, Vec<f64>)>,
+) -> bool {
+    loop {
+        let req = match frame::read_frame(stream) {
+            Ok(f) => f,
+            // disconnect, torn frame, or corruption: drop the
+            // connection (framing is gone) and await a reconnect
+            Err(_) => return false,
+        };
+        let reply = match req.op {
+            FrameOp::Put => {
+                blocks.insert(req.obj, (req.shape, req.payload));
+                Frame::control(FrameOp::Ack, req.node, req.obj)
+            }
+            FrameOp::Get => match blocks.get(&req.obj) {
+                Some((shape, payload)) => {
+                    Frame::data(FrameOp::Data, req.node, req.obj, shape, payload.clone())
+                }
+                None => Frame::control(FrameOp::NotFound, req.node, req.obj),
+            },
+            FrameOp::Ping => Frame::control(FrameOp::Pong, req.node, req.obj),
+            FrameOp::Quit => return true,
+            // a reply opcode arriving at the server is a desync
+            _ => return false,
+        };
+        if frame::write_frame(stream, &reply).is_err() {
+            return false;
+        }
+    }
+}
+
+fn classify(node: usize, e: FrameError) -> TransportError {
+    use std::io::ErrorKind as K;
+    if e.is_timeout() {
+        return TransportError::Timeout { node };
+    }
+    match e {
+        FrameError::Corrupt { .. } => TransportError::Corrupt { node, obj: 0 },
+        // a torn frame or connection-class I/O error means the peer
+        // process went away mid-conversation
+        FrameError::Truncated { .. } => TransportError::PeerDead { node },
+        FrameError::Io { kind, .. }
+            if matches!(
+                kind,
+                K::UnexpectedEof
+                    | K::ConnectionReset
+                    | K::ConnectionAborted
+                    | K::BrokenPipe
+                    | K::ConnectionRefused
+                    | K::NotConnected
+            ) =>
+        {
+            TransportError::PeerDead { node }
+        }
+        FrameError::Io { msg, .. } => TransportError::Io { node, reason: msg },
+        other => TransportError::Io { node, reason: other.to_string() },
+    }
+}
+
+/// Driver-side TCP carrier: one lazily-(re)connected, mutex-guarded
+/// stream per node daemon (per-link serialization — one NIC per node),
+/// plus the launcher's child handles for chaos kills and teardown.
+pub struct TcpTransport {
+    addrs: Vec<SocketAddr>,
+    conns: Vec<Mutex<Option<TcpStream>>>,
+    children: Mutex<Vec<Option<Child>>>,
+    timeout: Duration,
+    metrics: TransportMetrics,
+}
+
+impl TcpTransport {
+    /// Attach to already-running daemons (tests run in-thread servers
+    /// through this; the launcher path is [`TcpTransport::launch`]).
+    pub fn connect(addrs: Vec<SocketAddr>) -> Self {
+        let n = addrs.len();
+        Self {
+            addrs,
+            conns: (0..n).map(|_| Mutex::new(None)).collect(),
+            children: Mutex::new((0..n).map(|_| None).collect()),
+            timeout: default_timeout(),
+            metrics: TransportMetrics::default(),
+        }
+    }
+
+    /// Spawn `nodes` block-daemon processes from `bin` (the `nums`
+    /// binary; each runs `nums node --idx i`) and rendezvous on their
+    /// `NUMS-NODE-READY` lines. On any failure the already-spawned
+    /// children are killed before returning the error.
+    pub fn launch(nodes: usize, bin: &Path) -> std::io::Result<Self> {
+        let mut children: Vec<Option<Child>> = Vec::with_capacity(nodes);
+        let mut addrs: Vec<SocketAddr> = Vec::with_capacity(nodes);
+        for i in 0..nodes {
+            let spawned = Command::new(bin)
+                .arg("node")
+                .arg("--idx")
+                .arg(i.to_string())
+                .stdin(Stdio::null())
+                .stdout(Stdio::piped())
+                .spawn();
+            let mut child = match spawned {
+                Ok(c) => c,
+                Err(e) => {
+                    kill_all(&mut children);
+                    return Err(e);
+                }
+            };
+            match rendezvous(&mut child) {
+                Ok(addr) => {
+                    addrs.push(addr);
+                    children.push(Some(child));
+                }
+                Err(e) => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    kill_all(&mut children);
+                    return Err(e);
+                }
+            }
+        }
+        let n = nodes;
+        Ok(Self {
+            addrs,
+            conns: (0..n).map(|_| Mutex::new(None)).collect(),
+            children: Mutex::new(children),
+            timeout: default_timeout(),
+            metrics: TransportMetrics::default(),
+        })
+    }
+
+    pub fn with_timeout(mut self, d: Duration) -> Self {
+        self.timeout = d;
+        self
+    }
+
+    pub fn addr(&self, node: usize) -> SocketAddr {
+        self.addrs[node]
+    }
+
+    /// One framed request/reply on `node`'s connection. Any failure
+    /// drops the cached stream so the next attempt reconnects.
+    fn rpc(&self, node: usize, req: &Frame) -> Result<Frame, TransportError> {
+        let mut guard = self.conns[node].lock().unwrap();
+        if guard.is_none() {
+            let stream = TcpStream::connect_timeout(&self.addrs[node], self.timeout)
+                .map_err(|e| match e.kind() {
+                    std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock => {
+                        TransportError::Timeout { node }
+                    }
+                    _ => TransportError::PeerDead { node },
+                })?;
+            let _ = stream.set_nodelay(true);
+            let _ = stream.set_read_timeout(Some(self.timeout));
+            let _ = stream.set_write_timeout(Some(self.timeout));
+            *guard = Some(stream);
+        }
+        let stream = guard.as_mut().unwrap();
+        let out = frame::write_frame(stream, req)
+            .and_then(|_| frame::read_frame(stream));
+        match out {
+            Ok(f) => Ok(f),
+            Err(e) => {
+                *guard = None; // poisoned framing: force a reconnect
+                Err(classify(node, e))
+            }
+        }
+    }
+
+    /// Kill `node`'s daemon process (chaos hook). Also drops the cached
+    /// connection so the next carry observes the death immediately.
+    pub fn kill_node(&self, node: usize) -> bool {
+        let killed = match self.children.lock().unwrap()[node].take() {
+            Some(mut c) => {
+                let _ = c.kill();
+                let _ = c.wait();
+                true
+            }
+            None => false,
+        };
+        *self.conns[node].lock().unwrap() = None;
+        killed
+    }
+}
+
+fn rendezvous(child: &mut Child) -> std::io::Result<SocketAddr> {
+    let stdout = child.stdout.take().ok_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::Other, "node child has no stdout")
+    })?;
+    let mut lines = BufReader::new(stdout).lines();
+    for line in &mut lines {
+        let line = line?;
+        if let Some(rest) = line.strip_prefix(READY_PREFIX) {
+            let addr = rest.trim().parse::<SocketAddr>().map_err(|e| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad rendezvous line {rest:?}: {e}"),
+                )
+            })?;
+            // keep draining stdout in the background so the child never
+            // blocks on a full pipe
+            std::thread::spawn(move || for _ in lines {});
+            return Ok(addr);
+        }
+    }
+    Err(std::io::Error::new(
+        std::io::ErrorKind::UnexpectedEof,
+        "node child exited before NUMS-NODE-READY",
+    ))
+}
+
+fn kill_all(children: &mut [Option<Child>]) {
+    for c in children.iter_mut() {
+        if let Some(mut c) = c.take() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Tcp
+    }
+
+    fn carry(
+        &self,
+        src: usize,
+        dst: usize,
+        id: ObjectId,
+        block: &Arc<Block>,
+    ) -> Result<Arc<Block>, TransportError> {
+        let t0 = Instant::now();
+        // heartbeat the source: its daemon embodies the sending node,
+        // so a killed source process must fail transfers out of it even
+        // though the payload is relayed from the driver-held store copy
+        if src != dst {
+            self.ping(src)?;
+        }
+        let nd = u16::try_from(dst).unwrap_or(u16::MAX);
+        let put = Frame::data(FrameOp::Put, nd, id, &block.shape, block.buf().to_vec());
+        match self.rpc(dst, &put)? {
+            Frame { op: FrameOp::Ack, .. } => {}
+            other => {
+                return Err(TransportError::Io {
+                    node: dst,
+                    reason: format!("expected Ack, got {:?}", other.op),
+                })
+            }
+        }
+        let got = self.rpc(dst, &Frame::control(FrameOp::Get, nd, id))?;
+        match got.op {
+            FrameOp::Data => {
+                // frame decode already verified the checksum trailer;
+                // shape/length mismatches still mean a desynced peer
+                if got.obj != id
+                    || got.shape != block.shape
+                    || got.payload.len() * 8 != block.bytes() as usize
+                {
+                    return Err(TransportError::Corrupt { node: dst, obj: id });
+                }
+                let b = Arc::new(Block::from_vec(&got.shape, got.payload));
+                self.metrics.record(src, dst, b.bytes(), t0.elapsed().as_secs_f64());
+                Ok(b)
+            }
+            FrameOp::NotFound => {
+                // daemon restarted between Put and Get: retryable
+                Err(TransportError::Io { node: dst, reason: "put/get lost".into() })
+            }
+            other => Err(TransportError::Io {
+                node: dst,
+                reason: format!("expected Data, got {other:?}"),
+            }),
+        }
+    }
+
+    fn ping(&self, node: usize) -> Result<Duration, TransportError> {
+        let t0 = Instant::now();
+        let nd = u16::try_from(node).unwrap_or(u16::MAX);
+        match self.rpc(node, &Frame::control(FrameOp::Ping, nd, 0))? {
+            Frame { op: FrameOp::Pong, .. } => Ok(t0.elapsed()),
+            other => Err(TransportError::Io {
+                node,
+                reason: format!("expected Pong, got {:?}", other.op),
+            }),
+        }
+    }
+
+    fn records(&self) -> Vec<TransferRecord> {
+        self.metrics.snapshot()
+    }
+
+    fn kill_peer(&self, node: usize) -> bool {
+        self.kill_node(node)
+    }
+
+    fn shutdown(&self) {
+        for node in 0..self.addrs.len() {
+            // orderly quit; a dead/killed daemon just errors out here
+            let nd = u16::try_from(node).unwrap_or(u16::MAX);
+            let _ = self.rpc(node, &Frame::control(FrameOp::Quit, nd, 0));
+            *self.conns[node].lock().unwrap() = None;
+        }
+        let mut children = self.children.lock().unwrap();
+        for slot in children.iter_mut() {
+            if let Some(mut c) = slot.take() {
+                // Quit should have ended it; bounded wait, then kill
+                let mut done = false;
+                for _ in 0..50 {
+                    if matches!(c.try_wait(), Ok(Some(_))) {
+                        done = true;
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                if !done {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+            }
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// In-thread daemon (real sockets, no child process): enough for
+    /// protocol tests; process-boundary tests live in tests/transport.rs
+    /// where the launcher can spawn the real `nums` binary.
+    fn spawn_daemon() -> SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || serve_node(listener));
+        addr
+    }
+
+    fn blk(vals: &[f64]) -> Arc<Block> {
+        Arc::new(Block::from_vec(&[vals.len()], vals.to_vec()))
+    }
+
+    #[test]
+    fn carry_roundtrips_bits_through_real_sockets() {
+        let addrs = vec![spawn_daemon(), spawn_daemon()];
+        let t = TcpTransport::connect(addrs);
+        let b = blk(&[1.0, -0.0, 3.5e-300, f64::MAX]);
+        let c = t.carry(0, 1, 77, &b).unwrap();
+        assert!(!Arc::ptr_eq(&b, &c));
+        for (x, y) in b.buf().iter().zip(c.buf()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let rec = t.records();
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec[0].bytes, 32);
+        assert!(rec[0].secs > 0.0, "a real socket round trip takes time");
+        // heartbeat answers with a measured RTT
+        assert!(t.ping(1).unwrap() > Duration::ZERO);
+        t.shutdown();
+    }
+
+    #[test]
+    fn dead_peer_is_typed_not_hung() {
+        // bind, learn the port, drop the listener: connects are refused
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let t = TcpTransport::connect(vec![addr]).with_timeout(Duration::from_millis(200));
+        match t.ping(0) {
+            Err(TransportError::PeerDead { node: 0 }) => {}
+            other => panic!("expected PeerDead, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stalled_peer_times_out_as_transient() {
+        // a listener that accepts and then never replies
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let conns: Vec<_> = listener.incoming().take(2).collect();
+            std::thread::sleep(Duration::from_secs(30));
+            drop(conns);
+        });
+        let t = TcpTransport::connect(vec![addr]).with_timeout(Duration::from_millis(100));
+        match t.ping(0) {
+            Err(e @ TransportError::Timeout { node: 0 }) => {
+                assert!(e.is_transient(), "heartbeat timeout must map to transient retry")
+            }
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,408 @@
+//! The pluggable block-transfer layer behind
+//! [`crate::store::StoreSet::try_transfer`].
+//!
+//! Every cross-node byte in the real executor — worker demand pulls,
+//! prefetcher background pulls, memory-manager acquires — funnels
+//! through one seam: `StoreSet::try_transfer`. A [`Transport`] is the
+//! physical carrier under that seam. Three implementations exist:
+//!
+//! * [`InProcessTransport`] — today's behavior and the sequential
+//!   oracle: the `Arc<Block>` is cloned between per-node stores, no
+//!   serialization, no failure modes. The default; every pre-existing
+//!   test runs unchanged on it.
+//! * [`ShmTransport`] — the block round-trips through a
+//!   `/dev/shm`-backed file using the spill codec (chunked LE f64 +
+//!   FNV-1a-128 checksum trailer) from [`crate::store::memory`], so the
+//!   destination observes a genuinely re-decoded copy.
+//! * [`crate::net::TcpTransport`] — length-prefixed
+//!   [`crate::net::frame`] frames over loopback TCP to one OS process
+//!   per node, with heartbeats ([`Transport::ping`]).
+//!
+//! Failure mapping (the payoff of building PR 9's recovery machinery
+//! transport-agnostic): a **transient** carry failure — connection
+//! lost, heartbeat/read timeout, corrupt frame — is retried in place by
+//! `StoreSet` with bounded backoff ([`MAX_LINK_RETRIES`],
+//! [`link_backoff`] — the same policy as
+//! `exec::recovery::backoff_delay`, duplicated here because `store`
+//! cannot depend on `exec`). A **peer-death** failure (or transient
+//! retries exhausting) marks the node dead on the `StoreSet`; the real
+//! executor reaps that flag into its node-loss path — wipe, divert,
+//! lineage recompute — exactly as if a `FaultPlan` had scheduled the
+//! loss. Byte accounting stays in `StoreSet`, so the
+//! `prefetch + demand == net_in` identity holds on every transport.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::store::memory::{read_spill, write_spill};
+use crate::store::{Block, ObjectId};
+
+/// Which carrier a session uses. Selected by
+/// `SessionConfig::transport` / the `NUMS_TRANSPORT` env var.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Arc-clone between in-process stores (default; the oracle).
+    #[default]
+    InProcess,
+    /// Blocks hand off via checksummed `/dev/shm`-backed files.
+    SharedMem,
+    /// Framed loopback TCP to one OS process per node.
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProcess => "in-process",
+            TransportKind::SharedMem => "shm",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.trim().to_ascii_lowercase().as_str() {
+            "" | "inproc" | "in-process" | "inprocess" | "local" => TransportKind::InProcess,
+            "shm" | "sharedmem" | "shared-mem" | "shared-memory" => TransportKind::SharedMem,
+            "tcp" => TransportKind::Tcp,
+            _ => return None,
+        })
+    }
+
+    /// `NUMS_TRANSPORT` env selection, defaulting to in-process. An
+    /// unknown value panics loudly — a typo silently falling back to
+    /// in-process would fake every "runs on a real transport" claim.
+    pub fn from_env() -> Self {
+        match std::env::var("NUMS_TRANSPORT") {
+            Ok(v) => Self::parse(&v)
+                .unwrap_or_else(|| panic!("NUMS_TRANSPORT={v:?}: expected inproc|shm|tcp")),
+            Err(_) => TransportKind::InProcess,
+        }
+    }
+}
+
+/// Typed carry failure. [`TransportError::is_transient`] splits the
+/// retry-in-place class from the node-loss class.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TransportError {
+    /// The peer process is gone (connection refused/reset, clean EOF,
+    /// or a killed child). Maps to the executor's node-loss recovery.
+    PeerDead { node: usize },
+    /// Heartbeat or read timed out — the link may recover; retried.
+    Timeout { node: usize },
+    /// The frame/file arrived but failed its checksum — never served;
+    /// retried (a re-send re-encodes), then escalated.
+    Corrupt { node: usize, obj: ObjectId },
+    /// Any other I/O failure on the link; retried, then escalated.
+    Io { node: usize, reason: String },
+}
+
+impl TransportError {
+    /// Transient failures retry in place with [`link_backoff`];
+    /// non-transient ones (peer death) go straight to node loss.
+    pub fn is_transient(&self) -> bool {
+        !matches!(self, TransportError::PeerDead { .. })
+    }
+
+    /// The node whose link/process failed.
+    pub fn node(&self) -> usize {
+        match *self {
+            TransportError::PeerDead { node }
+            | TransportError::Timeout { node }
+            | TransportError::Corrupt { node, .. }
+            | TransportError::Io { node, .. } => node,
+        }
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::PeerDead { node } => write!(f, "node {node}: peer process dead"),
+            TransportError::Timeout { node } => write!(f, "node {node}: link timeout"),
+            TransportError::Corrupt { node, obj } => {
+                write!(f, "node {node}: corrupt frame for object {obj}")
+            }
+            TransportError::Io { node, reason } => write!(f, "node {node}: link I/O: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// In-place retries `StoreSet` grants a transient link failure before
+/// escalating to node loss. Mirrors
+/// `exec::recovery::MAX_TRANSIENT_RETRIES`.
+pub const MAX_LINK_RETRIES: u32 = 4;
+
+/// Bounded exponential backoff between link retries: 100 µs doubling,
+/// capped at 5 ms — the same curve as `exec::recovery::backoff_delay`
+/// (duplicated: `store`/`net` cannot depend on `exec`).
+pub fn link_backoff(attempt: u32) -> Duration {
+    let us = 100u64 << attempt.min(6);
+    Duration::from_micros(us.min(5_000))
+}
+
+/// One measured transfer: real wall-clock, real bytes — what
+/// `BENCH_net.json` reports instead of the α–β model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransferRecord {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: u64,
+    pub secs: f64,
+}
+
+/// Shared per-transport metrics sink. Lock cost is negligible next to
+/// the file/socket I/O it measures.
+#[derive(Default)]
+pub struct TransportMetrics {
+    records: Mutex<Vec<TransferRecord>>,
+}
+
+impl TransportMetrics {
+    pub fn record(&self, src: usize, dst: usize, bytes: u64, secs: f64) {
+        self.records.lock().unwrap().push(TransferRecord { src, dst, bytes, secs });
+    }
+
+    pub fn snapshot(&self) -> Vec<TransferRecord> {
+        self.records.lock().unwrap().clone()
+    }
+}
+
+/// The carrier contract. `carry` moves one block's payload from `src`
+/// to `dst` and returns the block *as observed at the destination* —
+/// for in-process that is the same `Arc`; for shm/TCP it is re-decoded
+/// from the wire/file representation (and therefore proves the codec
+/// round-trip bit-exact on every transfer). Implementations must be
+/// safe to call from many worker/transfer threads at once.
+pub trait Transport: Send + Sync {
+    fn kind(&self) -> TransportKind;
+
+    fn carry(
+        &self,
+        src: usize,
+        dst: usize,
+        id: ObjectId,
+        block: &Arc<Block>,
+    ) -> Result<Arc<Block>, TransportError>;
+
+    /// Heartbeat: is `node`'s carrier endpoint alive? In-process and
+    /// shm peers are this process — always alive, zero RTT.
+    fn ping(&self, _node: usize) -> Result<Duration, TransportError> {
+        Ok(Duration::ZERO)
+    }
+
+    /// Measured per-transfer records (empty when metrics are off).
+    fn records(&self) -> Vec<TransferRecord> {
+        Vec::new()
+    }
+
+    /// Chaos hook: forcibly kill `node`'s carrier endpoint, returning
+    /// whether anything was killed. Only the TCP transport has a
+    /// process to kill.
+    fn kill_peer(&self, _node: usize) -> bool {
+        false
+    }
+
+    /// Orderly teardown (kills/quits node processes where they exist).
+    fn shutdown(&self) {}
+}
+
+/// Today's behavior, verbatim: the destination store receives the same
+/// `Arc<Block>` the source holds. Metrics are off by default so the
+/// hot path stays free of clocks and locks; the net-transport bench
+/// turns them on to get per-transfer baselines.
+#[derive(Default)]
+pub struct InProcessTransport {
+    metrics: Option<TransportMetrics>,
+}
+
+impl InProcessTransport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_metrics() -> Self {
+        Self { metrics: Some(TransportMetrics::default()) }
+    }
+}
+
+impl Transport for InProcessTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::InProcess
+    }
+
+    fn carry(
+        &self,
+        src: usize,
+        dst: usize,
+        _id: ObjectId,
+        block: &Arc<Block>,
+    ) -> Result<Arc<Block>, TransportError> {
+        match &self.metrics {
+            None => Ok(Arc::clone(block)),
+            Some(m) => {
+                let t0 = Instant::now();
+                let b = Arc::clone(block);
+                m.record(src, dst, b.bytes(), t0.elapsed().as_secs_f64());
+                Ok(b)
+            }
+        }
+    }
+
+    fn records(&self) -> Vec<TransferRecord> {
+        self.metrics.as_ref().map(|m| m.snapshot()).unwrap_or_default()
+    }
+}
+
+/// Distinguishes concurrent shm files (and directories across
+/// transports in one process).
+static SHM_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Blocks hand off through checksummed files on a shared-memory
+/// filesystem: the payload is encoded with the spill codec
+/// ([`crate::store::memory`]'s chunked LE f64 + FNV-1a-128 trailer),
+/// fsync-free, then re-decoded for the destination store and the file
+/// unlinked. `/dev/shm` when present (Linux: a tmpfs, so the round
+/// trip is two memory copies through the page cache, the closest file
+/// analogue of Ray's plasma hand-off); the OS temp dir otherwise.
+pub struct ShmTransport {
+    dir: PathBuf,
+    seq: AtomicU64,
+    metrics: TransportMetrics,
+}
+
+impl ShmTransport {
+    pub fn new() -> std::io::Result<Self> {
+        let shm = PathBuf::from("/dev/shm");
+        let base = if shm.is_dir() { shm } else { std::env::temp_dir() };
+        let dir = base.join(format!(
+            "nums-shm-{}-{}",
+            std::process::id(),
+            SHM_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir)?;
+        Ok(Self { dir, seq: AtomicU64::new(0), metrics: TransportMetrics::default() })
+    }
+
+    /// Where the block files land (tests assert cleanup).
+    pub fn dir(&self) -> &std::path::Path {
+        &self.dir
+    }
+}
+
+impl Drop for ShmTransport {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+impl Transport for ShmTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::SharedMem
+    }
+
+    fn carry(
+        &self,
+        src: usize,
+        dst: usize,
+        id: ObjectId,
+        block: &Arc<Block>,
+    ) -> Result<Arc<Block>, TransportError> {
+        let t0 = Instant::now();
+        let path = self.dir.join(format!(
+            "b{id}-{src}-{dst}-{}.blk",
+            self.seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        if let Err(e) = write_spill(&path, block.buf()) {
+            let _ = std::fs::remove_file(&path);
+            return Err(TransportError::Io { node: src, reason: e.to_string() });
+        }
+        let decoded = read_spill(&path, block.bytes());
+        let _ = std::fs::remove_file(&path);
+        match decoded {
+            // truncation/checksum failure surfaces typed, never as data
+            None => Err(TransportError::Corrupt { node: dst, obj: id }),
+            Some(data) => {
+                let b = Arc::new(Block::from_vec(&block.shape, data));
+                self.metrics.record(src, dst, b.bytes(), t0.elapsed().as_secs_f64());
+                Ok(b)
+            }
+        }
+    }
+
+    fn records(&self) -> Vec<TransferRecord> {
+        self.metrics.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blk(vals: &[f64]) -> Arc<Block> {
+        Arc::new(Block::from_vec(&[vals.len(), 1], vals.to_vec()))
+    }
+
+    #[test]
+    fn kind_parses_and_env_defaults() {
+        assert_eq!(TransportKind::parse("inproc"), Some(TransportKind::InProcess));
+        assert_eq!(TransportKind::parse("SHM"), Some(TransportKind::SharedMem));
+        assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Tcp));
+        assert_eq!(TransportKind::parse("carrier-pigeon"), None);
+        assert_eq!(TransportKind::default(), TransportKind::InProcess);
+    }
+
+    #[test]
+    fn in_process_carry_is_the_same_allocation() {
+        let t = InProcessTransport::new();
+        let b = blk(&[1.0, 2.0, 3.0]);
+        let c = t.carry(0, 1, 7, &b).unwrap();
+        assert!(Arc::ptr_eq(&b, &c), "in-process must not copy");
+        assert!(t.records().is_empty(), "metrics off by default");
+        let tm = InProcessTransport::with_metrics();
+        tm.carry(0, 1, 7, &b).unwrap();
+        assert_eq!(tm.records().len(), 1);
+        assert_eq!(tm.records()[0].bytes, 24);
+    }
+
+    #[test]
+    fn shm_carry_redecodes_bit_identically_and_cleans_up() {
+        let t = ShmTransport::new().unwrap();
+        let vals = [1.5, -0.0, f64::MIN_POSITIVE, 3.25e300];
+        let b = blk(&vals);
+        let c = t.carry(0, 1, 9, &b).unwrap();
+        assert!(!Arc::ptr_eq(&b, &c), "shm must round-trip through the codec");
+        for (x, y) in b.buf().iter().zip(c.buf()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(c.shape, b.shape);
+        let rec = t.records();
+        assert_eq!(rec.len(), 1);
+        assert_eq!((rec[0].src, rec[0].dst, rec[0].bytes), (0, 1, 32));
+        assert!(rec[0].secs >= 0.0);
+        // block files are unlinked after each carry
+        assert_eq!(std::fs::read_dir(t.dir()).unwrap().count(), 0);
+    }
+
+    #[test]
+    fn error_classes_split_transient_from_node_loss() {
+        assert!(TransportError::Timeout { node: 1 }.is_transient());
+        assert!(TransportError::Corrupt { node: 1, obj: 2 }.is_transient());
+        assert!(TransportError::Io { node: 1, reason: "x".into() }.is_transient());
+        assert!(!TransportError::PeerDead { node: 1 }.is_transient());
+        assert_eq!(TransportError::Timeout { node: 3 }.node(), 3);
+    }
+
+    #[test]
+    fn link_backoff_is_bounded_and_monotone() {
+        let mut prev = Duration::ZERO;
+        for a in 0..12 {
+            let d = link_backoff(a);
+            assert!(d >= prev && d <= Duration::from_millis(5));
+            prev = d;
+        }
+    }
+}

@@ -859,7 +859,7 @@ const SPILL_CHUNK_ELEMS: usize = 1 << 15; // 256 KiB of f64
 /// counters stay *block* bytes; the trailer is a file-format detail.
 const SPILL_TRAILER_BYTES: u64 = 16;
 
-fn write_spill(path: &Path, data: &[f64]) -> std::io::Result<()> {
+pub(crate) fn write_spill(path: &Path, data: &[f64]) -> std::io::Result<()> {
     use std::io::Write;
     let file = std::fs::File::create(path)?;
     let mut w = std::io::BufWriter::new(file);
@@ -883,7 +883,7 @@ fn write_spill(path: &Path, data: &[f64]) -> std::io::Result<()> {
 /// Returns `None` on truncation *or* a checksum-trailer mismatch — the
 /// caller treats both as an unreadable file (and, under fault
 /// tolerance, recovers the object from lineage).
-fn read_spill(path: &Path, bytes: u64) -> Option<Vec<f64>> {
+pub(crate) fn read_spill(path: &Path, bytes: u64) -> Option<Vec<f64>> {
     use std::io::Read;
     let mut file = std::fs::File::open(path).ok()?;
     if file.metadata().ok()?.len() != bytes + SPILL_TRAILER_BYTES {

@@ -7,9 +7,13 @@
 //! bytes — the byte counters are what the Fig. 15 ablation reports.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::block::Block;
+use crate::net::transport::{
+    link_backoff, InProcessTransport, Transport, TransportError, MAX_LINK_RETRIES,
+};
 
 pub type ObjectId = u64;
 
@@ -70,15 +74,86 @@ impl ObjectStore {
 
 /// All node stores of a simulated cluster. Thread-safe: the real executor
 /// runs node queues concurrently.
+///
+/// Cross-node byte movement goes through the pluggable [`Transport`]
+/// (in-process Arc clone by default; shm files or loopback-TCP node
+/// processes otherwise). The accounting stays here regardless of
+/// carrier, which is what keeps `prefetch + demand == net_in` an
+/// invariant of the *seam* rather than of any one transport.
 pub struct StoreSet {
     stores: Vec<Mutex<ObjectStore>>,
+    transport: Arc<dyn Transport>,
+    /// Per-node "the carrier's endpoint for this node is gone" flags,
+    /// set when a carry fails non-transiently (or retries exhaust).
+    peer_dead: Vec<AtomicBool>,
+    /// Claimed by the executor's reaper so each death is converted into
+    /// node-loss recovery exactly once.
+    peer_reaped: Vec<AtomicBool>,
+    /// Fast guard: the hot transfer path checks one atomic, not N.
+    any_dead: AtomicBool,
+    /// Transient link retries spent (folded into `RecoveryStats`).
+    transport_retries: AtomicU64,
 }
 
 impl StoreSet {
     pub fn new(num_nodes: usize) -> Self {
+        Self::with_transport(num_nodes, Arc::new(InProcessTransport::new()))
+    }
+
+    pub fn with_transport(num_nodes: usize, transport: Arc<dyn Transport>) -> Self {
         Self {
             stores: (0..num_nodes).map(|_| Mutex::new(ObjectStore::default())).collect(),
+            transport,
+            peer_dead: (0..num_nodes).map(|_| AtomicBool::new(false)).collect(),
+            peer_reaped: (0..num_nodes).map(|_| AtomicBool::new(false)).collect(),
+            any_dead: AtomicBool::new(false),
+            transport_retries: AtomicU64::new(0),
         }
+    }
+
+    /// The carrier under the transfer seam.
+    pub fn transport(&self) -> &Arc<dyn Transport> {
+        &self.transport
+    }
+
+    /// Has `node`'s carrier endpoint died (killed TCP peer)?
+    pub fn peer_dead(&self, node: usize) -> bool {
+        self.any_dead.load(Ordering::Acquire) && self.peer_dead[node].load(Ordering::Acquire)
+    }
+
+    /// Record that `node`'s carrier endpoint is gone. The executor's
+    /// reaper picks this up via [`StoreSet::take_dead_peer`] and runs
+    /// node-loss recovery.
+    pub fn mark_peer_dead(&self, node: usize) {
+        self.peer_dead[node].store(true, Ordering::Release);
+        self.any_dead.store(true, Ordering::Release);
+    }
+
+    /// Claim one not-yet-reaped dead peer (exactly-once per death), or
+    /// `None`. Cheap when nothing has died.
+    pub fn take_dead_peer(&self) -> Option<usize> {
+        if !self.any_dead.load(Ordering::Acquire) {
+            return None;
+        }
+        (0..self.stores.len()).find(|&n| {
+            self.peer_dead[n].load(Ordering::Acquire)
+                && self.peer_reaped[n]
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+        })
+    }
+
+    /// All peers currently flagged dead (reaped or not).
+    pub fn dead_peers(&self) -> Vec<usize> {
+        if !self.any_dead.load(Ordering::Acquire) {
+            return Vec::new();
+        }
+        (0..self.stores.len()).filter(|&n| self.peer_dead[n].load(Ordering::Acquire)).collect()
+    }
+
+    /// Transient link retries spent so far (monotonic).
+    pub fn transport_retries(&self) -> u64 {
+        self.transport_retries.load(Ordering::Relaxed)
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -129,20 +204,55 @@ impl StoreSet {
     }
 
     /// [`StoreSet::transfer`], but `None` (instead of a panic) when the
-    /// source no longer holds the object.
+    /// source no longer holds the object — or when the link to either
+    /// endpoint is down. The payload is moved by the [`Transport`]:
+    /// transient carry failures (timeout, corrupt frame, I/O hiccup)
+    /// retry in place up to [`MAX_LINK_RETRIES`] times with
+    /// [`link_backoff`]; peer death (or retries exhausting) marks the
+    /// peer dead and returns `None`, which callers already treat as
+    /// "object unavailable" → the recovery path.
     pub fn try_transfer(&self, src: usize, dst: usize, id: ObjectId) -> Option<u64> {
         if src == dst || self.contains(dst, id) {
             return Some(0);
         }
+        if self.peer_dead(dst) {
+            return None; // a dead node can't receive; recovery will re-place
+        }
         let block = self.get(src, id)?;
-        let sz = block.bytes();
+        let carried = if self.peer_dead(src) {
+            // the source *process* is gone but the driver-side store
+            // still holds a (spared) copy — e.g. a lineage root the
+            // node-loss wipe deliberately kept. Serve it in-process,
+            // Ray's "driver re-puts its own inputs" move.
+            Arc::clone(&block)
+        } else {
+            let mut attempt: u32 = 0;
+            loop {
+                match self.transport.carry(src, dst, id, &block) {
+                    Ok(b) => break b,
+                    Err(e) if e.is_transient() && attempt < MAX_LINK_RETRIES => {
+                        self.transport_retries.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(link_backoff(attempt));
+                        attempt += 1;
+                    }
+                    Err(e) => {
+                        // peer death, or a link that never came back:
+                        // flag it; the executor reaps this into the
+                        // PR 9 node-loss path
+                        self.mark_peer_dead(e.node());
+                        return None;
+                    }
+                }
+            }
+        };
+        let sz = carried.bytes();
         {
             let mut d = self.stores[dst].lock().unwrap();
             if d.contains(id) {
                 return Some(0); // lost the race: the other puller accounted it
             }
             d.net_in_bytes += sz;
-            d.put(id, block);
+            d.put(id, carried);
         }
         let mut s = self.stores[src].lock().unwrap();
         s.net_out_bytes += sz;
@@ -270,5 +380,103 @@ mod tests {
         let a = g.next();
         let b = g.next();
         assert!(b > a);
+    }
+
+    /// Fails transiently `flakes` times, then carries in-process.
+    struct FlakyTransport {
+        flakes: std::sync::atomic::AtomicU32,
+    }
+
+    impl Transport for FlakyTransport {
+        fn kind(&self) -> crate::net::TransportKind {
+            crate::net::TransportKind::InProcess
+        }
+        fn carry(
+            &self,
+            _src: usize,
+            dst: usize,
+            _id: ObjectId,
+            block: &Arc<Block>,
+        ) -> Result<Arc<Block>, TransportError> {
+            if self.flakes.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+                .is_ok()
+            {
+                return Err(TransportError::Timeout { node: dst });
+            }
+            Ok(Arc::clone(block))
+        }
+    }
+
+    /// Every carry reports the destination process dead.
+    struct DeadTransport;
+
+    impl Transport for DeadTransport {
+        fn kind(&self) -> crate::net::TransportKind {
+            crate::net::TransportKind::Tcp
+        }
+        fn carry(
+            &self,
+            _src: usize,
+            dst: usize,
+            _id: ObjectId,
+            _block: &Arc<Block>,
+        ) -> Result<Arc<Block>, TransportError> {
+            Err(TransportError::PeerDead { node: dst })
+        }
+    }
+
+    #[test]
+    fn transient_carry_failures_retry_then_succeed() {
+        let set = StoreSet::with_transport(
+            2,
+            Arc::new(FlakyTransport { flakes: std::sync::atomic::AtomicU32::new(3) }),
+        );
+        set.put(0, 7, blk(4));
+        assert_eq!(set.try_transfer(0, 1, 7), Some(32));
+        assert_eq!(set.transport_retries(), 3);
+        assert!(set.dead_peers().is_empty());
+    }
+
+    #[test]
+    fn exhausted_transient_retries_escalate_to_dead_peer() {
+        let set = StoreSet::with_transport(
+            2,
+            Arc::new(FlakyTransport { flakes: std::sync::atomic::AtomicU32::new(u32::MAX) }),
+        );
+        set.put(0, 7, blk(4));
+        assert_eq!(set.try_transfer(0, 1, 7), None);
+        assert_eq!(set.transport_retries(), crate::net::MAX_LINK_RETRIES as u64);
+        assert!(set.peer_dead(1));
+    }
+
+    #[test]
+    fn dead_peer_fails_transfers_and_is_reaped_exactly_once() {
+        let set = StoreSet::with_transport(2, Arc::new(DeadTransport));
+        set.put(0, 7, blk(4));
+        assert_eq!(set.try_transfer(0, 1, 7), None, "carry to a dead peer must fail");
+        assert!(set.peer_dead(1));
+        assert_eq!(set.dead_peers(), vec![1]);
+        // the reaper claims each death exactly once
+        assert_eq!(set.take_dead_peer(), Some(1));
+        assert_eq!(set.take_dead_peer(), None);
+        // byte counters untouched by the failed attempt
+        let snap = set.snapshot();
+        assert_eq!((snap[1].2, snap[0].3), (0, 0));
+        // a flagged-dead destination short-circuits without carrying
+        assert_eq!(set.try_transfer(0, 1, 7), None);
+    }
+
+    #[test]
+    fn dead_source_with_driver_copy_serves_in_process() {
+        let set = StoreSet::with_transport(2, Arc::new(DeadTransport));
+        set.put(0, 7, blk(4));
+        set.mark_peer_dead(0);
+        // src process is gone but the driver-side store kept a spared
+        // copy: the pull still lands (and is accounted) without touching
+        // the dead carrier
+        assert_eq!(set.try_transfer(0, 1, 7), Some(32));
+        assert!(set.contains(1, 7));
+        let snap = set.snapshot();
+        assert_eq!((snap[1].2, snap[0].3), (32, 32));
     }
 }

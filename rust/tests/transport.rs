@@ -1,0 +1,494 @@
+//! Cross-transport correctness suites: the pluggable block carrier
+//! (in-process / shared-memory / loopback-TCP) must be invisible in the
+//! results and visible only in *how* bytes move.
+//!
+//! Contracts under test:
+//! * **Bit identity** — every random graph produces the exact bits of
+//!   the sequential oracle on all three transports (scalar tier),
+//!   including skewed `create_at` placements with stealing on.
+//! * **Byte accounting** — per node, `prefetch_bytes +
+//!   demand_pull_bytes == net_in` on every transport: the identity
+//!   belongs to the `StoreSet` seam, not to any one carrier.
+//! * **Failure mapping** — a stalled TCP peer exhausts the bounded
+//!   transient retries and is escalated to a dead peer; a *killed* node
+//!   process triggers the PR 9 node-loss recovery path and the run
+//!   still completes bit-identical to its fault-free twin.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::Arc;
+use std::time::Duration;
+
+use nums::api::ops;
+use nums::exec::{FaultPlan, Plan, RealExecutor, RealReport, Task};
+use nums::net::{
+    serve_node, ShmTransport, TcpTransport, Transport, TransportKind, MAX_LINK_RETRIES,
+};
+use nums::prelude::*;
+use nums::runtime::native;
+use nums::store::StoreSet;
+use nums::util::prop::forall_res;
+
+const KINDS: [TransportKind; 3] =
+    [TransportKind::InProcess, TransportKind::SharedMem, TransportKind::Tcp];
+
+/// In-thread TCP node daemons (real loopback sockets, no child
+/// processes) — the executor-level way to put a socket under every
+/// transfer. Child-process daemons are exercised by the session-level
+/// suites below via the real launcher.
+fn spawn_daemons(nodes: usize) -> Vec<SocketAddr> {
+    (0..nodes)
+        .map(|_| {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            std::thread::spawn(move || serve_node(listener));
+            addr
+        })
+        .collect()
+}
+
+fn stores_for(kind: TransportKind, nodes: usize) -> StoreSet {
+    match kind {
+        TransportKind::InProcess => StoreSet::new(nodes),
+        TransportKind::SharedMem => StoreSet::with_transport(
+            nodes,
+            Arc::new(ShmTransport::new().expect("shm dir")),
+        ),
+        TransportKind::Tcp => StoreSet::with_transport(
+            nodes,
+            Arc::new(TcpTransport::connect(spawn_daemons(nodes))),
+        ),
+    }
+}
+
+/// Sequential oracle: the plan in order, one thread, no stores.
+fn run_sequential(plan: &Plan, seeds: &HashMap<u64, Block>) -> HashMap<u64, Block> {
+    let mut env: HashMap<u64, Block> = seeds.clone();
+    for t in &plan.tasks {
+        let refs: Vec<&Block> = t.inputs.iter().map(|o| &env[o]).collect();
+        let outs = native::execute(&t.kernel, &refs).unwrap();
+        for ((obj, _), b) in t.outputs.iter().zip(outs) {
+            env.insert(*obj, b);
+        }
+    }
+    env
+}
+
+/// Per-node `prefetch + demand == net_in` — every cross-node byte
+/// accounted exactly once, whichever carrier moved it.
+fn check_byte_identity(rep: &RealReport, nodes: usize, label: &str) -> Result<(), String> {
+    if rep.prefetch_stats.len() != nodes {
+        return Err(format!("{label}: expected {nodes} prefetch stat blocks"));
+    }
+    for n in 0..nodes {
+        let net_in = rep.store_snapshot[n].2;
+        let p = &rep.prefetch_stats[n];
+        if p.prefetch_bytes + p.demand_pull_bytes != net_in {
+            return Err(format!(
+                "{label} node {n}: prefetch {} + demand {} != net_in {net_in}",
+                p.prefetch_bytes, p.demand_pull_bytes
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Random-but-valid plan spec (the `tests/exec_overlap.rs` scheme):
+/// kinds decode against earlier outputs, so plans are executable.
+#[derive(Debug)]
+struct PlanSpec {
+    nodes: usize,
+    stealing: bool,
+    /// All seeds on node 0 (the skewed-`create_at` arm) vs round-robin.
+    skewed: bool,
+    n_seeds: usize,
+    tasks: Vec<(u8, usize, usize, usize)>,
+}
+
+const SHAPE: [usize; 2] = [4, 4];
+
+fn decode(spec: &PlanSpec) -> (Plan, HashMap<u64, Block>) {
+    let mut rng = Rng::seed_from_u64(0x7A4 ^ spec.tasks.len() as u64);
+    let mut seeds = HashMap::new();
+    let mut avail: Vec<u64> = Vec::new();
+    for s in 0..spec.n_seeds {
+        let mut v = vec![0.0; SHAPE[0] * SHAPE[1]];
+        rng.fill_normal(&mut v);
+        seeds.insert(s as u64, Block::from_vec(&SHAPE, v));
+        avail.push(s as u64);
+    }
+    let mut tasks = Vec::new();
+    for (i, &(kind, p1, p2, tgt)) in spec.tasks.iter().enumerate() {
+        let out = 1000 + i as u64;
+        let (kernel, inputs) = match kind % 5 {
+            0 => (Kernel::Ew(BinOp::Add), vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+            1 => (Kernel::Ew(BinOp::Mul), vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+            2 => (Kernel::Neg, vec![avail[p1 % avail.len()]]),
+            3 => (Kernel::Scale(0.5), vec![avail[p1 % avail.len()]]),
+            _ => (Kernel::Matmul, vec![avail[p1 % avail.len()], avail[p2 % avail.len()]]),
+        };
+        let in_shapes = vec![SHAPE.to_vec(); inputs.len()];
+        tasks.push(Task {
+            kernel,
+            inputs,
+            in_shapes,
+            outputs: vec![(out, SHAPE.to_vec())],
+            target: tgt % spec.nodes,
+            transfers: vec![],
+        });
+        avail.push(out);
+    }
+    (Plan { tasks }, seeds)
+}
+
+/// Random graphs × all three transports vs the sequential oracle:
+/// bit-identical outputs and the byte-accounting identity, with skewed
+/// seed placement and stealing arms folded into the case distribution.
+#[test]
+fn prop_transports_bit_identical_and_account_bytes() {
+    forall_res(
+        0x7A45,
+        12,
+        |r| PlanSpec {
+            nodes: 2 + r.usize(2),
+            stealing: r.usize(2) == 1,
+            skewed: r.usize(2) == 1,
+            n_seeds: 2 + r.usize(3),
+            tasks: (0..1 + r.usize(12))
+                .map(|_| {
+                    (r.usize(256) as u8, r.usize(1 << 16), r.usize(1 << 16), r.usize(1 << 16))
+                })
+                .collect(),
+        },
+        |spec| {
+            let (plan, seeds) = decode(spec);
+            let want = run_sequential(&plan, &seeds);
+            for kind in KINDS {
+                let label = kind.name();
+                let topo = Topology::new(spec.nodes, 2, SystemMode::Ray);
+                let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+                    .with_stealing(spec.stealing)
+                    .with_prefetch(true);
+                exec.threads_per_node = 2;
+                let stores = stores_for(kind, spec.nodes);
+                for (obj, b) in &seeds {
+                    let home =
+                        if spec.skewed { 0 } else { (*obj as usize) % spec.nodes };
+                    stores.put(home, *obj, Arc::new(b.clone()));
+                }
+                let rep = exec
+                    .run(&plan, &stores)
+                    .map_err(|e| format!("{label}: executor failed: {e}"))?;
+                check_byte_identity(&rep, spec.nodes, label)?;
+                let consumed: std::collections::HashSet<u64> =
+                    plan.tasks.iter().flat_map(|t| t.inputs.iter().copied()).collect();
+                for i in 0..plan.tasks.len() {
+                    let obj = 1000 + i as u64;
+                    if consumed.contains(&obj) {
+                        continue; // dead intermediate: GC'd
+                    }
+                    let got = stores
+                        .fetch(obj)
+                        .ok_or_else(|| format!("{label}: output {obj} missing"))?;
+                    let w = &want[&obj];
+                    if got.shape != w.shape
+                        || got.buf().iter().zip(w.buf()).any(|(a, b)| a.to_bits() != b.to_bits())
+                    {
+                        return Err(format!("{label}: output {obj} differs from oracle"));
+                    }
+                }
+                stores.transport().shutdown();
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The canonical deep skew — every seed and every target on node 0 of
+/// 4, stealing on — must stay bit-exact on every carrier, with thieves
+/// actually stealing (and therefore pulling over the wire).
+#[test]
+fn skewed_stealing_arm_holds_on_every_transport() {
+    let n = 64usize;
+    let k_tasks = 24usize;
+    let mut rng = Rng::seed_from_u64(0x5E4A);
+    let mut seeds = HashMap::new();
+    for i in 0..2 * k_tasks as u64 {
+        let mut v = vec![0.0; n * n];
+        rng.fill_normal(&mut v);
+        seeds.insert(i, Block::from_vec(&[n, n], v));
+    }
+    let plan = Plan {
+        tasks: (0..k_tasks)
+            .map(|i| Task {
+                kernel: Kernel::Matmul,
+                inputs: vec![(2 * i) as u64, (2 * i + 1) as u64],
+                in_shapes: vec![vec![n, n], vec![n, n]],
+                outputs: vec![(1000 + i as u64, vec![n, n])],
+                target: 0,
+                transfers: vec![],
+            })
+            .collect(),
+    };
+    let want = run_sequential(&plan, &seeds);
+    for kind in KINDS {
+        let topo = Topology::new(4, 2, SystemMode::Ray);
+        let mut exec = RealExecutor::new(topo, Arc::new(Backend::native()))
+            .with_stealing(true)
+            .with_prefetch(true);
+        exec.threads_per_node = 2;
+        let stores = stores_for(kind, 4);
+        for (obj, b) in &seeds {
+            stores.put(0, *obj, Arc::new(b.clone()));
+        }
+        let rep = exec.run(&plan, &stores).unwrap();
+        check_byte_identity(&rep, 4, kind.name()).unwrap();
+        let stolen: usize = rep.node_stats.iter().map(|s| s.tasks_stolen).sum();
+        assert!(stolen > 0, "{}: deep skew must trigger stealing", kind.name());
+        for i in 0..k_tasks {
+            let obj = 1000 + i as u64;
+            let got = stores.fetch(obj).unwrap();
+            assert_eq!(
+                got.max_abs_diff(&want[&obj]),
+                0.0,
+                "{}: output {obj} wrong",
+                kind.name()
+            );
+        }
+        stores.transport().shutdown();
+    }
+}
+
+// --------------------------------------------------------------- session
+
+/// Point the TCP launcher at the real `nums` binary cargo built for
+/// this test run. Same value from every test, so the set_var race
+/// between parallel tests is benign.
+fn arm_node_bin() {
+    std::env::set_var("NUMS_NODE_BIN", env!("CARGO_BIN_EXE_nums"));
+}
+
+/// One session-level matmul on `kind`; seeds optionally skewed onto one
+/// node via `create_at`. Fault plan pinned to rate 0 so the CI chaos
+/// leg's env arming can't touch the transport comparison.
+fn session_matmul(kind: TransportKind, skew_to: Option<usize>) -> (Vec<u64>, RunReport) {
+    if kind == TransportKind::Tcp {
+        arm_node_bin();
+    }
+    let cfg = SessionConfig::real_small(3, 2)
+        .with_seed(0x7A55)
+        .with_transport(kind)
+        .with_fault_plan(FaultPlan::new(0, 0.0));
+    let mut sess = Session::new(cfg);
+    let (a, b) = match skew_to {
+        Some(node) => (
+            sess.randn_at(&[96, 96], &[3, 3], node),
+            sess.randn_at(&[96, 96], &[3, 3], node),
+        ),
+        None => (sess.randn(&[96, 96], &[3, 3]), sess.randn(&[96, 96], &[3, 3])),
+    };
+    let (c, rep) = ops::matmul(&mut sess, &a, &b).unwrap();
+    let host = sess.fetch(&c).unwrap();
+    let bits = host.into_vec().iter().map(|v| v.to_bits()).collect();
+    (bits, rep)
+}
+
+use nums::api::RunReport;
+
+/// End to end through `Session::run` on all three carriers — the TCP
+/// one through real child node processes via the launcher — identical
+/// bits, and the byte identity on each.
+#[test]
+fn session_results_identical_across_transports_including_real_processes() {
+    for skew in [None, Some(1)] {
+        let (want, _) = session_matmul(TransportKind::InProcess, skew);
+        for kind in [TransportKind::SharedMem, TransportKind::Tcp] {
+            let (got, rep) = session_matmul(kind, skew);
+            assert_eq!(
+                got,
+                want,
+                "{} (skew {skew:?}) diverged from the in-process oracle",
+                kind.name()
+            );
+            let real = rep.real.as_ref().expect("real mode");
+            check_byte_identity(real, 3, kind.name()).unwrap();
+        }
+    }
+}
+
+/// The TCP transport's per-transfer records are *measured*: real bytes
+/// over real sockets with nonzero wall time (what `BENCH_net.json`
+/// reports instead of the α–β model).
+#[test]
+fn tcp_transfers_are_measured_not_modeled() {
+    arm_node_bin();
+    let cfg = SessionConfig::real_small(2, 2)
+        .with_seed(0x3E7)
+        .with_transport(TransportKind::Tcp)
+        .with_fault_plan(FaultPlan::new(0, 0.0));
+    let mut sess = Session::new(cfg);
+    // all blocks on node 0, so node 1's share of the matmul must pull
+    let a = sess.randn_at(&[64, 64], &[2, 2], 0);
+    let b = sess.randn_at(&[64, 64], &[2, 2], 0);
+    let (_c, rep) = ops::matmul(&mut sess, &a, &b).unwrap();
+    let real = rep.real.as_ref().unwrap();
+    let moved: u64 = real.store_snapshot.iter().map(|s| s.2).sum();
+    assert!(moved > 0, "skewed placement must move bytes");
+    let records = sess.stores.transport().records();
+    assert!(!records.is_empty(), "TCP transfers must be recorded");
+    let rec_bytes: u64 = records.iter().map(|r| r.bytes).sum();
+    assert!(rec_bytes >= moved, "records cover at least every accounted byte");
+    for r in &records {
+        assert!(r.secs > 0.0, "a socket round trip takes measurable time: {r:?}");
+        assert!(r.src != r.dst, "local hits never touch the transport");
+    }
+}
+
+/// Deterministic chaos: kill one node daemon, then run a graph whose
+/// inputs all live on the killed node. The first carry observes the
+/// death, the executor converts it into the PR 9 node-loss path, and
+/// the run completes bit-identical to the fault-free twin.
+#[test]
+fn killed_tcp_node_process_triggers_node_loss_recovery_bit_identically() {
+    let victim = 0usize;
+    let (want, _) = session_matmul(TransportKind::InProcess, Some(victim));
+    arm_node_bin();
+    let cfg = SessionConfig::real_small(3, 2)
+        .with_seed(0x7A55)
+        .with_transport(TransportKind::Tcp)
+        .with_fault_plan(FaultPlan::new(0, 0.0));
+    let mut sess = Session::new(cfg);
+    let a = sess.randn_at(&[96, 96], &[3, 3], victim);
+    let b = sess.randn_at(&[96, 96], &[3, 3], victim);
+    // the launcher's chaos hook: SIGKILL the victim's block daemon
+    assert!(
+        sess.stores.transport().kill_peer(victim),
+        "launcher must have a child process to kill"
+    );
+    let (c, rep) = ops::matmul(&mut sess, &a, &b).unwrap();
+    let host = sess.fetch(&c).unwrap();
+    let got: Vec<u64> = host.buf().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(got, want, "recovered run must match the fault-free twin bit for bit");
+    let real = rep.real.as_ref().unwrap();
+    assert!(
+        real.recovery_stats.node_losses_survived >= 1,
+        "the kill must surface as a survived node loss: {:?}",
+        real.recovery_stats
+    );
+    assert!(
+        real.node_losses.iter().any(|(n, _)| *n == victim),
+        "the recorded loss must name the killed node"
+    );
+    // the session stays usable on the survivors afterwards
+    let (d, _) = ops::add(&mut sess, &c, &c).unwrap();
+    let twice = sess.fetch(&d).unwrap();
+    assert!(twice
+        .buf()
+        .iter()
+        .zip(host.buf())
+        .all(|(t, h)| t.to_bits() == (h + h).to_bits()));
+}
+
+/// Timed chaos, mid-GLM: a killer thread takes a node down while a
+/// Newton fit is running. Whatever instant the kill lands, the fit must
+/// finish with the exact losses and beta of the fault-free twin.
+#[test]
+fn tcp_node_killed_mid_glm_recovers_bit_identically() {
+    use nums::glm::data::classification_data;
+    use nums::glm::newton_fit;
+    let fit = |kind: TransportKind, kill: bool| {
+        if kind == TransportKind::Tcp {
+            arm_node_bin();
+        }
+        let cfg = SessionConfig::real_small(3, 2)
+            .with_seed(0x61F7)
+            .with_transport(kind)
+            .with_fault_plan(FaultPlan::new(0, 0.0));
+        let mut sess = Session::new(cfg);
+        let (x, y) = classification_data(&mut sess, 384, 8, 6, 0x11);
+        let killer = kill.then(|| {
+            let transport = Arc::clone(sess.stores.transport());
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                transport.kill_peer(2)
+            })
+        });
+        let res = newton_fit(&mut sess, &x, &y, 4, 0.0).unwrap();
+        let beta = sess.fetch(&res.beta).unwrap();
+        if let Some(k) = killer {
+            assert!(k.join().unwrap(), "killer must have found a child process");
+        }
+        (
+            beta.into_vec().iter().map(|v| v.to_bits()).collect::<Vec<u64>>(),
+            res.losses,
+        )
+    };
+    let (want_beta, want_losses) = fit(TransportKind::InProcess, false);
+    let (got_beta, got_losses) = fit(TransportKind::Tcp, true);
+    assert_eq!(got_beta, want_beta, "mid-GLM kill diverged from fault-free fit");
+    assert_eq!(got_losses, want_losses, "loss curves must match exactly");
+}
+
+// -------------------------------------------------------------- failures
+
+/// A deliberately stalled peer (accepts, never replies): every carry
+/// times out — the *transient* class — so the seam retries exactly
+/// `MAX_LINK_RETRIES` times with backoff before escalating the peer to
+/// dead; after escalation the driver-side copy is served in-process.
+#[test]
+fn stalled_peer_exhausts_transient_retries_then_escalates() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let conns: Vec<_> = listener.incoming().take(8).collect();
+        std::thread::sleep(Duration::from_secs(30));
+        drop(conns);
+    });
+    let transport =
+        TcpTransport::connect(vec![addr, addr]).with_timeout(Duration::from_millis(50));
+    let set = StoreSet::with_transport(2, Arc::new(transport));
+    set.put(0, 7, Arc::new(Block::filled(&[2, 2], 1.5)));
+    assert_eq!(set.try_transfer(0, 1, 7), None, "stalled link must not deliver");
+    assert_eq!(
+        set.transport_retries(),
+        MAX_LINK_RETRIES as u64,
+        "heartbeat timeouts must burn the full transient-retry budget"
+    );
+    assert_eq!(set.dead_peers().len(), 1, "exhaustion escalates to peer death");
+    // post-escalation: the driver-held copy serves in-process (Ray's
+    // "driver re-puts its inputs"), so the object is not lost
+    assert_eq!(set.try_transfer(0, 1, 7), Some(32));
+    assert!(set.contains(1, 7));
+}
+
+/// Frame-codec behavior through the public API: partial-read resume
+/// yields frames exactly at boundaries, and corruption is a typed
+/// rejection — the full no-sockets suite lives in `net::frame`'s unit
+/// tests.
+#[test]
+fn public_frame_codec_resumes_and_rejects() {
+    use nums::net::frame::{decode, encode};
+    use nums::net::{Frame, FrameDecoder, FrameError, FrameOp};
+    let frames = [
+        Frame::control(FrameOp::Ping, 0, 0),
+        Frame::data(FrameOp::Put, 1, 9, &[2, 2], vec![1.0, -0.0, 3.5, f64::MAX]),
+    ];
+    let mut wire = Vec::new();
+    for f in &frames {
+        wire.extend_from_slice(&encode(f));
+    }
+    let mut dec = FrameDecoder::new();
+    let mut out = Vec::new();
+    for chunk in wire.chunks(7) {
+        let mut fed = dec.feed(chunk).expect("clean stream");
+        while let Some(f) = fed {
+            out.push(f);
+            fed = dec.feed(&[]).expect("clean stream");
+        }
+    }
+    assert_eq!(out.as_slice(), frames.as_slice());
+    let mut bad = encode(&frames[1]);
+    let last = bad.len() - 1;
+    bad[last] ^= 1;
+    assert!(matches!(decode(&bad), Err(FrameError::Corrupt { .. })));
+}
